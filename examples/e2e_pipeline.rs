@@ -1,0 +1,142 @@
+//! End-to-end driver (DESIGN.md experiment E2E): exercises every layer
+//! of the system on the real workload and reports the paper's headline
+//! metric — accuracy degradation per SPARQ configuration.
+//!
+//! Pipeline stages (artifacts were produced by `make artifacts`, which
+//! trained the zoo — the loss curves it logged are summarized here):
+//!
+//!  1. dataset + trained-model artifacts (L2/L1 build products)
+//!  2. PJRT calibration pass per model (L3 coordinator)
+//!  3. SPARQ accuracy sweep through the lowered HLO (L1 Pallas kernel
+//!     semantics inside), vs the FP32 baseline
+//!  4. native-engine cross-check on one model (bit-exact integer path)
+//!  5. hardware cycle + area summary for the swept configs
+//!
+//! ```bash
+//! cargo run --release --example e2e_pipeline [artifacts-dir] [eval-limit]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use sparq::coordinator::{calibrate, evaluate_native, evaluate_pjrt};
+use sparq::data::Dataset;
+use sparq::hw::area;
+use sparq::hw::systolic::SystolicArray;
+use sparq::json::JsonValue;
+use sparq::model::{EngineMode, Graph, Weights};
+use sparq::quant::SparqConfig;
+use sparq::runtime::{Manifest, PjrtRuntime};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let dir = PathBuf::from(args.get(1).map(String::as_str).unwrap_or("artifacts"));
+    let limit: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(512);
+
+    // --- stage 1: artifacts + training log -------------------------------
+    let manifest = Manifest::load(&dir)?;
+    let eval = Dataset::load(&dir.join("test.bin"))?;
+    let calib_ds = Dataset::load(&dir.join("train.bin"))?;
+    println!("== stage 1: artifacts ==");
+    println!("{} model variants, eval set n={}", manifest.models.len(), eval.n);
+    if let Ok(log) = std::fs::read_to_string(dir.join("train_log.json")) {
+        let log = JsonValue::parse(&log)?;
+        for entry in log.as_array().unwrap_or(&[]) {
+            let arch = entry.get("arch").and_then(JsonValue::as_str).unwrap_or("?");
+            let acc = entry.get("test_acc").and_then(JsonValue::as_f64).unwrap_or(0.0);
+            let losses = entry.get("losses").and_then(JsonValue::as_array).unwrap_or(&[]);
+            let first = losses.first().and_then(|l| l.get("loss")).and_then(JsonValue::as_f64);
+            let last = losses.last().and_then(|l| l.get("loss")).and_then(JsonValue::as_f64);
+            println!(
+                "  {arch:<14} loss {:.3} -> {:.3}   test acc {:.2}%",
+                first.unwrap_or(f64::NAN),
+                last.unwrap_or(f64::NAN),
+                100.0 * acc
+            );
+        }
+    }
+
+    let rt = PjrtRuntime::cpu()?;
+    let tag = "resnet18m";
+    let model = manifest.get(tag)?;
+
+    // --- stage 2: calibration --------------------------------------------
+    println!("\n== stage 2: calibration ({tag}) ==");
+    let t0 = std::time::Instant::now();
+    let stats = calibrate(&rt, model, &calib_ds, 64, 2048)?;
+    let scales = stats.scales();
+    println!(
+        "  {} layers calibrated on 2048 images in {:.2}s",
+        scales.len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // --- stage 3: SPARQ sweep through PJRT --------------------------------
+    println!("\n== stage 3: SPARQ sweep ({tag}, {limit} images) ==");
+    let fp32 = evaluate_pjrt(&rt, model, &eval, 64, &[], None, limit)?;
+    println!(
+        "  FP32       {:.2}%   ({:.1} img/s)",
+        100.0 * fp32.accuracy(),
+        fp32.total as f64 / fp32.seconds
+    );
+    let sweep = ["a8w8", "5opt_r", "3opt_r", "2opt_r", "6opt_r", "7opt_r", "a4w8"];
+    for name in sweep {
+        let cfg = SparqConfig::named(name).unwrap();
+        let rep = evaluate_pjrt(&rt, model, &eval, 64, &scales, Some(cfg), limit)?;
+        println!(
+            "  {:<10} {:.2}%   (delta {:+.2}%, {:.1} img/s)",
+            cfg.to_string(),
+            100.0 * rep.accuracy(),
+            100.0 * (rep.accuracy() - fp32.accuracy()),
+            rep.total as f64 / rep.seconds
+        );
+    }
+
+    // --- stage 4: native-engine cross-check -------------------------------
+    println!("\n== stage 4: native integer engine cross-check ==");
+    let graph = Graph::load(&model.meta_path())?;
+    let weights = Weights::load(&model.weights_path())?;
+    let cfg = SparqConfig::named("5opt_r").unwrap();
+    let native = evaluate_native(
+        &graph, &weights, &eval, 64, &scales, cfg, EngineMode::Dense, limit.min(256),
+    )?;
+    let pjrt = evaluate_pjrt(&rt, model, &eval, 64, &scales, Some(cfg), limit.min(256))?;
+    println!(
+        "  native {}/{} vs pjrt {}/{} correct -> {}",
+        native.correct,
+        native.total,
+        pjrt.correct,
+        pjrt.total,
+        if native.correct == pjrt.correct { "MATCH" } else { "MISMATCH" }
+    );
+
+    // --- stage 5: hardware summary ----------------------------------------
+    println!("\n== stage 5: hardware (16x16 SA, first quantized conv GEMM) ==");
+    let qc = weights.quant_conv(&graph.quant_convs[0])?;
+    let (m, k, n) = (400, qc.k, qc.o);
+    let a: Vec<u8> = (0..m * k)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33;
+            if h % 5 == 0 {
+                0
+            } else {
+                (h % 256) as u8
+            }
+        })
+        .collect();
+    for name in ["5opt_r", "3opt_r", "2opt_r"] {
+        let cfg = SparqConfig::named(name).unwrap();
+        let sa = SystolicArray::new(16, 16, cfg);
+        let run = sa.gemm(&a, &qc.wq, m, k, n);
+        let ratio = area::sa_sparq(cfg).per_mac() / area::sa_baseline().per_mac();
+        println!(
+            "  {:<8} cycles {:>7} (baseline {:>7})  area/MAC {:.2}",
+            cfg.to_string(),
+            run.cycles,
+            sa.baseline_cycles(m, k, n),
+            ratio
+        );
+    }
+    println!("\nE2E pipeline complete.");
+    Ok(())
+}

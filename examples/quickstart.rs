@@ -1,0 +1,63 @@
+//! Quickstart: the minimal SPARQ workflow on one model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the resnet10 artifacts, calibrates activation scales on the
+//! training split (paper §5: min-max over calibration images),
+//! evaluates FP32 / A8W8 / SPARQ-5opt+R top-1 through the PJRT request
+//! path, and walks through the Figure-1 bit-trim example.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+use sparq::coordinator::{calibrate, evaluate_pjrt};
+use sparq::data::Dataset;
+use sparq::quant::bsparq::trim_window;
+use sparq::quant::{Mode, SparqConfig};
+use sparq::runtime::{Manifest, PjrtRuntime};
+
+fn main() -> Result<()> {
+    let dir = PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {} ({} device)", rt.platform(), rt.device_count());
+
+    let manifest = Manifest::load(&dir)?;
+    let model = manifest.get("resnet10")?;
+    let eval = Dataset::load(&dir.join("test.bin"))?;
+    let calib_ds = Dataset::load(&dir.join("train.bin"))?;
+
+    // 1. calibrate (min-max over calibration images)
+    let stats = calibrate(&rt, model, &calib_ds, 64, 512)?;
+    let scales = stats.scales();
+    println!("calibrated {} activation scales", scales.len());
+
+    // 2. evaluate: FP32, A8W8, SPARQ 4-bit (5opt + rounding + vSPARQ)
+    let limit = 512;
+    let fp32 = evaluate_pjrt(&rt, model, &eval, 64, &[], None, limit)?;
+    println!("FP32      top-1 = {:.2}%", 100.0 * fp32.accuracy());
+    for name in ["a8w8", "5opt_r", "2opt"] {
+        let cfg = SparqConfig::named(name).unwrap();
+        let rep = evaluate_pjrt(&rt, model, &eval, 64, &scales, Some(cfg), limit)?;
+        println!(
+            "{:<9} top-1 = {:.2}%  (delta {:+.2}%)",
+            cfg.to_string(),
+            100.0 * rep.accuracy(),
+            100.0 * (rep.accuracy() - fp32.accuracy())
+        );
+    }
+
+    // 3. the Figure-1 example: how bSPARQ trims 27 = 00011011b
+    println!("\nFigure 1 walkthrough for 27 (00011011b):");
+    for (label, mode) in [("5opt", Mode::Full), ("3opt", Mode::Opt3), ("2opt", Mode::Opt2)] {
+        println!(
+            "  {label}: trim -> {:2}, +R -> {:2}",
+            trim_window(27, 4, mode, false),
+            trim_window(27, 4, mode, true)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Serving benchmark: the dynamically batched SPARQ inference service
+//! under concurrent client load — latency/throughput for the paper's
+//! "increase execution performance" motivation, on the real artifacts.
+//!
+//! ```bash
+//! cargo run --release --example serve_bench [artifacts-dir] [clients] [requests-per-client]
+//! ```
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use sparq::coordinator::{calibrate, BatchPolicy, InferenceServer};
+use sparq::data::Dataset;
+use sparq::model::Graph;
+use sparq::quant::SparqConfig;
+use sparq::runtime::{Manifest, PjrtRuntime};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let dir = PathBuf::from(args.get(1).map(String::as_str).unwrap_or("artifacts"));
+    let clients: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let per_client: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(32);
+
+    let rt = Arc::new(PjrtRuntime::cpu()?);
+    let manifest = Manifest::load(&dir)?;
+    let model = manifest.get("resnet10")?;
+    let graph = Graph::load(&model.meta_path())?;
+    let eval = Arc::new(Dataset::load(&dir.join("test.bin"))?);
+    let calib_ds = Dataset::load(&dir.join("train.bin"))?;
+    let scales = calibrate(&rt, model, &calib_ds, 64, 512)?.scales();
+
+    let server = Arc::new(InferenceServer::start(
+        rt,
+        model,
+        graph.input_hwc,
+        graph.num_classes,
+        scales,
+        SparqConfig::named("5opt_r").unwrap(),
+        BatchPolicy {
+            max_batch: graph.eval_batch,
+            max_wait: Duration::from_millis(4),
+        },
+    )?);
+
+    println!(
+        "serving resnet10 (SPARQ 5opt+R) to {clients} clients x {per_client} requests, \
+         batch up to {} ...",
+        graph.eval_batch
+    );
+    // warmup: first request triggers nothing extra (exe precompiled), but
+    // prime the pipeline anyway
+    let _ = server.infer(eval.image_f32(0))?;
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let s = server.clone();
+            let d = eval.clone();
+            std::thread::spawn(move || -> (usize, usize) {
+                let mut correct = 0;
+                for r in 0..per_client {
+                    let idx = (c * per_client + r) % d.n;
+                    let reply = s.infer(d.image_f32(idx)).unwrap();
+                    let pred = reply
+                        .logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    if pred == d.label(idx) {
+                        correct += 1;
+                    }
+                }
+                (correct, per_client)
+            })
+        })
+        .collect();
+    let mut correct = 0;
+    let mut total = 0;
+    for h in handles {
+        let (c, t) = h.join().unwrap();
+        correct += c;
+        total += t;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let metrics = server.metrics();
+    let m = metrics.lock().unwrap();
+    println!("\nresults:");
+    println!("  requests        {total}  ({correct} correct = {:.2}%)", 100.0 * correct as f64 / total as f64);
+    println!("  wall time       {wall:.2}s");
+    println!("  throughput      {:.1} req/s", total as f64 / wall);
+    println!("  latency mean    {:.1} ms", m.e2e.mean_us() / 1000.0);
+    println!("  latency p50     {:.1} ms", m.e2e.quantile_us(0.50) as f64 / 1000.0);
+    println!("  latency p99     {:.1} ms", m.e2e.quantile_us(0.99) as f64 / 1000.0);
+    println!("  latency max     {:.1} ms", m.e2e.max_us() as f64 / 1000.0);
+    println!("  queue mean      {:.1} ms", m.queue.mean_us() / 1000.0);
+    Ok(())
+}

@@ -1,0 +1,206 @@
+"""AOT export: jax -> HLO text + weights + metadata (DESIGN.md L2->L3).
+
+This is the single build-time entry point (`make artifacts`):
+
+  1. generate the dataset (data.py) — .npz + .bin
+  2. train the zoo (train.py) — checkpoints + loss log
+  3. 2:4-prune + fine-tune the STC subset (prune.py)
+  4. for every (model, variant): fold BN, quantize weights, and export
+       <arch>[_p24]_float.hlo.txt   f(img)                  -> (logits,)
+       <arch>[_p24]_calib.hlo.txt   f(img)                  -> (max, mean)
+       <arch>[_p24]_sparq.hlo.txt   f(img, scales, cfg)     -> (logits,)
+       <arch>[_p24]_weights.npz     int8 weights + scales + biases
+       <arch>[_p24]_meta.json       graph IR + layout for the rust engine
+  5. write manifest.json + .stamp
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that the rust side's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+Lowering uses return_tuple=True; the rust runtime unwraps with
+to_tuple1()/to_tuple().
+
+Weights are baked into the HLO as constants, so the rust request path
+needs only the HLO text; the .npz/meta.json feed the rust-native engine
+(bit-exact cross-validation + STC/Table-6 path + toggle statistics).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as dataset
+from . import layers, model, prune, train
+
+EVAL_BATCH = 64
+IMG_SHAPE = (dataset.H, dataset.W, dataset.C)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe format).
+
+    print_large_constants=True is load-bearing: the default print options
+    elide big literals as `constant({...})`, which the rust side's
+    xla_extension 0.5.1 text parser silently reads back as *zeros* —
+    every baked weight would vanish (caught by
+    rust/tests/integration.rs::exported_graphs_have_no_elided_constants).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def export_weights_npz(path, graph, qweights):
+    """Flattened int8 GEMM weights + scales + biases for the rust engine.
+
+    Layout per quantized conv `name` (K = C*k*k rows in (C, kh, kw)
+    order — must match rust/src/tensor/im2col.rs):
+      {name}.wq    int8  (K, O)
+      {name}.scale f32   (O,)
+      {name}.bias  f32   (O,)
+    First (unquantized) conv: {name}.w f32 HWIO, {name}.bias.
+    Head: fc.w f32 (C, classes), fc.b f32.
+    """
+    out = {}
+    for node in layers.conv_nodes(graph):
+        name = node["name"]
+        qp = qweights[name]
+        if node["quant"]:
+            out[f"{name}.wq"] = np.asarray(
+                layers._flatten_weights(qp["wq"]), dtype=np.int8
+            )
+            out[f"{name}.scale"] = np.asarray(qp["scale"], dtype=np.float32)
+            out[f"{name}.bias"] = np.asarray(qp["b"], dtype=np.float32)
+        else:
+            out[f"{name}.w"] = np.asarray(qp["w"], dtype=np.float32)
+            out[f"{name}.bias"] = np.asarray(qp["b"], dtype=np.float32)
+    out["fc.w"] = np.asarray(qweights["fc"]["w"], dtype=np.float32)
+    out["fc.b"] = np.asarray(qweights["fc"]["b"], dtype=np.float32)
+    np.savez(path, **out)
+
+
+def export_meta_json(path, graph, variant: str):
+    meta = {
+        "arch": graph["arch"],
+        "variant": variant,
+        "num_classes": graph["num_classes"],
+        "input_hwc": list(IMG_SHAPE),
+        "eval_batch": EVAL_BATCH,
+        "quant_convs": layers.quant_conv_names(graph),
+        "nodes": graph["nodes"],
+    }
+    json.dump(meta, open(path, "w"), indent=1)
+
+
+def export_model(arch: str, out_dir: str, pruned: bool = False) -> dict:
+    """Export all artifacts for one (arch, variant); returns manifest row."""
+    suffix = "_p24" if pruned else ""
+    tag = f"{arch}{suffix}"
+    stamp = os.path.join(out_dir, f"{tag}_meta.json")
+    graph = model.build(arch)
+    nq = len(layers.quant_conv_names(graph))
+    row = {
+        "tag": tag,
+        "arch": arch,
+        "pruned": pruned,
+        "quant_convs": nq,
+        "files": {
+            kind: f"{tag}_{kind}.hlo.txt" for kind in ("float", "calib", "sparq")
+        },
+        "weights": f"{tag}_weights.npz",
+        "meta": f"{tag}_meta.json",
+    }
+    if os.path.exists(stamp):
+        return row
+
+    params, state = train.load_checkpoint(os.path.join(out_dir, f"ckpt_{tag}.npz"))
+    folded = layers.fold_batchnorm(graph, params, state)
+    qweights = layers.quantize_weights(graph, folded)
+    export_weights_npz(os.path.join(out_dir, f"{tag}_weights.npz"), graph, qweights)
+
+    img = jax.ShapeDtypeStruct((EVAL_BATCH,) + IMG_SHAPE, jnp.float32)
+    scales = jax.ShapeDtypeStruct((nq,), jnp.float32)
+    cfg = jax.ShapeDtypeStruct((5,), jnp.int32)
+
+    f_float = lambda x: (layers.forward_folded(graph, folded, x),)
+    f_calib = lambda x: layers.calib_forward(graph, folded, x)
+    f_sparq = lambda x, s, c: (layers.forward_quant(graph, qweights, s, c, x),)
+
+    _write(
+        os.path.join(out_dir, row["files"]["float"]),
+        to_hlo_text(jax.jit(f_float).lower(img)),
+    )
+    _write(
+        os.path.join(out_dir, row["files"]["calib"]),
+        to_hlo_text(jax.jit(f_calib).lower(img)),
+    )
+    _write(
+        os.path.join(out_dir, row["files"]["sparq"]),
+        to_hlo_text(jax.jit(f_sparq).lower(img, scales, cfg)),
+    )
+    export_meta_json(stamp, graph, "p24" if pruned else "dense")
+    return row
+
+
+def prepare_pruned(out_dir: str, d: dict):
+    """2:4-prune + fine-tune the STC subset; idempotent per checkpoint."""
+    logs = []
+    for arch in model.STC_ZOO:
+        ckpt = os.path.join(out_dir, f"ckpt_{arch}_p24.npz")
+        if os.path.exists(ckpt):
+            continue
+        params, state = train.load_checkpoint(os.path.join(out_dir, f"ckpt_{arch}.npz"))
+        p, s, log = prune.prune_and_finetune(arch, d, params, state)
+        graph = model.build(arch)
+        assert prune.sparsity(p, graph) >= 0.45, "2:4 pruning did not take"
+        train.save_checkpoint(ckpt, p, s)
+        log["arch"] = f"{arch}_p24"
+        logs.append(log)
+        print(f"[prune] {arch}: acc={log['test_acc']:.4f}")
+    if logs:
+        log_path = os.path.join(out_dir, "train_log.json")
+        prev = json.load(open(log_path)) if os.path.exists(log_path) else []
+        done = {l["arch"] for l in logs}
+        json.dump([l for l in prev if l["arch"] not in done] + logs, open(log_path, "w"), indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=train.DEFAULT_STEPS)
+    ap.add_argument("--archs", nargs="*", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    d = dataset.load_or_generate(args.out)
+    train.train_all(args.out, steps=args.steps, archs=args.archs)
+    prepare_pruned(args.out, d)
+
+    manifest = []
+    for arch in args.archs or model.ZOO:
+        manifest.append(export_model(arch, args.out, pruned=False))
+    for arch in model.STC_ZOO:
+        if args.archs and arch not in args.archs:
+            continue
+        manifest.append(export_model(arch, args.out, pruned=True))
+    json.dump(manifest, open(os.path.join(args.out, "manifest.json"), "w"), indent=1)
+    open(os.path.join(args.out, ".stamp"), "w").write("ok\n")
+    print(f"[aot] manifest: {len(manifest)} model variants")
+
+
+if __name__ == "__main__":
+    main()

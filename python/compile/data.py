@@ -1,0 +1,215 @@
+"""Synthetic "shapes" dataset — the ImageNet substitute (DESIGN.md S1).
+
+Ten procedurally generated pattern classes over HxWx3 uint8 images with
+randomized geometry, color, background and noise. The task is easy enough
+for mini-CNNs to reach high accuracy in a few hundred steps, yet the
+trained activations show the two properties SPARQ exploits:
+
+  * bell-shaped (post-ReLU, zero-inflated) activation distributions, and
+  * substantial dynamic zero-value sparsity.
+
+Both are asserted by tests (python/tests/test_data.py checks the dataset,
+test_model.py checks trained-activation sparsity) and re-measured at the
+rust layer (`sparq-cli stats`, experiment F2).
+
+The dataset is written both as .npz (python/training side) and as a flat
+.bin (rust side; see rust/src/data/loader.rs for the mirrored format).
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+import numpy as np
+
+H = W = 20
+C = 3
+NUM_CLASSES = 10
+MAGIC = b"SPRQDS1\x00"
+
+_TRAIN_N = 12000
+_TEST_N = 2000
+
+
+def _grid(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-sample coordinate grids, shape (n, H, W), in [0, 1]."""
+    ys, xs = np.meshgrid(np.arange(H), np.arange(W), indexing="ij")
+    ys = np.broadcast_to(ys[None], (n, H, W)).astype(np.float32) / (H - 1)
+    xs = np.broadcast_to(xs[None], (n, H, W)).astype(np.float32) / (W - 1)
+    return ys, xs
+
+
+def _stripes(rng, n, vertical: bool) -> np.ndarray:
+    ys, xs = _grid(n)
+    coord = xs if vertical else ys
+    period = rng.uniform(0.18, 0.4, size=(n, 1, 1)).astype(np.float32)
+    phase = rng.uniform(0, 1, size=(n, 1, 1)).astype(np.float32)
+    return (np.sin(2 * np.pi * (coord / period + phase)) > 0).astype(np.float32)
+
+
+def _checker(rng, n) -> np.ndarray:
+    ys, xs = _grid(n)
+    period = rng.uniform(0.22, 0.45, size=(n, 1, 1)).astype(np.float32)
+    phase_y = rng.uniform(0, 1, size=(n, 1, 1)).astype(np.float32)
+    phase_x = rng.uniform(0, 1, size=(n, 1, 1)).astype(np.float32)
+    a = np.sin(2 * np.pi * (ys / period + phase_y)) > 0
+    b = np.sin(2 * np.pi * (xs / period + phase_x)) > 0
+    return (a ^ b).astype(np.float32)
+
+
+def _center_radius(rng, n):
+    cy = rng.uniform(0.35, 0.65, size=(n, 1, 1)).astype(np.float32)
+    cx = rng.uniform(0.35, 0.65, size=(n, 1, 1)).astype(np.float32)
+    r = rng.uniform(0.18, 0.32, size=(n, 1, 1)).astype(np.float32)
+    return cy, cx, r
+
+
+def _disk(rng, n) -> np.ndarray:
+    ys, xs = _grid(n)
+    cy, cx, r = _center_radius(rng, n)
+    d = np.sqrt((ys - cy) ** 2 + (xs - cx) ** 2)
+    return (d < r).astype(np.float32)
+
+
+def _ring(rng, n) -> np.ndarray:
+    ys, xs = _grid(n)
+    cy, cx, r = _center_radius(rng, n)
+    d = np.sqrt((ys - cy) ** 2 + (xs - cx) ** 2)
+    wdt = rng.uniform(0.05, 0.1, size=(n, 1, 1)).astype(np.float32)
+    return (np.abs(d - r) < wdt).astype(np.float32)
+
+
+def _cross(rng, n) -> np.ndarray:
+    ys, xs = _grid(n)
+    cy, cx, _ = _center_radius(rng, n)
+    wdt = rng.uniform(0.06, 0.12, size=(n, 1, 1)).astype(np.float32)
+    return ((np.abs(ys - cy) < wdt) | (np.abs(xs - cx) < wdt)).astype(np.float32)
+
+
+def _diag(rng, n) -> np.ndarray:
+    ys, xs = _grid(n)
+    slope = rng.uniform(0.6, 1.6, size=(n, 1, 1)).astype(np.float32)
+    sign = np.where(rng.random(size=(n, 1, 1)) < 0.5, 1.0, -1.0).astype(np.float32)
+    off = rng.uniform(-0.2, 0.2, size=(n, 1, 1)).astype(np.float32)
+    wdt = rng.uniform(0.05, 0.11, size=(n, 1, 1)).astype(np.float32)
+    d = ys - (0.5 + sign * slope * (xs - 0.5) + off)
+    return (np.abs(d) < wdt).astype(np.float32)
+
+
+def _square(rng, n) -> np.ndarray:
+    ys, xs = _grid(n)
+    cy, cx, r = _center_radius(rng, n)
+    wdt = rng.uniform(0.05, 0.09, size=(n, 1, 1)).astype(np.float32)
+    dy, dx = np.abs(ys - cy), np.abs(xs - cx)
+    outer = np.maximum(dy, dx) < r
+    inner = np.maximum(dy, dx) < (r - wdt)
+    return (outer & ~inner).astype(np.float32)
+
+
+def _dots(rng, n) -> np.ndarray:
+    ys, xs = _grid(n)
+    out = np.zeros((n, H, W), dtype=np.float32)
+    for _ in range(2):
+        cy = rng.uniform(0.2, 0.8, size=(n, 1, 1)).astype(np.float32)
+        cx = rng.uniform(0.2, 0.8, size=(n, 1, 1)).astype(np.float32)
+        r = rng.uniform(0.08, 0.16, size=(n, 1, 1)).astype(np.float32)
+        d = np.sqrt((ys - cy) ** 2 + (xs - cx) ** 2)
+        out = np.maximum(out, (d < r).astype(np.float32))
+    return out
+
+
+def _blob(rng, n) -> np.ndarray:
+    """Soft anisotropic gradient blob (the only non-binary mask class)."""
+    ys, xs = _grid(n)
+    cy, cx, r = _center_radius(rng, n)
+    ay = rng.uniform(0.6, 1.6, size=(n, 1, 1)).astype(np.float32)
+    ax = rng.uniform(0.6, 1.6, size=(n, 1, 1)).astype(np.float32)
+    d2 = ay * (ys - cy) ** 2 + ax * (xs - cx) ** 2
+    return np.clip(1.0 - d2 / (r**2 + 1e-6), 0.0, 1.0).astype(np.float32)
+
+
+_GENERATORS = [
+    lambda rng, n: _stripes(rng, n, vertical=False),  # 0 horizontal stripes
+    lambda rng, n: _stripes(rng, n, vertical=True),  # 1 vertical stripes
+    _checker,  # 2 checkerboard
+    _disk,  # 3 filled disk
+    _ring,  # 4 ring
+    _cross,  # 5 cross
+    _diag,  # 6 diagonal bar
+    _square,  # 7 square outline
+    _dots,  # 8 two dots
+    _blob,  # 9 gradient blob
+]
+
+
+def _colorize(rng, mask: np.ndarray) -> np.ndarray:
+    """Mask (n,H,W) in [0,1] -> uint8 image batch (n,H,W,3)."""
+    n = mask.shape[0]
+    fg = rng.uniform(0.55, 1.0, size=(n, 1, 1, 3)).astype(np.float32)
+    bg = rng.uniform(0.0, 0.3, size=(n, 1, 1, 3)).astype(np.float32)
+    # mild background gradient so the background is not constant
+    ys, xs = _grid(n)
+    gdir = rng.uniform(-1, 1, size=(n, 1, 1, 2)).astype(np.float32)
+    grad = 0.1 * (gdir[..., 0] * (ys - 0.5) + gdir[..., 1] * (xs - 0.5))
+    img = bg + grad[..., None] + mask[..., None] * (fg - bg)
+    img = img + rng.normal(0, 0.035, size=img.shape).astype(np.float32)
+    return (np.clip(img, 0, 1) * 255.0).round().astype(np.uint8)
+
+
+def generate(n: int, seed: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate `n` labelled images. Returns (images u8 (n,H,W,3), labels u8)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NUM_CLASSES, size=n).astype(np.uint8)
+    images = np.zeros((n, H, W, C), dtype=np.uint8)
+    for cls in range(NUM_CLASSES):
+        idx = np.nonzero(labels == cls)[0]
+        if idx.size == 0:
+            continue
+        mask = _GENERATORS[cls](rng, idx.size)
+        images[idx] = _colorize(rng, mask)
+    return images, labels
+
+
+def write_bin(path: str, images: np.ndarray, labels: np.ndarray) -> None:
+    """Flat binary format shared with rust/src/data/loader.rs.
+
+    Layout: MAGIC(8) | n u32 | h u32 | w u32 | c u32 | nclasses u32
+            | images u8[n*h*w*c] | labels u8[n]      (all little-endian)
+    """
+    n, h, w, c = images.shape
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<5I", n, h, w, c, NUM_CLASSES))
+        f.write(images.tobytes(order="C"))
+        f.write(labels.tobytes(order="C"))
+
+
+def load_or_generate(out_dir: str) -> dict[str, np.ndarray]:
+    """Idempotent dataset materialization into `out_dir`."""
+    npz_path = os.path.join(out_dir, "dataset.npz")
+    if os.path.exists(npz_path):
+        d = np.load(npz_path)
+        return {k: d[k] for k in d.files}
+    os.makedirs(out_dir, exist_ok=True)
+    xtr, ytr = generate(_TRAIN_N, seed=2021)
+    xte, yte = generate(_TEST_N, seed=7)
+    np.savez_compressed(
+        npz_path, x_train=xtr, y_train=ytr, x_test=xte, y_test=yte
+    )
+    write_bin(os.path.join(out_dir, "train.bin"), xtr, ytr)
+    write_bin(os.path.join(out_dir, "test.bin"), xte, yte)
+    return {"x_train": xtr, "y_train": ytr, "x_test": xte, "y_test": yte}
+
+
+def normalize(images_u8: np.ndarray) -> np.ndarray:
+    """uint8 -> float32 in [0,1]; the only input preprocessing used anywhere."""
+    return images_u8.astype(np.float32) / 255.0
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    d = load_or_generate(out)
+    print({k: v.shape for k, v in d.items()})

@@ -1,0 +1,304 @@
+"""Pure-jnp SPARQ oracle — the canonical semantics (DESIGN.md S4/S5).
+
+Everything here operates on *already uniformly quantized* integers carried
+as int32:
+
+  * activations: unsigned, in [0, 255] (paper: symmetric unsigned
+    per-layer min-max quantization of post-ReLU activations),
+  * weights: signed, in [-127, 127] (symmetric per-kernel).
+
+All arithmetic is integer-exact, so the Pallas kernel
+(kernels/sparq.py), the rust quant library (rust/src/quant/) and the rust
+PE cycle simulator (rust/src/hw/pe.rs) are validated for *equality*
+against this file, not approximate closeness.
+
+Configuration vector (shared encoding with rust — see
+rust/src/quant/config.rs):
+
+  cfg = [n_bits, mode, round_flag, vsparq_flag, w_bits]   (int32[5])
+
+  n_bits : window width for bSPARQ (4, 3 or 2); 8 disables trimming
+           (plain A8 behaviour).
+  mode   : window-placement set.
+             0 = full  — all consecutive placements
+                         (5opt for n=4, 6opt for n=3, 7opt for n=2)
+             1 = 3opt  — shifts {0, 2, 4}   (n=4 only)
+             2 = 2opt  — shifts {0, 4}      (n=4 only; -R == SySMT trim)
+             3 = uniform — NOT bSPARQ: plain uniform requantization of the
+                         8-bit value to n bits (the A4W8-style baseline).
+  round_flag  : 1 = round within the window by the residual LSBs (+R),
+                0 = truncate (Trim).
+  vsparq_flag : 1 = pair activations along the dot-product axis; a zero
+                partner donates its budget (window of 2*n bits, full
+                placement set). 0 = per-activation bSPARQ only (-vS).
+  w_bits : 8 keeps the stored int8 weights; 4 requantizes them uniformly
+           to 4 bits (the A8W4 baseline). Requantized weights are used at
+           their reduced integer scale; callers must multiply the output
+           dequant scale by `weight_rescale(cfg)`.
+
+Paper mapping:
+  Table 1  A8W8        = [8, 0, 0, 0, 8]
+           A4W8        = [4, 3, 1, 0, 8]
+           A8W4        = [8, 0, 0, 0, 4]
+  Table 2  5opt Trim   = [4, 0, 0, 1, 8]
+           5opt +R     = [4, 0, 1, 1, 8]
+           5opt +R -vS = [4, 0, 1, 0, 8]
+           3opt ...    = mode 1, 2opt ... = mode 2
+  Table 4  3b 6opt     = [3, 0, 1, 1, 8]   (±vS via vsparq_flag)
+           2b 7opt     = [2, 0, 1, 1, 8]
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+CFG_LEN = 5
+
+# mode encoding (keep in sync with rust/src/quant/config.rs)
+MODE_FULL = 0
+MODE_3OPT = 1
+MODE_2OPT = 2
+MODE_UNIFORM = 3
+
+
+def named_config(name: str) -> np.ndarray:
+    """Convenience: config vectors by paper name."""
+    table = {
+        "a8w8": [8, MODE_FULL, 0, 0, 8],
+        "a4w8": [4, MODE_UNIFORM, 1, 0, 8],
+        "a3w8": [3, MODE_UNIFORM, 1, 0, 8],
+        "a2w8": [2, MODE_UNIFORM, 1, 0, 8],
+        "a8w4": [8, MODE_FULL, 0, 0, 4],
+        "5opt": [4, MODE_FULL, 0, 1, 8],
+        "5opt_r": [4, MODE_FULL, 1, 1, 8],
+        "5opt_r_novs": [4, MODE_FULL, 1, 0, 8],
+        "3opt": [4, MODE_3OPT, 0, 1, 8],
+        "3opt_r": [4, MODE_3OPT, 1, 1, 8],
+        "3opt_r_novs": [4, MODE_3OPT, 1, 0, 8],
+        "2opt": [4, MODE_2OPT, 0, 1, 8],
+        "2opt_r": [4, MODE_2OPT, 1, 1, 8],
+        "2opt_r_novs": [4, MODE_2OPT, 1, 0, 8],
+        "sysmt": [4, MODE_2OPT, 0, 1, 8],  # paper §5.1: SySMT ~ 2opt trim
+        "6opt_r": [3, MODE_FULL, 1, 1, 8],
+        "6opt_r_novs": [3, MODE_FULL, 1, 0, 8],
+        "7opt_r": [2, MODE_FULL, 1, 1, 8],
+        "7opt_r_novs": [2, MODE_FULL, 1, 0, 8],
+    }
+    return np.asarray(table[name], dtype=np.int32)
+
+
+def weight_rescale(cfg) -> float:
+    """Extra dequant factor when weights are requantized below 8 bits."""
+    w_bits = int(cfg[4])
+    if w_bits >= 8:
+        return 1.0
+    return 127.0 / float(2 ** (w_bits - 1) - 1)
+
+
+# ---------------------------------------------------------------------------
+# bit helpers (branch-free; everything is int32 and vectorized)
+# ---------------------------------------------------------------------------
+
+
+def msb_index(x: jnp.ndarray) -> jnp.ndarray:
+    """Index of the most significant set bit for x in [0, 255].
+
+    Returns 0 for x in {0, 1} (callers mask x == 0 separately).
+    """
+    x = x.astype(jnp.int32)
+    idx = jnp.zeros_like(x)
+    for b in range(1, 8):
+        idx = idx + (x >= (1 << b)).astype(jnp.int32)
+    return idx
+
+
+def _select_shift(msb: jnp.ndarray, width, mode) -> jnp.ndarray:
+    """Window shift: smallest allowed placement whose window covers `msb`.
+
+    `width` and `mode` may be python ints or traced int32 scalars; the
+    result is computed for all modes and selected, so the expression
+    lowers branch-free into HLO.
+    """
+    msb = msb.astype(jnp.int32)
+    width = jnp.asarray(width, dtype=jnp.int32)
+    # full: s = max(0, msb - width + 1)
+    s_full = jnp.maximum(0, msb - width + 1)
+    # 3opt (width 4): allowed {0, 2, 4} -> round s_full up to even, cap 4
+    s_3opt = jnp.minimum(((s_full + 1) // 2) * 2, 4)
+    # 2opt (width 4): allowed {0, 4}
+    s_2opt = jnp.where(s_full > 0, 4, 0)
+    mode = jnp.asarray(mode, dtype=jnp.int32)
+    return jnp.where(
+        mode == MODE_3OPT, s_3opt, jnp.where(mode == MODE_2OPT, s_2opt, s_full)
+    )
+
+
+def bsparq_window(x: jnp.ndarray, width, mode, round_flag) -> jnp.ndarray:
+    """Trim x in [0,255] to a `width`-bit window (bSPARQ §3.1).
+
+    Window top is placed per `mode`; `round_flag` rounds by the residual
+    LSBs and saturates within the window. Returns the *reconstructed*
+    approximated value (q << shift), still in [0, 255].
+    """
+    x = x.astype(jnp.int32)
+    width = jnp.asarray(width, dtype=jnp.int32)
+    s = _select_shift(msb_index(x), width, mode)
+    round_flag = jnp.asarray(round_flag, dtype=jnp.int32)
+    # round-half-up by residual LSBs: q = (x + r*(1 << (s-1))) >> s, s > 0
+    half = jnp.where(s > 0, (1 << jnp.maximum(s - 1, 0)) * round_flag, 0)
+    q = (x + half) >> s
+    qmax = (1 << width) - 1
+    q = jnp.minimum(q, qmax)  # saturate the window on round-up overflow
+    return q << s
+
+
+def uniform_requant(x: jnp.ndarray, width) -> jnp.ndarray:
+    """Uniform 8b -> width-bit requantization, reconstructed into [0,255].
+
+    q = round(x * qmax / 255); reconstruction multiplies back by
+    255 / qmax. To keep everything integer-exact we reconstruct as
+    round(q * 255 / qmax). Used by the A4W8-style baselines (mode 3).
+    """
+    x = x.astype(jnp.int32)
+    width = jnp.asarray(width, dtype=jnp.int32)
+    qmax = (1 << width) - 1
+    q = (x * qmax + 127) // 255  # round-half-up; exact in int32
+    return (q * 255 + qmax // 2) // qmax
+
+
+def _trim_one(x, n_bits, mode, round_flag):
+    """Per-activation trim (no pairing): dispatch on mode."""
+    n_bits_t = jnp.asarray(n_bits, dtype=jnp.int32)
+    b = bsparq_window(x, n_bits_t, mode, round_flag)
+    u = uniform_requant(x, n_bits_t)
+    mode = jnp.asarray(mode, dtype=jnp.int32)
+    y = jnp.where(mode == MODE_UNIFORM, u, b)
+    # n_bits == 8 disables trimming entirely (A8 passthrough)
+    return jnp.where(n_bits_t >= 8, x.astype(jnp.int32), y)
+
+
+def sparq_trim(x: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Full SPARQ activation transform along the last axis.
+
+    x: int32 activations in [0, 255]; the last axis is the dot-product
+    (reduction) axis and must have even length when vsparq is enabled.
+    cfg: int32[5] (may be a traced array — fully branch-free).
+
+    vSPARQ (§3.2, eq. 2): activations are paired (even, odd) along the
+    last axis. If exactly one of the pair is zero, the other is trimmed
+    with a doubled window (2*n bits, full placement set) — for n=4 that
+    is a full 8-bit passthrough. Otherwise both are bSPARQ-trimmed.
+    """
+    cfg = jnp.asarray(cfg, dtype=jnp.int32)
+    n_bits, mode, round_flag, vsparq, _ = (cfg[i] for i in range(CFG_LEN))
+    x = x.astype(jnp.int32)
+
+    single = _trim_one(x, n_bits, mode, round_flag)
+
+    # paired path
+    shp = x.shape
+    xp = x.reshape(shp[:-1] + (shp[-1] // 2, 2))
+    x0, x1 = xp[..., 0], xp[..., 1]
+    wide = jnp.minimum(2 * n_bits, 8)
+    w0 = bsparq_window(x0, wide, MODE_FULL, round_flag)
+    w1 = bsparq_window(x1, wide, MODE_FULL, round_flag)
+    s0 = _trim_one(x0, n_bits, mode, round_flag)
+    s1 = _trim_one(x1, n_bits, mode, round_flag)
+    y0 = jnp.where(x1 == 0, w0, s0)
+    y1 = jnp.where(x0 == 0, w1, s1)
+    paired = jnp.stack([y0, y1], axis=-1).reshape(shp)
+
+    use_pair = (vsparq == 1) & (n_bits < 8)
+    return jnp.where(use_pair, paired, single)
+
+
+def requant_weights(w: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Optional A8W4-style weight requantization (signed, symmetric).
+
+    w: int32 in [-127, 127]. For w_bits < 8, q = round(|w| * qmax / 127)
+    with sign restored; the caller rescales dequant by weight_rescale().
+    """
+    cfg = jnp.asarray(cfg, dtype=jnp.int32)
+    w_bits = cfg[4]
+    w = w.astype(jnp.int32)
+    qmax = (1 << (w_bits - 1)) - 1
+    a = jnp.abs(w)
+    q = (a * qmax + 63) // 127
+    return jnp.where(w_bits >= 8, w, jnp.sign(w) * q)
+
+
+def sparq_matmul_ref(a: jnp.ndarray, w: jnp.ndarray, cfg) -> jnp.ndarray:
+    """Reference SPARQ GEMM: y[m,n] = sum_k trim(a)[m,k] * w[k,n], int32.
+
+    a: int32 (M, K) in [0, 255]; w: int32 (K, N) in [-127, 127].
+    The Pallas kernel (kernels/sparq.py) must equal this exactly.
+    """
+    at = sparq_trim(a, cfg)
+    wq = requant_weights(w, cfg)
+    return jnp.matmul(at, wq, preferred_element_type=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# STC composition (§5.3): vSPARQ after 2:4 weight selection
+# ---------------------------------------------------------------------------
+
+
+def stc_pairdot_ref(a: jnp.ndarray, w: jnp.ndarray, cfg) -> jnp.ndarray:
+    """SPARQ on top of a Sparse Tensor Core (paper Fig. 5, Table 6).
+
+    w is 2:4 structured-sparse along K: in every group of 4 consecutive
+    weights at most 2 are non-zero (per output column). The STC stores the
+    two survivors plus coordinates; the coordinates mux-select the two
+    matching activations, and *those two* form the vSPARQ pair.
+
+    This reference materializes the gather (fine for test-sized shapes);
+    the production path is the rust-native STC engine (rust/src/hw/stc.rs).
+
+    a: int32 (M, K); w: int32 (K, N), K % 4 == 0. Returns int32 (M, N).
+    """
+    m_, k_, n_ = a.shape[0], a.shape[1], w.shape[1]
+    g = k_ // 4
+    wg = w.reshape(g, 4, n_)
+    # Survivor indices per (group, column): indices of the 2 largest |w|;
+    # with 2:4 sparsity those are exactly the non-zero positions (ties on
+    # zeros are fine — a zero weight contributes nothing either way).
+    order = jnp.argsort(-jnp.abs(wg), axis=1)  # (g, 4, n)
+    idx = jnp.sort(order[:, :2, :], axis=1)  # keep K-order within the pair
+    k_abs = idx + (jnp.arange(g) * 4)[:, None, None]  # absolute k (g, 2, n)
+    # Gather activations / weights for the selected lanes.
+    a_sel = a[:, k_abs]  # (m, g, 2, n)
+    w_sel = jnp.take_along_axis(wg, idx, axis=1)  # (g, 2, n)
+    cfg = jnp.asarray(cfg, dtype=jnp.int32)
+    n_bits, mode, round_flag, vsparq, _ = (cfg[i] for i in range(CFG_LEN))
+    a0, a1 = a_sel[:, :, 0, :], a_sel[:, :, 1, :]
+    wide = jnp.minimum(2 * n_bits, 8)
+    t0_w = bsparq_window(a0, wide, MODE_FULL, round_flag)
+    t1_w = bsparq_window(a1, wide, MODE_FULL, round_flag)
+    t0_s = _trim_one(a0, n_bits, mode, round_flag)
+    t1_s = _trim_one(a1, n_bits, mode, round_flag)
+    use_pair = (vsparq == 1) & (n_bits < 8)
+    y0 = jnp.where(use_pair & (a1 == 0), t0_w, t0_s)
+    y1 = jnp.where(use_pair & (a0 == 0), t1_w, t1_s)
+    w_sel = requant_weights(w_sel, cfg)
+    w0, w1 = w_sel[None, :, 0, :], w_sel[None, :, 1, :]
+    acc = y0 * w0 + y1 * w1  # (m, g, n)
+    return jnp.sum(acc, axis=1).astype(jnp.int32)
+
+
+__all__ = [
+    "CFG_LEN",
+    "MODE_FULL",
+    "MODE_3OPT",
+    "MODE_2OPT",
+    "MODE_UNIFORM",
+    "named_config",
+    "weight_rescale",
+    "msb_index",
+    "bsparq_window",
+    "uniform_requant",
+    "sparq_trim",
+    "requant_weights",
+    "sparq_matmul_ref",
+    "stc_pairdot_ref",
+]

@@ -1,0 +1,162 @@
+"""L1 — Pallas SPARQ GEMM kernel (DESIGN.md §4 Hardware adaptation).
+
+The paper's compute hot-spot is an int8 GEMM whose reduction applies the
+dynamic SPARQ requantization per activation pair. On TPU the trim
+(leading-zero detect -> window placement -> round) is element-wise int32
+bit arithmetic that maps to the VPU; the n-bit x 8-bit products are an
+MXU-shaped `dot`. The kernel fuses trim + matmul per (TM, TN) output tile
+so the trimmed activations never round-trip through HBM.
+
+BlockSpec schedule (the TPU analogue of the paper's systolic dataflow):
+
+  grid = (M/TM, N/TN); per step the kernel sees
+    a_ref   (TM, K)  — activation rows, full reduction axis in VMEM
+    w_ref   (K, TN)  — weight columns in VMEM
+    cfg_ref (CFG_LEN,) — config scalars (n_bits, mode, round, vsparq, wbits)
+    o_ref   (TM, TN) — int32 accumulator tile
+
+  VMEM footprint = 4*(TM*K + K*TN + TM*TN) bytes; for the default
+  TM=TN=128 and the zoo's largest K (=1152) that is ~1.3 MiB, comfortably
+  inside a TensorCore's 16 MiB VMEM with room for double buffering
+  (see EXPERIMENTS.md §Perf for the sweep).
+
+Pallas is invoked with interpret=True everywhere in this repo: the CPU
+PJRT plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness path and real-TPU efficiency is estimated analytically.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .ref import CFG_LEN
+
+
+def _trim_tile(a, cfg):
+    """SPARQ trim of one activation tile; mirrors ref.sparq_trim exactly.
+
+    Runs on the VPU: pure element-wise int32 shifts/compares/selects over
+    even/odd lanes of the reduction axis — no data-dependent control flow.
+    """
+    n_bits, mode, round_flag, vsparq = cfg[0], cfg[1], cfg[2], cfg[3]
+    a = a.astype(jnp.int32)
+    single = ref._trim_one(a, n_bits, mode, round_flag)
+
+    tm, tk = a.shape
+    ap = a.reshape(tm, tk // 2, 2)
+    a0, a1 = ap[:, :, 0], ap[:, :, 1]
+    wide = jnp.minimum(2 * n_bits, 8)
+    w0 = ref.bsparq_window(a0, wide, ref.MODE_FULL, round_flag)
+    w1 = ref.bsparq_window(a1, wide, ref.MODE_FULL, round_flag)
+    s0 = ref._trim_one(a0, n_bits, mode, round_flag)
+    s1 = ref._trim_one(a1, n_bits, mode, round_flag)
+    y0 = jnp.where(a1 == 0, w0, s0)
+    y1 = jnp.where(a0 == 0, w1, s1)
+    paired = jnp.stack([y0, y1], axis=-1).reshape(tm, tk)
+
+    use_pair = (vsparq == 1) & (n_bits < 8)
+    return jnp.where(use_pair, paired, single)
+
+
+def _sparq_gemm_kernel(a_ref, w_ref, cfg_ref, o_ref):
+    """One (TM, TN) output tile: trim activations, requant weights, dot."""
+    cfg = cfg_ref[...]
+    at = _trim_tile(a_ref[...], cfg)
+    wq = ref.requant_weights(w_ref[...], cfg)
+    o_ref[...] = jax.lax.dot_general(
+        at,
+        wq,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def sparq_matmul(a, w, cfg, *, tm: int = 128, tn: int = 128):
+    """Fused SPARQ GEMM: int32 (M, K) x (K, N) -> (M, N).
+
+    a in [0, 255], w in [-127, 127], cfg int32[CFG_LEN]. Bit-exact equal
+    to ref.sparq_matmul_ref (asserted by python/tests/test_kernel.py).
+
+    Inputs are zero-padded up to the tile grid; zero activations trim to
+    zero and contribute nothing, so padding never changes the result
+    (property-tested). K is padded to an even length for vSPARQ pairing —
+    a zero partner in the padded lane only *widens* the real lane's
+    window, which is exact, so this too is value-preserving.
+    """
+    a = a.astype(jnp.int32)
+    w = w.astype(jnp.int32)
+    cfg = jnp.asarray(cfg, dtype=jnp.int32)
+    m, k = a.shape
+    k2, n = w.shape
+    assert k == k2, f"reduction mismatch {k} vs {k2}"
+
+    a, _ = _pad_to(a, 1, 2)
+    w, _ = _pad_to(w, 0, 2)
+    a, m0 = _pad_to(a, 0, tm)
+    w, n0 = _pad_to(w, 1, tn)
+    kp = a.shape[1]
+    grid = (a.shape[0] // tm, w.shape[1] // tn)
+
+    out = pl.pallas_call(
+        _sparq_gemm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((CFG_LEN,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((a.shape[0], w.shape[1]), jnp.int32),
+        interpret=True,
+    )(a, w, cfg)
+    return out[:m0, :n0]
+
+
+def _trim_only_kernel(a_ref, cfg_ref, o_ref):
+    o_ref[...] = _trim_tile(a_ref[...], cfg_ref[...])
+
+
+@jax.jit
+def sparq_trim_pallas(a, cfg):
+    """Standalone trim kernel (no GEMM) — used by tests and the stats path.
+
+    a: int32 (M, K) in [0, 255]; K must be even when vsparq is enabled.
+    """
+    a = a.astype(jnp.int32)
+    cfg = jnp.asarray(cfg, dtype=jnp.int32)
+    m, k = a.shape
+    return pl.pallas_call(
+        _trim_only_kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((CFG_LEN,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.int32),
+        interpret=True,
+    )(a, cfg)
+
+
+def vmem_bytes(tm: int, tn: int, k: int) -> int:
+    """Static VMEM footprint of one grid step (perf model, DESIGN.md §7)."""
+    return 4 * (tm * k + k * tn + tm * tn)
+
+
+__all__ = ["sparq_matmul", "sparq_trim_pallas", "vmem_bytes"]

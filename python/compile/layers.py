@@ -1,0 +1,527 @@
+"""Graph IR + interpreters for the mini CNN zoo (DESIGN.md S2/S3).
+
+A model is a flat, topologically ordered list of nodes — a deliberately
+boring IR that three consumers share:
+
+  1. the float *training* interpreter (`forward_float`, with BatchNorm
+     batch statistics) used by train.py,
+  2. the integer *quantized* interpreter (`forward_quant`) that builds
+     the SPARQ inference graph lowered to HLO by aot.py (calling the
+     Pallas kernel for every quantized conv), and
+  3. the rust-native engine (rust/src/model/graph.rs), which executes the
+     same node list from the exported meta JSON bit-exactly.
+
+Tensors are NHWC float32 except inside quantized convs, which run int32.
+Conv weights are HWIO. The im2col feature order is (C, kh, kw) — the
+order produced by lax.conv_general_dilated_patches — and the rust side
+mirrors it (rust/src/tensor/im2col.rs).
+
+Node schema (all plain JSON-serializable):
+  {"name": str, "op": str, "inputs": [str, ...], ...attrs}
+
+Ops:
+  input                                   the image placeholder
+  conv    k, stride, out_ch, relu, quant  conv (+folded BN) (+ReLU)
+  pool    kind ("max"|"avg")              2x2 stride-2 window
+  gap                                     global average pool -> (N, C)
+  add                                     elementwise (residual)
+  relu                                    standalone ReLU
+  concat                                  channel concat
+  fc      out                             final float linear on (N, C)
+
+Convs with quant=True participate in SPARQ; quant=False (the first conv,
+per paper §5) stays float. BatchNorm exists only during training; export
+folds it into conv weights (`fold_batchnorm`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import ref as kref
+from .kernels import sparq as ksparq
+
+BN_EPS = 1e-5
+BN_MOMENTUM = 0.9
+
+
+# ---------------------------------------------------------------------------
+# graph construction
+# ---------------------------------------------------------------------------
+
+
+class GraphBuilder:
+    """Tiny helper that assigns unique names and keeps topo order."""
+
+    def __init__(self, arch: str, num_classes: int):
+        self.arch = arch
+        self.num_classes = num_classes
+        self.nodes: list[dict] = [{"name": "img", "op": "input", "inputs": []}]
+        self._counter = 0
+
+    def _fresh(self, prefix: str) -> str:
+        self._counter += 1
+        return f"{prefix}{self._counter}"
+
+    def _push(self, node: dict) -> str:
+        self.nodes.append(node)
+        return node["name"]
+
+    def conv(
+        self,
+        x: str,
+        out_ch: int,
+        k: int = 3,
+        stride: int = 1,
+        relu: bool = True,
+        quant: bool = True,
+        name: str | None = None,
+    ) -> str:
+        return self._push(
+            {
+                "name": name or self._fresh("conv"),
+                "op": "conv",
+                "inputs": [x],
+                "k": k,
+                "stride": stride,
+                "out_ch": out_ch,
+                "relu": relu,
+                "quant": quant,
+            }
+        )
+
+    def pool(self, x: str, kind: str = "max") -> str:
+        return self._push(
+            {"name": self._fresh("pool"), "op": "pool", "inputs": [x], "kind": kind}
+        )
+
+    def gap(self, x: str) -> str:
+        return self._push({"name": self._fresh("gap"), "op": "gap", "inputs": [x]})
+
+    def add(self, a: str, b: str) -> str:
+        return self._push({"name": self._fresh("add"), "op": "add", "inputs": [a, b]})
+
+    def relu(self, x: str) -> str:
+        return self._push({"name": self._fresh("relu"), "op": "relu", "inputs": [x]})
+
+    def concat(self, xs: list[str]) -> str:
+        return self._push(
+            {"name": self._fresh("cat"), "op": "concat", "inputs": list(xs)}
+        )
+
+    def fc(self, x: str) -> str:
+        return self._push(
+            {
+                "name": "fc",
+                "op": "fc",
+                "inputs": [x],
+                "out": self.num_classes,
+            }
+        )
+
+    def graph(self) -> dict:
+        return {
+            "arch": self.arch,
+            "num_classes": self.num_classes,
+            "nodes": self.nodes,
+        }
+
+
+def conv_nodes(graph: dict) -> list[dict]:
+    return [n for n in graph["nodes"] if n["op"] == "conv"]
+
+
+def quant_conv_names(graph: dict) -> list[str]:
+    """Order defines the activation-scale vector layout everywhere."""
+    return [n["name"] for n in conv_nodes(graph) if n["quant"]]
+
+
+# ---------------------------------------------------------------------------
+# parameter initialization
+# ---------------------------------------------------------------------------
+
+
+def _he_init(key, shape):
+    fan_in = int(np.prod(shape[:-1]))
+    return jax.random.normal(key, shape, jnp.float32) * np.sqrt(2.0 / fan_in)
+
+
+def init_params(graph: dict, key, in_ch: int = 3):
+    """Returns (params, bn_state). Channel bookkeeping mirrors forward."""
+    params: dict = {}
+    state: dict = {}
+    channels = {"img": in_ch}
+    for node in graph["nodes"]:
+        op = node["op"]
+        name = node["name"]
+        if op == "input":
+            continue
+        ins = [channels[i] for i in node["inputs"]]
+        if op == "conv":
+            key, k1 = jax.random.split(key)
+            c_in, c_out, k = ins[0], node["out_ch"], node["k"]
+            params[name] = {
+                "w": _he_init(k1, (k, k, c_in, c_out)),
+                "b": jnp.zeros((c_out,), jnp.float32),
+                "gamma": jnp.ones((c_out,), jnp.float32),
+                "beta": jnp.zeros((c_out,), jnp.float32),
+            }
+            state[name] = {
+                "mean": jnp.zeros((c_out,), jnp.float32),
+                "var": jnp.ones((c_out,), jnp.float32),
+            }
+            channels[name] = c_out
+        elif op == "fc":
+            key, k1 = jax.random.split(key)
+            c_in = ins[0]
+            params[name] = {
+                "w": jax.random.normal(k1, (c_in, node["out"]), jnp.float32)
+                * np.sqrt(1.0 / c_in),
+                "b": jnp.zeros((node["out"],), jnp.float32),
+            }
+            channels[name] = node["out"]
+        elif op == "concat":
+            channels[name] = sum(ins)
+        else:  # pool / gap / add / relu keep channel count
+            channels[name] = ins[0]
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# float interpreter (training / FP32 baseline / calibration)
+# ---------------------------------------------------------------------------
+
+
+def _conv_float(x, w, stride):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _pool2(x, kind: str):
+    if kind == "max":
+        return lax.reduce_window(
+            x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+        )
+    s = lax.reduce_window(x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    return s / 4.0
+
+
+def forward_float(graph, params, state, x, train: bool):
+    """Float forward. Returns (logits, new_state, taps).
+
+    `taps[name]` is the float input of each quantized conv — used for
+    calibration (max and mean statistics per paper §5).
+    """
+    vals = {"img": x}
+    new_state = {}
+    taps = {}
+    for node in graph["nodes"]:
+        op, name = node["op"], node["name"]
+        if op == "input":
+            continue
+        ins = [vals[i] for i in node["inputs"]]
+        if op == "conv":
+            p = params[name]
+            if node["quant"]:
+                taps[name] = ins[0]
+            y = _conv_float(ins[0], p["w"], node["stride"]) + p["b"]
+            if train:
+                mu = jnp.mean(y, axis=(0, 1, 2))
+                var = jnp.var(y, axis=(0, 1, 2))
+                new_state[name] = {
+                    "mean": BN_MOMENTUM * state[name]["mean"] + (1 - BN_MOMENTUM) * mu,
+                    "var": BN_MOMENTUM * state[name]["var"] + (1 - BN_MOMENTUM) * var,
+                }
+            else:
+                mu, var = state[name]["mean"], state[name]["var"]
+                new_state[name] = state[name]
+            y = p["gamma"] * (y - mu) * lax.rsqrt(var + BN_EPS) + p["beta"]
+            if node["relu"]:
+                y = jnp.maximum(y, 0.0)
+            vals[name] = y
+        elif op == "pool":
+            vals[name] = _pool2(ins[0], node["kind"])
+        elif op == "gap":
+            vals[name] = jnp.mean(ins[0], axis=(1, 2))
+        elif op == "add":
+            vals[name] = ins[0] + ins[1]
+        elif op == "relu":
+            vals[name] = jnp.maximum(ins[0], 0.0)
+        elif op == "concat":
+            vals[name] = jnp.concatenate(ins, axis=-1)
+        elif op == "fc":
+            p = params[name]
+            vals[name] = ins[0] @ p["w"] + p["b"]
+        else:
+            raise ValueError(f"unknown op {op}")
+    return vals["fc"], new_state, taps
+
+
+def fold_batchnorm(graph, params, state):
+    """Fold BN into conv weights/bias: standard inference-time folding.
+
+    Returns {conv_name: {"w": HWIO float, "b": float}} plus the untouched
+    fc parameters.
+    """
+    folded = {}
+    for node in conv_nodes(graph):
+        p = params[node["name"]]
+        s = state[node["name"]]
+        scale = p["gamma"] * lax.rsqrt(s["var"] + BN_EPS)
+        folded[node["name"]] = {
+            "w": p["w"] * scale[None, None, None, :],
+            "b": p["beta"] + (p["b"] - s["mean"]) * scale,
+        }
+    folded["fc"] = dict(params["fc"])
+    return folded
+
+
+def forward_folded(graph, folded, x):
+    """Float forward on BN-folded weights — the FP32 reference the
+    quantized paths are compared against (also lowered to HLO).
+
+    Uses only export-safe ops (see the XLA-0.5.1 note above)."""
+    vals = {"img": x}
+    for node in graph["nodes"]:
+        op, name = node["op"], node["name"]
+        if op == "input":
+            continue
+        ins = [vals[i] for i in node["inputs"]]
+        if op == "conv":
+            p = folded[name]
+            y = conv_float_export(ins[0], p["w"], p["b"], node["stride"])
+            vals[name] = jnp.maximum(y, 0.0) if node["relu"] else y
+        elif op == "pool":
+            vals[name] = _pool2_export(ins[0], node["kind"])
+        elif op == "gap":
+            vals[name] = jnp.mean(ins[0], axis=(1, 2))
+        elif op == "add":
+            vals[name] = ins[0] + ins[1]
+        elif op == "relu":
+            vals[name] = jnp.maximum(ins[0], 0.0)
+        elif op == "concat":
+            vals[name] = jnp.concatenate(ins, axis=-1)
+        elif op == "fc":
+            p = folded[name]
+            vals[name] = ins[0] @ p["w"] + p["b"]
+    return vals["fc"]
+
+
+def calib_forward(graph, folded, x):
+    """Calibration pass on folded float weights (paper §5 preprocessing).
+
+    Returns (maxes, mean_abs): per-quantized-conv input statistics, each a
+    vector ordered by quant_conv_names(). mean_abs feeds the ACIQ-style
+    analytic-clipping baseline (rust quant/baselines/aciq.rs).
+    """
+    vals = {"img": x}
+    maxes, means = [], []
+    for node in graph["nodes"]:
+        op, name = node["op"], node["name"]
+        if op == "input":
+            continue
+        ins = [vals[i] for i in node["inputs"]]
+        if op == "conv":
+            if node["quant"]:
+                maxes.append(jnp.max(ins[0]))
+                means.append(jnp.mean(ins[0]))  # inputs are post-ReLU (>= 0)
+            p = folded[name]
+            y = conv_float_export(ins[0], p["w"], p["b"], node["stride"])
+            vals[name] = jnp.maximum(y, 0.0) if node["relu"] else y
+        elif op == "pool":
+            vals[name] = _pool2_export(ins[0], node["kind"])
+        elif op == "gap":
+            vals[name] = jnp.mean(ins[0], axis=(1, 2))
+        elif op == "add":
+            vals[name] = ins[0] + ins[1]
+        elif op == "relu":
+            vals[name] = jnp.maximum(ins[0], 0.0)
+        elif op == "concat":
+            vals[name] = jnp.concatenate(ins, axis=-1)
+        elif op == "fc":
+            p = folded[name]
+            vals[name] = ins[0] @ p["w"] + p["b"]
+    return jnp.stack(maxes), jnp.stack(means)
+
+
+# ---------------------------------------------------------------------------
+# weight quantization (per-kernel symmetric int8, paper §5)
+# ---------------------------------------------------------------------------
+
+
+def quantize_weights(graph, folded):
+    """int8 per-output-channel symmetric weight quantization.
+
+    Returns {name: {"wq": int32 HWIO in [-127,127], "scale": (O,) float,
+                    "b": float bias}} for quantized convs; float entries
+    for the first conv and fc.
+    """
+    out = {}
+    for node in conv_nodes(graph):
+        name = node["name"]
+        p = folded[name]
+        if not node["quant"]:
+            out[name] = {"w": p["w"], "b": p["b"]}
+            continue
+        w = p["w"]
+        amax = jnp.max(jnp.abs(w), axis=(0, 1, 2))  # per output channel
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        wq = jnp.clip(jnp.round(w / scale[None, None, None, :]), -127, 127)
+        out[name] = {"wq": wq.astype(jnp.int32), "scale": scale, "b": p["b"]}
+    out["fc"] = dict(folded["fc"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# quantized interpreter (the L2 graph lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def _weight_rescale_graph(cfg):
+    """In-graph float equivalent of ref.weight_rescale (branch-free)."""
+    wb = cfg[4]
+    r4 = 127.0 / 7.0
+    r3 = 127.0 / 3.0
+    r2 = 127.0 / 1.0
+    return jnp.where(
+        wb >= 8, 1.0, jnp.where(wb == 4, r4, jnp.where(wb == 3, r3, r2))
+    ).astype(jnp.float32)
+
+
+# --- XLA-0.5.1-safe lowering primitives -----------------------------------
+#
+# The rust side's xla_extension 0.5.1 silently mis-executes `convolution`
+# and `reduce_window` parsed from HLO text (outputs all zeros; verified in
+# rust/tests/integration.rs::debug_minimal_conv during bring-up). Every
+# *exported* graph therefore lowers convs as slice-based im2col + `dot`
+# and pools as strided slices + elementwise max/add — ops that round-trip
+# correctly. Training (forward_float) keeps the fast lax.conv path; the
+# equivalence of the two conv implementations is pytest-checked.
+
+
+def _same_pad(x, k: int, stride: int):
+    """Spatial SAME padding (matches XLA's pad split: low = total//2)."""
+    n, h, w, c = x.shape
+    oh, ow = -(-h // stride), -(-w // stride)
+    th = max((oh - 1) * stride + k - h, 0)
+    tw = max((ow - 1) * stride + k - w, 0)
+    return (
+        jnp.pad(x, ((0, 0), (th // 2, th - th // 2), (tw // 2, tw - tw // 2), (0, 0))),
+        oh,
+        ow,
+    )
+
+
+def _im2col(x, k: int, stride: int):
+    """NHWC -> (N*OH*OW, C*k*k) patches, feature order (C, kh, kw).
+
+    Built from pad + strided slices + stack + reshape only (see note
+    above); ordering matches lax.conv_general_dilated_patches and
+    rust/src/tensor/im2col.rs.
+    """
+    n, _, _, c = x.shape
+    xp, oh, ow = _same_pad(x, k, stride)
+    cols = []
+    for ky in range(k):
+        for kx in range(k):
+            sl = xp[:, ky : ky + (oh - 1) * stride + 1 : stride,
+                    kx : kx + (ow - 1) * stride + 1 : stride, :]
+            cols.append(sl)  # (n, oh, ow, c)
+    # stack -> (n, oh, ow, k*k, c); transpose -> (..., c, k*k) for the
+    # (C, kh, kw) feature order
+    p = jnp.stack(cols, axis=3)
+    p = jnp.transpose(p, (0, 1, 2, 4, 3)).reshape(n, oh, ow, c * k * k)
+    return p.reshape(n * oh * ow, c * k * k), (n, oh, ow)
+
+
+def conv_float_export(x, w_hwio, b, stride: int):
+    """Float conv as im2col + dot (export-safe; equals lax.conv)."""
+    k = w_hwio.shape[0]
+    patches, (n, oh, ow) = _im2col(x, k, stride)
+    wf = jnp.transpose(w_hwio, (2, 0, 1, 3)).reshape(-1, w_hwio.shape[-1])
+    y = patches @ wf
+    return y.reshape(n, oh, ow, -1) + b
+
+
+def _pool2_export(x, kind: str):
+    """2x2 stride-2 pool via strided slices (export-safe)."""
+    a = x[:, 0::2, 0::2, :]
+    b = x[:, 0::2, 1::2, :]
+    c = x[:, 1::2, 0::2, :]
+    d = x[:, 1::2, 1::2, :]
+    if kind == "max":
+        return jnp.maximum(jnp.maximum(a, b), jnp.maximum(c, d))
+    return (a + b + c + d) / 4.0
+
+
+def _flatten_weights(wq):
+    """HWIO int32 -> (C*k*k, O), feature order (C, kh, kw) to match im2col."""
+    return jnp.transpose(wq, (2, 0, 1, 3)).reshape(-1, wq.shape[-1])
+
+
+def quantized_conv(x, node, qp, a_scale, cfg, *, use_pallas: bool = True):
+    """One SPARQ conv: quantize input, fused trim+GEMM, dequantize.
+
+    x: float NHWC (non-negative); a_scale: scalar activation scale.
+    Integer part is exactly the Pallas kernel / rust PE semantics.
+    """
+    aq = jnp.clip(jnp.round(x / a_scale), 0, 255).astype(jnp.int32)
+    patches, (n, oh, ow) = _im2col(aq, node["k"], node["stride"])
+    wflat = _flatten_weights(qp["wq"])
+    if use_pallas:
+        # Perf (EXPERIMENTS.md §Perf L2): on the CPU-interpret target the
+        # BlockSpec grid only adds loop-emulation overhead — a single
+        # whole-GEMM tile is ~10x faster and bit-identical. The 128x128
+        # tiling remains the real-TPU schedule (kernels/sparq.py).
+        acc = ksparq.sparq_matmul(
+            patches, wflat, cfg, tm=patches.shape[0], tn=wflat.shape[1]
+        )
+    else:
+        acc = kref.sparq_matmul_ref(patches, wflat, cfg)
+    wrs = _weight_rescale_graph(cfg)
+    y = acc.astype(jnp.float32) * (a_scale * wrs) * qp["scale"][None, :]
+    y = y.reshape(n, oh, ow, -1) + qp["b"]
+    return jnp.maximum(y, 0.0) if node["relu"] else y
+
+
+def forward_quant(graph, qweights, act_scales, cfg, x, *, use_pallas: bool = True):
+    """SPARQ-quantized forward (the artifact lowered per model).
+
+    act_scales: float (L,) ordered by quant_conv_names(graph);
+    cfg: int32[5] runtime config (see kernels/ref.py docstring).
+    """
+    qnames = quant_conv_names(graph)
+    scale_of = {n: act_scales[i] for i, n in enumerate(qnames)}
+    vals = {"img": x}
+    for node in graph["nodes"]:
+        op, name = node["op"], node["name"]
+        if op == "input":
+            continue
+        ins = [vals[i] for i in node["inputs"]]
+        if op == "conv":
+            qp = qweights[name]
+            if node["quant"]:
+                vals[name] = quantized_conv(
+                    ins[0], node, qp, scale_of[name], cfg, use_pallas=use_pallas
+                )
+            else:
+                y = conv_float_export(ins[0], qp["w"], qp["b"], node["stride"])
+                vals[name] = jnp.maximum(y, 0.0) if node["relu"] else y
+        elif op == "pool":
+            vals[name] = _pool2_export(ins[0], node["kind"])
+        elif op == "gap":
+            vals[name] = jnp.mean(ins[0], axis=(1, 2))
+        elif op == "add":
+            vals[name] = ins[0] + ins[1]
+        elif op == "relu":
+            vals[name] = jnp.maximum(ins[0], 0.0)
+        elif op == "concat":
+            vals[name] = jnp.concatenate(ins, axis=-1)
+        elif op == "fc":
+            qp = qweights[name]
+            vals[name] = ins[0] @ qp["w"] + qp["b"]
+    return vals["fc"]

@@ -1,0 +1,148 @@
+"""The mini CNN zoo (DESIGN.md S2) — torchvision-family analogues.
+
+Each architecture family from the paper's Table 1 is represented by a
+laptop-scale member built on the layers.py graph IR:
+
+  resnet10 / resnet18m  <- ResNet-18/34/50/101 (residual family)
+  vgg11m                <- plain-conv reference (no paper row; sanity)
+  squeezem              <- SqueezeNet (fire modules; the paper's most
+                           quantization-fragile model)
+  inceptm               <- GoogLeNet / Inception-v3 (parallel branches)
+  densem                <- DenseNet-121 (dense concatenation)
+
+Input is 20x20x3 (data.py); all models end in GAP + float FC. The first
+conv never quantizes (paper §5: image pixels carry no zero sparsity).
+"""
+
+from __future__ import annotations
+
+from .layers import GraphBuilder
+
+
+def _basic_block(g: GraphBuilder, x: str, ch: int, stride: int) -> str:
+    """ResNet basic block: conv-bn-relu, conv-bn, (projection), add, relu."""
+    y = g.conv(x, ch, k=3, stride=stride, relu=True)
+    y = g.conv(y, ch, k=3, stride=1, relu=False)
+    if stride != 1:
+        x = g.conv(x, ch, k=1, stride=stride, relu=False)
+    return g.relu(g.add(y, x))
+
+
+def resnet10() -> dict:
+    g = GraphBuilder("resnet10", 10)
+    x = g.conv("img", 16, k=3, stride=1, relu=True, quant=False)  # stem
+    x = _basic_block(g, x, 16, 1)
+    x = _basic_block(g, x, 32, 2)
+    x = _basic_block(g, x, 64, 2)
+    return _head(g, x)
+
+
+def resnet18m() -> dict:
+    g = GraphBuilder("resnet18m", 10)
+    x = g.conv("img", 16, k=3, stride=1, relu=True, quant=False)
+    for ch, stride in [(16, 1), (16, 1), (32, 2), (32, 1), (64, 2), (64, 1)]:
+        x = _basic_block(g, x, ch, stride)
+    return _head(g, x)
+
+
+def vgg11m() -> dict:
+    g = GraphBuilder("vgg11m", 10)
+    x = g.conv("img", 16, quant=False)
+    x = g.conv(x, 16)
+    x = g.pool(x)
+    x = g.conv(x, 32)
+    x = g.conv(x, 32)
+    x = g.pool(x)
+    x = g.conv(x, 64)
+    x = g.conv(x, 64)
+    return _head(g, x)
+
+
+def _fire(g: GraphBuilder, x: str, s: int, e: int) -> str:
+    """SqueezeNet fire module: 1x1 squeeze, 1x1 + 3x3 expand, concat."""
+    sq = g.conv(x, s, k=1)
+    e1 = g.conv(sq, e, k=1)
+    e3 = g.conv(sq, e, k=3)
+    return g.concat([e1, e3])
+
+
+def squeezem() -> dict:
+    g = GraphBuilder("squeezem", 10)
+    x = g.conv("img", 24, quant=False)
+    x = _fire(g, x, 8, 16)
+    x = _fire(g, x, 8, 16)
+    x = g.pool(x)
+    x = _fire(g, x, 12, 24)
+    x = _fire(g, x, 12, 24)
+    x = g.pool(x)
+    x = _fire(g, x, 16, 32)
+    return _head(g, x)
+
+
+def _inception(g: GraphBuilder, x: str, b1: int, b3: int, b5: int, bp: int) -> str:
+    """Inception block: 1x1 | 1x1->3x3 | 1x1->3x3->3x3 | pool-proj."""
+    br1 = g.conv(x, b1, k=1)
+    br3 = g.conv(g.conv(x, max(b3 // 2, 4), k=1), b3, k=3)
+    br5a = g.conv(x, max(b5 // 2, 4), k=1)
+    br5 = g.conv(g.conv(br5a, b5, k=3), b5, k=3)
+    brp = g.conv(x, bp, k=1)  # 1x1 projection (pooling branch sans pool)
+    return g.concat([br1, br3, br5, brp])
+
+
+def inceptm() -> dict:
+    g = GraphBuilder("inceptm", 10)
+    x = g.conv("img", 16, quant=False)
+    x = _inception(g, x, 8, 12, 4, 4)
+    x = g.pool(x)
+    x = _inception(g, x, 16, 24, 8, 8)
+    x = g.pool(x)
+    x = _inception(g, x, 24, 32, 12, 12)
+    return _head(g, x)
+
+
+def _dense_block(g: GraphBuilder, x: str, layers: int, growth: int) -> str:
+    for _ in range(layers):
+        y = g.conv(x, growth, k=3)
+        x = g.concat([x, y])
+    return x
+
+
+def densem() -> dict:
+    g = GraphBuilder("densem", 10)
+    x = g.conv("img", 16, quant=False)
+    x = _dense_block(g, x, 4, 8)
+    x = g.conv(x, 24, k=1)  # transition
+    x = g.pool(x, kind="avg")
+    x = _dense_block(g, x, 4, 12)
+    x = g.conv(x, 48, k=1)
+    x = g.pool(x, kind="avg")
+    x = _dense_block(g, x, 2, 16)
+    return _head(g, x)
+
+
+def _head(g: GraphBuilder, x: str) -> dict:
+    x = g.gap(x)
+    g.fc(x)
+    return g.graph()
+
+
+ZOO = {
+    "resnet10": resnet10,
+    "resnet18m": resnet18m,
+    "vgg11m": vgg11m,
+    "squeezem": squeezem,
+    "inceptm": inceptm,
+    "densem": densem,
+}
+
+# Models retrained with 2:4 structured pruning for the STC study (§5.3,
+# Table 6). The paper uses ResNet-18/50/101; we use the residual family
+# plus densem for a non-residual point.
+STC_ZOO = ["resnet10", "resnet18m", "densem"]
+
+
+def build(arch: str) -> dict:
+    return ZOO[arch]()
+
+
+__all__ = ["ZOO", "STC_ZOO", "build"]

@@ -1,0 +1,84 @@
+"""2:4 structured pruning + fine-tuning for the STC study (paper §5.3).
+
+NVIDIA Ampere's Sparse Tensor Cores require every group of 4 adjacent
+weights along the reduction axis to contain >= 2 zeros. The paper prunes
+pretrained ImageNet models and retrains for 90 epochs; at our scale we
+magnitude-prune the trained mini-zoo checkpoints and fine-tune briefly
+with the mask pinned (prune-and-tune), which restores baseline accuracy
+on the synthetic task.
+
+Group layout: the reduction axis of the im2col GEMM orders features as
+(C, kh, kw) — see layers._im2col — so the "4 adjacent weights" of the STC
+are 4 adjacent *rows* of the flattened (C*k*k, O) weight matrix. We prune
+in exactly that layout so the rust STC engine (rust/src/hw/stc.rs) sees
+genuine 2:4 structure without re-ordering.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers, model, train
+
+FINETUNE_STEPS = 250
+
+
+def prune_mask_24(w_hwio: jnp.ndarray) -> jnp.ndarray:
+    """2:4 magnitude mask for an HWIO conv weight, grouped along the
+    flattened (C, kh, kw) reduction order. Keeps the 2 largest |w| of
+    every group of 4; trailing partial groups (K % 4 != 0) are kept."""
+    kh, kw, c, o = w_hwio.shape
+    flat = jnp.transpose(w_hwio, (2, 0, 1, 3)).reshape(-1, o)  # (K, O)
+    k = flat.shape[0]
+    kg = (k // 4) * 4
+    head, tail = flat[:kg], flat[kg:]
+    g = head.reshape(-1, 4, o)
+    order = jnp.argsort(jnp.abs(g), axis=1)  # ascending
+    ranks = jnp.argsort(order, axis=1)  # rank of each weight in its group
+    mask_g = (ranks >= 2).astype(jnp.float32)  # keep top-2 by magnitude
+    mask = jnp.concatenate([mask_g.reshape(kg, o), jnp.ones_like(tail)], axis=0)
+    return jnp.transpose(mask.reshape(c, kh, kw, o), (1, 2, 0, 3))
+
+
+def build_mask(graph, params):
+    """Pytree of multiplicative masks: 2:4 on quantized conv weights,
+    all-ones elsewhere (biases, BN, first conv, fc)."""
+    quant = {n["name"] for n in layers.conv_nodes(graph) if n["quant"]}
+    mask = {}
+    for name, p in params.items():
+        mask[name] = {k: jnp.ones_like(v) for k, v in p.items()}
+        if name in quant:
+            mask[name]["w"] = prune_mask_24(p["w"])
+    return mask
+
+
+def check_24(w_hwio: np.ndarray, tol: float = 0.0) -> bool:
+    """Verify 2:4 structure in the (C, kh, kw) reduction layout."""
+    kh, kw, c, o = w_hwio.shape
+    flat = np.transpose(w_hwio, (2, 0, 1, 3)).reshape(-1, o)
+    kg = (flat.shape[0] // 4) * 4
+    g = flat[:kg].reshape(-1, 4, o)
+    nz = (np.abs(g) > tol).sum(axis=1)
+    return bool((nz <= 2).all())
+
+
+def sparsity(params, graph) -> float:
+    quant = {n["name"] for n in layers.conv_nodes(graph) if n["quant"]}
+    zeros = total = 0
+    for name in quant:
+        w = np.asarray(params[name]["w"])
+        zeros += int((w == 0).sum())
+        total += w.size
+    return zeros / max(total, 1)
+
+
+def prune_and_finetune(arch: str, d: dict, params, state, steps: int = FINETUNE_STEPS):
+    """Magnitude-prune to 2:4 and fine-tune with the mask pinned."""
+    graph = model.build(arch)
+    mask = build_mask(graph, params)
+    params = jax.tree.map(lambda p, m: p * m, params, mask)
+    return train.train_model(
+        arch, d, steps=steps, init_from=(params, state), mask=mask
+    )

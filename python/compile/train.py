@@ -1,0 +1,223 @@
+"""Build-time training of the mini zoo (DESIGN.md S2).
+
+Hand-rolled Adam (no optax in this environment), cross-entropy, cosine
+learning-rate decay, a short warmup, and post-training BatchNorm
+recalibration (paper §5: running statistics are refreshed on calibration
+data before export). Loss curves and final accuracies are appended to
+artifacts/train_log.json and summarized in EXPERIMENTS.md.
+
+Training runs exactly once per architecture (`make artifacts` is
+idempotent); checkpoints are .npz files of the flattened param/state
+pytrees.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as dataset
+from . import layers, model
+
+DEFAULT_STEPS = 500
+BATCH = 128
+LR = 2e-3
+WARMUP = 50
+RECALIB_BATCHES = 16  # BN recalibration passes (paper: preprocessing stage)
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat npz helpers (shared checkpoint format)
+# ---------------------------------------------------------------------------
+
+
+def tree_to_flat(tree, prefix=""):
+    """Nested dict of arrays -> {dotted.key: np.ndarray}."""
+    flat = {}
+    for k, v in tree.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            flat.update(tree_to_flat(v, prefix=key + "."))
+        else:
+            flat[key] = np.asarray(v)
+    return flat
+
+
+def flat_to_tree(flat):
+    tree: dict = {}
+    for key, v in flat.items():
+        parts = key.split(".")
+        d = tree
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = jnp.asarray(v)
+    return tree
+
+
+def save_checkpoint(path, params, state):
+    flat = {f"p.{k}": v for k, v in tree_to_flat(params).items()}
+    flat.update({f"s.{k}": v for k, v in tree_to_flat(state).items()})
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path):
+    d = np.load(path)
+    pf = {k[2:]: d[k] for k in d.files if k.startswith("p.")}
+    sf = {k[2:]: d[k] for k in d.files if k.startswith("s.")}
+    return flat_to_tree(pf), flat_to_tree(sf)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params), "t": jnp.zeros(())}
+
+
+def adam_update(params, grads, opt, lr, b1=0.9, b2=0.999, eps=1e-8, wd=1e-4):
+    t = opt["t"] + 1.0
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+    mh = jax.tree.map(lambda m_: m_ / (1 - b1**t), m)
+    vh = jax.tree.map(lambda v_: v_ / (1 - b2**t), v)
+    new = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ / (jnp.sqrt(v_) + eps) + wd * p),
+        params,
+        mh,
+        vh,
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def lr_schedule(step, total_steps):
+    warm = jnp.minimum(1.0, (step + 1) / WARMUP)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(step / total_steps, 1.0)))
+    return LR * warm * cos
+
+
+# ---------------------------------------------------------------------------
+# training loop
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_step(graph, total_steps, mask=None):
+    """Returns a jitted SGD step. `mask` (optional) is a pytree of {0,1}
+    multipliers applied to conv weights after each update — used by
+    prune.py to keep 2:4 zeros pinned during fine-tuning."""
+
+    def loss_fn(params, state, xb, yb):
+        logits, new_state, _ = layers.forward_float(graph, params, state, xb, True)
+        return cross_entropy(logits, yb), new_state
+
+    @jax.jit
+    def step(params, state, opt, xb, yb, it):
+        (loss, new_state), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, state, xb, yb
+        )
+        lr = lr_schedule(it, total_steps)
+        params, opt = adam_update(params, grads, opt, lr)
+        if mask is not None:
+            params = jax.tree.map(lambda p, m: p * m, params, mask)
+        return params, new_state, opt, loss
+
+    return step
+
+
+def evaluate(graph, params, state, x, y, batch=256):
+    correct = 0
+    for i in range(0, len(x), batch):
+        xb = jnp.asarray(dataset.normalize(x[i : i + batch]))
+        logits, _, _ = layers.forward_float(graph, params, state, xb, False)
+        correct += int(jnp.sum(jnp.argmax(logits, axis=1) == jnp.asarray(y[i : i + batch])))
+    return correct / len(x)
+
+
+def recalibrate_bn(graph, params, state, x, batches=RECALIB_BATCHES, batch=BATCH):
+    """Post-training BN recalibration (paper §5, refs [29,33,35,36]):
+    refresh running mean/var with forward passes on calibration data."""
+    rng = np.random.default_rng(123)
+    for _ in range(batches):
+        idx = rng.choice(len(x), size=batch, replace=False)
+        xb = jnp.asarray(dataset.normalize(x[idx]))
+        _, state, _ = layers.forward_float(graph, params, state, xb, True)
+    return state
+
+
+def train_model(
+    arch: str,
+    d: dict,
+    steps: int = DEFAULT_STEPS,
+    seed: int = 0,
+    init_from=None,
+    mask=None,
+    log_every: int = 25,
+):
+    """Train one architecture; returns (params, state, log dict)."""
+    graph = model.build(arch)
+    if init_from is not None:
+        params, state = init_from
+    else:
+        params, state = layers.init_params(graph, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+    step = make_step(graph, steps, mask=mask)
+
+    x_train, y_train = d["x_train"], d["y_train"]
+    rng = np.random.default_rng(seed)
+    losses = []
+    t0 = time.time()
+    for it in range(steps):
+        idx = rng.integers(0, len(x_train), size=BATCH)
+        xb = jnp.asarray(dataset.normalize(x_train[idx]))
+        yb = jnp.asarray(y_train[idx].astype(np.int32))
+        params, state, opt, loss = step(params, state, opt, xb, yb, it)
+        if it % log_every == 0 or it == steps - 1:
+            losses.append({"step": it, "loss": float(loss)})
+    state = recalibrate_bn(graph, params, state, x_train)
+    acc = evaluate(graph, params, state, d["x_test"], d["y_test"])
+    log = {
+        "arch": arch,
+        "steps": steps,
+        "seconds": round(time.time() - t0, 2),
+        "losses": losses,
+        "test_acc": acc,
+    }
+    return params, state, log
+
+
+def train_all(out_dir: str, steps: int = DEFAULT_STEPS, archs=None):
+    """Idempotent: skips architectures whose checkpoint already exists."""
+    d = dataset.load_or_generate(out_dir)
+    log_path = os.path.join(out_dir, "train_log.json")
+    logs = []
+    if os.path.exists(log_path):
+        logs = json.load(open(log_path))
+    for arch in archs or model.ZOO:
+        ckpt = os.path.join(out_dir, f"ckpt_{arch}.npz")
+        if os.path.exists(ckpt):
+            continue
+        params, state, log = train_model(arch, d, steps=steps)
+        save_checkpoint(ckpt, params, state)
+        logs = [l for l in logs if l["arch"] != arch] + [log]
+        json.dump(logs, open(log_path, "w"), indent=1)
+        print(f"[train] {arch}: acc={log['test_acc']:.4f} ({log['seconds']}s)")
+    return logs
+
+
+if __name__ == "__main__":
+    import sys
+
+    out = sys.argv[1] if len(sys.argv) > 1 else "../artifacts"
+    train_all(out)

@@ -1,0 +1,97 @@
+"""AOT export contract tests — validate what the rust side will consume.
+
+These run against the real artifacts/ directory when it exists (CI runs
+them after `make artifacts`); the pure-function tests always run.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, layers, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def test_hlo_text_contract():
+    """Exported text must contain full constants and none of the ops
+    xla_extension 0.5.1 mis-executes (see aot.to_hlo_text docstring)."""
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(3, 3, 3, 4)).astype(np.float32))
+    b = jnp.zeros((4,), jnp.float32)
+    f = lambda x: (layers.conv_float_export(x, w, b, 2),)
+    spec = jax.ShapeDtypeStruct((2, 8, 8, 3), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(f).lower(spec))
+    assert "ENTRY" in text
+    assert "constant({...})" not in text, "elided constants"
+    assert " convolution(" not in text, "convolution op leaked"
+    assert " reduce-window(" not in text, "reduce-window op leaked"
+
+
+@needs_artifacts
+def test_manifest_complete():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    tags = {row["tag"] for row in man}
+    assert set(model.ZOO) <= tags
+    for arch in model.STC_ZOO:
+        assert f"{arch}_p24" in tags
+    for row in man:
+        for f in list(row["files"].values()) + [row["weights"], row["meta"]]:
+            assert os.path.exists(os.path.join(ART, f)), f
+        meta = json.load(open(os.path.join(ART, row["meta"])))
+        assert meta["quant_convs"], row["tag"]
+        assert row["quant_convs"] == len(meta["quant_convs"])
+
+
+@needs_artifacts
+def test_no_bad_ops_in_exported_artifacts():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    for row in man:
+        for f in row["files"].values():
+            text = open(os.path.join(ART, f)).read()
+            assert "constant({...})" not in text, f
+            assert " convolution(" not in text, f
+            assert " reduce-window(" not in text, f
+
+
+@needs_artifacts
+def test_weights_npz_layout():
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    row = next(r for r in man if r["tag"] == "resnet10")
+    w = np.load(os.path.join(ART, row["weights"]))
+    meta = json.load(open(os.path.join(ART, row["meta"])))
+    for conv in meta["quant_convs"]:
+        wq = w[f"{conv}.wq"]
+        assert wq.dtype == np.int8 and wq.ndim == 2
+        assert w[f"{conv}.scale"].shape == (wq.shape[1],)
+        assert w[f"{conv}.bias"].shape == (wq.shape[1],)
+        assert np.abs(wq).max() <= 127
+        # per-channel quantization used the full grid somewhere
+        assert np.abs(wq).max(axis=0).min() >= 100
+    assert w["fc.w"].ndim == 2
+
+
+@needs_artifacts
+def test_pruned_weights_are_24_structured():
+    from compile import prune
+
+    man = json.load(open(os.path.join(ART, "manifest.json")))
+    for row in man:
+        if not row["pruned"]:
+            continue
+        w = np.load(os.path.join(ART, row["weights"]))
+        meta = json.load(open(os.path.join(ART, row["meta"])))
+        for conv in meta["quant_convs"]:
+            wq = w[f"{conv}.wq"]  # (K, O) flattened, already (C,kh,kw)
+            k = wq.shape[0] // 4 * 4
+            g = wq[:k].reshape(-1, 4, wq.shape[1])
+            nz = (g != 0).sum(axis=1)
+            assert (nz <= 2).all(), f"{row['tag']}:{conv} not 2:4"

@@ -1,0 +1,67 @@
+"""Dataset generator tests: determinism, format, class separability
+preconditions."""
+
+import io
+import struct
+
+import numpy as np
+
+from compile import data
+
+
+def test_deterministic():
+    a, la = data.generate(64, seed=42)
+    b, lb = data.generate(64, seed=42)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(la, lb)
+    c, _ = data.generate(64, seed=43)
+    assert not np.array_equal(a, c)
+
+
+def test_shapes_and_ranges():
+    imgs, labels = data.generate(128, seed=0)
+    assert imgs.shape == (128, data.H, data.W, data.C)
+    assert imgs.dtype == np.uint8
+    assert labels.dtype == np.uint8
+    assert labels.max() < data.NUM_CLASSES
+    assert set(np.unique(labels)).issubset(set(range(10)))
+
+
+def test_all_classes_generated():
+    _, labels = data.generate(500, seed=1)
+    assert len(np.unique(labels)) == data.NUM_CLASSES
+
+
+def test_classes_visually_distinct():
+    """Mean intra-class pixel correlation must exceed inter-class —
+    the weak separability precondition for training."""
+    imgs, labels = data.generate(400, seed=3)
+    f = imgs.reshape(len(imgs), -1).astype(np.float32)
+    f = (f - f.mean(axis=1, keepdims=True)) / (f.std(axis=1, keepdims=True) + 1e-6)
+    means = np.stack([f[labels == c].mean(axis=0) for c in range(10)])
+    sims = means @ means.T / f.shape[1]
+    intra = np.diag(sims).mean()
+    inter = (sims.sum() - np.trace(sims)) / 90
+    assert intra > inter + 0.02, (intra, inter)
+
+
+def test_bin_roundtrip(tmp_path):
+    imgs, labels = data.generate(10, seed=9)
+    path = tmp_path / "ds.bin"
+    data.write_bin(str(path), imgs, labels)
+    raw = path.read_bytes()
+    assert raw[:8] == data.MAGIC
+    n, h, w, c, k = struct.unpack("<5I", raw[8:28])
+    assert (n, h, w, c, k) == (10, data.H, data.W, data.C, data.NUM_CLASSES)
+    body = np.frombuffer(raw[28 : 28 + imgs.size], dtype=np.uint8).reshape(imgs.shape)
+    np.testing.assert_array_equal(body, imgs)
+    np.testing.assert_array_equal(
+        np.frombuffer(raw[28 + imgs.size :], dtype=np.uint8), labels
+    )
+
+
+def test_normalize():
+    imgs, _ = data.generate(4, seed=0)
+    x = data.normalize(imgs)
+    assert x.dtype == np.float32
+    assert x.min() >= 0.0 and x.max() <= 1.0

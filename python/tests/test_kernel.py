@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernel vs the pure-jnp oracle — the CORE
+integer-exactness signal of the whole stack (DESIGN.md S4/S5).
+
+hypothesis sweeps shapes, sparsity levels and every named configuration;
+all comparisons are exact equality (integer arithmetic end to end).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sparq
+
+CONFIG_NAMES = [
+    "a8w8", "a4w8", "a8w4", "5opt", "5opt_r", "5opt_r_novs",
+    "3opt", "3opt_r", "3opt_r_novs", "2opt", "2opt_r", "2opt_r_novs",
+    "6opt_r", "6opt_r_novs", "7opt_r", "7opt_r_novs",
+]
+
+
+def rand_operands(rng, m, k, n, sparsity):
+    a = rng.integers(0, 256, size=(m, k)).astype(np.int32)
+    a[rng.random((m, k)) < sparsity] = 0
+    w = rng.integers(-127, 128, size=(k, n)).astype(np.int32)
+    return a, w
+
+
+@pytest.mark.parametrize("name", CONFIG_NAMES)
+def test_matmul_exact_vs_ref(name):
+    rng = np.random.default_rng(hash(name) % 2**32)
+    a, w = rand_operands(rng, 33, 54, 17, 0.4)
+    cfg = ref.named_config(name)
+    got = np.asarray(sparq.sparq_matmul(jnp.asarray(a), jnp.asarray(w), cfg, tm=16, tn=16))
+    want = np.asarray(ref.sparq_matmul_ref(jnp.asarray(a), jnp.asarray(w), cfg))
+    np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(2, 80),
+    n=st.integers(1, 24),
+    sparsity=st.sampled_from([0.0, 0.3, 0.7, 0.95]),
+    name=st.sampled_from(["5opt_r", "3opt", "2opt_r", "6opt_r", "7opt_r_novs", "a4w8"]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_hypothesis_sweep(m, k, n, sparsity, name, seed):
+    rng = np.random.default_rng(seed)
+    a, w = rand_operands(rng, m, k, n, sparsity)
+    if k % 2 == 1:
+        k += 1  # vSPARQ pairing requires even K for the pure-jnp oracle
+        a = np.pad(a, ((0, 0), (0, 1)))
+        w = np.pad(w, ((0, 1), (0, 0)))
+    cfg = ref.named_config(name)
+    got = np.asarray(sparq.sparq_matmul(jnp.asarray(a), jnp.asarray(w), cfg, tm=8, tn=8))
+    want = np.asarray(ref.sparq_matmul_ref(jnp.asarray(a), jnp.asarray(w), cfg))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tile_size_invariance():
+    """Same inputs, different BlockSpec tilings -> identical results."""
+    rng = np.random.default_rng(7)
+    a, w = rand_operands(rng, 50, 36, 20, 0.5)
+    cfg = ref.named_config("5opt_r")
+    outs = [
+        np.asarray(sparq.sparq_matmul(jnp.asarray(a), jnp.asarray(w), cfg, tm=tm, tn=tn))
+        for tm, tn in [(8, 8), (16, 32), (64, 64), (128, 128)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(outs[0], o)
+
+
+def test_trim_kernel_matches_ref():
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, 256, size=(16, 64)).astype(np.int32)
+    a[rng.random(a.shape) < 0.4] = 0
+    for name in ["5opt_r", "2opt", "7opt_r"]:
+        cfg = ref.named_config(name)
+        got = np.asarray(sparq.sparq_trim_pallas(jnp.asarray(a), cfg))
+        want = np.asarray(ref.sparq_trim(jnp.asarray(a), cfg))
+        np.testing.assert_array_equal(got, want, err_msg=name)
+
+
+def test_paper_figure1_values():
+    """27 = 00011011b: 5opt->26, 3opt->24, 2opt->16 (paper §3.1)."""
+    x = jnp.array([27], dtype=jnp.int32)
+    assert int(ref.bsparq_window(x, 4, ref.MODE_FULL, 0)[0]) == 26
+    assert int(ref.bsparq_window(x, 4, ref.MODE_3OPT, 0)[0]) == 24
+    assert int(ref.bsparq_window(x, 4, ref.MODE_2OPT, 0)[0]) == 16
+    assert int(ref.bsparq_window(x, 4, ref.MODE_FULL, 1)[0]) == 28
+
+
+@given(x=st.integers(0, 255), width=st.sampled_from([2, 3, 4]))
+@settings(max_examples=60, deadline=None)
+def test_trim_error_bound(x, width):
+    """|trim(x) - x| < 2^shift; rounding never increases the error."""
+    xa = jnp.array([x], dtype=jnp.int32)
+    for mode in [ref.MODE_FULL, ref.MODE_3OPT, ref.MODE_2OPT]:
+        if width != 4 and mode != ref.MODE_FULL:
+            continue
+        t = int(ref.bsparq_window(xa, width, mode, 0)[0])
+        r = int(ref.bsparq_window(xa, width, mode, 1)[0])
+        assert abs(r - x) <= abs(t - x)
+        # reconstructed value fits the window
+        msb = max(x.bit_length() - 1, 0)
+        if mode == ref.MODE_FULL:
+            shift = max(0, msb - width + 1)
+            assert abs(t - x) < (1 << max(shift, 1))
+
+
+@given(
+    k=st.integers(1, 64),
+    seed=st.integers(0, 2**16),
+    name=st.sampled_from(["5opt_r", "6opt_r", "7opt_r"]),
+)
+@settings(max_examples=15, deadline=None)
+def test_zero_partner_preserves_wide_window(k, seed, name):
+    """With vSPARQ, a zero partner must not lose more than the 2n-bit
+    window allows; for n=4 the survivor is bit-exact."""
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 256, size=k).astype(np.int32)
+    a = np.zeros((1, 2 * k), dtype=np.int32)
+    a[0, 1::2] = vals  # partners (even lanes) all zero
+    cfg = ref.named_config(name)
+    out = np.asarray(ref.sparq_trim(jnp.asarray(a), cfg))[0, 1::2]
+    n_bits = int(cfg[0])
+    if n_bits == 4:
+        np.testing.assert_array_equal(out, vals)
+    else:
+        wide = 2 * n_bits
+        for v, o in zip(vals, out):
+            msb = max(int(v).bit_length() - 1, 0)
+            shift = max(0, msb - wide + 1)
+            assert abs(int(o) - int(v)) <= (1 << max(shift, 1)) // 2 + (1 << shift) // 2
+
+
+def test_vmem_budget():
+    """Default tiling fits a TPU core's VMEM with double buffering."""
+    assert sparq.vmem_bytes(128, 128, 1152) * 2 < 16 * 1024 * 1024

@@ -1,0 +1,123 @@
+"""L2 model-zoo tests: shapes, training step, export-safe forward
+equivalence, BN folding, quantized-path integration."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, layers, model, train
+from compile.kernels import ref
+
+
+@pytest.fixture(scope="module")
+def tiny_batch():
+    imgs, labels = data.generate(16, seed=11)
+    return jnp.asarray(data.normalize(imgs)), jnp.asarray(labels.astype(np.int32))
+
+
+@pytest.mark.parametrize("arch", list(model.ZOO))
+def test_forward_shapes(arch, tiny_batch):
+    x, _ = tiny_batch
+    graph = model.build(arch)
+    params, state = layers.init_params(graph, jax.random.PRNGKey(0))
+    logits, new_state, taps = layers.forward_float(graph, params, state, x, train=True)
+    assert logits.shape == (16, 10)
+    assert set(taps) == set(layers.quant_conv_names(graph))
+    # BN state updated for every conv
+    assert set(new_state) == {n["name"] for n in layers.conv_nodes(graph)}
+    assert not np.isnan(np.asarray(logits)).any()
+
+
+@pytest.mark.parametrize("arch", ["resnet10", "squeezem"])
+def test_one_train_step_reduces_loss_eventually(arch, tiny_batch):
+    x, y = tiny_batch
+    graph = model.build(arch)
+    params, state = layers.init_params(graph, jax.random.PRNGKey(1))
+    opt = train.adam_init(params)
+    step = train.make_step(graph, total_steps=50)
+    losses = []
+    for it in range(12):
+        params, state, opt, loss = step(params, state, opt, x, y, it)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+
+
+def test_bn_fold_matches_inference_forward(tiny_batch):
+    """Folded forward == unfolded inference forward (same BN stats)."""
+    x, _ = tiny_batch
+    graph = model.build("resnet10")
+    params, state = layers.init_params(graph, jax.random.PRNGKey(2))
+    # make running stats non-trivial
+    _, state, _ = layers.forward_float(graph, params, state, x, train=True)
+    logits_ref, _, _ = layers.forward_float(graph, params, state, x, train=False)
+    folded = layers.fold_batchnorm(graph, params, state)
+    logits_fold = layers.forward_folded(graph, folded, x)
+    np.testing.assert_allclose(
+        np.asarray(logits_ref), np.asarray(logits_fold), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_export_safe_ops_match_lax(tiny_batch):
+    """conv_float_export / _pool2_export == lax.conv / reduce_window."""
+    x, _ = tiny_batch
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(3, 3, 3, 8)).astype(np.float32) * 0.2)
+    b = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    for stride in [1, 2]:
+        safe = layers.conv_float_export(x, w, b, stride)
+        fast = layers._conv_float(x, w, stride) + b
+        np.testing.assert_allclose(np.asarray(safe), np.asarray(fast), atol=1e-4)
+    for kind in ["max", "avg"]:
+        np.testing.assert_allclose(
+            np.asarray(layers._pool2_export(x, kind)),
+            np.asarray(layers._pool2(x, kind)),
+            atol=1e-6,
+        )
+
+
+@pytest.mark.parametrize("arch", ["resnet10", "inceptm", "densem"])
+def test_quant_forward_runs_all_archs(arch, tiny_batch):
+    x, _ = tiny_batch
+    graph = model.build(arch)
+    params, state = layers.init_params(graph, jax.random.PRNGKey(3))
+    folded = layers.fold_batchnorm(graph, params, state)
+    qw = layers.quantize_weights(graph, folded)
+    nq = len(layers.quant_conv_names(graph))
+    maxes, means = layers.calib_forward(graph, folded, x)
+    assert maxes.shape == (nq,) and means.shape == (nq,)
+    assert float(jnp.min(means)) >= 0.0  # post-ReLU inputs
+    cfg = jnp.asarray(ref.named_config("5opt_r"))
+    logits = layers.forward_quant(graph, qw, maxes / 255.0, cfg, x, use_pallas=False)
+    assert logits.shape == (16, 10)
+    assert not np.isnan(np.asarray(logits)).any()
+
+
+def test_a8w8_quant_close_to_float(tiny_batch):
+    """8-bit min-max quantization must track the float forward closely
+    (the paper's Table 1 A8W8 ~ FP32 premise)."""
+    x, _ = tiny_batch
+    graph = model.build("vgg11m")
+    params, state = layers.init_params(graph, jax.random.PRNGKey(4))
+    _, state, _ = layers.forward_float(graph, params, state, x, train=True)
+    folded = layers.fold_batchnorm(graph, params, state)
+    qw = layers.quantize_weights(graph, folded)
+    maxes, _ = layers.calib_forward(graph, folded, x)
+    cfg = jnp.asarray(ref.named_config("a8w8"))
+    lf = np.asarray(layers.forward_folded(graph, folded, x))
+    lq = np.asarray(layers.forward_quant(graph, qw, maxes / 255.0, cfg, x, use_pallas=False))
+    # logits agree to a tight relative scale
+    denom = np.abs(lf).max()
+    assert np.abs(lf - lq).max() / denom < 0.05
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny_batch):
+    x, _ = tiny_batch
+    graph = model.build("resnet10")
+    params, state = layers.init_params(graph, jax.random.PRNGKey(5))
+    path = tmp_path / "ckpt.npz"
+    train.save_checkpoint(path, params, state)
+    p2, s2 = train.load_checkpoint(path)
+    l1, _, _ = layers.forward_float(graph, params, state, x, train=False)
+    l2, _, _ = layers.forward_float(graph, p2, s2, x, train=False)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))

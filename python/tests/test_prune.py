@@ -1,0 +1,61 @@
+"""2:4 structured pruning tests (paper §5.3 substrate)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import layers, model, prune
+
+
+@given(
+    kh=st.sampled_from([1, 3]),
+    c=st.integers(1, 12),
+    o=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_mask_is_24_structured(kh, c, o, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(kh, kh, c, o)).astype(np.float32))
+    mask = prune.prune_mask_24(w)
+    assert mask.shape == w.shape
+    pruned = np.asarray(w * mask)
+    assert prune.check_24(pruned)
+    # exactly half kept in every complete group
+    flat = np.transpose(np.asarray(mask), (2, 0, 1, 3)).reshape(-1, o)
+    kg = flat.shape[0] // 4 * 4
+    if kg:
+        g = flat[:kg].reshape(-1, 4, o)
+        np.testing.assert_array_equal(g.sum(axis=1), np.full((kg // 4, o), 2.0))
+
+
+def test_mask_keeps_largest_magnitudes():
+    w = jnp.asarray(
+        np.array([10.0, -9.0, 0.1, 0.2]).reshape(1, 1, 4, 1).astype(np.float32)
+    )
+    mask = np.asarray(prune.prune_mask_24(w)).reshape(4)
+    np.testing.assert_array_equal(mask, [1, 1, 0, 0])
+
+
+def test_build_mask_covers_only_quant_convs():
+    graph = model.build("resnet10")
+    params, _ = layers.init_params(graph, jax.random.PRNGKey(0))
+    mask = prune.build_mask(graph, params)
+    for node in layers.conv_nodes(graph):
+        m = np.asarray(mask[node["name"]]["w"])
+        if node["quant"]:
+            assert m.mean() < 1.0  # pruned
+        else:
+            assert m.mean() == 1.0  # first conv untouched
+    # non-weight params never masked
+    assert np.asarray(mask["fc"]["w"]).mean() == 1.0
+
+
+def test_sparsity_metric():
+    graph = model.build("resnet10")
+    params, _ = layers.init_params(graph, jax.random.PRNGKey(1))
+    mask = prune.build_mask(graph, params)
+    pruned = jax.tree.map(lambda p, m: p * m, params, mask)
+    s = prune.sparsity(pruned, graph)
+    assert 0.45 <= s <= 0.55, s

@@ -1,0 +1,115 @@
+"""L2 quantization-path tests: im2col/GEMM conv equivalence, weight
+quantization, STC reference, config encoding."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from compile import layers
+from compile.kernels import ref
+
+
+def test_im2col_conv_equals_lax_conv():
+    """Quantized-path conv (patches @ flattened weights) must equal
+    lax.conv for float inputs — validates the (C, kh, kw) ordering."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 9, 9, 5)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(3, 3, 5, 7)).astype(np.float32))
+    for stride in [1, 2]:
+        y_conv = lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        p, (n, oh, ow) = layers._im2col(x, 3, stride)
+        wf = jnp.transpose(w, (2, 0, 1, 3)).reshape(-1, 7)
+        y_gemm = (p @ wf).reshape(n, oh, ow, 7)
+        np.testing.assert_allclose(np.asarray(y_conv), np.asarray(y_gemm), atol=1e-4)
+
+
+def test_weight_quantization_per_channel():
+    rng = np.random.default_rng(1)
+    graph = {"nodes": [], "arch": "t", "num_classes": 2}
+    w = rng.normal(size=(3, 3, 4, 6)).astype(np.float32)
+    w[..., 0] *= 100  # one big channel must not crush the others
+    folded = {"c": {"w": jnp.asarray(w), "b": jnp.zeros(6)}, "fc": {"w": jnp.zeros((6, 2)), "b": jnp.zeros(2)}}
+    graph["nodes"] = [
+        {"name": "c", "op": "conv", "inputs": ["img"], "k": 3, "stride": 1,
+         "out_ch": 6, "relu": True, "quant": True}
+    ]
+    q = layers.quantize_weights(graph, folded)
+    wq = np.asarray(q["c"]["wq"])
+    scale = np.asarray(q["c"]["scale"])
+    assert wq.min() >= -127 and wq.max() <= 127
+    # per-channel max must hit the grid end
+    for c in range(6):
+        assert abs(np.abs(wq[..., c]).max() - 127) <= 1
+    recon = wq * scale
+    np.testing.assert_allclose(recon, w, atol=np.abs(w).max() / 127 + 1e-6)
+
+
+@given(seed=st.integers(0, 2**16), name=st.sampled_from(["5opt_r", "2opt", "7opt_r", "a8w8"]))
+@settings(max_examples=20, deadline=None)
+def test_stc_pairdot_zero_weights_drop_out(seed, name):
+    """STC reference: output only depends on activations at surviving
+    (non-zero-weight) coordinates."""
+    rng = np.random.default_rng(seed)
+    k, n, m = 16, 3, 4
+    w = np.zeros((k, n), dtype=np.int32)
+    for g in range(k // 4):
+        for col in range(n):
+            picks = rng.choice(4, size=2, replace=False)
+            for p in picks:
+                w[4 * g + p, col] = int(rng.integers(1, 127))
+    a = rng.integers(0, 256, size=(m, k)).astype(np.int32)
+    cfg = ref.named_config(name)
+    base = np.asarray(ref.stc_pairdot_ref(jnp.asarray(a), jnp.asarray(w), cfg))
+    # perturb activations at dead coordinates only -> output unchanged
+    a2 = a.copy()
+    for g in range(k // 4):
+        col_dead = set(range(4))
+        for col in range(n):
+            col_dead &= {s for s in range(4) if w[4 * g + s, col] == 0}
+        for s in col_dead:
+            a2[:, 4 * g + s] = rng.integers(0, 256, size=m)
+    out2 = np.asarray(ref.stc_pairdot_ref(jnp.asarray(a2), jnp.asarray(w), cfg))
+    np.testing.assert_array_equal(base, out2)
+
+
+def test_stc_a8w8_equals_dense():
+    rng = np.random.default_rng(5)
+    k, n, m = 12, 4, 3
+    w = np.zeros((k, n), dtype=np.int32)
+    for g in range(k // 4):
+        for col in range(n):
+            for p in rng.choice(4, size=2, replace=False):
+                w[4 * g + p, col] = int(rng.integers(-126, 127)) or 1
+    a = rng.integers(0, 256, size=(m, k)).astype(np.int32)
+    out = np.asarray(ref.stc_pairdot_ref(jnp.asarray(a), jnp.asarray(w), ref.named_config("a8w8")))
+    np.testing.assert_array_equal(out, a @ w)
+
+
+def test_uniform_requant_grid_spacing():
+    x = jnp.arange(256, dtype=jnp.int32)
+    y4 = np.asarray(ref.uniform_requant(x, 4))
+    assert set(np.unique(y4 % 17)) == {0}
+    assert y4[0] == 0 and y4[255] == 255
+    y8 = np.asarray(ref.uniform_requant(x, 8))
+    np.testing.assert_array_equal(y8, np.arange(256))
+
+
+def test_weight_rescale_consistency():
+    for name in ["a8w8", "a8w4"]:
+        cfg = ref.named_config(name)
+        w = jnp.asarray(np.arange(-127, 128, dtype=np.int32))
+        wq = np.asarray(ref.requant_weights(w, cfg))
+        recon = wq * ref.weight_rescale(cfg)
+        assert np.abs(recon - np.asarray(w)).max() <= (ref.weight_rescale(cfg) / 2 + 0.5)
+
+
+def test_named_configs_roundtrip_all():
+    for name in ["a8w8", "5opt", "3opt_r", "2opt_r_novs", "6opt_r", "7opt_r", "a4w8", "a8w4"]:
+        cfg = ref.named_config(name)
+        assert cfg.shape == (ref.CFG_LEN,)
+        assert cfg.dtype == np.int32

@@ -1,0 +1,63 @@
+// Tiny shared bench harness (criterion is not in the offline crate
+// set). Each bench target `include!`s this file. Methodology: warmup
+// runs, then timed iterations; reports min/median/mean wall time.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_us: f64,
+    pub median_us: f64,
+    pub mean_us: f64,
+}
+
+#[allow(dead_code)]
+pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
+    // warmup (also primes caches / JITted XLA executables)
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        min_us: samples[0],
+        median_us: samples[samples.len() / 2],
+        mean_us: samples.iter().sum::<f64>() / samples.len() as f64,
+    };
+    println!(
+        "{:<44} {:>5} iters   min {:>10.1} us   median {:>10.1} us   mean {:>10.1} us",
+        r.name, r.iters, r.min_us, r.median_us, r.mean_us
+    );
+    r
+}
+
+/// Deterministic operand generator shared by the benches.
+#[allow(dead_code)]
+pub fn synth_acts(n: usize, sparsity_pct: u64) -> Vec<u8> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33;
+            if h % 100 < sparsity_pct {
+                0
+            } else {
+                (h % 256) as u8
+            }
+        })
+        .collect()
+}
+
+#[allow(dead_code)]
+pub fn synth_weights(n: usize) -> Vec<i8> {
+    (0..n)
+        .map(|i| ((((i as u64).wrapping_mul(0xbf58476d1ce4e5b9) >> 33) % 255) as i32 - 127) as i8)
+        .collect()
+}

@@ -1,0 +1,117 @@
+//! Bench: the L3 hot paths in isolation — the inputs to the §Perf
+//! optimization loop in EXPERIMENTS.md. Compares the scalar reference
+//! against the LUT-optimized implementations and measures the native
+//! GEMM engine and PJRT end-to-end batch latency.
+
+include!("harness.rs");
+
+use std::path::PathBuf;
+
+use sparq::model::QuantGemm;
+use sparq::quant::vsparq::sparq_dot;
+use sparq::quant::{SparqConfig, TrimLut};
+use sparq::runtime::{ArtifactKind, Manifest, PjrtRuntime, TensorArg};
+
+fn main() {
+    let cfg = SparqConfig::named("5opt_r").unwrap();
+    let k = 1152usize; // largest zoo reduction (64ch * 3x3 * 2)
+    let acts = synth_acts(k, 40);
+    let weights = synth_weights(k);
+
+    // 1. trim+dot microbench: scalar reference vs LUT
+    let lut = TrimLut::new(cfg);
+    bench("sparq_dot scalar (K=1152)", 2000, || {
+        std::hint::black_box(sparq_dot(&acts, &weights, cfg));
+    });
+    bench("sparq_dot LUT    (K=1152)", 2000, || {
+        std::hint::black_box(lut.dot(&acts, &weights));
+    });
+
+    // 2. trim of a full im2col tile
+    let mut tile = synth_acts(256 * k, 40);
+    bench("trim_slice 256xK tile", 200, || {
+        tile.copy_from_slice(&synth_acts(256 * k, 40));
+        for row in tile.chunks_exact_mut(k) {
+            lut.trim_slice(row);
+        }
+        std::hint::black_box(&tile);
+    });
+
+    // 3. full native GEMM (the native engine's conv core)
+    let (m, n) = (400, 64);
+    let a = synth_acts(m * k, 40);
+    let w = synth_weights(k * n);
+    let gemm = QuantGemm::new(cfg);
+    let wt = gemm.prepare_weights(&w, k, n);
+    let mut scratch = a.clone();
+    let mut out = vec![0i32; m * n];
+    let r = bench("native GEMM 400x1152x64", 20, || {
+        scratch.copy_from_slice(&a);
+        gemm.gemm(&mut scratch, m, k, &wt, n, &mut out);
+        std::hint::black_box(&out);
+    });
+    let macs = (m * k * n) as f64;
+    println!(
+        "    -> {:.2} GMAC/s",
+        macs / (r.median_us * 1e-6) / 1e9
+    );
+
+    // "further attempt" for the §Perf stopping criterion: manual 4-way
+    // accumulator splitting of the inner dot. Kept out of the production
+    // path unless it clears the 5% bar (record below).
+    let a16: Vec<i16> = synth_acts(k, 40).iter().map(|&x| i16::from(x)).collect();
+    let w16: Vec<i16> = synth_weights(k).iter().map(|&w| i16::from(w)).collect();
+    let r_plain = bench("inner dot i16 plain (K=1152)", 5000, || {
+        let mut acc = 0i32;
+        for (&x, &w) in a16.iter().zip(&w16) {
+            acc += i32::from(x) * i32::from(w);
+        }
+        std::hint::black_box(acc);
+    });
+    let r_split = bench("inner dot i16 4-acc split (K=1152)", 5000, || {
+        let mut acc = [0i32; 4];
+        let chunks_a = a16.chunks_exact(4);
+        let chunks_w = w16.chunks_exact(4);
+        for (ca, cw) in chunks_a.zip(chunks_w) {
+            for l in 0..4 {
+                acc[l] += i32::from(ca[l]) * i32::from(cw[l]);
+            }
+        }
+        std::hint::black_box(acc[0] + acc[1] + acc[2] + acc[3]);
+    });
+    println!(
+        "    -> split vs plain: {:+.1}% (kept only if < -5%)",
+        100.0 * (r_split.min_us - r_plain.min_us) / r_plain.min_us
+    );
+
+    // 4. PJRT end-to-end batch (compile once, then per-batch latency)
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if let Ok(manifest) = Manifest::load(&dir) {
+        let rt = PjrtRuntime::cpu().expect("pjrt");
+        let model = manifest.get("resnet10").unwrap();
+        let exe = rt.load(&model.hlo_path(ArtifactKind::Sparq)).unwrap();
+        let nq = model.quant_convs;
+        let img: Vec<f32> = (0..64 * 20 * 20 * 3).map(|i| (i % 251) as f32 / 251.0).collect();
+        let scales = vec![0.03f32; nq];
+        let cfg_vec = cfg.to_vec().to_vec();
+        let r = bench("PJRT sparq batch-64 fwd (resnet10)", 20, || {
+            let out = exe
+                .run(&[
+                    TensorArg::f32(&[64, 20, 20, 3], img.clone()),
+                    TensorArg::f32(&[nq], scales.clone()),
+                    TensorArg::i32(&[5], cfg_vec.clone()),
+                ])
+                .unwrap();
+            std::hint::black_box(out);
+        });
+        println!("    -> {:.1} img/s", 64.0 / (r.median_us * 1e-6));
+        let fexe = rt.load(&model.hlo_path(ArtifactKind::Float)).unwrap();
+        let r = bench("PJRT float batch-64 fwd (resnet10)", 20, || {
+            let out = fexe.run(&[TensorArg::f32(&[64, 20, 20, 3], img.clone())]).unwrap();
+            std::hint::black_box(out);
+        });
+        println!("    -> {:.1} img/s", 64.0 / (r.median_us * 1e-6));
+    } else {
+        eprintln!("artifacts missing; PJRT section skipped");
+    }
+}

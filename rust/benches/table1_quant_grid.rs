@@ -1,0 +1,34 @@
+//! Bench: regenerates paper Table 1 (FP32 / A8W8 / A4W8 / A8W4 top-1)
+//! end-to-end through the PJRT path, and times the per-config eval.
+//!
+//! Run: `cargo bench --bench table1_quant_grid [-- eval-limit]`
+
+include!("harness.rs");
+
+use std::path::PathBuf;
+
+use sparq::experiments::{table1, ExperimentCtx};
+
+fn main() {
+    let limit: usize = std::env::args()
+        .skip_while(|a| a != "--")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut ctx = match ExperimentCtx::new(&dir, limit, 1024) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    let table = table1(&mut ctx).expect("table1");
+    println!("{}", table.render());
+    println!(
+        "table1: {} models x 4 precisions over {limit} images in {:.1}s",
+        table.rows.len(),
+        t0.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,41 @@
+//! Bench: regenerates paper Tables 2, 3, 4 and 6 — the full SPARQ
+//! accuracy grid — and reports wall time per table.
+//!
+//! Run: `cargo bench --bench table2_sparq_configs [-- eval-limit]`
+
+include!("harness.rs");
+
+use std::path::PathBuf;
+
+use sparq::experiments::{table2, table3, table4, table6, ExperimentCtx};
+
+fn main() {
+    let limit: usize = std::env::args()
+        .skip_while(|a| a != "--")
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let mut ctx = match ExperimentCtx::new(&dir, limit, 1024) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("skipping (run `make artifacts`): {e}");
+            return;
+        }
+    };
+    for (name, f) in [
+        ("table2", table2 as fn(&mut ExperimentCtx) -> anyhow::Result<_>),
+        ("table3", table3),
+        ("table4", table4),
+        ("table6", table6),
+    ] {
+        let t0 = std::time::Instant::now();
+        match f(&mut ctx) {
+            Ok(t) => {
+                println!("{}", t.render());
+                println!("{name}: {:.1}s\n", t0.elapsed().as_secs_f64());
+            }
+            Err(e) => eprintln!("{name} failed: {e}"),
+        }
+    }
+}

@@ -1,0 +1,75 @@
+//! Bench: paper Table 5 (relative PE area) + the §5.2 ablation the
+//! DESIGN.md calls out — how the shifter option count drives area — and
+//! cycle-model scaling of the SA across GEMM shapes.
+
+include!("harness.rs");
+
+use sparq::experiments::table5;
+use sparq::hw::area;
+use sparq::hw::systolic::SystolicArray;
+use sparq::quant::{Mode, SparqConfig};
+
+fn main() {
+    println!("{}", table5().render());
+
+    // ablation: area vs placement-option count at fixed n=4 (the §5.2
+    // "shift-left logic is the main contributor" claim)
+    println!("## Ablation — shifter options vs area (SA, n=4)\n");
+    for (name, cfg) in [
+        ("2opt", SparqConfig::new(4, Mode::Opt2, true, true)),
+        ("3opt", SparqConfig::new(4, Mode::Opt3, true, true)),
+        ("5opt", SparqConfig::new(4, Mode::Full, true, true)),
+    ] {
+        let pe = area::sa_sparq(cfg);
+        println!(
+            "  {name}: total {:.0} gates (mult {:.0} / shift {:.0} / add {:.0} / mux {:.0} / reg {:.0})",
+            pe.total(),
+            pe.multipliers,
+            pe.shifters,
+            pe.adders,
+            pe.muxes,
+            pe.registers
+        );
+    }
+
+    // §5.3 trim-unit area (paper: 17% / 12% / 9% of a TC)
+    println!("\n## Trim-and-round unit relative to TC\n");
+    for name in ["5opt_r", "3opt_r", "2opt_r"] {
+        let cfg = SparqConfig::named(name).unwrap();
+        println!("  {:<8} {:.1}%", cfg.to_string(), 100.0 * area::trim_unit_relative_to_tc(cfg));
+    }
+
+    // §5.1 footprint model + §6 shared-ShiftCtrl trade (future work the
+    // paper names; implemented in quant::{footprint, shared_shift})
+    println!("\n## Memory footprint (bits/activation; shared ShiftCtrl groups)\n");
+    println!("  config     g=1    g=4    g=16   (int8 = 8.0)");
+    for (name, b1, b4, b16) in sparq::quant::footprint::footprint_rows() {
+        println!("  {name:<9} {b1:<6.2} {b4:<6.2} {b16:<6.2}");
+    }
+    println!("\n## Shared-shift accuracy trade (trim MSE on synthetic acts, 5opt+R)\n");
+    let cfg_ns = SparqConfig::named("5opt_r_novs").unwrap();
+    let orig = synth_acts(65536, 40);
+    for g in [1usize, 2, 4, 8, 16, 64] {
+        let mut t = orig.clone();
+        sparq::quant::shared_shift::trim_slice_grouped(&mut t, cfg_ns, g);
+        println!(
+            "  group {g:>3}: MSE {:>8.3}  bits/act {:.2}",
+            sparq::quant::shared_shift::trim_mse(&orig, &t),
+            sparq::quant::footprint::bits_per_activation(
+                SparqConfig { vsparq: false, ..cfg_ns },
+                g as u32
+            )
+        );
+    }
+
+    // cycle-model timing: SA gemm simulation cost (the simulator itself)
+    println!("\n## Simulator throughput\n");
+    let cfg = SparqConfig::named("5opt_r").unwrap();
+    let (m, k, n) = (64, 576, 64);
+    let a = synth_acts(m * k, 40);
+    let w = synth_weights(k * n);
+    let sa = SystolicArray::new(16, 16, cfg);
+    bench("systolic 16x16 gemm 64x576x64 (cycle sim)", 10, || {
+        std::hint::black_box(sa.gemm(&a, &w, m, k, n));
+    });
+}

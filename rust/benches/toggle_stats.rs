@@ -1,0 +1,52 @@
+//! Bench: the §5.1 / F2 bit-toggle statistics over real traced
+//! activations (paper: bits 7..4 toggle 0.5/9.2/33.8/44.8%; >= 1 MSB
+//! toggled 67%; top-2 quiet 90%), plus trace throughput.
+
+include!("harness.rs");
+
+use std::path::PathBuf;
+
+use sparq::coordinator::calibrate;
+use sparq::data::Dataset;
+use sparq::experiments::toggle_stats;
+use sparq::model::{Graph, Weights};
+use sparq::runtime::{Manifest, PjrtRuntime};
+
+fn main() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let (manifest, eval, calib_ds) = match (
+        Manifest::load(&dir),
+        Dataset::load(&dir.join("test.bin")),
+        Dataset::load(&dir.join("train.bin")),
+    ) {
+        (Ok(m), Ok(e), Ok(c)) => (m, e, c),
+        _ => {
+            eprintln!("skipping (run `make artifacts`)");
+            return;
+        }
+    };
+    let rt = PjrtRuntime::cpu().expect("pjrt");
+    println!("model        zero-frac  b7     b6     b5     b4     any-MSB  top2-quiet  pair-zero");
+    for tag in manifest.dense_tags().iter().map(|s| s.to_string()) {
+        let model = manifest.get(&tag).unwrap();
+        let graph = Graph::load(&model.meta_path()).unwrap();
+        let weights = Weights::load(&model.weights_path()).unwrap();
+        let scales = calibrate(&rt, model, &calib_ds, 64, 256).unwrap().scales();
+        let t0 = std::time::Instant::now();
+        let ts = toggle_stats(&graph, &weights, &eval, &scales, 128, 32).unwrap();
+        println!(
+            "{:<12} {:>8.3}  {:.3}  {:.3}  {:.3}  {:.3}  {:>7.3}  {:>10.3}  {:>9.3}   ({:.1}s)",
+            tag,
+            ts.zero_fraction(),
+            ts.bit_prob(7),
+            ts.bit_prob(6),
+            ts.bit_prob(5),
+            ts.bit_prob(4),
+            ts.any_msb_prob(),
+            ts.top2_quiet_prob(),
+            ts.pair_zero_prob(),
+            t0.elapsed().as_secs_f64(),
+        );
+    }
+    println!("paper:ResNet-18     -  0.005  0.092  0.338  0.448    0.670       0.900          -");
+}

@@ -1,0 +1,220 @@
+//! Dynamic batcher — forms execution batches from an asynchronous
+//! request stream (the vLLM-router pattern scaled to this repo).
+//!
+//! The lowered HLO has a fixed batch dimension B, so the batcher's job
+//! is: collect up to B requests, or whatever arrived when the oldest
+//! request hits its latency deadline; pad the tail of a short batch by
+//! repeating the last image (padded outputs are discarded); execute;
+//! scatter per-request results. Threads + channels, no async runtime —
+//! tokio is not in this image's vendored set, and one worker thread per
+//! model is the right shape for a single-device PJRT client anyway.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Hardware batch (the HLO's lowered batch dimension).
+    pub max_batch: usize,
+    /// Max time the oldest queued request may wait before a (possibly
+    /// short) batch is launched.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 64, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// One queued inference request.
+struct Request {
+    image: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Reply>,
+}
+
+/// Per-request result: logits row + timing.
+#[derive(Clone, Debug)]
+pub struct Reply {
+    pub logits: Vec<f32>,
+    pub queue_time: Duration,
+    pub batch_size: usize,
+}
+
+/// The batch executor supplied by the server: takes a padded image
+/// buffer `[max_batch, ...]` and returns row-major logits.
+pub type ExecuteFn = dyn Fn(&[f32], usize) -> Result<Vec<f32>> + Send;
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Batcher {
+    tx: Sender<Request>,
+    image_len: usize,
+}
+
+/// Statistics the worker exposes.
+#[derive(Default, Debug)]
+pub struct BatcherStats {
+    pub batches: u64,
+    pub requests: u64,
+    pub full_batches: u64,
+}
+
+impl Batcher {
+    /// Spawn the worker thread. `image_len` is the per-request input
+    /// length; `classes` the logits row width.
+    pub fn spawn(
+        policy: BatchPolicy,
+        image_len: usize,
+        classes: usize,
+        execute: Box<ExecuteFn>,
+        stats: Arc<Mutex<BatcherStats>>,
+    ) -> Self {
+        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+        std::thread::spawn(move || {
+            let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
+            loop {
+                // Block for the first request of a batch.
+                if pending.is_empty() {
+                    match rx.recv() {
+                        Ok(r) => pending.push(r),
+                        Err(_) => return, // all senders dropped: shut down
+                    }
+                }
+                // Admit until full or the oldest request's deadline.
+                while pending.len() < policy.max_batch {
+                    let elapsed = pending[0].enqueued.elapsed();
+                    let Some(budget) = policy.max_wait.checked_sub(elapsed) else { break };
+                    match rx.recv_timeout(budget) {
+                        Ok(r) => pending.push(r),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+                let batch = std::mem::take(&mut pending);
+                let bsz = batch.len();
+                // Pad to max_batch by repeating the last image.
+                let mut buf = Vec::with_capacity(policy.max_batch * image_len);
+                for r in &batch {
+                    buf.extend_from_slice(&r.image);
+                }
+                for _ in bsz..policy.max_batch {
+                    let last = buf[(bsz - 1) * image_len..bsz * image_len].to_vec();
+                    buf.extend_from_slice(&last);
+                }
+                let result = execute(&buf, policy.max_batch);
+                {
+                    let mut s = stats.lock().unwrap();
+                    s.batches += 1;
+                    s.requests += bsz as u64;
+                    if bsz == policy.max_batch {
+                        s.full_batches += 1;
+                    }
+                }
+                match result {
+                    Ok(logits) => {
+                        for (i, r) in batch.into_iter().enumerate() {
+                            let row = logits[i * classes..(i + 1) * classes].to_vec();
+                            let _ = r.reply.send(Reply {
+                                logits: row,
+                                queue_time: r.enqueued.elapsed(),
+                                batch_size: bsz,
+                            });
+                        }
+                    }
+                    Err(_) => {
+                        // Drop the replies; senders observe a closed
+                        // channel and surface an error upstream.
+                        drop(batch);
+                    }
+                }
+            }
+        });
+        Self { tx, image_len }
+    }
+
+    /// Submit one image; blocks until the reply arrives.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
+        anyhow::ensure!(
+            image.len() == self.image_len,
+            "image length {} != {}",
+            image.len(),
+            self.image_len
+        );
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(Request { image, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("batcher worker has shut down"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("batch execution failed"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_echo(policy: BatchPolicy) -> (Batcher, Arc<Mutex<BatcherStats>>) {
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        // "model": logits = [sum(image), batch_marker]
+        let b = Batcher::spawn(
+            policy,
+            4,
+            2,
+            Box::new(|buf, batch| {
+                let mut out = Vec::new();
+                for i in 0..batch {
+                    let s: f32 = buf[i * 4..(i + 1) * 4].iter().sum();
+                    out.push(s);
+                    out.push(batch as f32);
+                }
+                Ok(out)
+            }),
+            stats.clone(),
+        );
+        (b, stats)
+    }
+
+    #[test]
+    fn single_request_flushes_on_deadline() {
+        let (b, stats) = spawn_echo(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        });
+        let r = b.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(r.logits[0], 10.0);
+        assert_eq!(r.batch_size, 1);
+        assert_eq!(stats.lock().unwrap().batches, 1);
+    }
+
+    #[test]
+    fn concurrent_requests_share_batches() {
+        let (b, stats) = spawn_echo(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+        });
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || b.infer(vec![i as f32; 4]).unwrap())
+            })
+            .collect();
+        let replies: Vec<Reply> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for (i, r) in replies.iter().enumerate() {
+            assert_eq!(r.logits[0], 4.0 * i as f32);
+        }
+        let s = stats.lock().unwrap();
+        assert_eq!(s.requests, 8);
+        assert!(s.batches <= 4, "8 requests should pack into few batches, got {}", s.batches);
+    }
+
+    #[test]
+    fn rejects_wrong_image_len() {
+        let (b, _) = spawn_echo(BatchPolicy::default());
+        assert!(b.infer(vec![0.0; 3]).is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Calibration pass (paper §5: "min-max statistics are gathered during a
+//! quick preprocessing stage on 2K randomly picked images").
+//!
+//! Runs the model's calib HLO — f(img) -> (per-layer max, per-layer
+//! mean) — over calibration batches and reduces with
+//! [`CalibStats`](crate::quant::minmax::CalibStats). The resulting scale
+//! vector feeds the sparq HLO and the native engine identically.
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::quant::baselines::{aciq, ScalePolicy};
+use crate::quant::minmax::CalibStats;
+use crate::runtime::{ArtifactKind, ModelArtifacts, PjrtRuntime, TensorArg};
+
+/// Default number of calibration images (paper: 2K).
+pub const CALIB_IMAGES: usize = 2048;
+
+/// Run calibration for one model; returns reduced statistics.
+pub fn calibrate(
+    rt: &PjrtRuntime,
+    model: &ModelArtifacts,
+    ds: &Dataset,
+    batch: usize,
+    images: usize,
+) -> Result<CalibStats> {
+    let exe = rt.load(&model.hlo_path(ArtifactKind::Calib))?;
+    let mut stats = CalibStats::new(model.quant_convs);
+    let mut buf = Vec::new();
+    let mut seen = 0usize;
+    let mut start = 0usize;
+    while seen < images {
+        ds.batch_f32_into(start, batch, &mut buf);
+        let out = exe.run(&[TensorArg::f32(&[batch, ds.h, ds.w, ds.c], buf.clone())])?;
+        if out.len() != 2 {
+            bail!("calib artifact must return (max, mean), got {} outputs", out.len());
+        }
+        stats.update(out[0].as_f32(), out[1].as_f32());
+        seen += batch;
+        start = (start + batch) % ds.n;
+    }
+    Ok(stats)
+}
+
+/// Turn calibration statistics into an activation-scale vector under a
+/// given policy (min-max for SPARQ and the naive baselines, analytic
+/// clipping for the ACIQ baseline).
+pub fn scales_for_policy(stats: &CalibStats, policy: ScalePolicy, act_bits: u8) -> Vec<f32> {
+    match policy {
+        ScalePolicy::MinMax => stats.scales(),
+        ScalePolicy::AciqClip => {
+            let clipped = aciq::clipped_maxes(&stats.layer_means(), &stats.maxes, act_bits);
+            clipped.iter().map(|&m| m / 255.0).collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_scales_differ_when_clipping_bites() {
+        let mut stats = CalibStats::new(2);
+        // layer 0: heavy tail (max >> mean) -> ACIQ clips hard
+        stats.update(&[100.0, 1.0], &[0.5, 0.9]);
+        let mm = scales_for_policy(&stats, ScalePolicy::MinMax, 4);
+        let ac = scales_for_policy(&stats, ScalePolicy::AciqClip, 4);
+        assert!(ac[0] < mm[0] * 0.1, "clipped {} vs minmax {}", ac[0], mm[0]);
+        // layer 1: mean close to max -> cap at min-max
+        assert!((ac[1] - mm[1]).abs() / mm[1] < 1e-6);
+    }
+}

@@ -1,0 +1,158 @@
+//! Accuracy evaluation drivers — the loops behind Tables 1–4 and 6.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::data::Dataset;
+use crate::model::{Engine, EngineMode, Graph, Weights};
+use crate::quant::SparqConfig;
+use crate::runtime::{ArtifactKind, ModelArtifacts, PjrtRuntime, TensorArg};
+
+/// One evaluation outcome.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub tag: String,
+    pub config: String,
+    pub correct: usize,
+    pub total: usize,
+    pub seconds: f64,
+}
+
+impl EvalReport {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+}
+
+fn top1(logits: &[f32], classes: usize) -> Vec<usize> {
+    logits
+        .chunks_exact(classes)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Evaluate through the PJRT request path.
+///
+/// * `config = None` runs the FP32 float artifact;
+/// * `config = Some(cfg)` runs the sparq artifact with the given runtime
+///   config and activation scales.
+///
+/// `limit` caps the number of evaluated images (the paper uses the full
+/// validation set; our default eval split is 2K images).
+pub fn evaluate_pjrt(
+    rt: &PjrtRuntime,
+    model: &ModelArtifacts,
+    ds: &Dataset,
+    batch: usize,
+    scales: &[f32],
+    config: Option<SparqConfig>,
+    limit: usize,
+) -> Result<EvalReport> {
+    let kind = if config.is_some() { ArtifactKind::Sparq } else { ArtifactKind::Float };
+    let exe = rt.load(&model.hlo_path(kind))?;
+    let n = ds.n.min(limit);
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    let mut buf = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let take = batch.min(n - start); // final batch padded below
+        ds.batch_f32_into(start, batch, &mut buf);
+        let img = TensorArg::f32(&[batch, ds.h, ds.w, ds.c], buf.clone());
+        let out = match config {
+            None => exe.run(&[img])?,
+            Some(cfg) => {
+                if scales.len() != model.quant_convs {
+                    bail!("scale vector length {} != {}", scales.len(), model.quant_convs);
+                }
+                exe.run(&[
+                    img,
+                    TensorArg::f32(&[scales.len()], scales.to_vec()),
+                    TensorArg::i32(&[5], cfg.to_vec().to_vec()),
+                ])?
+            }
+        };
+        let logits = out[0].as_f32();
+        let classes = out[0].dims[1];
+        for (i, pred) in top1(logits, classes).into_iter().take(take).enumerate() {
+            if pred == ds.label(start + i) {
+                correct += 1;
+            }
+        }
+        start += take;
+    }
+    Ok(EvalReport {
+        tag: model.tag.clone(),
+        config: config.map_or_else(|| "fp32".to_string(), |c| c.to_string()),
+        correct,
+        total: n,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Evaluate through the native engine (dense or STC datapath).
+pub fn evaluate_native(
+    graph: &Graph,
+    weights: &Weights,
+    ds: &Dataset,
+    batch: usize,
+    scales: &[f32],
+    cfg: SparqConfig,
+    mode: EngineMode,
+    limit: usize,
+) -> Result<EvalReport> {
+    let engine = Engine::new(graph, weights, cfg, scales, mode)?;
+    let n = ds.n.min(limit);
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    let mut buf = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let take = batch.min(n - start);
+        ds.batch_f32_into(start, take, &mut buf);
+        let logits = engine.forward(&buf, take)?;
+        for (i, pred) in top1(&logits, graph.num_classes).into_iter().enumerate() {
+            if pred == ds.label(start + i) {
+                correct += 1;
+            }
+        }
+        start += take;
+    }
+    Ok(EvalReport {
+        tag: format!("{}[native-{:?}]", graph.arch, mode),
+        config: cfg.to_string(),
+        correct,
+        total: n,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top1_picks_max() {
+        let logits = [0.1f32, 0.9, 0.0, 3.0, -1.0, 2.0];
+        assert_eq!(top1(&logits, 3), vec![1, 0]);
+    }
+
+    #[test]
+    fn report_accuracy() {
+        let r = EvalReport {
+            tag: "t".into(),
+            config: "c".into(),
+            correct: 3,
+            total: 4,
+            seconds: 0.0,
+        };
+        assert!((r.accuracy() - 0.75).abs() < 1e-12);
+    }
+}

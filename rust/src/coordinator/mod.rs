@@ -1,0 +1,27 @@
+//! L3 coordinator (DESIGN.md S14) — calibration, evaluation, serving.
+//!
+//! The paper's contribution lives at the PE/quantizer level, so per the
+//! architecture contract L3 is the *driver* tier: it owns process
+//! lifecycle, artifact loading, the calibration pass (paper §5's
+//! preprocessing stage), the accuracy-evaluation loops behind every
+//! table, and a dynamically batched inference service that shows the
+//! SPARQ artifacts serving real request streams.
+//!
+//! * [`calibrate`] — runs the calib HLO over calibration batches and
+//!   reduces min-max / mean statistics into activation scales.
+//! * [`eval`]      — top-1 accuracy drivers over the PJRT path and the
+//!   native engine (dense + STC).
+//! * [`batcher`]   — dynamic batcher: requests queue, a worker forms
+//!   batches up to the artifact's lowered batch size or a deadline,
+//!   executes, and scatters results (vLLM-style, scaled down).
+//! * [`server`]    — in-process inference service facade + metrics.
+
+pub mod batcher;
+pub mod calibrate;
+pub mod eval;
+pub mod server;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use calibrate::{calibrate, scales_for_policy};
+pub use eval::{evaluate_native, evaluate_pjrt, EvalReport};
+pub use server::{InferenceServer, ServerMetrics};

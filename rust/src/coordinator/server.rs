@@ -1,0 +1,136 @@
+//! In-process inference service: PJRT executable behind the dynamic
+//! batcher, plus latency/throughput metrics. `examples/serve_bench.rs`
+//! drives it with concurrent synthetic clients.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::quant::SparqConfig;
+use crate::runtime::{ArtifactKind, ModelArtifacts, PjrtRuntime, TensorArg};
+
+use super::batcher::{BatchPolicy, Batcher, BatcherStats, Reply};
+
+/// Latency histogram with fixed microsecond buckets (powers of two).
+#[derive(Default, Debug, Clone)]
+pub struct LatencyHist {
+    buckets: [u64; 24],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl LatencyHist {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as u64).min(23) as usize;
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.sum_us as f64 / self.count.max(1) as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Approximate quantile from the histogram (upper bucket bound).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let target = (self.count as f64 * q).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target && c > 0 {
+                return 1u64 << i;
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Aggregated server metrics.
+#[derive(Default, Debug)]
+pub struct ServerMetrics {
+    pub e2e: LatencyHist,
+    pub queue: LatencyHist,
+    pub batcher: BatcherStats,
+}
+
+/// A model served through the batched PJRT path.
+pub struct InferenceServer {
+    batcher: Batcher,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    pub classes: usize,
+    pub image_dims: [usize; 3],
+}
+
+impl InferenceServer {
+    /// Load the model's sparq artifact and start the batching worker.
+    pub fn start(
+        rt: Arc<PjrtRuntime>,
+        model: &ModelArtifacts,
+        image_dims: [usize; 3],
+        classes: usize,
+        scales: Vec<f32>,
+        cfg: SparqConfig,
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        let exe = rt.load(&model.hlo_path(ArtifactKind::Sparq))?;
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let [h, w, c] = image_dims;
+        let image_len = h * w * c;
+        let nscales = scales.len();
+        let cfg_vec = cfg.to_vec().to_vec();
+        let execute = move |buf: &[f32], batch: usize| -> Result<Vec<f32>> {
+            let out = exe.run(&[
+                TensorArg::f32(&[batch, h, w, c], buf.to_vec()),
+                TensorArg::f32(&[nscales], scales.clone()),
+                TensorArg::i32(&[5], cfg_vec.clone()),
+            ])?;
+            Ok(out[0].as_f32().to_vec())
+        };
+        let batcher = Batcher::spawn(policy, image_len, classes, Box::new(execute), stats);
+        Ok(Self { batcher, metrics, classes, image_dims })
+    }
+
+    /// Blocking single-image inference; returns the logits row.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
+        let t0 = std::time::Instant::now();
+        let reply = self.batcher.infer(image)?;
+        let mut m = self.metrics.lock().unwrap();
+        m.e2e.record(t0.elapsed());
+        m.queue.record(reply.queue_time);
+        Ok(reply)
+    }
+
+    pub fn metrics(&self) -> Arc<Mutex<ServerMetrics>> {
+        self.metrics.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHist::default();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 100_000);
+    }
+}

@@ -1,0 +1,122 @@
+//! Dataset loader — mirrors `python/compile/data.py::write_bin`.
+//!
+//! Layout (little-endian):
+//! `MAGIC("SPRQDS1\0") | n u32 | h u32 | w u32 | c u32 | nclasses u32 |
+//!  images u8[n*h*w*c] | labels u8[n]`
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: &[u8; 8] = b"SPRQDS1\x00";
+
+/// A labelled image set, pixels in u8 NHWC.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub num_classes: usize,
+    pub images: Vec<u8>,
+    pub labels: Vec<u8>,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 28 || &bytes[..8] != MAGIC {
+            bail!("bad dataset magic");
+        }
+        let rd = |at: usize| -> usize {
+            u32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()) as usize
+        };
+        let (n, h, w, c, num_classes) = (rd(8), rd(12), rd(16), rd(20), rd(24));
+        let img_len = n * h * w * c;
+        let expect = 28 + img_len + n;
+        if bytes.len() != expect {
+            bail!("dataset length mismatch: {} != {}", bytes.len(), expect);
+        }
+        let images = bytes[28..28 + img_len].to_vec();
+        let labels = bytes[28 + img_len..].to_vec();
+        if let Some(&bad) = labels.iter().find(|&&l| l as usize >= num_classes) {
+            bail!("label {bad} out of range (nclasses={num_classes})");
+        }
+        Ok(Self { n, h, w, c, num_classes, images, labels })
+    }
+
+    /// Pixels of image `i` as normalized f32 in [0, 1] (the only input
+    /// preprocessing anywhere — mirrors `data.normalize`).
+    pub fn image_f32(&self, i: usize) -> Vec<f32> {
+        let stride = self.h * self.w * self.c;
+        self.images[i * stride..(i + 1) * stride]
+            .iter()
+            .map(|&p| f32::from(p) / 255.0)
+            .collect()
+    }
+
+    /// Fill `out` with a normalized batch `[count, h, w, c]`, recycling
+    /// images modulo `n` (used to pad the final partial batch).
+    pub fn batch_f32_into(&self, start: usize, count: usize, out: &mut Vec<f32>) {
+        let stride = self.h * self.w * self.c;
+        out.clear();
+        out.reserve(count * stride);
+        for j in 0..count {
+            let i = (start + j) % self.n;
+            out.extend(
+                self.images[i * stride..(i + 1) * stride]
+                    .iter()
+                    .map(|&p| f32::from(p) / 255.0),
+            );
+        }
+    }
+
+    pub fn label(&self, i: usize) -> usize {
+        self.labels[i] as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(n: usize, h: usize, w: usize, c: usize, k: usize) -> Vec<u8> {
+        let mut b = MAGIC.to_vec();
+        for v in [n, h, w, c, k] {
+            b.extend_from_slice(&(v as u32).to_le_bytes());
+        }
+        b.extend((0..n * h * w * c).map(|i| (i % 256) as u8));
+        b.extend((0..n).map(|i| (i % k) as u8));
+        b
+    }
+
+    #[test]
+    fn roundtrip() {
+        let d = Dataset::from_bytes(&fake(5, 4, 4, 3, 10)).unwrap();
+        assert_eq!((d.n, d.h, d.w, d.c, d.num_classes), (5, 4, 4, 3, 10));
+        assert_eq!(d.image_f32(0)[1], 1.0 / 255.0);
+        assert_eq!(d.label(3), 3);
+        let mut buf = Vec::new();
+        d.batch_f32_into(3, 4, &mut buf); // wraps modulo n
+        assert_eq!(buf.len(), 4 * 4 * 4 * 3);
+        assert_eq!(buf[..48], d.image_f32(3)[..]);
+        assert_eq!(buf[96..144], d.image_f32(0)[..]); // wrapped
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(Dataset::from_bytes(b"short").is_err());
+        let mut bad = fake(5, 4, 4, 3, 10);
+        bad.truncate(bad.len() - 1);
+        assert!(Dataset::from_bytes(&bad).is_err());
+        let mut bad_label = fake(5, 4, 4, 3, 10);
+        let len = bad_label.len();
+        bad_label[len - 1] = 99;
+        assert!(Dataset::from_bytes(&bad_label).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Experiment reproductions (DESIGN.md §6) — one runner per paper
+//! table/figure, each emitting the same rows the paper reports plus the
+//! paper's own numbers for side-by-side comparison.
+
+pub mod paper;
+pub mod report;
+pub mod stats;
+pub mod tables;
+
+pub use report::Table;
+pub use stats::{toggle_stats, ToggleStats};
+pub use tables::{table1, table2, table3, table4, table5, table6, ExperimentCtx};

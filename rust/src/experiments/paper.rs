@@ -1,0 +1,68 @@
+//! The paper's published numbers (NeurIPS 2021, Tables 1–6 and §5.1
+//! statistics), embedded for side-by-side comparison in our reports.
+//! Our substrate differs (synthetic dataset, mini zoo — see DESIGN.md
+//! §3), so the comparison is of *shape*: orderings, signs and rough
+//! magnitudes, which EXPERIMENTS.md walks through claim by claim.
+
+/// Paper Table 2 — ResNet-18 row (the canonical example): relative
+/// degradation for {5,3,2}opt x {Trim, +R, +R -vS}.
+pub const TABLE2_RESNET18: [(&str, f64); 9] = [
+    ("5opt", -0.0011),
+    ("5opt_r", -0.0007),
+    ("5opt_r_novs", -0.0011),
+    ("3opt", -0.0022),
+    ("3opt_r", -0.0014),
+    ("3opt_r_novs", -0.0048),
+    ("2opt", -0.0287),
+    ("2opt_r", -0.0137),
+    ("2opt_r_novs", -0.0202),
+];
+
+/// Paper Table 4 — ResNet-18: 3-bit/2-bit with and without vSPARQ.
+pub const TABLE4_RESNET18: [(&str, f64); 4] = [
+    ("6opt_r", -0.0021),
+    ("7opt_r", -0.0164),
+    ("6opt_r_novs", -0.0051),
+    ("7opt_r_novs", -0.0257),
+];
+
+/// Paper Table 5 — relative area per MAC throughput (SA, TC).
+pub const TABLE5: [(&str, f64, f64); 9] = [
+    ("8b-8b", 1.00, 1.00),
+    ("2x4b-8b", 0.50, 0.50),
+    ("7opt", 0.59, 0.58),
+    ("6opt", 0.66, 0.63),
+    ("5opt", 0.72, 0.72),
+    ("3opt", 0.61, 0.66),
+    ("2opt", 0.57, 0.61),
+    ("5opt-vS", 0.62, 0.67),
+    ("3opt-vS", 0.59, 0.61),
+];
+
+/// Paper §5.1: toggle probability of bits 7..4 among non-zero ResNet-18
+/// activations (ILSVRC-2012), and the derived >= 1-of-4-MSBs-toggled
+/// probability.
+pub const TOGGLE_BITS_7_TO_4: [f64; 4] = [0.005, 0.092, 0.338, 0.448];
+pub const TOGGLE_ANY_MSB: f64 = 0.67;
+
+/// Paper §5.3: trim-unit area relative to a conventional TC.
+pub const TRIM_UNIT_REL: [(&str, f64); 3] = [("5opt", 0.17), ("3opt", 0.12), ("2opt", 0.09)];
+
+/// Paper Table 6 — STC relative degradation (ResNet-18 row).
+pub const TABLE6_RESNET18: [(&str, f64); 5] = [
+    ("5opt_r", -0.0013),
+    ("3opt_r", -0.0034),
+    ("2opt_r", -0.0159),
+    ("6opt_r", -0.0041),
+    ("7opt_r", -0.0192),
+];
+
+/// Look up a paper value by key; empty string when the paper has no
+/// number for that cell (rendered as "-").
+pub fn lookup(table: &[(&str, f64)], key: &str) -> String {
+    table
+        .iter()
+        .find(|(k, _)| *k == key)
+        .map(|(_, v)| format!("{:+.2}%", v * 100.0))
+        .unwrap_or_else(|| "-".to_string())
+}

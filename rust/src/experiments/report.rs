@@ -1,0 +1,104 @@
+//! Plain-text table rendering + JSON export for experiment results.
+
+use crate::json::JsonValue;
+
+/// A rendered experiment table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned text table (markdown-compatible).
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let mut out = format!("## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                line.push_str(&format!(" {c:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        crate::json_obj! {
+            "title" => self.title.clone(),
+            "headers" => self.headers.clone(),
+            "rows" => JsonValue::Array(
+                self.rows.iter().cloned().map(JsonValue::from).collect()
+            ),
+        }
+    }
+}
+
+/// Format an accuracy delta the way the paper prints them (+0.04% /
+/// -1.37%).
+pub fn fmt_delta(delta: f64) -> String {
+    format!("{:+.2}%", delta * 100.0)
+}
+
+/// Format an absolute accuracy (69.76%).
+pub fn fmt_acc(acc: f64) -> String {
+    format!("{:.2}%", acc * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["model", "acc"]);
+        t.row(vec!["resnet10".into(), "-0.10%".into()]);
+        let s = t.render();
+        assert!(s.contains("| model    | acc    |"));
+        assert!(s.contains("| resnet10 | -0.10% |"));
+    }
+
+    #[test]
+    fn delta_formatting() {
+        assert_eq!(fmt_delta(-0.0137), "-1.37%");
+        assert_eq!(fmt_delta(0.0004), "+0.04%");
+        assert_eq!(fmt_acc(0.6976), "69.76%");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

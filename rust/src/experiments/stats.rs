@@ -1,0 +1,133 @@
+//! Activation bit/value statistics (experiment F2, paper §2 and §5.1).
+//!
+//! The paper motivates bSPARQ with toggle statistics: for non-zero
+//! ResNet-18 activations, bits 7/6/5/4 toggle 0.5/9.2/33.8/44.8% of the
+//! time, so ~67% of non-zero activations have a toggled MSB nibble while
+//! 90% of the time the top two bits are quiet. We re-measure exactly
+//! these quantities on our zoo by tracing the uniform-quantized im2col
+//! activations through the native engine.
+
+use anyhow::Result;
+
+use crate::data::Dataset;
+use crate::model::{Engine, EngineMode, Graph, TraceSink, Weights};
+use crate::quant::vsparq::pair_zero_fraction;
+use crate::quant::SparqConfig;
+
+/// Aggregated bit-level statistics over traced activations.
+#[derive(Clone, Debug, Default)]
+pub struct ToggleStats {
+    /// Count of activations with bit b set (b = 0..7), non-zero only.
+    pub bit_toggles: [u64; 8],
+    pub nonzero: u64,
+    pub total: u64,
+    /// Activations whose 4-bit MSB nibble has any toggled bit.
+    pub msb_nibble_toggled: u64,
+    /// Activations whose top two bits are both clear (non-zero only).
+    pub top2_quiet: u64,
+    /// vSPARQ opportunity: pairs with at least one zero.
+    pub pair_zero_sum: f64,
+    pub pair_batches: u64,
+}
+
+impl ToggleStats {
+    pub fn zero_fraction(&self) -> f64 {
+        1.0 - self.nonzero as f64 / self.total.max(1) as f64
+    }
+
+    /// P(bit b toggled | activation non-zero).
+    pub fn bit_prob(&self, b: usize) -> f64 {
+        self.bit_toggles[b] as f64 / self.nonzero.max(1) as f64
+    }
+
+    /// P(any of bits 7..4 toggled | non-zero) — the paper's 67% figure.
+    pub fn any_msb_prob(&self) -> f64 {
+        self.msb_nibble_toggled as f64 / self.nonzero.max(1) as f64
+    }
+
+    /// P(bits 7 and 6 both clear | non-zero) — the paper's 90% figure.
+    pub fn top2_quiet_prob(&self) -> f64 {
+        self.top2_quiet as f64 / self.nonzero.max(1) as f64
+    }
+
+    /// Mean fraction of activation pairs containing a zero.
+    pub fn pair_zero_prob(&self) -> f64 {
+        self.pair_zero_sum / self.pair_batches.max(1) as f64
+    }
+}
+
+impl TraceSink for ToggleStats {
+    fn record(&mut self, _layer: &str, acts_q: &[u8]) {
+        for &x in acts_q {
+            self.total += 1;
+            if x == 0 {
+                continue;
+            }
+            self.nonzero += 1;
+            for (b, tally) in self.bit_toggles.iter_mut().enumerate() {
+                if x & (1 << b) != 0 {
+                    *tally += 1;
+                }
+            }
+            if x & 0xf0 != 0 {
+                self.msb_nibble_toggled += 1;
+            }
+            if x & 0xc0 == 0 {
+                self.top2_quiet += 1;
+            }
+        }
+        self.pair_zero_sum += pair_zero_fraction(acts_q);
+        self.pair_batches += 1;
+    }
+}
+
+/// Trace `images` eval images through the native engine at A8W8 and
+/// collect toggle statistics (quantization grid = min-max scales).
+pub fn toggle_stats(
+    graph: &Graph,
+    weights: &Weights,
+    ds: &Dataset,
+    scales: &[f32],
+    images: usize,
+    batch: usize,
+) -> Result<ToggleStats> {
+    let engine = Engine::new(graph, weights, SparqConfig::A8W8, scales, EngineMode::Dense)?;
+    let mut stats = ToggleStats::default();
+    let mut buf = Vec::new();
+    let mut start = 0usize;
+    while start < images.min(ds.n) {
+        let take = batch.min(images.min(ds.n) - start);
+        ds.batch_f32_into(start, take, &mut buf);
+        engine.forward_traced(&buf, take, &mut stats)?;
+        start += take;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_counts_bits() {
+        let mut s = ToggleStats::default();
+        s.record("l", &[0, 0b1000_0000, 0b0000_1111, 0b0011_0000]);
+        assert_eq!(s.total, 4);
+        assert_eq!(s.nonzero, 3);
+        assert_eq!(s.bit_toggles[7], 1);
+        assert_eq!(s.bit_toggles[0], 1);
+        assert_eq!(s.msb_nibble_toggled, 2); // 0x80 and 0x30
+        assert_eq!(s.top2_quiet, 2); // 0x0f and 0x30
+        assert!((s.zero_fraction() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn probabilities_normalized() {
+        let mut s = ToggleStats::default();
+        s.record("l", &[255; 16]);
+        assert!((s.any_msb_prob() - 1.0).abs() < 1e-12);
+        assert!((s.bit_prob(7) - 1.0).abs() < 1e-12);
+        assert_eq!(s.top2_quiet_prob(), 0.0);
+        assert_eq!(s.pair_zero_prob(), 0.0);
+    }
+}

@@ -1,0 +1,241 @@
+//! Table runners — each regenerates one paper table over the mini zoo.
+//!
+//! All accuracy tables share a context holding the PJRT runtime, the
+//! artifact manifest, the eval dataset and a per-model calibration
+//! cache, so a full `sparq-cli all` run calibrates each model once.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::coordinator::{calibrate, evaluate_native, evaluate_pjrt, scales_for_policy};
+use crate::data::Dataset;
+use crate::hw::area;
+use crate::model::{EngineMode, Graph, Weights};
+use crate::quant::baselines::{table3_baselines, ScalePolicy};
+use crate::quant::minmax::CalibStats;
+use crate::quant::SparqConfig;
+use crate::runtime::{Manifest, PjrtRuntime};
+
+use super::paper;
+use super::report::{fmt_acc, fmt_delta, Table};
+
+/// Shared state for the experiment suite.
+pub struct ExperimentCtx {
+    pub rt: PjrtRuntime,
+    pub manifest: Manifest,
+    pub eval: Dataset,
+    pub calib_ds: Dataset,
+    pub batch: usize,
+    pub eval_limit: usize,
+    pub calib_images: usize,
+    calib_cache: HashMap<String, CalibStats>,
+    fp32_cache: HashMap<String, f64>,
+}
+
+impl ExperimentCtx {
+    pub fn new(artifacts: &std::path::Path, eval_limit: usize, calib_images: usize) -> Result<Self> {
+        let manifest = Manifest::load(artifacts)?;
+        let eval = Dataset::load(&artifacts.join("test.bin"))?;
+        let calib_ds = Dataset::load(&artifacts.join("train.bin"))?;
+        Ok(Self {
+            rt: PjrtRuntime::cpu()?,
+            manifest,
+            eval,
+            calib_ds,
+            batch: 64,
+            eval_limit,
+            calib_images,
+            calib_cache: HashMap::new(),
+            fp32_cache: HashMap::new(),
+        })
+    }
+
+    /// Calibration stats for a model (cached).
+    pub fn calib(&mut self, tag: &str) -> Result<CalibStats> {
+        if let Some(s) = self.calib_cache.get(tag) {
+            return Ok(s.clone());
+        }
+        let model = self.manifest.get(tag)?.clone();
+        let stats =
+            calibrate(&self.rt, &model, &self.calib_ds, self.batch, self.calib_images)?;
+        self.calib_cache.insert(tag.to_string(), stats.clone());
+        Ok(stats)
+    }
+
+    /// FP32 top-1 for a model (cached) — the baseline every delta uses.
+    pub fn fp32_acc(&mut self, tag: &str) -> Result<f64> {
+        if let Some(&a) = self.fp32_cache.get(tag) {
+            return Ok(a);
+        }
+        let model = self.manifest.get(tag)?.clone();
+        let rep = evaluate_pjrt(
+            &self.rt, &model, &self.eval, self.batch, &[], None, self.eval_limit,
+        )?;
+        self.fp32_cache.insert(tag.to_string(), rep.accuracy());
+        Ok(rep.accuracy())
+    }
+
+    /// SPARQ-path accuracy under a config + scale policy.
+    pub fn quant_acc(&mut self, tag: &str, cfg: SparqConfig, policy: ScalePolicy) -> Result<f64> {
+        let stats = self.calib(tag)?;
+        let scales = scales_for_policy(&stats, policy, cfg.n_bits);
+        let model = self.manifest.get(tag)?.clone();
+        let rep = evaluate_pjrt(
+            &self.rt, &model, &self.eval, self.batch, &scales, Some(cfg), self.eval_limit,
+        )?;
+        Ok(rep.accuracy())
+    }
+
+    /// Native-engine accuracy (used by Table 6's STC datapath).
+    pub fn native_acc(&mut self, tag: &str, cfg: SparqConfig, mode: EngineMode) -> Result<f64> {
+        let stats = self.calib(tag)?;
+        let scales = scales_for_policy(&stats, ScalePolicy::MinMax, cfg.n_bits);
+        let model = self.manifest.get(tag)?.clone();
+        let graph = Graph::load(&model.meta_path())?;
+        let weights = Weights::load(&model.weights_path())?;
+        let rep = evaluate_native(
+            &graph, &weights, &self.eval, self.batch, &scales, cfg, mode, self.eval_limit,
+        )?;
+        Ok(rep.accuracy())
+    }
+}
+
+/// Table 1: FP32 / A8W8 / A4W8 / A8W4 absolute top-1 per model.
+pub fn table1(ctx: &mut ExperimentCtx) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 1 — top-1 accuracy under base quantization precisions",
+        &["model", "FP32", "A8W8", "A4W8", "A8W4"],
+    );
+    for tag in ctx.manifest.dense_tags().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let fp32 = ctx.fp32_acc(&tag)?;
+        let mut cells = vec![tag.clone(), fmt_acc(fp32)];
+        for name in ["a8w8", "a4w8", "a8w4"] {
+            let acc =
+                ctx.quant_acc(&tag, SparqConfig::named(name).unwrap(), ScalePolicy::MinMax)?;
+            cells.push(fmt_acc(acc));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Table 2: the 9-config SPARQ grid, reported as deltas vs FP32.
+pub fn table2(ctx: &mut ExperimentCtx) -> Result<Table> {
+    let grid = SparqConfig::table2_grid();
+    let mut headers: Vec<&str> = vec!["model"];
+    headers.extend(grid.iter().map(|(n, _)| *n));
+    let mut t = Table::new(
+        "Table 2 — SPARQ degradation vs FP32 ({5,3,2}opt x {Trim, +R, +R-vS})",
+        &headers,
+    );
+    for tag in ctx.manifest.dense_tags().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let fp32 = ctx.fp32_acc(&tag)?;
+        let mut cells = vec![tag.clone()];
+        for (_, cfg) in &grid {
+            let acc = ctx.quant_acc(&tag, *cfg, ScalePolicy::MinMax)?;
+            cells.push(fmt_delta(acc - fp32));
+        }
+        t.row(cells);
+    }
+    let mut paper_row = vec!["paper:ResNet-18".to_string()];
+    for (name, _) in &grid {
+        paper_row.push(paper::lookup(&paper::TABLE2_RESNET18, name));
+    }
+    t.row(paper_row);
+    Ok(t)
+}
+
+/// Table 3: SPARQ vs baselines (SySMT / ACIQ-clip / naive uniform).
+pub fn table3(ctx: &mut ExperimentCtx) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 3 — SPARQ vs 4-bit PTQ baselines (delta vs FP32)",
+        &["model", "5opt+R", "3opt+R", "2opt+R", "sysmt", "aciq4", "naive_a4w8", "naive_a8w4"],
+    );
+    for tag in ctx.manifest.dense_tags().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let fp32 = ctx.fp32_acc(&tag)?;
+        let mut cells = vec![tag.clone()];
+        for name in ["5opt_r", "3opt_r", "2opt_r"] {
+            let acc =
+                ctx.quant_acc(&tag, SparqConfig::named(name).unwrap(), ScalePolicy::MinMax)?;
+            cells.push(fmt_delta(acc - fp32));
+        }
+        for b in table3_baselines() {
+            let acc = ctx.quant_acc(&tag, b.cfg, b.policy)?;
+            cells.push(fmt_delta(acc - fp32));
+        }
+        t.row(cells);
+    }
+    Ok(t)
+}
+
+/// Table 4: 3-bit (6opt) / 2-bit (7opt), with and without vSPARQ, plus
+/// the uniform 3/2-bit baselines the paper compares against.
+pub fn table4(ctx: &mut ExperimentCtx) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 4 — sub-4-bit SPARQ (delta vs FP32)",
+        &["model", "3b(6opt)", "2b(7opt)", "3b-vS", "2b-vS", "uniform3b", "uniform2b"],
+    );
+    let configs = ["6opt_r", "7opt_r", "6opt_r_novs", "7opt_r_novs", "a3w8", "a2w8"];
+    for tag in ctx.manifest.dense_tags().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let fp32 = ctx.fp32_acc(&tag)?;
+        let mut cells = vec![tag.clone()];
+        for name in configs {
+            let acc =
+                ctx.quant_acc(&tag, SparqConfig::named(name).unwrap(), ScalePolicy::MinMax)?;
+            cells.push(fmt_delta(acc - fp32));
+        }
+        t.row(cells);
+    }
+    let mut paper_row = vec!["paper:ResNet-18".to_string()];
+    for name in configs {
+        paper_row.push(paper::lookup(&paper::TABLE4_RESNET18, name));
+    }
+    t.row(paper_row);
+    Ok(t)
+}
+
+/// Table 5: relative PE area (model) next to the paper's synthesis.
+pub fn table5() -> Table {
+    let mut t = Table::new(
+        "Table 5 — relative area normalized to MAC throughput",
+        &["design", "SA (model)", "SA (paper)", "TC (model)", "TC (paper)"],
+    );
+    let model_rows = area::table5_rows();
+    for ((label, sa, tc), (plabel, psa, ptc)) in model_rows.iter().zip(paper::TABLE5.iter()) {
+        debug_assert_eq!(label.replace("opt-vS", "opt-vS"), *plabel.to_string());
+        t.row(vec![
+            label.clone(),
+            format!("{sa:.2}"),
+            format!("{psa:.2}"),
+            format!("{tc:.2}"),
+            format!("{ptc:.2}"),
+        ]);
+    }
+    t
+}
+
+/// Table 6: SPARQ on STC (2:4-pruned models), via the native STC engine.
+pub fn table6(ctx: &mut ExperimentCtx) -> Result<Table> {
+    let mut t = Table::new(
+        "Table 6 — SPARQ on Sparse Tensor Cores (2:4 pruned models)",
+        &["model", "FP32", "A8W8", "5opt", "3opt", "2opt", "3b(6opt)", "2b(7opt)"],
+    );
+    for tag in ctx.manifest.pruned_tags().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let fp32 = ctx.fp32_acc(&tag)?;
+        let a8w8 = ctx.native_acc(&tag, SparqConfig::A8W8, EngineMode::Stc)?;
+        let mut cells = vec![tag.clone(), fmt_acc(fp32), fmt_acc(a8w8)];
+        for name in ["5opt_r", "3opt_r", "2opt_r", "6opt_r", "7opt_r"] {
+            let acc =
+                ctx.native_acc(&tag, SparqConfig::named(name).unwrap(), EngineMode::Stc)?;
+            cells.push(fmt_delta(acc - fp32));
+        }
+        t.row(cells);
+    }
+    let mut paper_row = vec!["paper:ResNet-18".into(), "69.77%".into(), "69.79%".into()];
+    for name in ["5opt_r", "3opt_r", "2opt_r", "6opt_r", "7opt_r"] {
+        paper_row.push(paper::lookup(&paper::TABLE6_RESNET18, name));
+    }
+    t.row(paper_row);
+    Ok(t)
+}

@@ -1,0 +1,253 @@
+//! First-order gate-area model for the Table 5 comparison.
+//!
+//! The paper synthesizes SystemVerilog with a 65nm library; we cannot
+//! run an EDA flow, so we estimate combinational area from standard
+//! scaling laws (in NAND2-equivalent gate units):
+//!
+//! * array multiplier a x b bits:   `KM * a * b`        (partial-product
+//!   cells dominate; linear in the bit-product),
+//! * ripple/carry-select adder:     `KA * width * (inputs - 1)`,
+//! * barrel shifter, `o` options:   `KS * width * ceil(log2 o)` (one
+//!   2:1 mux layer per select stage),
+//! * 2:1 mux:                       `KX * width`,
+//! * flip-flop:                     `KR * width`.
+//!
+//! Table 5 normalizes area to MAC *throughput*: the SPARQ/2x4b PEs
+//! retire two MACs per cycle, the 8b-8b baseline one. We report our
+//! model's numbers next to the paper's (experiments::table5); the model
+//! is anchored only by the component laws above — no per-row fitting —
+//! so agreement in *ordering* and rough magnitude is the claim, and the
+//! paper's two anchor points (1.00, 0.50) are checked in tests with a
+//! generous tolerance.
+
+use crate::quant::{Mode, SparqConfig};
+
+// Gate-unit constants (NAND2 equivalents, 65nm-ish folklore values).
+const KM: f64 = 1.0; // per multiplier bit-product cell
+const KA: f64 = 1.1; // per adder bit per extra input
+const KS: f64 = 0.45; // per shifter bit per mux stage
+const KX: f64 = 0.45; // per 2:1 mux bit
+const KR: f64 = 0.9; // per flip-flop bit
+
+/// Accumulator width for int8 CNN dot products (the paper's SA psum).
+const ACC_W: f64 = 24.0;
+
+fn log2_ceil(o: u32) -> f64 {
+    if o <= 1 {
+        0.0
+    } else {
+        (32 - (o - 1).leading_zeros()) as f64
+    }
+}
+
+/// Component breakdown of one PE (gate units).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeArea {
+    pub multipliers: f64,
+    pub shifters: f64,
+    pub adders: f64,
+    pub muxes: f64,
+    pub registers: f64,
+    /// MACs retired per cycle (normalization denominator).
+    pub macs_per_cycle: f64,
+}
+
+impl PeArea {
+    pub fn total(&self) -> f64 {
+        self.multipliers + self.shifters + self.adders + self.muxes + self.registers
+    }
+
+    /// Area normalized to MAC throughput.
+    pub fn per_mac(&self) -> f64 {
+        self.total() / self.macs_per_cycle
+    }
+}
+
+/// Conventional 8b-8b output-stationary SA PE: one 8x8 multiplier, psum
+/// accumulate, forwarding registers for activation and weight.
+pub fn sa_baseline() -> PeArea {
+    PeArea {
+        multipliers: KM * 8.0 * 8.0,
+        shifters: 0.0,
+        adders: KA * ACC_W, // 2-input psum adder
+        muxes: 0.0,
+        registers: KR * (ACC_W + 8.0 + 8.0), // psum + act + weight fwd
+        macs_per_cycle: 1.0,
+    }
+}
+
+/// Static 2x4b-8b PE (the reference design of Table 5): two fixed 4b-8b
+/// multipliers, 3-input psum adder, no shifters.
+pub fn sa_2x4b() -> PeArea {
+    PeArea {
+        multipliers: KM * 2.0 * 4.0 * 8.0,
+        shifters: 0.0,
+        adders: KA * ACC_W * 2.0, // 3-input adder
+        muxes: 0.0,
+        registers: KR * (ACC_W + 2.0 * 4.0 + 2.0 * 8.0),
+        macs_per_cycle: 2.0,
+    }
+}
+
+/// SPARQ SA PE for a configuration (paper Fig. 2): two n-bit x 8-bit
+/// multipliers, two dynamic shift-left units sized by the placement
+/// option count, 3-input adder, weight-select muxes (vSPARQ only) and
+/// the ShiftCtrl/MuxCtrl pipeline state.
+pub fn sa_sparq(cfg: SparqConfig) -> PeArea {
+    let n = f64::from(cfg.n_bits);
+    let opts = u32::from(cfg.placement_options());
+    // vSPARQ zero-skip adds the wide-window placements (eq. 3 split):
+    // shifts reach (8 - n), one extra option beyond the narrow set for
+    // Full mode; 3opt/2opt sets already contain shift 4.
+    let shift_opts = if cfg.vsparq && cfg.mode == Mode::Full { opts + 1 } else { opts };
+    let stages = log2_ceil(shift_opts);
+    let prod_w = n + 8.0; // multiplier output width entering the shifter
+    let meta_bits = 2.0 * log2_ceil(shift_opts) + if cfg.vsparq { 1.0 } else { 0.0 };
+    PeArea {
+        multipliers: KM * 2.0 * n * 8.0,
+        shifters: KS * 2.0 * prod_w * stages,
+        adders: KA * ACC_W * 2.0,
+        muxes: if cfg.vsparq { KX * 2.0 * 8.0 } else { 0.0 },
+        registers: KR * (ACC_W + 2.0 * n + 2.0 * 8.0 + meta_bits),
+        macs_per_cycle: 2.0,
+    }
+}
+
+/// Conventional TC DP unit (Fig. 4): four 8x8 multipliers + a 3-level
+/// adder tree + the carried psum input. Per 4 MACs/cycle.
+pub fn tc_baseline() -> PeArea {
+    PeArea {
+        multipliers: KM * 4.0 * 8.0 * 8.0,
+        shifters: 0.0,
+        // adder tree: 2 + 1 + 1(psum) two-input adders at ~ACC_W
+        adders: KA * ACC_W * 4.0,
+        muxes: 0.0,
+        registers: KR * (ACC_W + 4.0 * 8.0 + 4.0 * 8.0),
+        macs_per_cycle: 4.0,
+    }
+}
+
+/// Static 2x4b-8b TC DP unit: eight 4b-8b multipliers (pairwise), wider
+/// adder tree.
+pub fn tc_2x4b() -> PeArea {
+    PeArea {
+        multipliers: KM * 8.0 * 4.0 * 8.0,
+        shifters: 0.0,
+        adders: KA * ACC_W * 8.0, // 8-leaf tree + psum
+        muxes: 0.0,
+        registers: KR * (ACC_W + 8.0 * 4.0 + 8.0 * 8.0),
+        macs_per_cycle: 8.0,
+    }
+}
+
+/// SPARQ TC DP unit: four Fig.-2 dual multipliers.
+pub fn tc_sparq(cfg: SparqConfig) -> PeArea {
+    let lane = sa_sparq(cfg);
+    let n = f64::from(cfg.n_bits);
+    PeArea {
+        multipliers: 4.0 * lane.multipliers,
+        shifters: 4.0 * lane.shifters,
+        adders: KA * ACC_W * 8.0,
+        muxes: 4.0 * lane.muxes,
+        registers: KR * (ACC_W + 8.0 * n + 8.0 * 8.0)
+            + 4.0 * (lane.registers - KR * (ACC_W + 2.0 * n + 2.0 * 8.0)),
+        macs_per_cycle: 8.0,
+    }
+}
+
+/// The standalone trim-and-round unit area relative to a conventional TC
+/// (paper §5.3 reports 17% / 12% / 9% for 5opt / 3opt / 2opt): priority
+/// encoder (leading-zero detect), rounding incrementer and window-select
+/// mux per lane. The unit runs at the (lower) activation delivery rate,
+/// so the per-lane logic is narrow: ~2 gates per encoder stage, half a
+/// gate per incrementer bit, and a 0.15-gate/bit/option select tree —
+/// first-order constants chosen from the same 65nm folklore as above.
+pub fn trim_unit_relative_to_tc(cfg: SparqConfig) -> f64 {
+    let opts = f64::from(cfg.placement_options());
+    let n = f64::from(cfg.n_bits);
+    let per_act =
+        2.0 * log2_ceil(opts as u32 + 1) + 0.5 * n + 0.15 * n * opts;
+    // 8 activations per SPARQ TC DP beat
+    (8.0 * per_act) / tc_baseline().total()
+}
+
+/// One Table 5 row: (label, SA ratio, TC ratio).
+pub fn table5_rows() -> Vec<(String, f64, f64)> {
+    let base_sa = sa_baseline().per_mac();
+    let base_tc = tc_baseline().per_mac();
+    let mut rows = vec![
+        ("8b-8b".to_string(), 1.0, 1.0),
+        ("2x4b-8b".to_string(), sa_2x4b().per_mac() / base_sa, tc_2x4b().per_mac() / base_tc),
+    ];
+    for name in ["7opt_r", "6opt_r", "5opt_r", "3opt_r", "2opt_r"] {
+        let cfg = SparqConfig::named(name).unwrap();
+        rows.push((
+            format!("{}opt", cfg.placement_options()),
+            sa_sparq(cfg).per_mac() / base_sa,
+            tc_sparq(cfg).per_mac() / base_tc,
+        ));
+    }
+    for name in ["5opt_r_novs", "3opt_r_novs"] {
+        let cfg = SparqConfig::named(name).unwrap();
+        rows.push((
+            format!("{}opt-vS", cfg.placement_options()),
+            sa_sparq(cfg).per_mac() / base_sa,
+            tc_sparq(cfg).per_mac() / base_tc,
+        ));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ratio(name: &str) -> f64 {
+        let base = sa_baseline().per_mac();
+        sa_sparq(SparqConfig::named(name).unwrap()).per_mac() / base
+    }
+
+    #[test]
+    fn anchor_2x4b_near_half() {
+        let r = sa_2x4b().per_mac() / sa_baseline().per_mac();
+        assert!(r > 0.45 && r < 0.70, "2x4b SA ratio {r} out of band");
+        let rtc = tc_2x4b().per_mac() / tc_baseline().per_mac();
+        assert!(rtc > 0.45 && rtc < 0.70, "2x4b TC ratio {rtc} out of band");
+    }
+
+    #[test]
+    fn ordering_matches_paper() {
+        // more placement options -> more shifter area (paper §5.2)
+        assert!(ratio("2opt_r") < ratio("3opt_r"));
+        assert!(ratio("3opt_r") < ratio("5opt_r"));
+        // narrower data bits shrink the PE despite more options
+        assert!(ratio("7opt_r") < ratio("6opt_r"));
+        assert!(ratio("6opt_r") < ratio("5opt_r"));
+        // dropping vSPARQ saves the muxes + metadata
+        assert!(ratio("5opt_r_novs") < ratio("5opt_r"));
+        assert!(ratio("3opt_r_novs") < ratio("3opt_r"));
+        // every SPARQ variant sits between the two anchors
+        let anchor = sa_2x4b().per_mac() / sa_baseline().per_mac();
+        for n in ["2opt_r", "3opt_r", "5opt_r", "6opt_r", "7opt_r"] {
+            assert!(ratio(n) > anchor, "{n} below static anchor");
+            assert!(ratio(n) < 1.0, "{n} above 8b-8b baseline");
+        }
+    }
+
+    #[test]
+    fn trim_unit_small_and_ordered() {
+        let t5 = trim_unit_relative_to_tc(SparqConfig::named("5opt_r").unwrap());
+        let t3 = trim_unit_relative_to_tc(SparqConfig::named("3opt_r").unwrap());
+        let t2 = trim_unit_relative_to_tc(SparqConfig::named("2opt_r").unwrap());
+        // paper: 17% / 12% / 9%
+        assert!(t2 < t3 && t3 < t5, "{t2} {t3} {t5}");
+        assert!(t5 < 0.30, "trim unit should stay a small fraction: {t5}");
+    }
+
+    #[test]
+    fn rows_complete() {
+        let rows = table5_rows();
+        assert_eq!(rows.len(), 9);
+        assert_eq!(rows[0].1, 1.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Hardware models (paper §4 and §5.2) — DESIGN.md S7–S11.
+//!
+//! * [`pe`]          — the SPARQ processing element of Fig. 2: a dual
+//!   n-bit x 8-bit multiplier with dynamic shift-left units, plus the
+//!   trim-and-round front end that decodes an activation pair into PE
+//!   control signals. Bit-exact against [`crate::quant`].
+//! * [`systolic`]    — output-stationary systolic array (Fig. 3) at
+//!   cycle granularity, built from [`pe::SparqPe`]s.
+//! * [`tensor_core`] — the Tensor-Core dot-product unit (Fig. 4).
+//! * [`stc`]         — Sparse Tensor Core (Fig. 5): 2:4 weight
+//!   compression, coordinate mux-select, then vSPARQ on the survivors.
+//! * [`area`]        — first-order gate-area model regenerating the
+//!   relative-area comparison of Table 5.
+
+pub mod area;
+pub mod pe;
+pub mod stc;
+pub mod systolic;
+pub mod tensor_core;
+
+pub use pe::{PairCase, PeControl, SparqPe, TrimUnit};

@@ -1,0 +1,299 @@
+//! The SPARQ processing element (paper Fig. 2) and its trim-and-round
+//! front end.
+//!
+//! The PE datapath computes eq. (4):
+//!
+//! ```text
+//!   2^opt1 * x_in1(4b) * w_in1(8b)  +  2^opt2 * x_in2(4b) * w_in2(8b)
+//! ```
+//!
+//! with weight multiplexers that let both products share one weight.
+//! Three operating cases per activation pair (eq. 2):
+//!
+//! * partner zero  — the non-zero activation spans both multipliers via
+//!   the 8b-8b = 2x4b-8b identity (eq. 3): hi window bits at shift s+n,
+//!   lo bits at shift s, both against the same weight (`MuxCtrl` set);
+//! * both non-zero — each activation independently bSPARQ-trimmed to n
+//!   bits with its own shift (ShiftCtrl) and its own weight;
+//! * both zero     — the PE idles (contributes 0).
+//!
+//! The trim unit here is the "performed at a significantly lower
+//! processing rate" block of §5: it turns raw 8-bit pairs into
+//! [`PeControl`] words. Its decisions are exactly
+//! [`crate::quant::vsparq::trim_pair`], which the tests assert.
+
+use crate::quant::bsparq::{shift_for, trim_window};
+use crate::quant::config::{Mode, SparqConfig};
+
+/// Which eq.-2 case a pair decoded into (used by the statistics and the
+/// cycle models).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PairCase {
+    BothZero,
+    /// One zero: the other activation keeps its full 2n-bit budget.
+    ZeroSkip,
+    /// Both non-zero: both bSPARQ-trimmed to n bits.
+    DualTrim,
+}
+
+/// Control word for one PE cycle — what the trim unit sends downstream
+/// (data bits + ShiftCtrl + MuxCtrl metadata, §5.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PeControl {
+    /// n-bit window payloads (already rounded), values < 2^n.
+    pub x1: u8,
+    pub x2: u8,
+    /// Dynamic shift amounts (ShiftCtrl).
+    pub sh1: u8,
+    pub sh2: u8,
+    /// MuxCtrl: route w0 / w1 to the two multipliers.
+    /// false = (w0, w1) independent products; true = both take the same
+    /// weight selected by `shared_w1` (the eq.-3 split).
+    pub shared: bool,
+    pub shared_w1: bool,
+    pub case: PairCase,
+}
+
+/// The trim-and-round front end for a fixed configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct TrimUnit {
+    pub cfg: SparqConfig,
+}
+
+impl TrimUnit {
+    pub fn new(cfg: SparqConfig) -> Self {
+        assert!(
+            cfg.mode != Mode::Uniform,
+            "uniform baseline has no SPARQ PE decode"
+        );
+        Self { cfg }
+    }
+
+    /// Decode an activation pair into PE control signals.
+    pub fn decode(&self, x0: u8, x1: u8) -> PeControl {
+        let n = self.cfg.n_bits;
+        debug_assert!(n < 8, "8-bit config needs no trim unit");
+        if self.cfg.vsparq && x0 == 0 && x1 == 0 {
+            return PeControl {
+                x1: 0,
+                x2: 0,
+                sh1: 0,
+                sh2: 0,
+                shared: false,
+                shared_w1: false,
+                case: PairCase::BothZero,
+            };
+        }
+        if self.cfg.vsparq && (x0 == 0 || x1 == 0) {
+            // eq. 3 split: the surviving value, trimmed to a 2n-bit
+            // window, spans both multipliers (hi half | lo half).
+            let v = if x0 == 0 { x1 } else { x0 };
+            let wide = (2 * n).min(8);
+            let y = trim_window(v, wide, Mode::Full, self.cfg.round);
+            let s = shift_for(v, wide, Mode::Full);
+            let payload = y >> s; // < 2^(2n)
+            let lo_mask = (1u16 << n) - 1;
+            return PeControl {
+                x1: (u16::from(payload) >> n) as u8,
+                x2: (u16::from(payload) & lo_mask) as u8,
+                sh1: s + n,
+                sh2: s,
+                shared: true,
+                shared_w1: x0 == 0,
+                case: PairCase::ZeroSkip,
+            };
+        }
+        // both non-zero (or -vS): independent bSPARQ windows
+        let y0 = trim_window(x0, n, self.cfg.mode, self.cfg.round);
+        let y1 = trim_window(x1, n, self.cfg.mode, self.cfg.round);
+        let s0 = shift_for(x0, n, self.cfg.mode);
+        let s1 = shift_for(x1, n, self.cfg.mode);
+        PeControl {
+            x1: y0 >> s0,
+            x2: y1 >> s1,
+            sh1: s0,
+            sh2: s1,
+            shared: false,
+            shared_w1: false,
+            case: PairCase::DualTrim,
+        }
+    }
+}
+
+/// Cumulative PE statistics (drive the §5 sparsity discussion and F2).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeStats {
+    pub cycles: u64,
+    pub both_zero: u64,
+    pub zero_skip: u64,
+    pub dual_trim: u64,
+    pub macs: u64,
+}
+
+/// The Fig. 2 processing element: dual multiplier + shifters + 3-input
+/// adder + psum register.
+#[derive(Clone, Debug)]
+pub struct SparqPe {
+    trim: TrimUnit,
+    psum: i32,
+    pub stats: PeStats,
+}
+
+impl SparqPe {
+    pub fn new(cfg: SparqConfig) -> Self {
+        Self { trim: TrimUnit::new(cfg), psum: 0, stats: PeStats::default() }
+    }
+
+    pub fn reset(&mut self) {
+        self.psum = 0;
+    }
+
+    pub fn psum(&self) -> i32 {
+        self.psum
+    }
+
+    /// One cycle: consume an activation pair and its two weights.
+    pub fn cycle(&mut self, x0: u8, x1: u8, w0: i8, w1: i8) {
+        let ctl = self.trim.decode(x0, x1);
+        let (w_a, w_b) = if ctl.shared {
+            let w = if ctl.shared_w1 { w1 } else { w0 };
+            (w, w)
+        } else {
+            (w0, w1)
+        };
+        // the two 4b-8b products, dynamically shifted (eq. 4)
+        let p1 = (i32::from(ctl.x1) * i32::from(w_a)) << ctl.sh1;
+        let p2 = (i32::from(ctl.x2) * i32::from(w_b)) << ctl.sh2;
+        self.psum += p1 + p2;
+        self.stats.cycles += 1;
+        self.stats.macs += 2;
+        match ctl.case {
+            PairCase::BothZero => self.stats.both_zero += 1,
+            PairCase::ZeroSkip => self.stats.zero_skip += 1,
+            PairCase::DualTrim => self.stats.dual_trim += 1,
+        }
+    }
+
+    /// Run a whole dot product through the PE (zero-padding odd tails).
+    pub fn dot(&mut self, acts: &[u8], weights: &[i8]) -> i32 {
+        assert_eq!(acts.len(), weights.len());
+        self.reset();
+        let mut i = 0;
+        while i + 1 < acts.len() {
+            self.cycle(acts[i], acts[i + 1], weights[i], weights[i + 1]);
+            i += 2;
+        }
+        if i < acts.len() {
+            self.cycle(acts[i], 0, weights[i], 0);
+        }
+        self.psum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vsparq::{sparq_dot, trim_pair};
+
+    fn all_cfgs() -> Vec<SparqConfig> {
+        ["5opt", "5opt_r", "3opt", "3opt_r", "2opt", "2opt_r", "6opt_r", "7opt_r"]
+            .iter()
+            .map(|n| SparqConfig::named(n).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn decode_matches_trim_pair_reconstruction() {
+        // reconstructing (x << sh) from the control word must equal the
+        // quant-library trim for every pair and config
+        for cfg in all_cfgs() {
+            let tu = TrimUnit::new(cfg);
+            for x0 in 0..=255u8 {
+                for x1 in [0u8, 1, 16, 27, 128, 255] {
+                    let ctl = tu.decode(x0, x1);
+                    let (e0, e1) = trim_pair(x0, x1, cfg);
+                    let (r0, r1) = match ctl.case {
+                        PairCase::BothZero => (0u32, 0u32),
+                        PairCase::ZeroSkip => {
+                            let v = (u32::from(ctl.x1) << ctl.sh1)
+                                + (u32::from(ctl.x2) << ctl.sh2);
+                            if ctl.shared_w1 {
+                                (0, v)
+                            } else {
+                                (v, 0)
+                            }
+                        }
+                        PairCase::DualTrim => (
+                            u32::from(ctl.x1) << ctl.sh1,
+                            u32::from(ctl.x2) << ctl.sh2,
+                        ),
+                    };
+                    assert_eq!(
+                        (r0, r1),
+                        (u32::from(e0), u32::from(e1)),
+                        "cfg={cfg} x0={x0} x1={x1} ctl={ctl:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn payloads_fit_n_bits() {
+        for cfg in all_cfgs() {
+            let tu = TrimUnit::new(cfg);
+            for x0 in 0..=255u8 {
+                for x1 in [0u8, 3, 200] {
+                    let ctl = tu.decode(x0, x1);
+                    assert!(u16::from(ctl.x1) < (1 << cfg.n_bits), "{cfg} {x0} {x1}");
+                    assert!(u16::from(ctl.x2) < (1 << cfg.n_bits), "{cfg} {x0} {x1}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pe_dot_equals_quant_library() {
+        let acts: Vec<u8> = (0..512)
+            .map(|i| if i % 3 == 0 { 0 } else { ((i * 73) % 256) as u8 })
+            .collect();
+        let weights: Vec<i8> = (0..512).map(|i| (((i * 57) % 255) as i32 - 127) as i8).collect();
+        for cfg in all_cfgs() {
+            let mut pe = SparqPe::new(cfg);
+            assert_eq!(
+                pe.dot(&acts, &weights),
+                sparq_dot(&acts, &weights, cfg),
+                "cfg={cfg}"
+            );
+        }
+    }
+
+    #[test]
+    fn pe_odd_length_dot() {
+        let cfg = SparqConfig::named("5opt_r").unwrap();
+        let acts = [200u8, 13, 255];
+        let w = [3i8, -7, 11];
+        let mut pe = SparqPe::new(cfg);
+        assert_eq!(pe.dot(&acts, &w), sparq_dot(&acts, &w, cfg));
+    }
+
+    #[test]
+    fn stats_count_cases() {
+        let cfg = SparqConfig::named("5opt").unwrap();
+        let mut pe = SparqPe::new(cfg);
+        pe.dot(&[0, 0, 0, 9, 9, 9], &[1, 1, 1, 1, 1, 1]);
+        assert_eq!(pe.stats.both_zero, 1);
+        assert_eq!(pe.stats.zero_skip, 1);
+        assert_eq!(pe.stats.dual_trim, 1);
+        assert_eq!(pe.stats.cycles, 3);
+    }
+
+    #[test]
+    fn novs_never_zero_skips() {
+        let cfg = SparqConfig::named("5opt_r_novs").unwrap();
+        let mut pe = SparqPe::new(cfg);
+        pe.dot(&[0, 9, 9, 0], &[1, 1, 1, 1]);
+        assert_eq!(pe.stats.zero_skip, 0);
+        assert_eq!(pe.stats.dual_trim, 2);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tensor-Core dot-product unit (paper Fig. 4, after Raihan et al.).
+//!
+//! A conventional TC DP unit multiplies four activation/weight pairs per
+//! cycle and reduces them in an adder tree together with a carried
+//! partial sum. The SPARQ variant replaces each multiplier with the
+//! Fig. 2 dual 4b-8b unit and doubles the weight bandwidth, so one DP
+//! unit consumes four activation *pairs* (eight reduction lanes) per
+//! cycle.
+
+use crate::quant::SparqConfig;
+
+use super::pe::SparqPe;
+
+/// Lanes (activation/weight pairs) per conventional TC DP unit.
+pub const TC_LANES: usize = 4;
+
+/// One SPARQ tensor-core DP unit.
+#[derive(Clone, Debug)]
+pub struct SparqDpUnit {
+    pes: Vec<SparqPe>,
+    pub cfg: SparqConfig,
+}
+
+/// Cycle/case statistics for a DP-unit run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DpStats {
+    pub cycles: u64,
+    pub zero_skip: u64,
+    pub dual_trim: u64,
+    pub both_zero: u64,
+}
+
+impl SparqDpUnit {
+    pub fn new(cfg: SparqConfig) -> Self {
+        Self { pes: (0..TC_LANES).map(|_| SparqPe::new(cfg)).collect(), cfg }
+    }
+
+    /// Full dot product of length K: each cycle feeds 4 pairs (8 lanes).
+    /// Returns (result, stats). Bit-exact SPARQ semantics.
+    pub fn dot(&mut self, acts: &[u8], weights: &[i8]) -> (i32, DpStats) {
+        assert_eq!(acts.len(), weights.len());
+        for pe in &mut self.pes {
+            pe.reset();
+            pe.stats = Default::default();
+        }
+        let mut stats = DpStats::default();
+        let step = 2 * TC_LANES;
+        let mut base = 0;
+        while base < acts.len() {
+            for (lane, pe) in self.pes.iter_mut().enumerate() {
+                let i = base + 2 * lane;
+                if i >= acts.len() {
+                    break;
+                }
+                let x0 = acts[i];
+                let (x1, w1) = if i + 1 < acts.len() {
+                    (acts[i + 1], weights[i + 1])
+                } else {
+                    (0, 0)
+                };
+                pe.cycle(x0, x1, weights[i], w1);
+            }
+            stats.cycles += 1;
+            base += step;
+        }
+        // adder tree: reduce the four lane psums (associativity of i32
+        // wrapping addition makes the tree order irrelevant)
+        let result = self.pes.iter().map(SparqPe::psum).sum();
+        for pe in &self.pes {
+            stats.zero_skip += pe.stats.zero_skip;
+            stats.dual_trim += pe.stats.dual_trim;
+            stats.both_zero += pe.stats.both_zero;
+        }
+        (result, stats)
+    }
+
+    /// Cycles for a conventional 8b-8b TC DP unit on the same reduction.
+    pub fn baseline_cycles(k: usize) -> u64 {
+        k.div_ceil(TC_LANES) as u64
+    }
+
+    /// Fraction of pairs that kept full precision via zero-skip.
+    pub fn zero_skip_rate(stats: &DpStats) -> f64 {
+        let pairs = stats.zero_skip + stats.dual_trim + stats.both_zero;
+        if pairs == 0 {
+            return 0.0;
+        }
+        (stats.zero_skip + stats.both_zero) as f64 / pairs as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vsparq::sparq_dot;
+
+    #[test]
+    fn dp_matches_quant_library() {
+        for name in ["5opt_r", "3opt", "2opt_r", "6opt_r", "7opt_r"] {
+            let cfg = SparqConfig::named(name).unwrap();
+            let mut dp = SparqDpUnit::new(cfg);
+            for k in [1usize, 7, 8, 9, 64, 130] {
+                let acts: Vec<u8> = (0..k)
+                    .map(|i| if i % 5 == 0 { 0 } else { ((i * 83 + 7) % 256) as u8 })
+                    .collect();
+                let w: Vec<i8> = (0..k).map(|i| (((i * 29) % 255) as i32 - 127) as i8).collect();
+                let (y, _) = dp.dot(&acts, &w);
+                assert_eq!(y, sparq_dot(&acts, &w, cfg), "{name} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn halves_cycles_vs_baseline() {
+        let cfg = SparqConfig::named("5opt").unwrap();
+        let mut dp = SparqDpUnit::new(cfg);
+        let k = 256;
+        let (_, stats) = dp.dot(&vec![9u8; k], &vec![1i8; k]);
+        assert_eq!(stats.cycles, (k / 8) as u64);
+        assert_eq!(SparqDpUnit::baseline_cycles(k), (k / 4) as u64);
+    }
+
+    #[test]
+    fn zero_skip_rate_counts() {
+        let cfg = SparqConfig::named("5opt").unwrap();
+        let mut dp = SparqDpUnit::new(cfg);
+        // alternate zero/non-zero: every pair zero-skips
+        let acts: Vec<u8> = (0..64).map(|i| if i % 2 == 0 { 0 } else { 200 }).collect();
+        let (_, stats) = dp.dot(&acts, &vec![1i8; 64]);
+        assert!((SparqDpUnit::zero_skip_rate(&stats) - 1.0).abs() < 1e-9);
+        assert_eq!(stats.dual_trim, 0);
+    }
+}

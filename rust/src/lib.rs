@@ -1,0 +1,28 @@
+//! # sparq — Post-Training Sparsity-Aware Quantization
+//!
+//! A three-layer reproduction of Shomron et al., *Post-Training
+//! Sparsity-Aware Quantization* (NeurIPS 2021):
+//!
+//! * **L1** — a Pallas kernel fusing the SPARQ trim with the int GEMM
+//!   (`python/compile/kernels/`), lowered at build time,
+//! * **L2** — the quantized mini-CNN-zoo forward graphs in JAX
+//!   (`python/compile/`), exported as HLO text,
+//! * **L3** — this crate: bit-exact SPARQ numerics ([`quant`]), cycle- and
+//!   area-level hardware models ([`hw`]), a PJRT runtime ([`runtime`]),
+//!   the calibration/eval/serving coordinator ([`coordinator`]), a native
+//!   integer inference engine ([`model`]) and the paper's experiment
+//!   reproductions ([`experiments`]).
+//!
+//! See DESIGN.md for the system inventory and the per-table experiment
+//! index, and EXPERIMENTS.md for measured results.
+
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod hw;
+pub mod json;
+pub mod model;
+pub mod npz;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;

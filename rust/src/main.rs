@@ -1,0 +1,277 @@
+//! sparq-cli — the L3 coordinator entry point.
+//!
+//! Subcommands (arg parsing is hand-rolled; clap is not in the image's
+//! offline crate set):
+//!
+//! ```text
+//! sparq-cli table1|table2|table3|table4|table5|table6   one paper table
+//! sparq-cli all                                         every table + stats
+//! sparq-cli stats  [--model TAG]                        toggle statistics (F2)
+//! sparq-cli eval   --model TAG [--config NAME]          one accuracy eval
+//! sparq-cli calibrate --model TAG                       print scales
+//! sparq-cli sim    [--m M --k K --n N --config NAME]    SA/TC cycle sim
+//! sparq-cli trim   VALUE...                             Figure 1 walkthrough
+//!
+//! common flags: --artifacts DIR (default ./artifacts)
+//!               --eval-limit N (default 2000) --calib-images N (default 2048)
+//! ```
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use sparq::coordinator::scales_for_policy;
+use sparq::experiments::{self, ExperimentCtx};
+use sparq::hw::area;
+use sparq::hw::systolic::SystolicArray;
+use sparq::model::{Graph, Weights};
+use sparq::quant::baselines::ScalePolicy;
+use sparq::quant::bsparq::{shift_for, trim_window};
+use sparq::quant::{Mode, SparqConfig};
+
+const USAGE: &str = "sparq-cli <subcommand> [flags]
+
+subcommands:
+  table1..table6    regenerate one paper table
+  all               every table + toggle stats
+  stats             activation bit statistics (exp. F2)
+  eval              --model TAG [--config NAME]
+  calibrate         --model TAG
+  sim               [--m M --k K --n N --config NAME --sparsity-pct P]
+  trim              [VALUE...]   Figure 1 walkthrough
+
+common flags:
+  --artifacts DIR     (default ./artifacts)
+  --eval-limit N      (default 2000)
+  --calib-images N    (default 2048)";
+
+/// Minimal `--key value` / positional argument splitter.
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv.get(i + 1).with_context(|| format!("--{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Ok(Self { flags, positional })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+}
+
+fn ctx_from(args: &Args) -> Result<ExperimentCtx> {
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    ExperimentCtx::new(
+        &artifacts,
+        args.usize_or("eval-limit", 2000)?,
+        args.usize_or("calib-images", 2048)?,
+    )
+}
+
+fn config_arg(args: &Args) -> Result<SparqConfig> {
+    let name = args.get("config").unwrap_or("5opt_r");
+    SparqConfig::named(name)
+        .with_context(|| format!("unknown config `{name}` (see quant::config for names)"))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "table1" => print_table(&experiments::table1(&mut ctx_from(&args)?)?),
+        "table2" => print_table(&experiments::table2(&mut ctx_from(&args)?)?),
+        "table3" => print_table(&experiments::table3(&mut ctx_from(&args)?)?),
+        "table4" => print_table(&experiments::table4(&mut ctx_from(&args)?)?),
+        "table5" => print_table(&experiments::table5()),
+        "table6" => print_table(&experiments::table6(&mut ctx_from(&args)?)?),
+        "all" => {
+            let mut ctx = ctx_from(&args)?;
+            print_table(&experiments::table1(&mut ctx)?);
+            print_table(&experiments::table2(&mut ctx)?);
+            print_table(&experiments::table3(&mut ctx)?);
+            print_table(&experiments::table4(&mut ctx)?);
+            print_table(&experiments::table5());
+            print_table(&experiments::table6(&mut ctx)?);
+            cmd_stats(&args)?;
+        }
+        "stats" => cmd_stats(&args)?,
+        "eval" => cmd_eval(&args)?,
+        "calibrate" => cmd_calibrate(&args)?,
+        "sim" => cmd_sim(&args)?,
+        "trim" => cmd_trim(&args)?,
+        "help" | "--help" | "-h" => println!("{USAGE}"),
+        other => bail!("unknown subcommand `{other}` (try `sparq-cli help`)"),
+    }
+    Ok(())
+}
+
+fn print_table(t: &experiments::Table) {
+    println!("{}", t.render());
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let mut ctx = ctx_from(args)?;
+    let tags: Vec<String> = match args.get("model") {
+        Some(t) => vec![t.to_string()],
+        None => ctx.manifest.dense_tags().iter().map(|s| s.to_string()).collect(),
+    };
+    let mut t = experiments::Table::new(
+        "F2 — activation bit statistics (non-zero activations, A8W8 grid)",
+        &["model", "zero-frac", "b7", "b6", "b5", "b4", "any-MSB", "top2-quiet", "pair-zero"],
+    );
+    for tag in tags {
+        let stats = ctx.calib(&tag)?;
+        let scales = scales_for_policy(&stats, ScalePolicy::MinMax, 8);
+        let model = ctx.manifest.get(&tag)?.clone();
+        let graph = Graph::load(&model.meta_path())?;
+        let weights = Weights::load(&model.weights_path())?;
+        let ts = experiments::toggle_stats(&graph, &weights, &ctx.eval, &scales, 256, 32)?;
+        t.row(vec![
+            tag.clone(),
+            format!("{:.3}", ts.zero_fraction()),
+            format!("{:.3}", ts.bit_prob(7)),
+            format!("{:.3}", ts.bit_prob(6)),
+            format!("{:.3}", ts.bit_prob(5)),
+            format!("{:.3}", ts.bit_prob(4)),
+            format!("{:.3}", ts.any_msb_prob()),
+            format!("{:.3}", ts.top2_quiet_prob()),
+            format!("{:.3}", ts.pair_zero_prob()),
+        ]);
+    }
+    t.row(vec![
+        "paper:ResNet-18".into(),
+        "-".into(),
+        "0.005".into(),
+        "0.092".into(),
+        "0.338".into(),
+        "0.448".into(),
+        "0.670".into(),
+        "0.900".into(),
+        "-".into(),
+    ]);
+    print_table(&t);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let mut ctx = ctx_from(args)?;
+    let tag = args.get("model").context("--model TAG required")?.to_string();
+    let fp32 = ctx.fp32_acc(&tag)?;
+    println!("{tag}: FP32 top-1 = {fp32:.4}");
+    if args.get("config").is_some() {
+        let cfg = config_arg(args)?;
+        let acc = ctx.quant_acc(&tag, cfg, ScalePolicy::MinMax)?;
+        println!("{tag}: {cfg} top-1 = {:.4} (delta {:+.4})", acc, acc - fp32);
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let mut ctx = ctx_from(args)?;
+    let tag = args.get("model").context("--model TAG required")?.to_string();
+    let stats = ctx.calib(&tag)?;
+    println!("layer maxes:  {:?}", stats.maxes);
+    println!("layer means:  {:?}", stats.layer_means());
+    println!("act scales:   {:?}", stats.scales());
+    Ok(())
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let m = args.usize_or("m", 64)?;
+    let k = args.usize_or("k", 576)?;
+    let n = args.usize_or("n", 64)?;
+    let cfg = config_arg(args)?;
+    let sparsity = args.usize_or("sparsity-pct", 40)? as f64 / 100.0;
+    // deterministic synthetic operands
+    let a: Vec<u8> = (0..m * k)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15) >> 33;
+            if (h % 1000) as f64 / 1000.0 < sparsity {
+                0
+            } else {
+                (h % 256) as u8
+            }
+        })
+        .collect();
+    let w: Vec<i8> = (0..k * n)
+        .map(|i| ((((i as u64).wrapping_mul(0xbf58_476d_1ce4_e5b9) >> 33) % 255) as i32 - 127) as i8)
+        .collect();
+    let sa = SystolicArray::new(16, 16, cfg);
+    let run = sa.gemm(&a, &w, m, k, n);
+    println!("systolic 16x16, GEMM {m}x{k}x{n}, config {cfg}:");
+    println!("  cycles             {}", run.cycles);
+    println!("  8b-8b baseline     {}", sa.baseline_cycles(m, k, n));
+    println!(
+        "  speedup            {:.2}x",
+        sa.baseline_cycles(m, k, n) as f64 / run.cycles as f64
+    );
+    println!("  utilization        {:.3}", run.utilization);
+    let pairs = run.both_zero + run.zero_skip + run.dual_trim;
+    println!(
+        "  pair cases         zero-skip {:.1}%  dual-trim {:.1}%  both-zero {:.1}%",
+        100.0 * run.zero_skip as f64 / pairs as f64,
+        100.0 * run.dual_trim as f64 / pairs as f64,
+        100.0 * run.both_zero as f64 / pairs as f64,
+    );
+    let pe = area::sa_sparq(cfg);
+    println!(
+        "  PE area/MAC        {:.2} (8b-8b = 1.00)",
+        pe.per_mac() / area::sa_baseline().per_mac()
+    );
+    Ok(())
+}
+
+/// Figure 1 walkthrough: show the chosen window per placement mode.
+fn cmd_trim(args: &Args) -> Result<()> {
+    let values: Vec<u8> = if args.positional.is_empty() {
+        vec![27, 44, 96, 213]
+    } else {
+        args.positional
+            .iter()
+            .map(|s| s.parse::<u8>().context("trim values must be 0..=255"))
+            .collect::<Result<_>>()?
+    };
+    println!("Figure 1 — 8b->4b window placement (window shown in brackets)\n");
+    for v in values {
+        println!("value {v:3} = {v:08b}");
+        for (label, mode) in [("5opt", Mode::Full), ("3opt", Mode::Opt3), ("2opt", Mode::Opt2)] {
+            let s = shift_for(v, 4, mode) as usize;
+            let trimmed = trim_window(v, 4, mode, false);
+            let rounded = trim_window(v, 4, mode, true);
+            let bits = format!("{v:08b}");
+            let hi = 8 - s - 4;
+            let marked = format!("{}[{}]{}", &bits[..hi], &bits[hi..hi + 4], &bits[hi + 4..]);
+            println!("  {label}: {marked}  trim -> {trimmed:3}  +R -> {rounded:3}");
+        }
+        println!();
+    }
+    Ok(())
+}

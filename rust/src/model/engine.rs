@@ -1,0 +1,300 @@
+//! Graph executor — float ops + SPARQ integer convs (DESIGN.md S15).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::hw::stc::{stc_gemm, CompressedWeights};
+use crate::quant::minmax::ActScale;
+use crate::quant::SparqConfig;
+use crate::tensor::{im2col_u8, out_dim, same_padding, TensorF32};
+
+use super::gemm::QuantGemm;
+use super::graph::{Graph, Node, Op};
+use super::weights::Weights;
+
+/// How quantized convs execute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Dense SPARQ GEMM (the Table 1–4 path; bit-exact vs the HLO).
+    Dense,
+    /// 2:4 Sparse-Tensor-Core datapath (the Table 6 path). Requires the
+    /// model's quantized weights to be 2:4 structured.
+    Stc,
+}
+
+/// Observer for quantized activations (drives the toggle statistics).
+pub trait TraceSink {
+    /// Called once per quantized conv per forward with the uniform-
+    /// quantized (untrimmed) im2col activations.
+    fn record(&mut self, layer: &str, acts_q: &[u8]);
+}
+
+/// No-op sink.
+pub struct NoTrace;
+
+impl TraceSink for NoTrace {
+    fn record(&mut self, _layer: &str, _acts_q: &[u8]) {}
+}
+
+/// A ready-to-run model: graph + weights + config + scales.
+pub struct Engine<'a> {
+    pub graph: &'a Graph,
+    weights: &'a Weights,
+    pub cfg: SparqConfig,
+    mode: EngineMode,
+    scales: HashMap<String, ActScale>,
+    gemm: QuantGemm,
+    /// Per-layer prepared (requantized + transposed) weights.
+    prepared: HashMap<String, Vec<i16>>,
+    /// Per-layer 2:4 compressed weights (STC mode).
+    compressed: HashMap<String, CompressedWeights>,
+}
+
+impl<'a> Engine<'a> {
+    /// `act_scales` ordered by `graph.quant_convs` (from calibration).
+    pub fn new(
+        graph: &'a Graph,
+        weights: &'a Weights,
+        cfg: SparqConfig,
+        act_scales: &[f32],
+        mode: EngineMode,
+    ) -> Result<Self> {
+        if act_scales.len() != graph.quant_convs.len() {
+            bail!(
+                "need {} activation scales, got {}",
+                graph.quant_convs.len(),
+                act_scales.len()
+            );
+        }
+        let gemm = QuantGemm::new(cfg);
+        let mut scales = HashMap::new();
+        let mut prepared = HashMap::new();
+        let mut compressed = HashMap::new();
+        for (name, &s) in graph.quant_convs.iter().zip(act_scales) {
+            scales.insert(name.clone(), ActScale(s));
+            let qc = weights.quant_conv(name)?;
+            match mode {
+                EngineMode::Dense => {
+                    prepared.insert(name.clone(), gemm.prepare_weights(&qc.wq, qc.k, qc.o));
+                }
+                EngineMode::Stc => {
+                    // STC stores pre-requantized weights? No: requantize
+                    // survivors at execute time (stc_gemm handles w_bits).
+                    let padded;
+                    let (wq, k) = if qc.k % 4 == 0 {
+                        (&qc.wq, qc.k)
+                    } else {
+                        // pad K to a multiple of 4 with zero rows (the
+                        // trailing partial group the pruner left dense
+                        // cannot arise for our zoo; guard anyway)
+                        let k4 = qc.k.div_ceil(4) * 4;
+                        let mut w = vec![0i8; k4 * qc.o];
+                        w[..qc.k * qc.o].copy_from_slice(&qc.wq);
+                        padded = w;
+                        (&padded, k4)
+                    };
+                    let c = CompressedWeights::compress(wq, k, qc.o).map_err(|e| {
+                        anyhow::anyhow!("{name}: weights not 2:4 structured ({e})")
+                    })?;
+                    compressed.insert(name.clone(), c);
+                }
+            }
+        }
+        Ok(Self { graph, weights, cfg, mode, scales, gemm, prepared, compressed })
+    }
+
+    /// Forward a normalized image batch `[batch, H, W, C]` -> logits
+    /// `[batch, classes]` row-major.
+    pub fn forward(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
+        self.forward_traced(images, batch, &mut NoTrace)
+    }
+
+    pub fn forward_traced(
+        &self,
+        images: &[f32],
+        batch: usize,
+        sink: &mut dyn TraceSink,
+    ) -> Result<Vec<f32>> {
+        let [h, w, c] = self.graph.input_hwc;
+        if images.len() != batch * h * w * c {
+            bail!("input length {} != {}", images.len(), batch * h * w * c);
+        }
+        let mut vals: HashMap<&str, TensorF32> = HashMap::new();
+        vals.insert("img", TensorF32::from_vec(batch, h, w, c, images.to_vec()));
+        let mut logits = Vec::new();
+        for node in &self.graph.nodes {
+            let get = |name: &String| -> Result<&TensorF32> {
+                vals.get(name.as_str()).with_context(|| format!("missing value {name}"))
+            };
+            let out = match &node.op {
+                Op::Input => continue,
+                Op::Conv { quant: false, k, stride, relu, .. } => {
+                    let x = get(&node.inputs[0])?;
+                    let mut y = self.float_conv(node, x, *k, *stride)?;
+                    if *relu {
+                        y.relu_inplace();
+                    }
+                    y
+                }
+                Op::Conv { quant: true, k, stride, relu, .. } => {
+                    let x = get(&node.inputs[0])?;
+                    let mut y = self.quant_conv(node, x, *k, *stride, sink)?;
+                    if *relu {
+                        y.relu_inplace();
+                    }
+                    y
+                }
+                Op::Pool { avg } => {
+                    let x = get(&node.inputs[0])?;
+                    if *avg {
+                        x.avgpool2()
+                    } else {
+                        x.maxpool2()
+                    }
+                }
+                Op::Gap => {
+                    let x = get(&node.inputs[0])?;
+                    let g = x.gap();
+                    TensorF32::from_vec(x.n, 1, 1, x.c, g)
+                }
+                Op::Add => get(&node.inputs[0])?.add(get(&node.inputs[1])?),
+                Op::Relu => {
+                    let mut y = get(&node.inputs[0])?.clone();
+                    y.relu_inplace();
+                    y
+                }
+                Op::Concat => {
+                    let parts: Vec<&TensorF32> =
+                        node.inputs.iter().map(|i| get(i)).collect::<Result<_>>()?;
+                    TensorF32::concat_channels(&parts)
+                }
+                Op::Fc { out } => {
+                    let x = get(&node.inputs[0])?;
+                    assert_eq!(x.c, self.weights.fc_in, "fc input width");
+                    logits = vec![0f32; x.n * out];
+                    for n in 0..x.n {
+                        for oi in 0..*out {
+                            let mut acc = self.weights.fc_b[oi];
+                            for ci in 0..x.c {
+                                acc += x.data[n * x.c + ci] * self.weights.fc_w[ci * out + oi];
+                            }
+                            logits[n * out + oi] = acc;
+                        }
+                    }
+                    continue;
+                }
+            };
+            vals.insert(node.name.as_str(), out);
+        }
+        if logits.is_empty() {
+            bail!("graph produced no logits");
+        }
+        Ok(logits)
+    }
+
+    /// Direct float convolution (unquantized first layer), SAME padding.
+    fn float_conv(&self, node: &Node, x: &TensorF32, k: usize, stride: usize) -> Result<TensorF32> {
+        let fw = self.weights.float_conv(&node.name)?;
+        assert_eq!((fw.kh, fw.kw, fw.c_in), (k, k, x.c), "conv {} shape", node.name);
+        let (oh, ow) = (out_dim(x.h, stride), out_dim(x.w, stride));
+        let (pad_t, _) = same_padding(x.h, k, stride);
+        let (pad_l, _) = same_padding(x.w, k, stride);
+        let mut y = TensorF32::zeros(x.n, oh, ow, fw.c_out);
+        for n in 0..x.n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for co in 0..fw.c_out {
+                        let mut acc = fw.bias[co];
+                        for ky in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad_t as isize;
+                            if iy < 0 || iy >= x.h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = (ox * stride + kx) as isize - pad_l as isize;
+                                if ix < 0 || ix >= x.w as isize {
+                                    continue;
+                                }
+                                for ci in 0..x.c {
+                                    acc += x.at(n, iy as usize, ix as usize, ci)
+                                        * fw.w[((ky * k + kx) * fw.c_in + ci) * fw.c_out + co];
+                                }
+                            }
+                        }
+                        *y.at_mut(n, oy, ox, co) = acc;
+                    }
+                }
+            }
+        }
+        Ok(y)
+    }
+
+    /// SPARQ quantized conv: quantize input, im2col, trim+GEMM, dequant.
+    fn quant_conv(
+        &self,
+        node: &Node,
+        x: &TensorF32,
+        k: usize,
+        stride: usize,
+        sink: &mut dyn TraceSink,
+    ) -> Result<TensorF32> {
+        let qc = self.weights.quant_conv(&node.name)?;
+        let scale = self.scales[&node.name];
+        // quantize the (non-negative) float input to u8
+        let mut xq = vec![0u8; x.data.len()];
+        scale.quantize_slice_into(&x.data, &mut xq);
+        // im2col in the shared (C, kh, kw) feature order
+        let (mut patches, oh, ow) = im2col_u8(&xq, x.n, x.h, x.w, x.c, k, stride);
+        let m = x.n * oh * ow;
+        let kk = x.c * k * k;
+        sink.record(&node.name, &patches);
+
+        let wrs = self.cfg.weight_rescale();
+        let mut acc = vec![0i32; m * qc.o];
+        match self.mode {
+            EngineMode::Dense => {
+                let wt = &self.prepared[&node.name];
+                self.gemm.gemm(&mut patches, m, kk, wt, qc.o, &mut acc);
+            }
+            EngineMode::Stc => {
+                let cw = &self.compressed[&node.name];
+                // pad patches K to the compressed K if needed
+                if cw.k != kk {
+                    let mut padded = vec![0u8; m * cw.k];
+                    for mi in 0..m {
+                        padded[mi * cw.k..mi * cw.k + kk]
+                            .copy_from_slice(&patches[mi * kk..(mi + 1) * kk]);
+                    }
+                    patches = padded;
+                }
+                let (out, _) = stc_gemm(&patches, cw, m, self.cfg);
+                acc = out;
+            }
+        }
+        // dequantize + bias
+        let mut y = TensorF32::zeros(x.n, oh, ow, qc.o);
+        for mi in 0..m {
+            for oi in 0..qc.o {
+                y.data[mi * qc.o + oi] = acc[mi * qc.o + oi] as f32
+                    * (scale.0 * wrs * qc.scale[oi])
+                    + qc.bias[oi];
+            }
+        }
+        Ok(y)
+    }
+
+    /// Top-1 predictions for a logits buffer.
+    pub fn argmax(logits: &[f32], classes: usize) -> Vec<usize> {
+        logits
+            .chunks_exact(classes)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,209 @@
+//! Graph IR loader — parses `<tag>_meta.json` (the contract documented
+//! in `python/compile/layers.py`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::JsonValue;
+
+/// Node operation, mirroring the python builder's op set.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Input,
+    Conv { k: usize, stride: usize, out_ch: usize, relu: bool, quant: bool },
+    Pool { avg: bool },
+    Gap,
+    Add,
+    Relu,
+    Concat,
+    Fc { out: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<String>,
+}
+
+/// A loaded model graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub arch: String,
+    pub variant: String,
+    pub num_classes: usize,
+    pub input_hwc: [usize; 3],
+    pub eval_batch: usize,
+    /// Quantized conv names in activation-scale-vector order.
+    pub quant_convs: Vec<String>,
+    pub nodes: Vec<Node>,
+}
+
+impl Graph {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading meta {}", path.display()))?;
+        Self::from_json(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text)?;
+        let req_str = |val: &JsonValue, key: &str| -> Result<String> {
+            Ok(val
+                .get(key)
+                .and_then(JsonValue::as_str)
+                .with_context(|| format!("meta missing `{key}`"))?
+                .to_string())
+        };
+        let hwc = v
+            .get("input_hwc")
+            .and_then(JsonValue::as_array)
+            .context("meta missing input_hwc")?;
+        if hwc.len() != 3 {
+            bail!("input_hwc must have 3 entries");
+        }
+        let mut nodes = Vec::new();
+        for n in v.get("nodes").and_then(JsonValue::as_array).context("missing nodes")? {
+            let name = req_str(n, "name")?;
+            let op_name = req_str(n, "op")?;
+            let inputs: Vec<String> = n
+                .get("inputs")
+                .and_then(JsonValue::as_array)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(JsonValue::as_str)
+                .map(str::to_string)
+                .collect();
+            let usize_attr = |key: &str| -> Result<usize> {
+                n.get(key)
+                    .and_then(JsonValue::as_usize)
+                    .with_context(|| format!("node {name}: missing `{key}`"))
+            };
+            let bool_attr = |key: &str| -> Result<bool> {
+                n.get(key)
+                    .and_then(JsonValue::as_bool)
+                    .with_context(|| format!("node {name}: missing `{key}`"))
+            };
+            let op = match op_name.as_str() {
+                "input" => Op::Input,
+                "conv" => Op::Conv {
+                    k: usize_attr("k")?,
+                    stride: usize_attr("stride")?,
+                    out_ch: usize_attr("out_ch")?,
+                    relu: bool_attr("relu")?,
+                    quant: bool_attr("quant")?,
+                },
+                "pool" => Op::Pool { avg: req_str(n, "kind")? == "avg" },
+                "gap" => Op::Gap,
+                "add" => Op::Add,
+                "relu" => Op::Relu,
+                "concat" => Op::Concat,
+                "fc" => Op::Fc { out: usize_attr("out")? },
+                other => bail!("unknown op `{other}` in node {name}"),
+            };
+            nodes.push(Node { name, op, inputs });
+        }
+        let graph = Self {
+            arch: req_str(&v, "arch")?,
+            variant: req_str(&v, "variant")?,
+            num_classes: v.get("num_classes").and_then(JsonValue::as_usize).context("num_classes")?,
+            input_hwc: [
+                hwc[0].as_usize().context("hwc")?,
+                hwc[1].as_usize().context("hwc")?,
+                hwc[2].as_usize().context("hwc")?,
+            ],
+            eval_batch: v.get("eval_batch").and_then(JsonValue::as_usize).context("eval_batch")?,
+            quant_convs: v
+                .get("quant_convs")
+                .and_then(JsonValue::as_array)
+                .context("quant_convs")?
+                .iter()
+                .filter_map(JsonValue::as_str)
+                .map(str::to_string)
+                .collect(),
+            nodes,
+        };
+        graph.validate()?;
+        Ok(graph)
+    }
+
+    /// Structural checks: topo order, known inputs, single fc sink.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for node in &self.nodes {
+            for i in &node.inputs {
+                if !seen.contains(i.as_str()) {
+                    bail!("node {} consumes `{i}` before it is produced", node.name);
+                }
+            }
+            if !seen.insert(node.name.as_str()) {
+                bail!("duplicate node name {}", node.name);
+            }
+        }
+        let quant_names: Vec<&str> = self
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, Op::Conv { quant: true, .. }))
+            .map(|n| n.name.as_str())
+            .collect();
+        if quant_names != self.quant_convs.iter().map(String::as_str).collect::<Vec<_>>() {
+            bail!("quant_convs order mismatch: {quant_names:?} vs {:?}", self.quant_convs);
+        }
+        match self.nodes.last().map(|n| &n.op) {
+            Some(Op::Fc { out }) if *out == self.num_classes => Ok(()),
+            other => bail!("graph must end in fc(num_classes), got {other:?}"),
+        }
+    }
+
+    pub fn node(&self, name: &str) -> Result<&Node> {
+        self.nodes
+            .iter()
+            .find(|n| n.name == name)
+            .with_context(|| format!("node `{name}` not in graph"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub(crate) const TINY_META: &str = r#"{
+      "arch": "tiny", "variant": "dense", "num_classes": 3,
+      "input_hwc": [4, 4, 2], "eval_batch": 2,
+      "quant_convs": ["c2"],
+      "nodes": [
+        {"name": "img", "op": "input", "inputs": []},
+        {"name": "c1", "op": "conv", "inputs": ["img"],
+         "k": 3, "stride": 1, "out_ch": 4, "relu": true, "quant": false},
+        {"name": "c2", "op": "conv", "inputs": ["c1"],
+         "k": 3, "stride": 2, "out_ch": 6, "relu": true, "quant": true},
+        {"name": "g", "op": "gap", "inputs": ["c2"]},
+        {"name": "fc", "op": "fc", "inputs": ["g"], "out": 3}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_tiny() {
+        let g = Graph::from_json(TINY_META).unwrap();
+        assert_eq!(g.arch, "tiny");
+        assert_eq!(g.nodes.len(), 5);
+        assert_eq!(g.quant_convs, vec!["c2"]);
+        assert!(matches!(
+            g.node("c2").unwrap().op,
+            Op::Conv { k: 3, stride: 2, out_ch: 6, relu: true, quant: true }
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_topo() {
+        let bad = TINY_META.replace(r#""inputs": ["c1"]"#, r#""inputs": ["nope"]"#);
+        assert!(Graph::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_quant_conv_mismatch() {
+        let bad = TINY_META.replace(r#""quant_convs": ["c2"]"#, r#""quant_convs": ["c1"]"#);
+        assert!(Graph::from_json(&bad).is_err());
+    }
+}

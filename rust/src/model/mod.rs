@@ -1,0 +1,23 @@
+//! Native integer inference engine (DESIGN.md S15).
+//!
+//! Executes the exported graph IR (`<tag>_meta.json` + `<tag>_weights.npz`)
+//! entirely in rust: float ops for the unquantized pieces (first conv,
+//! pooling, residuals, FC head) and bit-exact SPARQ integer GEMMs for
+//! every quantized conv. Three uses:
+//!
+//! 1. cross-validation — logits must match the PJRT/HLO path to float
+//!    tolerance, and the integer GEMM outputs are *bit-exact* against
+//!    the Pallas kernel semantics (rust/tests/cross_validation.rs);
+//! 2. the STC / Table 6 path — 2:4 compressed execution that the HLO
+//!    graphs do not model;
+//! 3. activation tracing for the toggle/sparsity statistics (exp. F2).
+
+pub mod engine;
+pub mod gemm;
+pub mod graph;
+pub mod weights;
+
+pub use engine::{Engine, EngineMode, TraceSink};
+pub use gemm::QuantGemm;
+pub use graph::{Graph, Node, Op};
+pub use weights::Weights;

@@ -1,0 +1,128 @@
+//! Weight store — loads `<tag>_weights.npz` (layout documented in
+//! `python/compile/aot.py::export_weights_npz`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::npz::Npz;
+
+/// Weights of one quantized conv, flattened for the im2col GEMM.
+#[derive(Clone, Debug)]
+pub struct QuantConv {
+    /// (K, O) row-major, K ordered (C, kh, kw) — see tensor::im2col.
+    pub wq: Vec<i8>,
+    pub k: usize,
+    pub o: usize,
+    /// Per-output-channel dequant scales.
+    pub scale: Vec<f32>,
+    /// Float bias added after dequantization.
+    pub bias: Vec<f32>,
+}
+
+/// Weights of a float conv (the unquantized first layer): HWIO.
+#[derive(Clone, Debug)]
+pub struct FloatConv {
+    pub w: Vec<f32>,
+    pub kh: usize,
+    pub kw: usize,
+    pub c_in: usize,
+    pub c_out: usize,
+    pub bias: Vec<f32>,
+}
+
+/// All parameters of one exported model variant.
+#[derive(Debug)]
+pub struct Weights {
+    pub quant: HashMap<String, QuantConv>,
+    pub float: HashMap<String, FloatConv>,
+    pub fc_w: Vec<f32>,
+    pub fc_in: usize,
+    pub fc_out: usize,
+    pub fc_b: Vec<f32>,
+}
+
+impl Weights {
+    pub fn load(path: &Path) -> Result<Self> {
+        let npz = Npz::read(path)?;
+        Self::from_npz(&npz).with_context(|| format!("loading weights {}", path.display()))
+    }
+
+    pub fn from_npz(npz: &Npz) -> Result<Self> {
+        let mut quant = HashMap::new();
+        let mut float = HashMap::new();
+        for name in npz.names() {
+            if let Some(conv) = name.strip_suffix(".wq") {
+                let (shape, wq) = npz.i8(name)?;
+                if shape.len() != 2 {
+                    bail!("{name}: expected 2-D flattened weights");
+                }
+                let (_, scale) = npz.f32(&format!("{conv}.scale"))?;
+                let (_, bias) = npz.f32(&format!("{conv}.bias"))?;
+                if scale.len() != shape[1] || bias.len() != shape[1] {
+                    bail!("{conv}: scale/bias length mismatch");
+                }
+                quant.insert(
+                    conv.to_string(),
+                    QuantConv {
+                        wq: wq.to_vec(),
+                        k: shape[0],
+                        o: shape[1],
+                        scale: scale.to_vec(),
+                        bias: bias.to_vec(),
+                    },
+                );
+            } else if let Some(conv) = name.strip_suffix(".w") {
+                if conv == "fc" {
+                    continue;
+                }
+                let (shape, w) = npz.f32(name)?;
+                if shape.len() != 4 {
+                    bail!("{name}: expected HWIO conv weights");
+                }
+                let (_, bias) = npz.f32(&format!("{conv}.bias"))?;
+                float.insert(
+                    conv.to_string(),
+                    FloatConv {
+                        w: w.to_vec(),
+                        kh: shape[0],
+                        kw: shape[1],
+                        c_in: shape[2],
+                        c_out: shape[3],
+                        bias: bias.to_vec(),
+                    },
+                );
+            }
+        }
+        let (fc_shape, fc_w) = npz.f32("fc.w")?;
+        let (_, fc_b) = npz.f32("fc.b")?;
+        if fc_shape.len() != 2 {
+            bail!("fc.w must be 2-D");
+        }
+        Ok(Self {
+            quant,
+            float,
+            fc_w: fc_w.to_vec(),
+            fc_in: fc_shape[0],
+            fc_out: fc_shape[1],
+            fc_b: fc_b.to_vec(),
+        })
+    }
+
+    pub fn quant_conv(&self, name: &str) -> Result<&QuantConv> {
+        self.quant.get(name).with_context(|| format!("no quantized weights for `{name}`"))
+    }
+
+    pub fn float_conv(&self, name: &str) -> Result<&FloatConv> {
+        self.float.get(name).with_context(|| format!("no float weights for `{name}`"))
+    }
+
+    /// Total parameter count (reporting).
+    pub fn param_count(&self) -> usize {
+        self.quant.values().map(|q| q.wq.len() + q.scale.len() + q.bias.len()).sum::<usize>()
+            + self.float.values().map(|f| f.w.len() + f.bias.len()).sum::<usize>()
+            + self.fc_w.len()
+            + self.fc_b.len()
+    }
+}

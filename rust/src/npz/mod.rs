@@ -1,0 +1,164 @@
+//! Minimal `.npy` / `.npz` reader (DESIGN.md S12).
+//!
+//! The build-time python exporters write weight archives with
+//! `np.savez` (uncompressed, i.e. ZIP with STORED entries, each entry a
+//! v1.0 `.npy`). This module implements exactly that subset — enough to
+//! read every artifact this repo produces, with strict errors on
+//! anything else (compressed entries, fortran order, exotic dtypes), so
+//! silent misreads are impossible.
+
+mod npy;
+mod zip;
+
+pub use npy::{DType, NpyArray};
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// An in-memory npz archive: name -> typed array.
+#[derive(Debug)]
+pub struct Npz {
+    arrays: HashMap<String, NpyArray>,
+}
+
+impl Npz {
+    pub fn read(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading npz {}", path.display()))?;
+        Self::from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let entries = zip::read_stored_entries(bytes)?;
+        let mut arrays = HashMap::new();
+        for (name, data) in entries {
+            let key = name.strip_suffix(".npy").unwrap_or(&name).to_string();
+            arrays.insert(key, npy::parse(&data)?);
+        }
+        Ok(Self { arrays })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.arrays.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn get(&self, name: &str) -> Result<&NpyArray> {
+        self.arrays
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("array `{name}` missing (have {:?})", self.names()))
+    }
+
+    pub fn f32(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        let a = self.get(name)?;
+        Ok((a.shape.as_slice(), a.as_f32()?))
+    }
+
+    pub fn i8(&self, name: &str) -> Result<(&[usize], &[i8])> {
+        let a = self.get(name)?;
+        Ok((a.shape.as_slice(), a.as_i8()?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a minimal in-memory npz (one stored .npy) and read it back.
+    fn fake_npz(entries: &[(&str, Vec<u8>)]) -> Vec<u8> {
+        let mut out = Vec::new();
+        let mut centrals = Vec::new();
+        for (name, payload) in entries {
+            let name_b = format!("{name}.npy");
+            let offset = out.len() as u32;
+            let crc = crate::npz::zip::crc32(payload);
+            // local file header
+            out.extend_from_slice(&0x04034b50u32.to_le_bytes());
+            out.extend_from_slice(&20u16.to_le_bytes()); // version
+            out.extend_from_slice(&0u16.to_le_bytes()); // flags
+            out.extend_from_slice(&0u16.to_le_bytes()); // method = stored
+            out.extend_from_slice(&[0; 4]); // time/date
+            out.extend_from_slice(&crc.to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(name_b.len() as u16).to_le_bytes());
+            out.extend_from_slice(&0u16.to_le_bytes()); // extra len
+            out.extend_from_slice(name_b.as_bytes());
+            out.extend_from_slice(payload);
+            centrals.push((name_b, offset, payload.len() as u32, crc));
+        }
+        let cd_start = out.len() as u32;
+        for (name_b, offset, size, crc) in &centrals {
+            out.extend_from_slice(&0x02014b50u32.to_le_bytes());
+            out.extend_from_slice(&[20, 0, 20, 0]); // versions
+            out.extend_from_slice(&0u16.to_le_bytes()); // flags
+            out.extend_from_slice(&0u16.to_le_bytes()); // method
+            out.extend_from_slice(&[0; 4]); // time/date
+            out.extend_from_slice(&crc.to_le_bytes());
+            out.extend_from_slice(&size.to_le_bytes());
+            out.extend_from_slice(&size.to_le_bytes());
+            out.extend_from_slice(&(name_b.len() as u16).to_le_bytes());
+            out.extend_from_slice(&[0; 12]); // extra/comment/disk/attrs(short)
+            out.extend_from_slice(&offset.to_le_bytes());
+            out.extend_from_slice(name_b.as_bytes());
+        }
+        let cd_len = out.len() as u32 - cd_start;
+        out.extend_from_slice(&0x06054b50u32.to_le_bytes());
+        out.extend_from_slice(&[0; 4]); // disk numbers
+        out.extend_from_slice(&(centrals.len() as u16).to_le_bytes());
+        out.extend_from_slice(&(centrals.len() as u16).to_le_bytes());
+        out.extend_from_slice(&cd_len.to_le_bytes());
+        out.extend_from_slice(&cd_start.to_le_bytes());
+        out.extend_from_slice(&0u16.to_le_bytes()); // comment
+        out
+    }
+
+    fn npy_payload(descr: &str, shape: &str, data: &[u8]) -> Vec<u8> {
+        let header = format!(
+            "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape}, }}"
+        );
+        let mut h = header.into_bytes();
+        let total = 10 + h.len();
+        let pad = (64 - (total + 1) % 64) % 64;
+        h.extend(std::iter::repeat(b' ').take(pad));
+        h.push(b'\n');
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend_from_slice(&(h.len() as u16).to_le_bytes());
+        out.extend_from_slice(&h);
+        out.extend_from_slice(data);
+        out
+    }
+
+    #[test]
+    fn roundtrip_f32_and_i8() {
+        let f: Vec<f32> = vec![1.5, -2.0, 3.25, 0.0, 9.0, -1.0];
+        let fb: Vec<u8> = f.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let i: Vec<i8> = vec![-128, -1, 0, 1, 127];
+        let ib: Vec<u8> = i.iter().map(|&v| v as u8).collect();
+        let npz_bytes = fake_npz(&[
+            ("w", npy_payload("<f4", "(2, 3)", &fb)),
+            ("q", npy_payload("|i1", "(5,)", &ib)),
+        ]);
+        let npz = Npz::from_bytes(&npz_bytes).unwrap();
+        let (shape, data) = npz.f32("w").unwrap();
+        assert_eq!(shape, &[2, 3]);
+        assert_eq!(data, f.as_slice());
+        let (shape, data) = npz.i8("q").unwrap();
+        assert_eq!(shape, &[5]);
+        assert_eq!(data, i.as_slice());
+        assert!(npz.get("missing").is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let fb = 7.5f32.to_le_bytes().to_vec();
+        let npz_bytes = fake_npz(&[("s", npy_payload("<f4", "()", &fb))]);
+        let npz = Npz::from_bytes(&npz_bytes).unwrap();
+        let (shape, data) = npz.f32("s").unwrap();
+        assert!(shape.is_empty());
+        assert_eq!(data, &[7.5]);
+    }
+}

@@ -1,0 +1,233 @@
+//! `.npy` v1.0 parser for the dtypes our exporters emit:
+//! `<f4` (f32), `|i1` (i8), `<i4` (i32), `|u1` (u8).
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I8,
+    I32,
+    U8,
+}
+
+impl DType {
+    fn from_descr(descr: &str) -> Result<Self> {
+        Ok(match descr {
+            "<f4" => Self::F32,
+            "|i1" | "<i1" => Self::I8,
+            "<i4" => Self::I32,
+            "|u1" | "<u1" => Self::U8,
+            other => bail!("unsupported npy dtype {other:?}"),
+        })
+    }
+
+    fn size(self) -> usize {
+        match self {
+            Self::F32 | Self::I32 => 4,
+            Self::I8 | Self::U8 => 1,
+        }
+    }
+}
+
+/// A typed, C-contiguous array.
+#[derive(Debug)]
+pub struct NpyArray {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    data: Data,
+}
+
+#[derive(Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl NpyArray {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Ok(v),
+            _ => bail!("array is {:?}, expected f32", self.dtype),
+        }
+    }
+
+    pub fn as_i8(&self) -> Result<&[i8]> {
+        match &self.data {
+            Data::I8(v) => Ok(v),
+            _ => bail!("array is {:?}, expected i8", self.dtype),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Ok(v),
+            _ => bail!("array is {:?}, expected i32", self.dtype),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<&[u8]> {
+        match &self.data {
+            Data::U8(v) => Ok(v),
+            _ => bail!("array is {:?}, expected u8", self.dtype),
+        }
+    }
+}
+
+pub(crate) fn parse(bytes: &[u8]) -> Result<NpyArray> {
+    if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+        bail!("missing npy magic");
+    }
+    let (major, _minor) = (bytes[6], bytes[7]);
+    if major != 1 {
+        bail!("unsupported npy version {major}");
+    }
+    let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+    let header = std::str::from_utf8(
+        bytes
+            .get(10..10 + header_len)
+            .ok_or_else(|| anyhow::anyhow!("npy header truncated"))?,
+    )
+    .context("npy header not utf-8")?;
+
+    let descr = dict_str(header, "descr")?;
+    let dtype = DType::from_descr(&descr)?;
+    let fortran = dict_raw(header, "fortran_order")?;
+    if fortran.trim() != "False" {
+        bail!("fortran_order arrays are not supported");
+    }
+    let shape = parse_shape(&dict_raw(header, "shape")?)?;
+
+    let count: usize = shape.iter().product();
+    let payload = &bytes[10 + header_len..];
+    if payload.len() < count * dtype.size() {
+        bail!(
+            "npy payload too short: {} < {}",
+            payload.len(),
+            count * dtype.size()
+        );
+    }
+    let payload = &payload[..count * dtype.size()];
+    let data = match dtype {
+        DType::F32 => Data::F32(
+            payload
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
+        DType::I32 => Data::I32(
+            payload
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+        ),
+        DType::I8 => Data::I8(payload.iter().map(|&b| b as i8).collect()),
+        DType::U8 => Data::U8(payload.to_vec()),
+    };
+    Ok(NpyArray { dtype, shape, data })
+}
+
+/// Extract `'key': 'value'` (string values) from the header dict literal.
+fn dict_str(header: &str, key: &str) -> Result<String> {
+    let raw = dict_raw(header, key)?;
+    let t = raw.trim();
+    if (t.starts_with('\'') && t.ends_with('\'')) || (t.starts_with('"') && t.ends_with('"')) {
+        Ok(t[1..t.len() - 1].to_string())
+    } else {
+        bail!("npy header key {key}: expected string, got {t:?}")
+    }
+}
+
+/// Extract the raw value text for `key` in the header dict literal.
+fn dict_raw(header: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let at = header
+        .find(&pat)
+        .ok_or_else(|| anyhow::anyhow!("npy header missing key {key}"))?;
+    let rest = &header[at + pat.len()..];
+    // value ends at the next top-level ',' or '}'
+    let mut depth = 0usize;
+    let mut end = rest.len();
+    for (i, c) in rest.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth = depth.saturating_sub(1),
+            ',' | '}' if depth == 0 => {
+                end = i;
+                break;
+            }
+            _ => {}
+        }
+    }
+    Ok(rest[..end].trim().to_string())
+}
+
+fn parse_shape(raw: &str) -> Result<Vec<usize>> {
+    let t = raw.trim().trim_start_matches('(').trim_end_matches(')');
+    let mut shape = Vec::new();
+    for part in t.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        shape.push(p.parse::<usize>().context("bad shape entry")?);
+    }
+    Ok(shape)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(descr: &str, shape: &str, data: &[u8]) -> Vec<u8> {
+        let header =
+            format!("{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape}, }}\n");
+        let mut out = b"\x93NUMPY\x01\x00".to_vec();
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(data);
+        out
+    }
+
+    #[test]
+    fn parse_i32() {
+        let data: Vec<u8> = [1i32, -2, 3].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let a = parse(&mk("<i4", "(3,)", &data)).unwrap();
+        assert_eq!(a.shape, vec![3]);
+        assert_eq!(a.as_i32().unwrap(), &[1, -2, 3]);
+        assert!(a.as_f32().is_err());
+    }
+
+    #[test]
+    fn parse_u8_2d() {
+        let a = parse(&mk("|u1", "(2, 2)", &[1, 2, 3, 4])).unwrap();
+        assert_eq!(a.shape, vec![2, 2]);
+        assert_eq!(a.as_u8().unwrap(), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn rejects_fortran_and_bad_dtype() {
+        let hdr = "{'descr': '<f4', 'fortran_order': True, 'shape': (1,), }\n";
+        let mut b = b"\x93NUMPY\x01\x00".to_vec();
+        b.extend_from_slice(&(hdr.len() as u16).to_le_bytes());
+        b.extend_from_slice(hdr.as_bytes());
+        b.extend_from_slice(&1.0f32.to_le_bytes());
+        assert!(parse(&b).is_err());
+        assert!(parse(&mk("<f8", "(1,)", &[0; 8])).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_fails() {
+        assert!(parse(&mk("<f4", "(4,)", &[0; 8])).is_err());
+    }
+}

@@ -1,0 +1,120 @@
+//! STORED-only ZIP reader for `np.savez` archives.
+//!
+//! Walks the central directory (found via the end-of-central-directory
+//! record) and returns `(name, bytes)` pairs. Any compressed entry is a
+//! hard error — `np.savez` never compresses, and refusing beats silently
+//! corrupting weights. CRC32 is verified for every entry.
+
+use anyhow::{bail, Result};
+
+pub(crate) fn read_stored_entries(bytes: &[u8]) -> Result<Vec<(String, Vec<u8>)>> {
+    let eocd = find_eocd(bytes)?;
+    let n_entries = u16_at(bytes, eocd + 10)? as usize;
+    let cd_offset = u32_at(bytes, eocd + 16)? as usize;
+
+    let mut out = Vec::with_capacity(n_entries);
+    let mut pos = cd_offset;
+    for _ in 0..n_entries {
+        if u32_at(bytes, pos)? != 0x0201_4b50 {
+            bail!("bad central-directory signature at {pos}");
+        }
+        let method = u16_at(bytes, pos + 10)?;
+        let crc = u32_at(bytes, pos + 16)?;
+        let comp_size = u32_at(bytes, pos + 20)? as usize;
+        let uncomp_size = u32_at(bytes, pos + 24)? as usize;
+        let name_len = u16_at(bytes, pos + 28)? as usize;
+        let extra_len = u16_at(bytes, pos + 30)? as usize;
+        let comment_len = u16_at(bytes, pos + 32)? as usize;
+        let local_offset = u32_at(bytes, pos + 42)? as usize;
+        let name = std::str::from_utf8(slice(bytes, pos + 46, name_len)?)?.to_string();
+        if method != 0 {
+            bail!("entry `{name}` uses compression method {method}; only STORED is supported (np.savez)");
+        }
+        if comp_size != uncomp_size {
+            bail!("entry `{name}`: stored entry with mismatched sizes");
+        }
+        // local header: re-read lengths (may differ from central copies)
+        if u32_at(bytes, local_offset)? != 0x0403_4b50 {
+            bail!("bad local header for `{name}`");
+        }
+        let l_name = u16_at(bytes, local_offset + 26)? as usize;
+        let l_extra = u16_at(bytes, local_offset + 28)? as usize;
+        let data_start = local_offset + 30 + l_name + l_extra;
+        let data = slice(bytes, data_start, uncomp_size)?.to_vec();
+        let actual_crc = crc32(&data);
+        if actual_crc != crc {
+            bail!("entry `{name}`: crc mismatch ({actual_crc:#x} != {crc:#x})");
+        }
+        out.push((name, data));
+        pos += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(out)
+}
+
+fn find_eocd(bytes: &[u8]) -> Result<usize> {
+    // EOCD is at least 22 bytes, signature 0x06054b50; search backwards
+    // through the (possibly empty) trailing comment.
+    if bytes.len() < 22 {
+        bail!("file too short to be a zip");
+    }
+    let start = bytes.len().saturating_sub(22 + u16::MAX as usize);
+    for pos in (start..=bytes.len() - 22).rev() {
+        if bytes[pos..pos + 4] == [0x50, 0x4b, 0x05, 0x06] {
+            return Ok(pos);
+        }
+    }
+    bail!("zip end-of-central-directory not found")
+}
+
+fn slice(bytes: &[u8], at: usize, len: usize) -> Result<&[u8]> {
+    bytes
+        .get(at..at + len)
+        .ok_or_else(|| anyhow::anyhow!("zip truncated at {at}+{len}"))
+}
+
+fn u16_at(bytes: &[u8], at: usize) -> Result<u16> {
+    Ok(u16::from_le_bytes(slice(bytes, at, 2)?.try_into().unwrap()))
+}
+
+fn u32_at(bytes: &[u8], at: usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(slice(bytes, at, 4)?.try_into().unwrap()))
+}
+
+/// CRC-32 (IEEE 802.3), table-driven.
+pub(crate) fn crc32(data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in data {
+        c = table[((c ^ u32::from(b)) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414f_a339);
+    }
+
+    #[test]
+    fn rejects_non_zip() {
+        assert!(read_stored_entries(b"not a zip at all, definitely!").is_err());
+        assert!(read_stored_entries(b"").is_err());
+    }
+}

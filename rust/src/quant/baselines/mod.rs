@@ -1,0 +1,70 @@
+//! Comparison baselines for Tables 1 and 3 (DESIGN.md S6).
+//!
+//! * naive A4W8 / A8W4 — uniform requantization (config mode `Uniform` /
+//!   `w_bits = 4`); implemented in [`super::bsparq`], driven from here.
+//! * SySMT (Shomron & Weiser, MICRO'20) — pairwise 4-bit trimming that
+//!   chooses MSB-or-LSB nibbles; per paper §5.1 this is exactly our
+//!   2opt configuration without rounding.
+//! * ACIQ (Banner et al., NeurIPS'19) — analytic clipping: instead of
+//!   min-max scales, clip at the Laplace-optimal threshold before
+//!   uniform 4-bit quantization. Implemented in [`aciq`].
+
+pub mod aciq;
+
+use super::config::SparqConfig;
+
+/// Named baseline -> (config, scale policy). The coordinator picks the
+/// activation-scale vector per policy before invoking the same HLO.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScalePolicy {
+    /// Min-max calibration scales (paper §5 default).
+    MinMax,
+    /// ACIQ Laplace-optimal clipping for the given activation bit-width.
+    AciqClip,
+}
+
+/// A baseline = how to scale + how to requantize.
+#[derive(Clone, Copy, Debug)]
+pub struct Baseline {
+    pub name: &'static str,
+    pub cfg: SparqConfig,
+    pub policy: ScalePolicy,
+}
+
+/// The comparison set used by the Table 3 experiment.
+pub fn table3_baselines() -> Vec<Baseline> {
+    vec![
+        Baseline {
+            name: "sysmt",
+            cfg: SparqConfig::named("sysmt").unwrap(),
+            policy: ScalePolicy::MinMax,
+        },
+        Baseline {
+            name: "aciq4",
+            cfg: SparqConfig::named("a4w8").unwrap(),
+            policy: ScalePolicy::AciqClip,
+        },
+        Baseline {
+            name: "naive_a4w8",
+            cfg: SparqConfig::named("a4w8").unwrap(),
+            policy: ScalePolicy::MinMax,
+        },
+        Baseline {
+            name: "naive_a8w4",
+            cfg: SparqConfig::named("a8w4").unwrap(),
+            policy: ScalePolicy::MinMax,
+        },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sysmt_is_2opt_trim_with_pairs() {
+        let b = &table3_baselines()[0];
+        assert_eq!(b.cfg, SparqConfig::named("2opt").unwrap());
+        assert!(b.cfg.vsparq && !b.cfg.round);
+    }
+}

@@ -1,0 +1,239 @@
+//! bSPARQ — bit-sparsity window trimming (paper §3.1).
+//!
+//! An 8-bit activation is reduced to an `n`-bit window positioned at the
+//! most significant toggled bit, skipping leading zero bits; the window
+//! position (shift) is chosen from the configuration's placement set and
+//! the value is optionally rounded by the residual LSBs (saturating in
+//! the window). Functions return the *reconstructed* approximation
+//! (`q << shift`), which is what enters the dot product.
+
+use super::config::{Mode, SparqConfig};
+
+/// Index of the most significant set bit (0 for x in {0, 1}).
+#[inline]
+pub fn msb_index(x: u8) -> u8 {
+    (7u32.saturating_sub(u32::from(x).leading_zeros() - 24)) as u8
+}
+
+/// Trim `x` to a `width`-bit window (reconstructed). `round` adds the
+/// residual-LSB rounding of the paper's `+R` variant.
+#[inline]
+pub fn trim_window(x: u8, width: u8, mode: Mode, round: bool) -> u8 {
+    debug_assert!((1..=8).contains(&width));
+    if width >= 8 {
+        return x;
+    }
+    let s = shift_for(x, width, mode);
+    let xi = u32::from(x);
+    let q = if round && s > 0 {
+        (xi + (1 << (s - 1))) >> s
+    } else {
+        xi >> s
+    };
+    let q = q.min((1 << width) - 1); // saturate on round-up overflow
+    (q << s) as u8
+}
+
+/// The shift actually applied for value `x`: the smallest placement in
+/// the mode's set whose window `[shift+width-1 : shift]` still covers the
+/// MSB. This is the metadata the hardware carries as ShiftCtrl; also used
+/// by the toggle/shift statistics.
+#[inline]
+pub fn shift_for(x: u8, width: u8, mode: Mode) -> u8 {
+    let msb = msb_index(x);
+    let s_full = (msb + 1).saturating_sub(width);
+    match mode {
+        Mode::Full | Mode::Uniform => s_full,
+        Mode::Opt3 => ((s_full + 1) / 2 * 2).min(4),
+        Mode::Opt2 => {
+            if s_full > 0 {
+                4
+            } else {
+                0
+            }
+        }
+    }
+}
+
+/// Plain uniform requantization of the 8-bit value to `width` bits,
+/// reconstructed onto the 8-bit grid (the A4W8-style baseline; mode 3).
+/// Integer-exact mirror of `ref.uniform_requant`.
+#[inline]
+pub fn uniform_requant(x: u8, width: u8) -> u8 {
+    if width >= 8 {
+        return x;
+    }
+    let qmax = (1u32 << width) - 1;
+    let q = (u32::from(x) * qmax + 127) / 255;
+    ((q * 255 + qmax / 2) / qmax) as u8
+}
+
+/// Per-activation trim dispatching on the config (no vSPARQ pairing).
+#[inline]
+pub fn trim_one(x: u8, cfg: SparqConfig) -> u8 {
+    if cfg.n_bits >= 8 {
+        return x;
+    }
+    match cfg.mode {
+        Mode::Uniform => uniform_requant(x, cfg.n_bits),
+        _ => trim_window(x, cfg.n_bits, cfg.mode, cfg.round),
+    }
+}
+
+/// Weight requantization for A8W4-style baselines (`ref.requant_weights`):
+/// symmetric, round-half-up on the magnitude. The result lives on the
+/// reduced integer grid; dequantization multiplies by
+/// `cfg.weight_rescale()`.
+#[inline]
+pub fn requant_weight(w: i8, w_bits: u8) -> i8 {
+    if w_bits >= 8 {
+        return w;
+    }
+    let qmax = (1i32 << (w_bits - 1)) - 1;
+    let a = i32::from(w).abs();
+    let q = (a * qmax + 63) / 127;
+    (q * i32::from(w).signum()) as i8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msb_examples() {
+        assert_eq!(msb_index(0), 0);
+        assert_eq!(msb_index(1), 0);
+        assert_eq!(msb_index(2), 1);
+        assert_eq!(msb_index(27), 4);
+        assert_eq!(msb_index(255), 7);
+        for x in 1..=255u32 {
+            assert_eq!(msb_index(x as u8) as u32, 31 - x.leading_zeros());
+        }
+    }
+
+    #[test]
+    fn paper_figure1_example() {
+        // 0b00011011 = 27: 5opt -> 26, 3opt -> 24, 2opt -> 16 (paper §3.1)
+        assert_eq!(trim_window(27, 4, Mode::Full, false), 26);
+        assert_eq!(trim_window(27, 4, Mode::Opt3, false), 24);
+        assert_eq!(trim_window(27, 4, Mode::Opt2, false), 16);
+        // with rounding, 27 -> 28 under 5opt (residual bit set)
+        assert_eq!(trim_window(27, 4, Mode::Full, true), 28);
+    }
+
+    #[test]
+    fn window_fits_value() {
+        // the reconstructed value always fits width bits after the shift
+        for x in 0..=255u8 {
+            for width in [2u8, 3, 4] {
+                for mode in [Mode::Full, Mode::Opt3, Mode::Opt2] {
+                    if width != 4 && mode != Mode::Full {
+                        continue; // 3opt/2opt placement sets are 4-bit only
+                    }
+                    let s = shift_for(x, width, mode);
+                    let y = trim_window(x, width, mode, false);
+                    assert_eq!(y & ((1u16 << s) - 1) as u8, 0, "x={x} w={width}");
+                    assert!(u32::from(y) >> s < (1 << width));
+                    // error bounded by the bits below the window
+                    assert!(u32::from(x.max(y) - x.min(y)) < (1 << s.max(1)), "x={x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rounding_never_increases_error() {
+        for x in 0..=255u8 {
+            for width in [2u8, 3, 4] {
+                for mode in [Mode::Full, Mode::Opt3, Mode::Opt2] {
+                    if width != 4 && mode != Mode::Full {
+                        continue; // 3opt/2opt placement sets are 4-bit only
+                    }
+                    let t = i32::from(trim_window(x, width, mode, false));
+                    let r = i32::from(trim_window(x, width, mode, true));
+                    assert!(
+                        (r - i32::from(x)).abs() <= (t - i32::from(x)).abs(),
+                        "x={x} width={width} mode={mode:?}: trim={t} round={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn full_mode_error_bound() {
+        // 5opt relative error: for x >= 16 the window keeps the top 4
+        // bits + rounding, so |err| <= x / 16 roughly; check the hard
+        // bound |err| <= 2^(msb-4) for trim.
+        for x in 16..=255u8 {
+            let y = trim_window(x, 4, Mode::Full, false);
+            let bound = 1i32 << (msb_index(x) - 3);
+            assert!((i32::from(x) - i32::from(y)).abs() < bound);
+        }
+    }
+
+    #[test]
+    fn zero_and_small_values_pass_through() {
+        for width in [2u8, 3, 4] {
+            for mode in [Mode::Full, Mode::Opt3, Mode::Opt2] {
+                if width != 4 && mode != Mode::Full {
+                    continue; // 3opt/2opt placement sets are 4-bit only
+                }
+                for round in [false, true] {
+                    assert_eq!(trim_window(0, width, mode, round), 0);
+                    // values that fit the window exactly are unchanged
+                    for x in 0..(1u16 << width) as u8 {
+                        assert_eq!(trim_window(x, width, mode, round), x);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_requant_grid() {
+        assert_eq!(uniform_requant(255, 4), 255);
+        assert_eq!(uniform_requant(0, 4), 0);
+        // 4-bit grid spacing is 17
+        for x in 0..=255u8 {
+            let y = uniform_requant(x, 4);
+            assert_eq!(y % 17, 0);
+            assert!((i32::from(x) - i32::from(y)).abs() <= 9);
+        }
+        // 8-bit passthrough
+        for x in 0..=255u8 {
+            assert_eq!(uniform_requant(x, 8), x);
+        }
+    }
+
+    #[test]
+    fn weight_requant_symmetric() {
+        for w in -127..=127i8 {
+            let q = requant_weight(w, 4);
+            assert_eq!(requant_weight(-w, 4), -q, "w={w}");
+            assert!(q.abs() <= 7);
+            // monotone grid: |w| larger never maps to smaller |q|
+            if w < 127 {
+                assert!(requant_weight(w + 1, 4) >= q);
+            }
+        }
+        assert_eq!(requant_weight(127, 4), 7);
+        assert_eq!(requant_weight(-127, 4), -7);
+        assert_eq!(requant_weight(0, 4), 0);
+        // 8-bit passthrough
+        for w in [-127i8, -1, 0, 1, 127] {
+            assert_eq!(requant_weight(w, 8), w);
+        }
+    }
+
+    #[test]
+    fn shift_sets_respected() {
+        for x in 1..=255u8 {
+            assert!(matches!(shift_for(x, 4, Mode::Opt3), 0 | 2 | 4));
+            assert!(matches!(shift_for(x, 4, Mode::Opt2), 0 | 4));
+            assert!(shift_for(x, 4, Mode::Full) <= 4);
+            assert!(shift_for(x, 3, Mode::Full) <= 5);
+            assert!(shift_for(x, 2, Mode::Full) <= 6);
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! SPARQ configuration — mirrors `python/compile/kernels/ref.py`.
+//!
+//! The wire encoding is an `i32[5]` vector passed at runtime into the
+//! lowered HLO (so one executable serves every configuration):
+//!
+//! `[n_bits, mode, round_flag, vsparq_flag, w_bits]`
+
+use std::fmt;
+
+/// Window-placement mode (field 1 of the config vector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// All consecutive placements: 5opt for n=4, 6opt for n=3, 7opt n=2.
+    Full = 0,
+    /// Shifts {0, 2, 4} (n=4 only) — the paper's 3opt.
+    Opt3 = 1,
+    /// Shifts {0, 4} (n=4 only) — the paper's 2opt; -R equals SySMT trim.
+    Opt2 = 2,
+    /// Not bSPARQ: plain uniform requantization to n bits (A4W8-style).
+    Uniform = 3,
+}
+
+impl Mode {
+    pub fn from_i32(v: i32) -> Option<Self> {
+        match v {
+            0 => Some(Self::Full),
+            1 => Some(Self::Opt3),
+            2 => Some(Self::Opt2),
+            3 => Some(Self::Uniform),
+            _ => None,
+        }
+    }
+}
+
+/// A full SPARQ configuration (see module docs for the wire format).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SparqConfig {
+    /// bSPARQ window width in bits: 4, 3, 2; 8 = no activation trimming.
+    pub n_bits: u8,
+    pub mode: Mode,
+    /// `+R`: round within the window by the residual LSBs.
+    pub round: bool,
+    /// vSPARQ pairing; `false` is the paper's `-vS` ablation.
+    pub vsparq: bool,
+    /// Weight precision: 8 native, 4 = A8W4-style requantization.
+    pub w_bits: u8,
+}
+
+impl SparqConfig {
+    pub const fn new(n_bits: u8, mode: Mode, round: bool, vsparq: bool) -> Self {
+        Self { n_bits, mode, round, vsparq, w_bits: 8 }
+    }
+
+    /// The plain A8W8 baseline (no trimming at all).
+    pub const A8W8: Self = Self::new(8, Mode::Full, false, false);
+
+    /// Wire format for the lowered HLO / python kernels.
+    pub fn to_vec(self) -> [i32; 5] {
+        [
+            self.n_bits as i32,
+            self.mode as i32,
+            self.round as i32,
+            self.vsparq as i32,
+            self.w_bits as i32,
+        ]
+    }
+
+    pub fn from_vec(v: [i32; 5]) -> Option<Self> {
+        Some(Self {
+            n_bits: u8::try_from(v[0]).ok()?,
+            mode: Mode::from_i32(v[1])?,
+            round: v[2] != 0,
+            vsparq: v[3] != 0,
+            w_bits: u8::try_from(v[4]).ok()?,
+        })
+    }
+
+    /// Paper-named presets; mirrors `ref.named_config`.
+    pub fn named(name: &str) -> Option<Self> {
+        use Mode::*;
+        let c = |n, m, r, v| Self::new(n, m, r, v);
+        Some(match name {
+            "a8w8" => Self::A8W8,
+            "a4w8" => c(4, Uniform, true, false),
+            "a3w8" => c(3, Uniform, true, false),
+            "a2w8" => c(2, Uniform, true, false),
+            "a8w4" => Self { w_bits: 4, ..Self::A8W8 },
+            "5opt" => c(4, Full, false, true),
+            "5opt_r" => c(4, Full, true, true),
+            "5opt_r_novs" => c(4, Full, true, false),
+            "3opt" => c(4, Opt3, false, true),
+            "3opt_r" => c(4, Opt3, true, true),
+            "3opt_r_novs" => c(4, Opt3, true, false),
+            "2opt" => c(4, Opt2, false, true),
+            "2opt_r" => c(4, Opt2, true, true),
+            "2opt_r_novs" => c(4, Opt2, true, false),
+            "sysmt" => c(4, Opt2, false, true),
+            "6opt_r" => c(3, Full, true, true),
+            "6opt_r_novs" => c(3, Full, true, false),
+            "7opt_r" => c(2, Full, true, true),
+            "7opt_r_novs" => c(2, Full, true, false),
+            _ => return None,
+        })
+    }
+
+    /// The 9 SPARQ cells of paper Table 2 (per model): {5,3,2}opt x
+    /// {Trim, +R, +R -vS}.
+    pub fn table2_grid() -> Vec<(&'static str, Self)> {
+        [
+            "5opt", "5opt_r", "5opt_r_novs", "3opt", "3opt_r", "3opt_r_novs", "2opt",
+            "2opt_r", "2opt_r_novs",
+        ]
+        .iter()
+        .map(|n| (*n, Self::named(n).unwrap()))
+        .collect()
+    }
+
+    /// Table 4 grid: 3-bit (6opt) and 2-bit (7opt), with and without vS.
+    pub fn table4_grid() -> Vec<(&'static str, Self)> {
+        ["6opt_r", "7opt_r", "6opt_r_novs", "7opt_r_novs"]
+            .iter()
+            .map(|n| (*n, Self::named(n).unwrap()))
+            .collect()
+    }
+
+    /// Number of window-placement options this config needs in hardware
+    /// (drives shifter area, paper Table 5): 8 - width + 1 for Full.
+    pub fn placement_options(self) -> u8 {
+        match (self.mode, self.n_bits) {
+            (Mode::Opt3, _) => 3,
+            (Mode::Opt2, _) => 2,
+            (Mode::Uniform, _) | (_, 8) => 1,
+            (Mode::Full, n) => 8 - n + 1,
+        }
+    }
+
+    /// Extra dequantization factor for requantized weights
+    /// (`ref.weight_rescale`).
+    pub fn weight_rescale(self) -> f32 {
+        if self.w_bits >= 8 {
+            1.0
+        } else {
+            127.0 / ((1i32 << (self.w_bits - 1)) - 1) as f32
+        }
+    }
+}
+
+impl fmt::Display for SparqConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let opts = self.placement_options();
+        match self.mode {
+            Mode::Uniform => write!(f, "A{}W{}", self.n_bits, self.w_bits)?,
+            _ if self.n_bits == 8 => write!(f, "A8W{}", self.w_bits)?,
+            _ => write!(f, "{}opt/{}b", opts, self.n_bits)?,
+        }
+        if self.round {
+            write!(f, "+R")?;
+        }
+        if !self.vsparq && self.n_bits < 8 && self.mode != Mode::Uniform {
+            write!(f, "-vS")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip() {
+        for name in ["a8w8", "5opt_r", "3opt", "2opt_r_novs", "6opt_r", "7opt_r", "a8w4"] {
+            let c = SparqConfig::named(name).unwrap();
+            assert_eq!(SparqConfig::from_vec(c.to_vec()), Some(c), "{name}");
+        }
+    }
+
+    #[test]
+    fn placement_options_match_paper_names() {
+        assert_eq!(SparqConfig::named("5opt").unwrap().placement_options(), 5);
+        assert_eq!(SparqConfig::named("3opt").unwrap().placement_options(), 3);
+        assert_eq!(SparqConfig::named("2opt").unwrap().placement_options(), 2);
+        assert_eq!(SparqConfig::named("6opt_r").unwrap().placement_options(), 6);
+        assert_eq!(SparqConfig::named("7opt_r").unwrap().placement_options(), 7);
+    }
+
+    #[test]
+    fn weight_rescale_values() {
+        assert_eq!(SparqConfig::named("a8w8").unwrap().weight_rescale(), 1.0);
+        assert_eq!(SparqConfig::named("a8w4").unwrap().weight_rescale(), 127.0 / 7.0);
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(SparqConfig::named("5opt_r").unwrap().to_string(), "5opt/4b+R");
+        assert_eq!(SparqConfig::named("2opt").unwrap().to_string(), "2opt/4b");
+        assert_eq!(SparqConfig::named("a4w8").unwrap().to_string(), "A4W8+R");
+        assert_eq!(
+            SparqConfig::named("6opt_r_novs").unwrap().to_string(),
+            "6opt/3b+R-vS"
+        );
+    }
+
+    #[test]
+    fn table_grids_sized() {
+        assert_eq!(SparqConfig::table2_grid().len(), 9);
+        assert_eq!(SparqConfig::table4_grid().len(), 4);
+    }
+}

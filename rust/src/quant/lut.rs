@@ -1,0 +1,157 @@
+//! Trim lookup tables — the optimized hot path (EXPERIMENTS.md §Perf).
+//!
+//! For a fixed configuration the SPARQ transform of one activation is a
+//! pure function of (its own byte, whether its partner is zero), so the
+//! whole eq.-2 case analysis collapses into two 256-entry tables:
+//!
+//! * `narrow[x]` — bSPARQ at n bits (both-non-zero case),
+//! * `wide[x]`   — the 2n-bit window (zero-partner case).
+//!
+//! The native GEMM engine (rust/src/model/gemm.rs) trims whole im2col
+//! rows through these tables; per activation the cost drops from ~15
+//! branchy ALU ops to one load + select.
+
+use super::bsparq::{requant_weight, trim_one, trim_window};
+use super::config::{Mode, SparqConfig};
+
+/// Precomputed trim tables for one configuration.
+#[derive(Clone)]
+pub struct TrimLut {
+    pub cfg: SparqConfig,
+    narrow: [u8; 256],
+    wide: [u8; 256],
+    /// Weight requantization table indexed by (w as u8), i.e. w + 128.
+    weights: [i8; 256],
+    paired: bool,
+}
+
+impl TrimLut {
+    pub fn new(cfg: SparqConfig) -> Self {
+        let mut narrow = [0u8; 256];
+        let mut wide = [0u8; 256];
+        let mut weights = [0i8; 256];
+        let wide_width = (2 * cfg.n_bits).min(8);
+        for x in 0..=255u8 {
+            narrow[x as usize] = trim_one(x, cfg);
+            wide[x as usize] = trim_window(x, wide_width, Mode::Full, cfg.round);
+        }
+        for w in -128..=127i32 {
+            weights[(w + 128) as usize] = requant_weight(w.max(-127) as i8, cfg.w_bits);
+        }
+        let paired = cfg.vsparq && cfg.n_bits < 8 && cfg.mode != Mode::Uniform;
+        Self { cfg, narrow, wide, weights, paired }
+    }
+
+    /// Trim one activation given whether its pair partner is zero.
+    #[inline(always)]
+    pub fn trim(&self, x: u8, partner_zero: bool) -> u8 {
+        if self.paired && partner_zero {
+            self.wide[x as usize]
+        } else {
+            self.narrow[x as usize]
+        }
+    }
+
+    #[inline(always)]
+    pub fn weight(&self, w: i8) -> i8 {
+        self.weights[(i16::from(w) + 128) as usize]
+    }
+
+    /// In-place SPARQ transform of a reduction slice (pairing included).
+    pub fn trim_slice(&self, xs: &mut [u8]) {
+        if !self.paired {
+            for x in xs.iter_mut() {
+                *x = self.narrow[*x as usize];
+            }
+            return;
+        }
+        let mut i = 0;
+        while i + 1 < xs.len() {
+            let (x0, x1) = (xs[i], xs[i + 1]);
+            xs[i] = self.trim(x0, x1 == 0);
+            xs[i + 1] = self.trim(x1, x0 == 0);
+            i += 2;
+        }
+        if i < xs.len() {
+            xs[i] = self.trim(xs[i], true); // zero-padded partner
+        }
+    }
+
+    /// LUT-accelerated dot product; bit-identical to `vsparq::sparq_dot`.
+    pub fn dot(&self, acts: &[u8], weights: &[i8]) -> i32 {
+        debug_assert_eq!(acts.len(), weights.len());
+        let mut acc = 0i32;
+        if !self.paired {
+            for (&a, &w) in acts.iter().zip(weights) {
+                acc += i32::from(self.narrow[a as usize]) * i32::from(self.weight(w));
+            }
+            return acc;
+        }
+        let mut i = 0;
+        while i + 1 < acts.len() {
+            let (x0, x1) = (acts[i], acts[i + 1]);
+            acc += i32::from(self.trim(x0, x1 == 0)) * i32::from(self.weight(weights[i]));
+            acc += i32::from(self.trim(x1, x0 == 0)) * i32::from(self.weight(weights[i + 1]));
+            i += 2;
+        }
+        if i < acts.len() {
+            acc += i32::from(self.trim(acts[i], true)) * i32::from(self.weight(weights[i]));
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::vsparq::{sparq_dot, trim_pair};
+
+    #[test]
+    fn lut_matches_direct_trim() {
+        for name in ["a8w8", "a4w8", "5opt_r", "3opt", "2opt_r", "6opt_r", "7opt_r_novs"] {
+            let cfg = SparqConfig::named(name).unwrap();
+            let lut = TrimLut::new(cfg);
+            for x0 in 0..=255u8 {
+                for x1 in [0u8, 1, 27, 255] {
+                    let (y0, y1) = trim_pair(x0, x1, cfg);
+                    assert_eq!(lut.trim(x0, x1 == 0), y0, "{name} x0={x0} x1={x1}");
+                    assert_eq!(lut.trim(x1, x0 == 0), y1, "{name} x0={x0} x1={x1}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_dot_matches_reference() {
+        let acts: Vec<u8> = (0..1024).map(|i| ((i * 97) % 256) as u8).collect();
+        let mut acts = acts;
+        for (i, a) in acts.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *a = 0; // inject sparsity
+            }
+        }
+        let weights: Vec<i8> = (0..1024).map(|i| (((i * 31) % 255) as i32 - 127) as i8).collect();
+        for name in ["a8w8", "a8w4", "5opt_r", "3opt", "2opt", "6opt_r", "7opt_r", "a4w8"] {
+            let cfg = SparqConfig::named(name).unwrap();
+            let lut = TrimLut::new(cfg);
+            assert_eq!(
+                lut.dot(&acts, &weights),
+                sparq_dot(&acts, &weights, cfg),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn trim_slice_matches_dot_path() {
+        let cfg = SparqConfig::named("5opt_r").unwrap();
+        let lut = TrimLut::new(cfg);
+        let mut xs: Vec<u8> = (0..255).map(|i| ((i * 11) % 256) as u8).collect(); // odd length
+        let orig = xs.clone();
+        lut.trim_slice(&mut xs);
+        let ones = vec![1i8; xs.len()];
+        let want = sparq_dot(&orig, &ones, cfg);
+        let got: i32 = xs.iter().map(|&x| i32::from(x)).sum();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,167 @@
+//! Uniform min-max quantization (paper §5 base PTQ).
+//!
+//! Activations: symmetric *unsigned* per-layer — post-ReLU tensors are
+//! non-negative, so the grid is [0, max] -> [0, 255] with scale max/255.
+//! Weights: symmetric signed per-kernel (per output channel), grid
+//! [-max|w|, max|w|] -> [-127, 127]. The calibration maxima arrive from
+//! the coordinator (which reduces the calib-HLO outputs over batches).
+
+/// Per-layer activation scale.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ActScale(pub f32);
+
+impl ActScale {
+    /// From a calibration maximum (paper: min-max over ~2K images).
+    pub fn from_max(max: f32) -> Self {
+        Self((max.max(f32::MIN_POSITIVE)) / 255.0)
+    }
+
+    #[inline(always)]
+    pub fn quantize(self, x: f32) -> u8 {
+        // round-half-even, matching jnp.round in the lowered HLO exactly
+        let q = (x / self.0).round_ties_even();
+        q.clamp(0.0, 255.0) as u8
+    }
+
+    #[inline(always)]
+    pub fn dequantize(self, q: u8) -> f32 {
+        f32::from(q) * self.0
+    }
+
+    /// Quantize a whole tensor into a provided buffer (hot path; no
+    /// allocation).
+    pub fn quantize_slice_into(self, xs: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(xs.len(), out.len());
+        let inv = 1.0 / self.0;
+        for (o, &x) in out.iter_mut().zip(xs) {
+            // x is post-ReLU (>= 0); the clamp guards padding values.
+            // round-half-even to match jnp.round in the HLO bit-for-bit.
+            *o = (x * inv).round_ties_even().clamp(0.0, 255.0) as u8;
+        }
+    }
+}
+
+/// Per-output-channel weight scales.
+#[derive(Clone, Debug)]
+pub struct WeightScales(pub Vec<f32>);
+
+impl WeightScales {
+    /// Quantize float weights (K x O, column = output channel) to i8.
+    /// Returns (int weights, scales). Mirrors `layers.quantize_weights`.
+    pub fn quantize(w: &[f32], k: usize, o: usize) -> (Vec<i8>, Self) {
+        assert_eq!(w.len(), k * o);
+        let mut scales = vec![0f32; o];
+        for c in 0..o {
+            let mut amax = 0f32;
+            for r in 0..k {
+                amax = amax.max(w[r * o + c].abs());
+            }
+            scales[c] = amax.max(f32::MIN_POSITIVE) / 127.0;
+        }
+        let mut wq = vec![0i8; k * o];
+        for r in 0..k {
+            for c in 0..o {
+                let q = (w[r * o + c] / scales[c]).round().clamp(-127.0, 127.0);
+                wq[r * o + c] = q as i8;
+            }
+        }
+        (wq, Self(scales))
+    }
+}
+
+/// Statistics reduced over calibration batches for one model: per
+/// quantized conv the running max and running mean of its input tensor.
+#[derive(Clone, Debug, Default)]
+pub struct CalibStats {
+    pub maxes: Vec<f32>,
+    pub means: Vec<f32>,
+    pub batches: usize,
+}
+
+impl CalibStats {
+    pub fn new(layers: usize) -> Self {
+        Self { maxes: vec![0.0; layers], means: vec![0.0; layers], batches: 0 }
+    }
+
+    /// Fold in one calibration batch's (max, mean) vectors.
+    pub fn update(&mut self, maxes: &[f32], means: &[f32]) {
+        assert_eq!(maxes.len(), self.maxes.len());
+        assert_eq!(means.len(), self.means.len());
+        for (m, &v) in self.maxes.iter_mut().zip(maxes) {
+            *m = m.max(v);
+        }
+        for (m, &v) in self.means.iter_mut().zip(means) {
+            *m += v;
+        }
+        self.batches += 1;
+    }
+
+    /// Min-max activation scales (the paper's base quantization).
+    pub fn scales(&self) -> Vec<f32> {
+        self.maxes.iter().map(|&m| ActScale::from_max(m).0).collect()
+    }
+
+    /// Mean activation value per layer (feeds the ACIQ-style baseline).
+    pub fn layer_means(&self) -> Vec<f32> {
+        let n = self.batches.max(1) as f32;
+        self.means.iter().map(|&s| s / n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_roundtrip_error_bounded() {
+        let s = ActScale::from_max(6.0);
+        for i in 0..1000 {
+            let x = 6.0 * (i as f32) / 1000.0;
+            let err = (s.dequantize(s.quantize(x)) - x).abs();
+            assert!(err <= s.0 / 2.0 + 1e-6, "x={x} err={err}");
+        }
+        assert_eq!(s.quantize(0.0), 0);
+        assert_eq!(s.quantize(6.0), 255);
+        assert_eq!(s.quantize(100.0), 255); // clipping
+    }
+
+    #[test]
+    fn quantize_slice_matches_scalar() {
+        let s = ActScale::from_max(3.3);
+        let xs: Vec<f32> = (0..257).map(|i| 3.3 * i as f32 / 256.0).collect();
+        let mut out = vec![0u8; xs.len()];
+        s.quantize_slice_into(&xs, &mut out);
+        for (&x, &q) in xs.iter().zip(&out) {
+            assert_eq!(q, s.quantize(x));
+        }
+    }
+
+    #[test]
+    fn weight_scales_per_channel() {
+        // two channels with very different ranges quantize independently
+        let k = 4;
+        let w = vec![
+            1.0f32, 100.0, //
+            -0.5, 50.0, //
+            0.25, -100.0, //
+            1.0, 25.0,
+        ];
+        let (wq, scales) = WeightScales::quantize(&w, k, 2);
+        assert_eq!(wq[0 * 2 + 0], 127); // 1.0 / (1.0/127)
+        assert_eq!(wq[0 * 2 + 1], 127);
+        assert_eq!(wq[2 * 2 + 1], -127);
+        assert!((scales.0[0] - 1.0 / 127.0).abs() < 1e-7);
+        assert!((scales.0[1] - 100.0 / 127.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn calib_stats_reduce() {
+        let mut st = CalibStats::new(2);
+        st.update(&[1.0, 5.0], &[0.5, 2.0]);
+        st.update(&[2.0, 3.0], &[1.5, 4.0]);
+        assert_eq!(st.maxes, vec![2.0, 5.0]);
+        assert_eq!(st.layer_means(), vec![1.0, 3.0]);
+        let sc = st.scales();
+        assert!((sc[0] - 2.0 / 255.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,32 @@
+//! Bit-exact SPARQ quantization library (paper §3) — the L3 ground truth.
+//!
+//! Operates on already-uniformly-quantized integers: unsigned 8-bit
+//! activations (`u8`, from per-layer symmetric min-max quantization of
+//! post-ReLU tensors) and signed 8-bit weights (`i8`, per-kernel
+//! symmetric). The semantics here are the canonical reference shared
+//! with `python/compile/kernels/ref.py` (same config encoding) and are
+//! cross-validated for equality against the Pallas kernel through the
+//! exported HLO (rust/tests/cross_validation.rs).
+//!
+//! Module map:
+//! * [`config`]  — the 5-field configuration vector + paper-named presets
+//! * [`bsparq`]  — bit-sparsity window trimming (§3.1)
+//! * [`vsparq`]  — pairwise budget sharing (§3.2) + fused dot products
+//! * [`lut`]     — 256-entry trim tables; the optimized hot path
+//! * [`minmax`]  — float<->int uniform quantization (paper §5 base PTQ)
+//! * [`baselines`] — ACIQ-style analytic clipping, SySMT, naive A4W8
+//! * [`footprint`] — §5.1 metadata/memory model (bits per activation)
+//! * [`shared_shift`] — the §6 future-work mitigation: one ShiftCtrl
+//!   shared by a group of activations (footprint/accuracy trade)
+
+pub mod baselines;
+pub mod bsparq;
+pub mod config;
+pub mod footprint;
+pub mod lut;
+pub mod minmax;
+pub mod shared_shift;
+pub mod vsparq;
+
+pub use config::{Mode, SparqConfig};
+pub use lut::TrimLut;

@@ -1,0 +1,145 @@
+//! Shared-ShiftCtrl trimming — the paper's §6 future-work direction.
+//!
+//! "The memory footprint may be decreased by ... sharing ShiftCtrl for a
+//! number of activations. We leave these research directions for future
+//! work." This module implements that direction so the footprint/accuracy
+//! trade can actually be measured (bench `table5_area` prints the
+//! footprint side; the ablation below and `examples/hw_sim.rs` the error
+//! side):
+//!
+//! A group of `G` consecutive activations shares one window placement —
+//! chosen as the placement that covers the *largest* MSB in the group
+//! (any smaller choice would saturate the largest member, which
+//! dominates the dot-product error). Each activation is then rounded
+//! into that common window. vSPARQ is disabled in this variant (the
+//! paper's §6 lists dropping vSPARQ as the companion mitigation; a
+//! shared shift is also incompatible with per-pair budget doubling).
+
+use super::bsparq::msb_index;
+use super::config::{Mode, SparqConfig};
+
+/// Shared-shift trim of one group in place. `width`/`mode` follow the
+/// usual bSPARQ placement rules applied to the group's max MSB.
+pub fn trim_group(xs: &mut [u8], width: u8, mode: Mode, round: bool) {
+    debug_assert!((1..8).contains(&width));
+    let max_msb = xs.iter().copied().filter(|&x| x != 0).map(msb_index).max();
+    let Some(max_msb) = max_msb else { return }; // all zero
+    let s = super::bsparq::shift_for(1u8 << max_msb, width, mode);
+    let qmax = (1u32 << width) - 1;
+    for x in xs.iter_mut() {
+        let xi = u32::from(*x);
+        let q = if round && s > 0 { (xi + (1 << (s - 1))) >> s } else { xi >> s };
+        *x = (q.min(qmax) << s) as u8;
+    }
+}
+
+/// Apply shared-shift trimming along a reduction slice with group size
+/// `g` (the footprint model's `shift_group`).
+pub fn trim_slice_grouped(xs: &mut [u8], cfg: SparqConfig, g: usize) {
+    assert!(g >= 1);
+    if cfg.n_bits >= 8 || cfg.mode == Mode::Uniform {
+        return;
+    }
+    for chunk in xs.chunks_mut(g) {
+        trim_group(chunk, cfg.n_bits, cfg.mode, cfg.round);
+    }
+}
+
+/// Mean squared trim error over a slice — the ablation metric comparing
+/// per-activation SPARQ against shared-shift groups.
+pub fn trim_mse(orig: &[u8], trimmed: &[u8]) -> f64 {
+    assert_eq!(orig.len(), trimmed.len());
+    let s: f64 = orig
+        .iter()
+        .zip(trimmed)
+        .map(|(&a, &b)| {
+            let d = f64::from(a) - f64::from(b);
+            d * d
+        })
+        .sum();
+    s / orig.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bsparq::trim_one;
+
+    #[test]
+    fn group_of_one_equals_per_activation_trim() {
+        let cfg = SparqConfig::named("5opt_r_novs").unwrap();
+        for x in 0..=255u8 {
+            let mut g = [x];
+            trim_group(&mut g, 4, Mode::Full, true);
+            assert_eq!(g[0], trim_one(x, cfg), "x={x}");
+        }
+    }
+
+    #[test]
+    fn group_shift_follows_largest_member() {
+        // 200 forces shift 4 (msb 7); 7 would alone use shift 0 and is
+        // coarsened to the shared window (rounded to 0 or 16)
+        let mut g = [200u8, 7];
+        trim_group(&mut g, 4, Mode::Full, false);
+        assert_eq!(g[0], 192); // 200 >> 4 = 12 -> 192
+        assert_eq!(g[1], 0); // 7 >> 4 = 0
+        let mut g = [200u8, 9];
+        trim_group(&mut g, 4, Mode::Full, true);
+        assert_eq!(g[1], 16); // 9 + 8 = 17 >> 4 = 1: rounds up on the shared grid
+        let mut g = [200u8, 7];
+        trim_group(&mut g, 4, Mode::Full, true);
+        assert_eq!(g[1], 0); // 7 + 8 = 15 >> 4 = 0: below half the grid step
+    }
+
+    #[test]
+    fn all_zero_group_untouched() {
+        let mut g = [0u8; 8];
+        trim_group(&mut g, 4, Mode::Full, true);
+        assert_eq!(g, [0u8; 8]);
+    }
+
+    #[test]
+    fn error_grows_with_group_size() {
+        // the accuracy side of the §6 trade: bigger groups -> coarser
+        // windows for small members -> monotonically (weakly) worse MSE
+        let cfg = SparqConfig::named("5opt_r_novs").unwrap();
+        let orig: Vec<u8> = (0..4096)
+            .map(|i| {
+                let h = (i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33;
+                if h % 4 == 0 {
+                    0
+                } else {
+                    (h % 256) as u8
+                }
+            })
+            .collect();
+        let mut prev = -1.0;
+        for g in [1usize, 2, 4, 16, 64] {
+            let mut t = orig.clone();
+            trim_slice_grouped(&mut t, cfg, g);
+            let mse = trim_mse(&orig, &t);
+            assert!(mse >= prev - 1e-12, "g={g}: {mse} < {prev}");
+            prev = mse;
+        }
+        assert!(prev > 0.0);
+    }
+
+    #[test]
+    fn values_stay_on_window_grid() {
+        let cfg = SparqConfig::named("3opt_r_novs").unwrap();
+        let mut xs: Vec<u8> = (0..=255).collect();
+        trim_slice_grouped(&mut xs, cfg, 4);
+        for (i, &y) in xs.iter().enumerate() {
+            // reconstructed values must still fit 8 bits and be
+            // reachable by some 4-bit window (q << s form)
+            let _ = i;
+            let mut ok = false;
+            for s in 0..=4u32 {
+                if y as u32 % (1 << s) == 0 && (y as u32 >> s) < 16 {
+                    ok = true;
+                }
+            }
+            assert!(ok, "{y} not on any 4-bit window grid");
+        }
+    }
+}

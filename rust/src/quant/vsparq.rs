@@ -1,0 +1,185 @@
+//! vSPARQ — pairwise budget sharing (paper §3.2, eq. 2) and the SPARQ
+//! dot product the hardware computes.
+//!
+//! Activations are processed in (even, odd) pairs along the reduction
+//! axis. If one of the pair is zero, the other keeps a doubled window
+//! (2n bits, full placement set — a full 8-bit passthrough for n=4);
+//! only when both are non-zero are both bSPARQ-trimmed to n bits.
+
+use super::bsparq::{requant_weight, trim_one, trim_window};
+use super::config::{Mode, SparqConfig};
+
+/// Trim one activation pair (eq. 2). Returns the reconstructed values.
+#[inline]
+pub fn trim_pair(x0: u8, x1: u8, cfg: SparqConfig) -> (u8, u8) {
+    if !cfg.vsparq || cfg.n_bits >= 8 || cfg.mode == Mode::Uniform {
+        return (trim_one(x0, cfg), trim_one(x1, cfg));
+    }
+    let wide = (2 * cfg.n_bits).min(8);
+    let y0 = if x1 == 0 {
+        trim_window(x0, wide, Mode::Full, cfg.round)
+    } else {
+        trim_one(x0, cfg)
+    };
+    let y1 = if x0 == 0 {
+        trim_window(x1, wide, Mode::Full, cfg.round)
+    } else {
+        trim_one(x1, cfg)
+    };
+    (y0, y1)
+}
+
+/// Apply the full SPARQ transform in place along a reduction slice.
+/// Odd-length slices behave as if zero-padded by one lane (the hardware
+/// feeds a zero into the second port), matching the Pallas kernel.
+pub fn sparq_trim_slice(xs: &mut [u8], cfg: SparqConfig) {
+    let n = xs.len();
+    let mut i = 0;
+    while i + 1 < n {
+        let (y0, y1) = trim_pair(xs[i], xs[i + 1], cfg);
+        xs[i] = y0;
+        xs[i + 1] = y1;
+        i += 2;
+    }
+    if i < n {
+        let (y0, _) = trim_pair(xs[i], 0, cfg);
+        xs[i] = y0;
+    }
+}
+
+/// Reference SPARQ dot product: trims activations per the config (with
+/// vSPARQ pairing), requantizes weights, and accumulates in i32 — the
+/// scalar ground truth for the PE simulator and the Pallas kernel.
+pub fn sparq_dot(acts: &[u8], weights: &[i8], cfg: SparqConfig) -> i32 {
+    assert_eq!(acts.len(), weights.len());
+    let mut acc = 0i32;
+    let mut i = 0;
+    while i < acts.len() {
+        let x0 = acts[i];
+        let x1 = if i + 1 < acts.len() { acts[i + 1] } else { 0 };
+        let (y0, y1) = trim_pair(x0, x1, cfg);
+        acc += i32::from(y0) * i32::from(requant_weight(weights[i], cfg.w_bits));
+        if i + 1 < acts.len() {
+            acc += i32::from(y1) * i32::from(requant_weight(weights[i + 1], cfg.w_bits));
+        }
+        i += 2;
+    }
+    acc
+}
+
+/// Fraction of activation pairs in which at least one value is zero —
+/// the opportunity metric that motivates vSPARQ (paper §1).
+pub fn pair_zero_fraction(acts: &[u8]) -> f64 {
+    if acts.len() < 2 {
+        return 0.0;
+    }
+    let pairs = acts.len() / 2;
+    let mut hit = 0usize;
+    for p in 0..pairs {
+        if acts[2 * p] == 0 || acts[2 * p + 1] == 0 {
+            hit += 1;
+        }
+    }
+    hit as f64 / pairs as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(name: &str) -> SparqConfig {
+        SparqConfig::named(name).unwrap()
+    }
+
+    #[test]
+    fn zero_partner_donates_budget() {
+        // n=4: a zero partner means full 8-bit passthrough
+        let (y0, y1) = trim_pair(213, 0, cfg("5opt"));
+        assert_eq!((y0, y1), (213, 0));
+        let (y0, y1) = trim_pair(0, 213, cfg("5opt"));
+        assert_eq!((y0, y1), (0, 213));
+        // both non-zero: both trimmed (213 = 0b11010101 -> 208)
+        let (y0, y1) = trim_pair(213, 7, cfg("5opt"));
+        assert_eq!((y0, y1), (208, 7));
+    }
+
+    #[test]
+    fn wide_window_at_3_and_2_bits() {
+        // n=3: zero partner gives a 6-bit window — 213 still trims
+        let (y0, _) = trim_pair(213, 0, cfg("6opt_r"));
+        // 213 = 0b11010101, 6-bit window at shift 2, round:
+        // q = (213 + 2) >> 2 = 53 -> 53 << 2 = 212
+        assert_eq!(y0, 212);
+        // n=2: 4-bit window, shift 4, round: 13 + (5>=8? no) -> 13<<4=208
+        let (y0, _) = trim_pair(213, 0, cfg("7opt_r"));
+        assert_eq!(y0, 208);
+    }
+
+    #[test]
+    fn novs_ignores_partner() {
+        let c = cfg("5opt_r_novs");
+        let (y0, y1) = trim_pair(213, 0, c);
+        assert_eq!(y0, 208); // trimmed despite zero partner
+        assert_eq!(y1, 0);
+    }
+
+    #[test]
+    fn dot_equals_manual() {
+        let c = cfg("5opt_r");
+        let acts = [0u8, 200, 27, 27, 255, 1];
+        let w = [1i8, 2, 3, -4, 5, -6];
+        // pairs: (0,200) -> (0,200); (27,27) -> (28,28); (255,1) -> (240?,1)
+        // 255 msb=7 shift=4 q=15 (round: 15+1=16 saturate 15) -> 240
+        let manual = 0 * 1 + 200 * 2 + 28 * 3 + 28 * -4 + 240 * 5 + 1 * -6;
+        assert_eq!(sparq_dot(&acts, &w, c), manual);
+    }
+
+    #[test]
+    fn a8w8_dot_is_exact() {
+        let acts: Vec<u8> = (0..=255).collect();
+        let w: Vec<i8> = (0..256).map(|i| ((i * 7) % 255 - 127) as i8).collect();
+        let exact: i32 = acts
+            .iter()
+            .zip(&w)
+            .map(|(&a, &b)| i32::from(a) * i32::from(b))
+            .sum();
+        assert_eq!(sparq_dot(&acts, &w, SparqConfig::A8W8), exact);
+    }
+
+    #[test]
+    fn odd_length_pads_with_zero() {
+        let c = cfg("5opt");
+        // last lane alone: zero partner -> full 8-bit passthrough
+        assert_eq!(sparq_dot(&[213], &[1], c), 213);
+        let mut xs = [213u8];
+        sparq_trim_slice(&mut xs, c);
+        assert_eq!(xs[0], 213);
+    }
+
+    #[test]
+    fn trim_slice_matches_pairs() {
+        let c = cfg("3opt_r");
+        let mut xs: Vec<u8> = (0..=255).map(|i| (i * 37 % 256) as u8).collect();
+        let orig = xs.clone();
+        sparq_trim_slice(&mut xs, c);
+        for p in 0..xs.len() / 2 {
+            let (y0, y1) = trim_pair(orig[2 * p], orig[2 * p + 1], c);
+            assert_eq!((xs[2 * p], xs[2 * p + 1]), (y0, y1));
+        }
+    }
+
+    #[test]
+    fn pair_zero_fraction_counts() {
+        assert_eq!(pair_zero_fraction(&[0, 1, 2, 3]), 0.5);
+        assert_eq!(pair_zero_fraction(&[1, 1]), 0.0);
+        assert_eq!(pair_zero_fraction(&[0, 0]), 1.0);
+    }
+
+    #[test]
+    fn uniform_mode_never_pairs() {
+        let c = cfg("a4w8");
+        let (y0, y1) = trim_pair(213, 0, c);
+        // uniform requant of 213 on the 17-grid: round(213/17)=13 -> 221
+        assert_eq!((y0, y1), (221, 0));
+    }
+}

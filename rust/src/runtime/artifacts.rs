@@ -1,0 +1,125 @@
+//! Artifact manifest — the contract between `python/compile/aot.py` and
+//! the rust coordinator.
+//!
+//! `artifacts/manifest.json` lists every exported model variant with its
+//! HLO files (float / calib / sparq), weight archive and graph metadata.
+//! This module parses it with a small hand-rolled JSON reader (the repo
+//! keeps third-party dependencies to the ones baked into the image).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::JsonValue;
+
+/// Which lowered entry point of a model to load.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// FP32 folded forward: f(img) -> (logits,)
+    Float,
+    /// Calibration pass: f(img) -> (max[L], mean[L])
+    Calib,
+    /// SPARQ forward: f(img, scales[L], cfg[5]) -> (logits,)
+    Sparq,
+}
+
+impl ArtifactKind {
+    fn key(self) -> &'static str {
+        match self {
+            Self::Float => "float",
+            Self::Calib => "calib",
+            Self::Sparq => "sparq",
+        }
+    }
+}
+
+/// One exported model variant (dense or 2:4-pruned).
+#[derive(Clone, Debug)]
+pub struct ModelArtifacts {
+    /// e.g. "resnet10" or "resnet10_p24"
+    pub tag: String,
+    pub arch: String,
+    pub pruned: bool,
+    /// number of quantized convs == length of the activation-scale vector
+    pub quant_convs: usize,
+    dir: PathBuf,
+    files: std::collections::HashMap<String, String>,
+    pub weights: String,
+    pub meta: String,
+}
+
+impl ModelArtifacts {
+    pub fn hlo_path(&self, kind: ArtifactKind) -> PathBuf {
+        self.dir.join(&self.files[kind.key()])
+    }
+
+    pub fn weights_path(&self) -> PathBuf {
+        self.dir.join(&self.weights)
+    }
+
+    pub fn meta_path(&self) -> PathBuf {
+        self.dir.join(&self.meta)
+    }
+}
+
+/// Parsed `manifest.json`.
+#[derive(Debug)]
+pub struct Manifest {
+    pub models: Vec<ModelArtifacts>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let root = JsonValue::parse(&text).context("parsing manifest.json")?;
+        let mut models = Vec::new();
+        for row in root.as_array().context("manifest root must be an array")? {
+            let files = row.get("files").context("manifest row missing `files`")?;
+            let mut map = std::collections::HashMap::new();
+            for kind in ["float", "calib", "sparq"] {
+                map.insert(
+                    kind.to_string(),
+                    files.get(kind).and_then(|v| v.as_str()).context("bad file entry")?.to_string(),
+                );
+            }
+            models.push(ModelArtifacts {
+                tag: row.get("tag").and_then(|v| v.as_str()).context("tag")?.to_string(),
+                arch: row.get("arch").and_then(|v| v.as_str()).context("arch")?.to_string(),
+                pruned: row.get("pruned").and_then(|v| v.as_bool()).unwrap_or(false),
+                quant_convs: row
+                    .get("quant_convs")
+                    .and_then(|v| v.as_f64())
+                    .context("quant_convs")? as usize,
+                dir: artifacts_dir.to_path_buf(),
+                files: map,
+                weights: row.get("weights").and_then(|v| v.as_str()).context("weights")?.to_string(),
+                meta: row.get("meta").and_then(|v| v.as_str()).context("meta")?.to_string(),
+            });
+        }
+        Ok(Self { models, dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn get(&self, tag: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .iter()
+            .find(|m| m.tag == tag)
+            .ok_or_else(|| anyhow::anyhow!("model `{tag}` not in manifest ({:?})", self.tags()))
+    }
+
+    pub fn tags(&self) -> Vec<&str> {
+        self.models.iter().map(|m| m.tag.as_str()).collect()
+    }
+
+    /// Dense (unpruned) model tags — the Table 1–4 population.
+    pub fn dense_tags(&self) -> Vec<&str> {
+        self.models.iter().filter(|m| !m.pruned).map(|m| m.tag.as_str()).collect()
+    }
+
+    /// Pruned tags — the Table 6 population.
+    pub fn pruned_tags(&self) -> Vec<&str> {
+        self.models.iter().filter(|m| m.pruned).map(|m| m.tag.as_str()).collect()
+    }
+}

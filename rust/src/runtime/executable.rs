@@ -1,0 +1,138 @@
+//! Typed wrapper around a compiled PJRT executable.
+//!
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! returns a single tuple literal which is decomposed into [`TensorOut`]s
+//! here. Inputs are [`TensorArg`]s — shape + contiguous host data —
+//! converted to literals without intermediate copies via
+//! `create_from_shape_and_untyped_data`.
+
+use anyhow::Result;
+
+/// A host tensor handed to the runtime (f32 or i32, C-contiguous).
+#[derive(Clone, Debug)]
+pub enum TensorArg {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl TensorArg {
+    pub fn f32(dims: &[usize], data: Vec<f32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self::F32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn i32(dims: &[usize], data: Vec<i32>) -> Self {
+        debug_assert_eq!(dims.iter().product::<usize>(), data.len());
+        Self::I32 { dims: dims.to_vec(), data }
+    }
+
+    pub fn elements(&self) -> usize {
+        match self {
+            Self::F32 { data, .. } => data.len(),
+            Self::I32 { data, .. } => data.len(),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Self::F32 { dims, data } => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                dims,
+                bytemuck_cast_slice_f32(data),
+            ),
+            Self::I32 { dims, data } => xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S32,
+                dims,
+                bytemuck_cast_slice_i32(data),
+            ),
+        };
+        lit.map_err(|e| anyhow::anyhow!("building literal: {e}"))
+    }
+}
+
+fn bytemuck_cast_slice_f32(v: &[f32]) -> &[u8] {
+    // f32 -> u8 reinterpretation is always valid (alignment only shrinks).
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+fn bytemuck_cast_slice_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+/// One output tensor copied back to the host.
+#[derive(Clone, Debug)]
+pub struct TensorOut {
+    pub dims: Vec<usize>,
+    pub data: TensorData,
+}
+
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorOut {
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            TensorData::F32(v) => v,
+            TensorData::I32(_) => panic!("output is i32, expected f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            TensorData::I32(v) => v,
+            TensorData::F32(_) => panic!("output is f32, expected i32"),
+        }
+    }
+
+    fn from_literal(lit: xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().map_err(|e| anyhow::anyhow!("output shape: {e}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(
+                lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("reading f32 output: {e}"))?,
+            ),
+            xla::ElementType::S32 => TensorData::I32(
+                lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("reading i32 output: {e}"))?,
+            ),
+            other => anyhow::bail!("unsupported output element type {other:?}"),
+        };
+        Ok(Self { dims, data })
+    }
+}
+
+/// A compiled model entry point. `run` is `&self` and internally
+/// synchronized by PJRT, so executables can be shared across the
+/// coordinator's worker tasks via `Arc`.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// The xla crate wraps raw pointers without declaring Send/Sync; the PJRT
+// CPU client serializes execution internally and the wrapper holds no
+// host-side mutable state, so sharing across threads is sound here.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    pub(crate) fn new(exe: xla::PjRtLoadedExecutable) -> Self {
+        Self { exe }
+    }
+
+    /// Execute with host inputs; returns the decomposed output tuple.
+    pub fn run(&self, args: &[TensorArg]) -> Result<Vec<TensorOut>> {
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing: {e}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow::anyhow!("untupling result: {e}"))?;
+        parts.into_iter().map(TensorOut::from_literal).collect()
+    }
+}

@@ -1,0 +1,76 @@
+//! L3 runtime — loads AOT artifacts (HLO text) and executes them on PJRT.
+//!
+//! The request path is: [`PjrtRuntime::cpu`] once at startup,
+//! [`PjrtRuntime::load`] per artifact (compile is cached by artifact
+//! path), then [`Executable::run`] per batch. Python never appears here;
+//! the HLO text was produced at build time by `python/compile/aot.py`.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md). All artifacts
+//! are lowered with `return_tuple=True`, so outputs are unwrapped from a
+//! tuple literal here.
+
+mod artifacts;
+mod executable;
+
+pub use artifacts::{ArtifactKind, Manifest, ModelArtifacts};
+pub use executable::{Executable, TensorArg, TensorOut};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client plus a compile cache keyed by artifact path.
+///
+/// Compilation of a full-model HLO takes O(100 ms)–O(s); the cache makes
+/// `load` idempotent so the coordinator can request executables lazily.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, std::sync::Arc<Executable>>>,
+}
+
+impl PjrtRuntime {
+    /// CPU PJRT client (the only backend in this environment).
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load + compile an HLO-text artifact; cached per canonical path.
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        let key = path
+            .canonicalize()
+            .with_context(|| format!("artifact not found: {}", path.display()))?;
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            key.to_str().expect("artifact path must be utf-8"),
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e}", key.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", key.display()))?;
+        let exe = std::sync::Arc::new(Executable::new(exe));
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of cached executables (metrics).
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}

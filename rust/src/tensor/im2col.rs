@@ -1,0 +1,129 @@
+//! im2col with XLA-compatible SAME padding and the (C, kh, kw) feature
+//! order produced by `lax.conv_general_dilated_patches` — the contract
+//! that makes the native GEMM engine bit-compatible with the exported
+//! HLO graphs (verified in rust/tests/cross_validation.rs).
+
+/// XLA SAME padding: total = max((out-1)*stride + k - in, 0), split
+/// low = total/2 (favouring the high side on odd totals).
+pub fn same_padding(in_dim: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = out_dim(in_dim, stride);
+    let total = ((out - 1) * stride + k).saturating_sub(in_dim);
+    (total / 2, total - total / 2)
+}
+
+/// SAME output size: ceil(in / stride).
+pub fn out_dim(in_dim: usize, stride: usize) -> usize {
+    in_dim.div_ceil(stride)
+}
+
+/// im2col over a quantized NHWC u8 activation tensor.
+///
+/// Returns `(patches, oh, ow)` where `patches` is row-major
+/// `(n*oh*ow, c*k*k)`; each row's features are ordered channel-major:
+/// `f = c*(k*k) + ky*k + kx`. Out-of-bounds taps contribute 0 — which is
+/// also the quantized encoding of 0.0 activations, so padding is
+/// transparent to SPARQ.
+pub fn im2col_u8(
+    acts: &[u8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+) -> (Vec<u8>, usize, usize) {
+    assert_eq!(acts.len(), n * h * w * c);
+    let (oh, ow) = (out_dim(h, stride), out_dim(w, stride));
+    let (pad_t, _) = same_padding(h, k, stride);
+    let (pad_l, _) = same_padding(w, k, stride);
+    let feat = c * k * k;
+    let mut out = vec![0u8; n * oh * ow * feat];
+
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((ni * oh + oy) * ow + ox) * feat;
+                for ky in 0..k {
+                    let iy = (oy * stride + ky) as isize - pad_t as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..k {
+                        let ix = (ox * stride + kx) as isize - pad_l as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = ((ni * h + iy as usize) * w + ix as usize) * c;
+                        for ci in 0..c {
+                            out[row + ci * k * k + ky * k + kx] = acts[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (out, oh, ow)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_matches_xla() {
+        // stride 1, k 3: pad (1, 1); out = in
+        assert_eq!(same_padding(20, 3, 1), (1, 1));
+        assert_eq!(out_dim(20, 1), 20);
+        // stride 2, k 3, in 20: out 10, total = 9*2+3-20 = 1 -> (0, 1)
+        assert_eq!(same_padding(20, 3, 2), (0, 1));
+        assert_eq!(out_dim(20, 2), 10);
+        // 1x1 stride 1: no padding
+        assert_eq!(same_padding(5, 1, 1), (0, 0));
+        // 1x1 stride 2, in 5: out 3, total = 2*2+1-5 = 0
+        assert_eq!(same_padding(5, 1, 2), (0, 0));
+    }
+
+    #[test]
+    fn identity_1x1() {
+        let acts: Vec<u8> = (0..2 * 2 * 3).map(|i| i as u8).collect(); // 1x2x2x3
+        let (p, oh, ow) = im2col_u8(&acts, 1, 2, 2, 3, 1, 1);
+        assert_eq!((oh, ow), (2, 2));
+        assert_eq!(p, acts); // 1x1 conv patches are the input itself
+    }
+
+    #[test]
+    fn feature_order_channel_major() {
+        // 3x3 single-channel image, k=3 centered patch == image
+        let acts: Vec<u8> = (1..=9).collect();
+        let (p, oh, ow) = im2col_u8(&acts, 1, 3, 3, 1, 3, 1);
+        assert_eq!((oh, ow), (3, 3));
+        let center = &p[(1 * 3 + 1) * 9..(1 * 3 + 1) * 9 + 9];
+        assert_eq!(center, &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        // corner (0,0): top-left taps padded
+        let corner = &p[..9];
+        assert_eq!(corner, &[0, 0, 0, 0, 1, 2, 0, 4, 5]);
+    }
+
+    #[test]
+    fn two_channels_grouped() {
+        // 1x1x2x2 (h=1, w=2, c=2), k=1: features grouped per channel
+        let acts = vec![10u8, 20, 30, 40];
+        let (p, _, _) = im2col_u8(&acts, 1, 1, 2, 2, 1, 1);
+        assert_eq!(p, vec![10, 20, 30, 40]);
+        // k=3 on h=1: only middle row in bounds; feature layout c-major
+        let (p3, oh, ow) = im2col_u8(&acts, 1, 1, 2, 2, 3, 1);
+        assert_eq!((oh, ow), (1, 2));
+        let row0 = &p3[..18];
+        // c0: ky=1 row -> [pad, 10, 30]; c1: [pad, 20, 40]
+        assert_eq!(row0[3..6], [0, 10, 30]);
+        assert_eq!(row0[9 + 3..9 + 6], [0, 20, 40]);
+    }
+
+    #[test]
+    fn stride2_shapes() {
+        let acts = vec![1u8; 1 * 20 * 20 * 4];
+        let (p, oh, ow) = im2col_u8(&acts, 1, 20, 20, 4, 3, 2);
+        assert_eq!((oh, ow), (10, 10));
+        assert_eq!(p.len(), 100 * 36);
+    }
+}

@@ -1,0 +1,157 @@
+//! Small tensor substrate for the native engine: NHWC buffers and the
+//! im2col lowering that turns convolutions into the GEMMs the paper's
+//! hardware actually executes (§4: "it is a standard practice to map the
+//! convolution operation to matrix multiplication").
+
+pub mod im2col;
+
+pub use im2col::{im2col_u8, out_dim, same_padding};
+
+/// Plain NHWC f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn zeros(n: usize, h: usize, w: usize, c: usize) -> Self {
+        Self { n, h, w, c, data: vec![0.0; n * h * w * c] }
+    }
+
+    pub fn from_vec(n: usize, h: usize, w: usize, c: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), n * h * w * c);
+        Self { n, h, w, c, data }
+    }
+
+    #[inline(always)]
+    pub fn at(&self, n: usize, y: usize, x: usize, c: usize) -> f32 {
+        self.data[((n * self.h + y) * self.w + x) * self.c + c]
+    }
+
+    #[inline(always)]
+    pub fn at_mut(&mut self, n: usize, y: usize, x: usize, c: usize) -> &mut f32 {
+        &mut self.data[((n * self.h + y) * self.w + x) * self.c + c]
+    }
+
+    pub fn relu_inplace(&mut self) {
+        for v in &mut self.data {
+            *v = v.max(0.0);
+        }
+    }
+
+    /// 2x2 stride-2 max pool (VALID), matching `layers._pool2`.
+    pub fn maxpool2(&self) -> Self {
+        self.pool2(|a, b, c, d| a.max(b).max(c).max(d))
+    }
+
+    /// 2x2 stride-2 average pool (VALID).
+    pub fn avgpool2(&self) -> Self {
+        self.pool2(|a, b, c, d| (a + b + c + d) / 4.0)
+    }
+
+    fn pool2(&self, f: impl Fn(f32, f32, f32, f32) -> f32) -> Self {
+        let (oh, ow) = (self.h / 2, self.w / 2);
+        let mut out = Self::zeros(self.n, oh, ow, self.c);
+        for n in 0..self.n {
+            for y in 0..oh {
+                for x in 0..ow {
+                    for c in 0..self.c {
+                        *out.at_mut(n, y, x, c) = f(
+                            self.at(n, 2 * y, 2 * x, c),
+                            self.at(n, 2 * y, 2 * x + 1, c),
+                            self.at(n, 2 * y + 1, 2 * x, c),
+                            self.at(n, 2 * y + 1, 2 * x + 1, c),
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Global average pool -> (n, c) row-major.
+    pub fn gap(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n * self.c];
+        let inv = 1.0 / (self.h * self.w) as f32;
+        for n in 0..self.n {
+            for y in 0..self.h {
+                for x in 0..self.w {
+                    for c in 0..self.c {
+                        out[n * self.c + c] += self.at(n, y, x, c);
+                    }
+                }
+            }
+        }
+        for v in &mut out {
+            *v *= inv;
+        }
+        out
+    }
+
+    /// Channel concat of NHWC tensors with identical spatial dims.
+    pub fn concat_channels(parts: &[&TensorF32]) -> Self {
+        let (n, h, w) = (parts[0].n, parts[0].h, parts[0].w);
+        let c: usize = parts.iter().map(|p| p.c).sum();
+        let mut out = Self::zeros(n, h, w, c);
+        for ni in 0..n {
+            for y in 0..h {
+                for x in 0..w {
+                    let mut co = 0;
+                    for p in parts {
+                        assert_eq!((p.n, p.h, p.w), (n, h, w), "concat shape mismatch");
+                        for ci in 0..p.c {
+                            *out.at_mut(ni, y, x, co + ci) = p.at(ni, y, x, ci);
+                        }
+                        co += p.c;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.data.len(), other.data.len(), "add shape mismatch");
+        let mut out = self.clone();
+        for (o, &v) in out.data.iter_mut().zip(&other.data) {
+            *o += v;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pools() {
+        let t = TensorF32::from_vec(1, 2, 2, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.maxpool2().data, vec![4.0]);
+        assert_eq!(t.avgpool2().data, vec![2.5]);
+    }
+
+    #[test]
+    fn gap_and_concat() {
+        let a = TensorF32::from_vec(1, 1, 2, 1, vec![1.0, 3.0]);
+        let b = TensorF32::from_vec(1, 1, 2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        let cat = TensorF32::concat_channels(&[&a, &b]);
+        assert_eq!(cat.c, 3);
+        assert_eq!(cat.data, vec![1.0, 5.0, 6.0, 3.0, 7.0, 8.0]);
+        let g = cat.gap();
+        assert_eq!(g, vec![2.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn relu_and_add() {
+        let mut t = TensorF32::from_vec(1, 1, 1, 3, vec![-1.0, 0.5, 2.0]);
+        t.relu_inplace();
+        assert_eq!(t.data, vec![0.0, 0.5, 2.0]);
+        let u = t.add(&t);
+        assert_eq!(u.data, vec![0.0, 1.0, 4.0]);
+    }
+}

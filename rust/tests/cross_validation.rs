@@ -1,0 +1,172 @@
+//! Cross-validation: the native rust engine vs the PJRT/HLO path.
+//!
+//! The two implementations share *no* code — the HLO graph was built by
+//! JAX (with the Pallas kernel inside) and the native engine is pure
+//! rust — so agreement here validates the entire integer semantics
+//! chain: ref.py == Pallas == quant:: == model::gemm, plus the float
+//! plumbing (im2col order, SAME padding, scales, bias, dequant).
+
+use std::path::PathBuf;
+
+use sparq::coordinator::{calibrate, evaluate_native, evaluate_pjrt};
+use sparq::data::Dataset;
+use sparq::model::{Engine, EngineMode, Graph, Weights};
+use sparq::quant::SparqConfig;
+use sparq::runtime::{ArtifactKind, Manifest, PjrtRuntime, TensorArg};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+struct Ctx {
+    rt: PjrtRuntime,
+    manifest: Manifest,
+    eval: Dataset,
+    calib_ds: Dataset,
+}
+
+impl Ctx {
+    fn new() -> Self {
+        let dir = artifacts_dir();
+        Self {
+            rt: PjrtRuntime::cpu().unwrap(),
+            manifest: Manifest::load(&dir).unwrap(),
+            eval: Dataset::load(&dir.join("test.bin")).unwrap(),
+            calib_ds: Dataset::load(&dir.join("train.bin")).unwrap(),
+        }
+    }
+}
+
+/// Max |logit difference| between native and PJRT on one batch.
+fn logit_gap(ctx: &Ctx, tag: &str, cfg: SparqConfig, batch: usize) -> f32 {
+    let model = ctx.manifest.get(tag).unwrap();
+    let graph = Graph::load(&model.meta_path()).unwrap();
+    let weights = Weights::load(&model.weights_path()).unwrap();
+    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128).unwrap().scales();
+
+    let engine =
+        Engine::new(&graph, &weights, cfg, &scales, EngineMode::Dense).unwrap();
+    let mut buf = Vec::new();
+    ctx.eval.batch_f32_into(0, batch, &mut buf);
+    let native = engine.forward(&buf, batch).unwrap();
+
+    // PJRT path needs the full lowered batch
+    let mut full = Vec::new();
+    ctx.eval.batch_f32_into(0, graph.eval_batch, &mut full);
+    let exe = ctx.rt.load(&model.hlo_path(ArtifactKind::Sparq)).unwrap();
+    let [h, w, c] = graph.input_hwc;
+    let out = exe
+        .run(&[
+            TensorArg::f32(&[graph.eval_batch, h, w, c], full),
+            TensorArg::f32(&[scales.len()], scales.clone()),
+            TensorArg::i32(&[5], cfg.to_vec().to_vec()),
+        ])
+        .unwrap();
+    let pjrt = out[0].as_f32();
+
+    let mut gap = 0f32;
+    let mut scale = 0f32;
+    for i in 0..batch * graph.num_classes {
+        gap = gap.max((native[i] - pjrt[i]).abs());
+        scale = scale.max(pjrt[i].abs());
+    }
+    gap / scale.max(1.0)
+}
+
+#[test]
+fn native_matches_pjrt_resnet10_across_configs() {
+    let ctx = Ctx::new();
+    for name in ["a8w8", "5opt_r", "2opt", "7opt_r", "a4w8", "a8w4"] {
+        let gap = logit_gap(&ctx, "resnet10", SparqConfig::named(name).unwrap(), 16);
+        // integer cores are bit-exact; the float epilogue (dequant, bias,
+        // gap, fc) accumulates in different orders -> tiny fp error only
+        assert!(gap < 2e-4, "{name}: relative logit gap {gap}");
+    }
+}
+
+#[test]
+fn native_matches_pjrt_every_dense_arch() {
+    let ctx = Ctx::new();
+    let cfg = SparqConfig::named("3opt_r").unwrap();
+    for tag in ctx.manifest.dense_tags().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
+        let gap = logit_gap(&ctx, &tag, cfg, 8);
+        assert!(gap < 5e-4, "{tag}: relative logit gap {gap}");
+    }
+}
+
+#[test]
+fn native_accuracy_equals_pjrt_accuracy() {
+    let ctx = Ctx::new();
+    let model = ctx.manifest.get("vgg11m").unwrap();
+    let graph = Graph::load(&model.meta_path()).unwrap();
+    let weights = Weights::load(&model.weights_path()).unwrap();
+    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128).unwrap().scales();
+    let cfg = SparqConfig::named("5opt_r").unwrap();
+    let native = evaluate_native(
+        &graph, &weights, &ctx.eval, 64, &scales, cfg, EngineMode::Dense, 256,
+    )
+    .unwrap();
+    let pjrt =
+        evaluate_pjrt(&ctx.rt, model, &ctx.eval, 64, &scales, Some(cfg), 256).unwrap();
+    assert_eq!(native.correct, pjrt.correct, "prediction sets diverge");
+}
+
+#[test]
+fn stc_engine_runs_pruned_models_and_rejects_dense() {
+    let ctx = Ctx::new();
+    // pruned model: STC engine must accept and produce sane accuracy
+    let model = ctx.manifest.get("resnet10_p24").unwrap();
+    let graph = Graph::load(&model.meta_path()).unwrap();
+    let weights = Weights::load(&model.weights_path()).unwrap();
+    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128).unwrap().scales();
+    let rep = evaluate_native(
+        &graph,
+        &weights,
+        &ctx.eval,
+        32,
+        &scales,
+        SparqConfig::A8W8,
+        EngineMode::Stc,
+        128,
+    )
+    .unwrap();
+    assert!(rep.accuracy() > 0.9, "stc a8w8 accuracy {}", rep.accuracy());
+
+    // dense model: STC engine must refuse (weights not 2:4)
+    let dense = ctx.manifest.get("resnet10").unwrap();
+    let dgraph = Graph::load(&dense.meta_path()).unwrap();
+    let dweights = Weights::load(&dense.weights_path()).unwrap();
+    let err = Engine::new(
+        &dgraph,
+        &dweights,
+        SparqConfig::A8W8,
+        &vec![0.01; dgraph.quant_convs.len()],
+        EngineMode::Stc,
+    );
+    assert!(err.is_err(), "dense weights must not pass 2:4 compression");
+}
+
+#[test]
+fn stc_matches_dense_engine_when_weights_are_24() {
+    // On a 2:4-pruned model, the dense datapath and the STC datapath use
+    // different pairings (adjacent vs survivor) — but at A8W8 (no
+    // trimming) both must give the same logits exactly.
+    let ctx = Ctx::new();
+    let model = ctx.manifest.get("resnet18m_p24").unwrap();
+    let graph = Graph::load(&model.meta_path()).unwrap();
+    let weights = Weights::load(&model.weights_path()).unwrap();
+    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128).unwrap().scales();
+    let mut buf = Vec::new();
+    ctx.eval.batch_f32_into(0, 8, &mut buf);
+    let dense = Engine::new(&graph, &weights, SparqConfig::A8W8, &scales, EngineMode::Dense)
+        .unwrap()
+        .forward(&buf, 8)
+        .unwrap();
+    let stc = Engine::new(&graph, &weights, SparqConfig::A8W8, &scales, EngineMode::Stc)
+        .unwrap()
+        .forward(&buf, 8)
+        .unwrap();
+    for (a, b) in dense.iter().zip(&stc) {
+        assert!((a - b).abs() < 1e-4, "dense {a} vs stc {b}");
+    }
+}

@@ -1,0 +1,229 @@
+//! Integration tests over the runtime + coordinator, using the real
+//! exported artifacts (run `make artifacts` first; tests locate the
+//! repo's artifacts/ directory relative to the crate manifest).
+
+use std::path::{Path, PathBuf};
+
+use sparq::coordinator::{
+    calibrate, evaluate_pjrt, scales_for_policy, BatchPolicy, InferenceServer,
+};
+use sparq::data::Dataset;
+use sparq::model::Graph;
+use sparq::quant::baselines::ScalePolicy;
+use sparq::quant::SparqConfig;
+use sparq::runtime::{ArtifactKind, Manifest, PjrtRuntime, TensorArg};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn untyped_literal_roundtrip() {
+    let data: Vec<f32> = (0..12).map(|i| i as f32 * 1.5).collect();
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, 48) };
+    let lit = xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        &[3, 4],
+        bytes,
+    )
+    .unwrap();
+    assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+}
+
+#[test]
+fn manifest_lists_all_variants() {
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    assert_eq!(m.dense_tags().len(), 6, "dense zoo");
+    assert_eq!(m.pruned_tags().len(), 3, "2:4 pruned subset");
+    for tag in m.tags() {
+        let model = m.get(tag).unwrap();
+        for kind in [ArtifactKind::Float, ArtifactKind::Calib, ArtifactKind::Sparq] {
+            assert!(model.hlo_path(kind).exists(), "{tag} missing {kind:?}");
+        }
+        assert!(model.weights_path().exists());
+        let graph = Graph::load(&model.meta_path()).unwrap();
+        assert_eq!(graph.quant_convs.len(), model.quant_convs);
+    }
+}
+
+/// Guard against the elided-constant failure mode: xla_extension 0.5.1
+/// parses `constant({...})` as zeros, silently erasing baked weights
+/// (this bit during bring-up — see python/compile/aot.py::to_hlo_text).
+#[test]
+fn exported_graphs_have_no_elided_constants() {
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    for model in &m.models {
+        for kind in [ArtifactKind::Float, ArtifactKind::Calib, ArtifactKind::Sparq] {
+            let text = std::fs::read_to_string(model.hlo_path(kind)).unwrap();
+            assert!(
+                !text.contains("constant({...})"),
+                "{}: elided constants in {kind:?} artifact",
+                model.tag
+            );
+            // convolution/reduce-window also mis-execute on 0.5.1
+            assert!(
+                !text.contains(" convolution("),
+                "{}: convolution op leaked into {kind:?} export",
+                model.tag
+            );
+            assert!(
+                !text.contains(" reduce-window("),
+                "{}: reduce-window op leaked into {kind:?} export",
+                model.tag
+            );
+        }
+    }
+}
+
+#[test]
+fn calibration_produces_positive_scales() {
+    let dir = artifacts_dir();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let ds = Dataset::load(&dir.join("train.bin")).unwrap();
+    let model = m.get("resnet10").unwrap();
+    let stats = calibrate(&rt, model, &ds, 64, 128).unwrap();
+    assert_eq!(stats.maxes.len(), model.quant_convs);
+    for (&mx, &mean) in stats.maxes.iter().zip(&stats.layer_means()) {
+        assert!(mx > 0.1, "max {mx} suspiciously small");
+        assert!(mean > 0.0 && mean < mx, "mean {mean} outside (0, {mx})");
+    }
+    // ACIQ clipping never exceeds min-max
+    let mm = scales_for_policy(&stats, ScalePolicy::MinMax, 4);
+    let ac = scales_for_policy(&stats, ScalePolicy::AciqClip, 4);
+    for (a, m_) in ac.iter().zip(&mm) {
+        assert!(a <= m_);
+    }
+}
+
+#[test]
+fn fp32_eval_beats_ninety_percent_and_a8w8_matches() {
+    let dir = artifacts_dir();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let model = m.get("resnet10").unwrap();
+    let eval = Dataset::load(&dir.join("test.bin")).unwrap();
+    let calib_ds = Dataset::load(&dir.join("train.bin")).unwrap();
+
+    let fp32 = evaluate_pjrt(&rt, model, &eval, 64, &[], None, 256).unwrap();
+    assert!(fp32.accuracy() > 0.9, "fp32 acc {}", fp32.accuracy());
+
+    let stats = calibrate(&rt, model, &calib_ds, 64, 128).unwrap();
+    let scales = stats.scales();
+    let a8w8 =
+        evaluate_pjrt(&rt, model, &eval, 64, &scales, Some(SparqConfig::A8W8), 256)
+            .unwrap();
+    // paper Table 1: A8W8 ~ FP32
+    assert!(
+        (a8w8.accuracy() - fp32.accuracy()).abs() < 0.02,
+        "a8w8 {} vs fp32 {}",
+        a8w8.accuracy(),
+        fp32.accuracy()
+    );
+}
+
+#[test]
+fn sparq_configs_rank_sanely_on_one_model() {
+    // 5opt+R >= 2opt trim (the paper's central ordering), on squeezem,
+    // the most quantization-fragile architecture.
+    let dir = artifacts_dir();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let model = m.get("squeezem").unwrap();
+    let eval = Dataset::load(&dir.join("test.bin")).unwrap();
+    let calib_ds = Dataset::load(&dir.join("train.bin")).unwrap();
+    let scales = calibrate(&rt, model, &calib_ds, 64, 128).unwrap().scales();
+    let acc = |name: &str| {
+        evaluate_pjrt(
+            &rt,
+            model,
+            &eval,
+            64,
+            &scales,
+            Some(SparqConfig::named(name).unwrap()),
+            256,
+        )
+        .unwrap()
+        .accuracy()
+    };
+    let a5 = acc("5opt_r");
+    let a2 = acc("2opt");
+    assert!(a5 > a2 + 0.05, "5opt_r {a5} should beat 2opt {a2} clearly");
+}
+
+#[test]
+fn server_batches_and_answers_correctly() {
+    let dir = artifacts_dir();
+    let rt = std::sync::Arc::new(PjrtRuntime::cpu().unwrap());
+    let m = Manifest::load(&dir).unwrap();
+    let model = m.get("resnet10").unwrap();
+    let eval = Dataset::load(&dir.join("test.bin")).unwrap();
+    let calib_ds = Dataset::load(&dir.join("train.bin")).unwrap();
+    let scales = calibrate(&rt, model, &calib_ds, 64, 128).unwrap().scales();
+    let graph = Graph::load(&model.meta_path()).unwrap();
+    let server = std::sync::Arc::new(
+        InferenceServer::start(
+            rt,
+            model,
+            graph.input_hwc,
+            graph.num_classes,
+            scales,
+            SparqConfig::named("5opt_r").unwrap(),
+            BatchPolicy {
+                max_batch: graph.eval_batch,
+                max_wait: std::time::Duration::from_millis(10),
+            },
+        )
+        .unwrap(),
+    );
+    // 32 concurrent clients, each sending one real eval image
+    let eval = std::sync::Arc::new(eval);
+    let handles: Vec<_> = (0..32)
+        .map(|i| {
+            let s = server.clone();
+            let d = eval.clone();
+            std::thread::spawn(move || {
+                let reply = s.infer(d.image_f32(i)).unwrap();
+                let pred = reply
+                    .logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                (i, pred)
+            })
+        })
+        .collect();
+    let mut correct = 0;
+    for h in handles {
+        let (i, pred) = h.join().unwrap();
+        if pred == eval.label(i) {
+            correct += 1;
+        }
+    }
+    assert!(correct >= 28, "batched serving accuracy collapsed: {correct}/32");
+    let metrics = server.metrics();
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.e2e.count(), 32);
+}
+
+#[test]
+fn runtime_rejects_missing_artifact() {
+    let rt = PjrtRuntime::cpu().unwrap();
+    assert!(rt.load(Path::new("/nonexistent/foo.hlo.txt")).is_err());
+}
+
+#[test]
+fn executable_rejects_wrong_arity_gracefully() {
+    let dir = artifacts_dir();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let model = m.get("resnet10").unwrap();
+    let exe = rt.load(&model.hlo_path(ArtifactKind::Float)).unwrap();
+    // feeding zero inputs must error, not crash
+    assert!(exe.run(&[]).is_err());
+    // wrong shape must error
+    assert!(exe.run(&[TensorArg::f32(&[1, 2], vec![0.0, 0.0])]).is_err());
+}

@@ -1,0 +1,374 @@
+//! Property-based tests over the quant / hw / coordinator invariants.
+//!
+//! The image's offline crate set has no `proptest`, so this file carries
+//! a small deterministic-PRNG property harness (`props!`): each property
+//! runs across many seeded random cases and failures print the seed for
+//! replay.
+
+use sparq::hw::pe::SparqPe;
+use sparq::hw::stc::{stc_gemm, CompressedWeights};
+use sparq::hw::systolic::SystolicArray;
+use sparq::json::JsonValue;
+use sparq::model::QuantGemm;
+use sparq::quant::bsparq::{trim_one, trim_window};
+use sparq::quant::vsparq::{sparq_dot, trim_pair};
+use sparq::quant::{Mode, SparqConfig, TrimLut};
+
+/// xorshift64* — deterministic, seedable, dependency-free.
+#[derive(Clone)]
+struct Rng(u64);
+
+impl Rng {
+    fn new(seed: u64) -> Self {
+        Self(seed.wrapping_mul(0x9e3779b97f4a7c15) | 1)
+    }
+
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.0 = x;
+        x.wrapping_mul(0x2545f4914f6cdd1d)
+    }
+
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n.max(1)
+    }
+
+    fn act(&mut self, sparsity_pct: u64) -> u8 {
+        if self.below(100) < sparsity_pct {
+            0
+        } else {
+            (self.next() % 256) as u8
+        }
+    }
+
+    fn weight(&mut self) -> i8 {
+        ((self.next() % 255) as i32 - 127) as i8
+    }
+
+    fn config(&mut self) -> SparqConfig {
+        const NAMES: [&str; 12] = [
+            "a8w8", "a4w8", "a8w4", "5opt", "5opt_r", "5opt_r_novs", "3opt_r", "2opt",
+            "2opt_r", "6opt_r", "7opt_r", "7opt_r_novs",
+        ];
+        SparqConfig::named(NAMES[self.below(NAMES.len() as u64) as usize]).unwrap()
+    }
+}
+
+/// Run `body(seed_rng)` for `cases` deterministic seeds.
+macro_rules! props {
+    ($cases:expr, |$rng:ident| $body:block) => {
+        for seed in 0..$cases {
+            let mut $rng = Rng::new(seed as u64 + 1);
+            let mut run = || -> Result<(), String> {
+                $body
+                Ok(())
+            };
+            if let Err(msg) = run() {
+                panic!("property failed at seed {seed}: {msg}");
+            }
+        }
+    };
+}
+
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[test]
+fn prop_trim_is_idempotent() {
+    props!(300, |rng| {
+        let cfg = rng.config();
+        let x = rng.act(20);
+        let y = trim_one(x, cfg);
+        let z = trim_one(y, cfg);
+        prop_assert!(y == z, "cfg={cfg} x={x}: trim(trim)={z} != trim={y}");
+    });
+}
+
+#[test]
+fn prop_trim_error_bounded_by_window_shift() {
+    props!(500, |rng| {
+        let x = rng.act(0);
+        for width in [2u8, 3, 4] {
+            for mode in [Mode::Full, Mode::Opt3, Mode::Opt2] {
+                if width != 4 && mode != Mode::Full {
+                    continue;
+                }
+                let s = sparq::quant::bsparq::shift_for(x, width, mode);
+                for round in [false, true] {
+                    let y = trim_window(x, width, mode, round);
+                    let err = (i32::from(x) - i32::from(y)).abs();
+                    prop_assert!(
+                        err < (1 << s.max(1)),
+                        "x={x} width={width} mode={mode:?} err={err} shift={s}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_a8w8_dot_exact() {
+    props!(200, |rng| {
+        let k = 1 + rng.below(96) as usize;
+        let a: Vec<u8> = (0..k).map(|_| rng.act(30)).collect();
+        let w: Vec<i8> = (0..k).map(|_| rng.weight()).collect();
+        let exact: i32 =
+            a.iter().zip(&w).map(|(&x, &y)| i32::from(x) * i32::from(y)).sum();
+        prop_assert!(
+            sparq_dot(&a, &w, SparqConfig::A8W8) == exact,
+            "k={k}: a8w8 dot not exact"
+        );
+    });
+}
+
+#[test]
+fn prop_sparq_dot_error_bounded() {
+    // |sparq_dot - exact| <= sum_i |w_i| * elem_err_i, where elem_err is
+    // the activation trim error. Restricted to w_bits == 8: below that,
+    // sparq_dot's result lives on the reduced weight grid (callers apply
+    // weight_rescale at dequantization), so a raw-integer comparison
+    // against the exact dot is meaningless.
+    props!(200, |rng| {
+        let mut cfg = rng.config();
+        cfg.w_bits = 8;
+        let k = 2 * (1 + rng.below(48) as usize);
+        let a: Vec<u8> = (0..k).map(|_| rng.act(40)).collect();
+        let w: Vec<i8> = (0..k).map(|_| rng.weight()).collect();
+        let exact: i32 =
+            a.iter().zip(&w).map(|(&x, &y)| i32::from(x) * i32::from(y)).sum();
+        let got = sparq_dot(&a, &w, cfg);
+        let mut bound = 0i64;
+        for p in 0..k / 2 {
+            let (y0, y1) = trim_pair(a[2 * p], a[2 * p + 1], cfg);
+            bound += i64::from((i32::from(a[2 * p]) - i32::from(y0)).abs())
+                * i64::from(i32::from(w[2 * p]).abs());
+            bound += i64::from((i32::from(a[2 * p + 1]) - i32::from(y1)).abs())
+                * i64::from(i32::from(w[2 * p + 1]).abs());
+        }
+        let err = i64::from((got - exact).abs());
+        prop_assert!(err <= bound, "cfg={cfg} err={err} bound={bound}");
+    });
+}
+
+#[test]
+fn prop_vsparq_never_increases_elementwise_error() {
+    // For each pair, the vS variant of a config has elementwise error
+    // <= the -vS variant (budget sharing only ever widens windows).
+    props!(400, |rng| {
+        for name in ["5opt_r", "3opt_r", "2opt_r", "6opt_r", "7opt_r"] {
+            let with = SparqConfig::named(name).unwrap();
+            let without = SparqConfig { vsparq: false, ..with };
+            let (x0, x1) = (rng.act(50), rng.act(50));
+            let (a0, a1) = trim_pair(x0, x1, with);
+            let (b0, b1) = trim_pair(x0, x1, without);
+            let err = |v: u8, t: u8| (i32::from(v) - i32::from(t)).abs();
+            prop_assert!(
+                err(x0, a0) <= err(x0, b0) && err(x1, a1) <= err(x1, b1),
+                "{name} pair ({x0},{x1}): vS ({a0},{a1}) vs -vS ({b0},{b1})"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lut_pe_systolic_gemm_all_agree() {
+    // Four independent implementations of the SPARQ GEMM semantics must
+    // agree bit-for-bit: scalar sparq_dot, TrimLut dot, the Fig. 2 PE,
+    // and the systolic-array simulation.
+    props!(40, |rng| {
+        let cfg = rng.config();
+        if cfg.mode == Mode::Uniform || cfg.n_bits >= 8 {
+            return Ok(()); // PE models only SPARQ modes
+        }
+        let (m, k, n) = (
+            1 + rng.below(6) as usize,
+            2 * (1 + rng.below(20) as usize),
+            1 + rng.below(6) as usize,
+        );
+        let a: Vec<u8> = (0..m * k).map(|_| rng.act(35)).collect();
+        let w: Vec<i8> = (0..k * n).map(|_| rng.weight()).collect();
+        let lut = TrimLut::new(cfg);
+        let gemm = QuantGemm::new(cfg);
+        let wt = gemm.prepare_weights(&w, k, n);
+        let mut scratch = a.clone();
+        let mut out = vec![0i32; m * n];
+        gemm.gemm(&mut scratch, m, k, &wt, n, &mut out);
+        let sa = SystolicArray::new(4, 4, cfg);
+        let run = sa.gemm(&a, &w, m, k, n);
+        let mut pe = SparqPe::new(cfg);
+        for i in 0..m {
+            for j in 0..n {
+                let row = &a[i * k..(i + 1) * k];
+                let col: Vec<i8> = (0..k).map(|r| w[r * n + j]).collect();
+                let want = sparq_dot(row, &col, cfg);
+                prop_assert!(
+                    lut.dot(row, &col) == want,
+                    "lut mismatch cfg={cfg} ({i},{j})"
+                );
+                prop_assert!(
+                    out[i * n + j] == want,
+                    "gemm mismatch cfg={cfg} ({i},{j})"
+                );
+                prop_assert!(
+                    run.out[i * n + j] == want,
+                    "systolic mismatch cfg={cfg} ({i},{j})"
+                );
+                prop_assert!(pe.dot(row, &col) == want, "pe mismatch cfg={cfg}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_stc_gemm_respects_survivor_semantics() {
+    props!(60, |rng| {
+        let cfg = rng.config();
+        let (m, g, n) = (
+            1 + rng.below(4) as usize,
+            1 + rng.below(8) as usize,
+            1 + rng.below(5) as usize,
+        );
+        let k = 4 * g;
+        // random 2:4 weights
+        let mut w = vec![0i8; k * n];
+        for gi in 0..g {
+            for col in 0..n {
+                let s0 = rng.below(4) as usize;
+                let mut s1 = rng.below(4) as usize;
+                if s1 == s0 {
+                    s1 = (s1 + 1) % 4;
+                }
+                w[(4 * gi + s0) * n + col] = rng.weight();
+                w[(4 * gi + s1) * n + col] = rng.weight();
+            }
+        }
+        let a: Vec<u8> = (0..m * k).map(|_| rng.act(35)).collect();
+        let c = CompressedWeights::compress(&w, k, n)
+            .map_err(|e| format!("compress: {e}"))?;
+        let (out, stats) = stc_gemm(&a, &c, m, cfg);
+        prop_assert!(stats.pairs == (m * n * g) as u64, "pair count");
+        // scalar recomputation per output element
+        for mi in 0..m {
+            for col in 0..n {
+                let mut acc = 0i32;
+                for gi in 0..g {
+                    let grp = &c.groups[gi * n + col];
+                    let x0 = a[mi * k + 4 * gi + grp.coord[0] as usize];
+                    let x1 = a[mi * k + 4 * gi + grp.coord[1] as usize];
+                    let (y0, y1) = trim_pair(x0, x1, cfg);
+                    acc += i32::from(y0)
+                        * i32::from(sparq::quant::bsparq::requant_weight(grp.w[0], cfg.w_bits));
+                    acc += i32::from(y1)
+                        * i32::from(sparq::quant::bsparq::requant_weight(grp.w[1], cfg.w_bits));
+                }
+                prop_assert!(
+                    out[mi * n + col] == acc,
+                    "stc mismatch cfg={cfg} ({mi},{col})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn gen_value(rng: &mut Rng, depth: usize) -> JsonValue {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => JsonValue::Null,
+            1 => JsonValue::Bool(rng.below(2) == 1),
+            2 => JsonValue::Number((rng.next() % 100_000) as f64 / 8.0 - 1000.0),
+            3 => JsonValue::String(format!("s{}-\"x\"\n{}", rng.below(100), rng.below(10))),
+            4 => JsonValue::Array(
+                (0..rng.below(5)).map(|_| gen_value(rng, depth - 1)).collect(),
+            ),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    m.insert(format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                JsonValue::Object(m)
+            }
+        }
+    }
+    props!(300, |rng| {
+        let v = gen_value(&mut rng, 3);
+        let text = v.to_string();
+        let back = JsonValue::parse(&text).map_err(|e| format!("parse: {e}"))?;
+        prop_assert!(back == v, "roundtrip mismatch for {text}");
+    });
+}
+
+#[test]
+fn prop_batcher_routes_every_request_correctly() {
+    use sparq::coordinator::{BatchPolicy, Batcher};
+    use std::sync::{Arc, Mutex};
+    props!(10, |rng| {
+        let max_batch = 1 + rng.below(7) as usize;
+        let n_clients = 1 + rng.below(12) as usize;
+        let stats = Arc::new(Mutex::new(Default::default()));
+        let b = Batcher::spawn(
+            BatchPolicy {
+                max_batch,
+                max_wait: std::time::Duration::from_millis(3),
+            },
+            2,
+            1,
+            Box::new(|buf, batch| {
+                Ok((0..batch).map(|i| buf[i * 2] * 10.0 + buf[i * 2 + 1]).collect())
+            }),
+            stats,
+        );
+        let handles: Vec<_> = (0..n_clients)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    let r = b.infer(vec![i as f32, 0.5]).unwrap();
+                    (i, r.logits[0])
+                })
+            })
+            .collect();
+        for h in handles {
+            let (i, got) = h.join().unwrap();
+            prop_assert!(
+                (got - (i as f32 * 10.0 + 0.5)).abs() < 1e-6,
+                "client {i} got {got}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_im2col_patch_values_come_from_input_or_padding() {
+    use sparq::tensor::im2col_u8;
+    props!(60, |rng| {
+        let (h, w, c) = (
+            2 + rng.below(8) as usize,
+            2 + rng.below(8) as usize,
+            1 + rng.below(4) as usize,
+        );
+        let k = 1 + 2 * rng.below(2) as usize; // 1 or 3
+        let stride = 1 + rng.below(2) as usize;
+        let acts: Vec<u8> = (0..h * w * c).map(|_| rng.act(20).max(1)).collect();
+        let (p, oh, ow) = im2col_u8(&acts, 1, h, w, c, k, stride);
+        prop_assert!(p.len() == oh * ow * c * k * k, "size");
+        // multiset check: every non-zero patch value exists in the input
+        for &v in &p {
+            if v != 0 {
+                prop_assert!(acts.contains(&v), "patch value {v} not from input");
+            }
+        }
+        // with k=1, stride=1 the patches are exactly the input
+        if k == 1 && stride == 1 {
+            prop_assert!(p == acts, "identity im2col violated");
+        }
+    });
+}
