@@ -1,13 +1,26 @@
 //! Bench: the L3 hot paths in isolation — the inputs to the §Perf
-//! optimization loop in EXPERIMENTS.md. Compares the scalar reference
-//! against the LUT-optimized implementations and measures the native
-//! GEMM engine and PJRT end-to-end batch latency.
+//! optimization loop in EXPERIMENTS.md.
+//!
+//! Sections (none need artifacts except the final PJRT one):
+//!
+//! 1. trim+dot microbench — scalar reference vs the 256-entry LUT;
+//! 2. quantized GEMM before/after — the seed's naive single-threaded
+//!    kernel vs the cache-blocked kernel, serial and row-parallel;
+//! 3. end-to-end native forward on a synthetic 4-conv model — engine at
+//!    1 thread vs all cores, with reused scratch (the serving shape);
+//! 4. PJRT end-to-end batch latency (skipped when artifacts/xla absent).
+//!
+//! Run with `cargo bench --bench hotpath`; set `SPARQ_THREADS` to pin
+//! the parallel sections.
 
 include!("harness.rs");
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 
-use sparq::model::QuantGemm;
+use sparq::model::{Engine, EngineMode, Graph, Node, Op, QuantGemm, Scratch, Weights};
+use sparq::model::threadpool;
+use sparq::model::weights::{FloatConv, QuantConv};
 use sparq::quant::vsparq::sparq_dot;
 use sparq::quant::{SparqConfig, TrimLut};
 use sparq::runtime::{ArtifactKind, Manifest, PjrtRuntime, TensorArg};
@@ -27,91 +40,206 @@ fn main() {
         std::hint::black_box(lut.dot(&acts, &weights));
     });
 
-    // 2. trim of a full im2col tile
-    let mut tile = synth_acts(256 * k, 40);
-    bench("trim_slice 256xK tile", 200, || {
-        tile.copy_from_slice(&synth_acts(256 * k, 40));
-        for row in tile.chunks_exact_mut(k) {
-            lut.trim_slice(row);
-        }
-        std::hint::black_box(&tile);
-    });
-
-    // 3. full native GEMM (the native engine's conv core)
+    // 2. GEMM before/after: naive (the seed path) vs blocked serial vs
+    // blocked parallel — all bit-identical, only speed differs.
     let (m, n) = (400, 64);
     let a = synth_acts(m * k, 40);
     let w = synth_weights(k * n);
     let gemm = QuantGemm::new(cfg);
     let wt = gemm.prepare_weights(&w, k, n);
-    let mut scratch = a.clone();
+    let mut scratch_rows = a.clone();
     let mut out = vec![0i32; m * n];
-    let r = bench("native GEMM 400x1152x64", 20, || {
-        scratch.copy_from_slice(&a);
-        gemm.gemm(&mut scratch, m, k, &wt, n, &mut out);
+    let mut pack = Vec::new();
+    let macs = (m * k * n) as f64;
+    let gmacs = |r: &BenchResult| macs / (r.median_us * 1e-6) / 1e9;
+
+    let r_naive = bench("GEMM 400x1152x64 naive (seed)", 20, || {
+        scratch_rows.copy_from_slice(&a);
+        gemm.gemm_naive(&mut scratch_rows, m, k, &wt, n, &mut out);
         std::hint::black_box(&out);
     });
-    let macs = (m * k * n) as f64;
+    println!("    -> {:.2} GMAC/s", gmacs(&r_naive));
+    let reference = out.clone();
+
+    let r_serial = bench("GEMM 400x1152x64 blocked 1 thread", 20, || {
+        scratch_rows.copy_from_slice(&a);
+        gemm.gemm_with(&mut scratch_rows, m, k, &wt, n, &mut out, &mut pack, 1);
+        std::hint::black_box(&out);
+    });
+    println!("    -> {:.2} GMAC/s", gmacs(&r_serial));
+    assert_eq!(out, reference, "blocked serial GEMM diverged from naive");
+
+    let nt = threadpool::max_threads();
+    let r_par = bench("GEMM 400x1152x64 blocked parallel", 20, || {
+        scratch_rows.copy_from_slice(&a);
+        gemm.gemm_with(&mut scratch_rows, m, k, &wt, n, &mut out, &mut pack, nt);
+        std::hint::black_box(&out);
+    });
+    println!("    -> {:.2} GMAC/s ({nt} threads)", gmacs(&r_par));
+    assert_eq!(out, reference, "blocked parallel GEMM diverged from naive");
     println!(
-        "    -> {:.2} GMAC/s",
-        macs / (r.median_us * 1e-6) / 1e9
+        "    => GEMM speedup vs seed: {:.2}x serial, {:.2}x parallel",
+        r_naive.median_us / r_serial.median_us,
+        r_naive.median_us / r_par.median_us
     );
 
-    // "further attempt" for the §Perf stopping criterion: manual 4-way
-    // accumulator splitting of the inner dot. Kept out of the production
-    // path unless it clears the 5% bar (record below).
-    let a16: Vec<i16> = synth_acts(k, 40).iter().map(|&x| i16::from(x)).collect();
-    let w16: Vec<i16> = synth_weights(k).iter().map(|&w| i16::from(w)).collect();
-    let r_plain = bench("inner dot i16 plain (K=1152)", 5000, || {
-        let mut acc = 0i32;
-        for (&x, &w) in a16.iter().zip(&w16) {
-            acc += i32::from(x) * i32::from(w);
-        }
-        std::hint::black_box(acc);
+    // 3. end-to-end native forward on a synthetic model (no artifacts)
+    let (graph, wts, scales) = synth_model();
+    let batch = 32;
+    let img: Vec<f32> = (0..batch * 20 * 20 * 3)
+        .map(|i| ((i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33) as f32 % 251.0 / 251.0)
+        .collect();
+    let mut engine = Engine::new(&graph, &wts, cfg, &scales, EngineMode::Dense).unwrap();
+    let mut scratch = Scratch::default();
+
+    engine.set_threads(1);
+    let r_e2e_1 = bench("native fwd batch-32 1 thread", 15, || {
+        std::hint::black_box(engine.forward_scratch(&img, batch, &mut scratch).unwrap());
     });
-    let r_split = bench("inner dot i16 4-acc split (K=1152)", 5000, || {
-        let mut acc = [0i32; 4];
-        let chunks_a = a16.chunks_exact(4);
-        let chunks_w = w16.chunks_exact(4);
-        for (ca, cw) in chunks_a.zip(chunks_w) {
-            for l in 0..4 {
-                acc[l] += i32::from(ca[l]) * i32::from(cw[l]);
-            }
-        }
-        std::hint::black_box(acc[0] + acc[1] + acc[2] + acc[3]);
+    println!("    -> {:.1} img/s", batch as f64 / (r_e2e_1.median_us * 1e-6));
+
+    engine.set_threads(nt);
+    let r_e2e_n = bench("native fwd batch-32 parallel", 15, || {
+        std::hint::black_box(engine.forward_scratch(&img, batch, &mut scratch).unwrap());
     });
+    println!("    -> {:.1} img/s ({nt} threads)", batch as f64 / (r_e2e_n.median_us * 1e-6));
     println!(
-        "    -> split vs plain: {:+.1}% (kept only if < -5%)",
-        100.0 * (r_split.min_us - r_plain.min_us) / r_plain.min_us
+        "    => end-to-end forward speedup 1 -> {nt} threads: {:.2}x",
+        r_e2e_1.median_us / r_e2e_n.median_us
     );
 
     // 4. PJRT end-to-end batch (compile once, then per-batch latency)
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if let Ok(manifest) = Manifest::load(&dir) {
-        let rt = PjrtRuntime::cpu().expect("pjrt");
-        let model = manifest.get("resnet10").unwrap();
-        let exe = rt.load(&model.hlo_path(ArtifactKind::Sparq)).unwrap();
-        let nq = model.quant_convs;
-        let img: Vec<f32> = (0..64 * 20 * 20 * 3).map(|i| (i % 251) as f32 / 251.0).collect();
-        let scales = vec![0.03f32; nq];
-        let cfg_vec = cfg.to_vec().to_vec();
-        let r = bench("PJRT sparq batch-64 fwd (resnet10)", 20, || {
-            let out = exe
-                .run(&[
-                    TensorArg::f32(&[64, 20, 20, 3], img.clone()),
-                    TensorArg::f32(&[nq], scales.clone()),
-                    TensorArg::i32(&[5], cfg_vec.clone()),
-                ])
-                .unwrap();
-            std::hint::black_box(out);
-        });
-        println!("    -> {:.1} img/s", 64.0 / (r.median_us * 1e-6));
-        let fexe = rt.load(&model.hlo_path(ArtifactKind::Float)).unwrap();
-        let r = bench("PJRT float batch-64 fwd (resnet10)", 20, || {
-            let out = fexe.run(&[TensorArg::f32(&[64, 20, 20, 3], img.clone())]).unwrap();
-            std::hint::black_box(out);
-        });
-        println!("    -> {:.1} img/s", 64.0 / (r.median_us * 1e-6));
-    } else {
-        eprintln!("artifacts missing; PJRT section skipped");
+    match Manifest::load(&dir) {
+        Ok(manifest) => pjrt_section(&manifest, cfg),
+        Err(_) => eprintln!("artifacts missing; PJRT section skipped"),
+    }
+}
+
+/// Synthetic 4-layer model shaped like the zoo's resnet10 stem: float
+/// stem conv + two quantized convs + gap + fc. Weights are the shared
+/// deterministic generators, so runs are comparable across builds.
+fn synth_model() -> (Graph, Weights, Vec<f32>) {
+    let graph = Graph {
+        arch: "bench".into(),
+        variant: "synthetic".into(),
+        num_classes: 10,
+        input_hwc: [20, 20, 3],
+        eval_batch: 32,
+        quant_convs: vec!["q1".into(), "q2".into()],
+        nodes: vec![
+            Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+            Node {
+                name: "c1".into(),
+                op: Op::Conv { k: 3, stride: 1, out_ch: 16, relu: true, quant: false },
+                inputs: vec!["img".into()],
+            },
+            Node {
+                name: "q1".into(),
+                op: Op::Conv { k: 3, stride: 2, out_ch: 32, relu: true, quant: true },
+                inputs: vec!["c1".into()],
+            },
+            Node {
+                name: "q2".into(),
+                op: Op::Conv { k: 3, stride: 1, out_ch: 64, relu: true, quant: true },
+                inputs: vec!["q1".into()],
+            },
+            Node { name: "g".into(), op: Op::Gap, inputs: vec!["q2".into()] },
+            Node { name: "fc".into(), op: Op::Fc { out: 10 }, inputs: vec!["g".into()] },
+        ],
+    };
+    let mut float = HashMap::new();
+    let c1_len = 3 * 3 * 3 * 16;
+    float.insert(
+        "c1".to_string(),
+        FloatConv {
+            w: synth_weights(c1_len).iter().map(|&v| f32::from(v) / 400.0).collect(),
+            kh: 3,
+            kw: 3,
+            c_in: 3,
+            c_out: 16,
+            bias: vec![0.01; 16],
+        },
+    );
+    let mut quant = HashMap::new();
+    quant.insert(
+        "q1".to_string(),
+        QuantConv {
+            wq: synth_weights(16 * 9 * 32),
+            k: 16 * 9,
+            o: 32,
+            scale: vec![0.002; 32],
+            bias: vec![0.0; 32],
+        },
+    );
+    quant.insert(
+        "q2".to_string(),
+        QuantConv {
+            wq: synth_weights(32 * 9 * 64),
+            k: 32 * 9,
+            o: 64,
+            scale: vec![0.002; 64],
+            bias: vec![0.0; 64],
+        },
+    );
+    let fc_len = 64 * 10;
+    let weights = Weights {
+        quant,
+        float,
+        fc_w: synth_weights(fc_len).iter().map(|&v| f32::from(v) / 127.0).collect(),
+        fc_in: 64,
+        fc_out: 10,
+        fc_b: vec![0.0; 10],
+    };
+    (graph, weights, vec![0.02, 0.02])
+}
+
+fn pjrt_section(manifest: &Manifest, cfg: SparqConfig) {
+    let rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT unavailable ({e}); section skipped");
+            return;
+        }
+    };
+    let model = match manifest.get("resnet10") {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("resnet10 not in manifest ({e}); section skipped");
+            return;
+        }
+    };
+    let exe = match rt.load(&model.hlo_path(ArtifactKind::Sparq)) {
+        Ok(exe) => exe,
+        Err(e) => {
+            eprintln!("PJRT compile unavailable ({e}); section skipped");
+            return;
+        }
+    };
+    let nq = model.quant_convs;
+    let img: Vec<f32> = (0..64 * 20 * 20 * 3).map(|i| (i % 251) as f32 / 251.0).collect();
+    let scales = vec![0.03f32; nq];
+    let cfg_vec = cfg.to_vec().to_vec();
+    let r = bench("PJRT sparq batch-64 fwd (resnet10)", 20, || {
+        let out = exe
+            .run(&[
+                TensorArg::f32(&[64, 20, 20, 3], img.clone()),
+                TensorArg::f32(&[nq], scales.clone()),
+                TensorArg::i32(&[5], cfg_vec.clone()),
+            ])
+            .unwrap();
+        std::hint::black_box(out);
+    });
+    println!("    -> {:.1} img/s", 64.0 / (r.median_us * 1e-6));
+    match rt.load(&model.hlo_path(ArtifactKind::Float)) {
+        Ok(fexe) => {
+            let r = bench("PJRT float batch-64 fwd (resnet10)", 20, || {
+                let out =
+                    fexe.run(&[TensorArg::f32(&[64, 20, 20, 3], img.clone())]).unwrap();
+                std::hint::black_box(out);
+            });
+            println!("    -> {:.1} img/s", 64.0 / (r.median_us * 1e-6));
+        }
+        Err(e) => eprintln!("float artifact unavailable ({e}); float row skipped"),
     }
 }

@@ -1,0 +1,224 @@
+//! Offline drop-in subset of the `anyhow` crate.
+//!
+//! The container image carries no crates.io registry, so the workspace
+//! vendors the slice of `anyhow`'s API this repo actually uses:
+//!
+//! * [`Error`] / [`Result`] with `?`-conversion from any
+//!   `std::error::Error + Send + Sync + 'static`,
+//! * the [`Context`] trait (`.context(..)` / `.with_context(..)`) on
+//!   both `Result` and `Option`,
+//! * the `anyhow!`, `bail!` and `ensure!` macros.
+//!
+//! Errors are flattened to a single message string with `:`-joined
+//! context, matching how this repo formats and asserts on errors. The
+//! crate can be replaced by the real `anyhow` without source changes.
+
+use std::fmt::{self, Debug, Display};
+
+/// A flattened error: message plus any context prepended by
+/// [`Context::context`] / [`Context::with_context`].
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message (`anyhow::Error::msg`).
+    pub fn msg<M: Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+
+    fn wrap<C: Display>(mut self, context: C) -> Self {
+        self.msg = format!("{context}: {}", self.msg);
+        self
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow: `Error` itself does not implement `std::error::Error`,
+// which is what keeps this blanket impl coherent.
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Self { msg }
+    }
+}
+
+/// `anyhow::Result`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+mod private {
+    pub trait Sealed {}
+    impl<T, E> Sealed for std::result::Result<T, E> {}
+    impl<T> Sealed for Option<T> {}
+
+    /// Conversion into [`crate::Error`] for the `Context` impls. Two
+    /// coherent impls: every std error, and `Error` itself (which does
+    /// not implement `std::error::Error`, so they never overlap).
+    pub trait IntoError {
+        fn into_error(self) -> crate::Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_error(self) -> crate::Error {
+            crate::Error::from(self)
+        }
+    }
+
+    impl IntoError for crate::Error {
+        fn into_error(self) -> crate::Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors (and to `None`), as in `anyhow`.
+pub trait Context<T, E>: private::Sealed {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: private::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| private::IntoError::into_error(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| private::IntoError::into_error(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Return early with an error built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/nonexistent/anyhow-shim-test")
+            .context("reading test file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_and_context_chain() {
+        let err = io_fail().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.starts_with("reading test file: "), "{msg}");
+    }
+
+    #[test]
+    fn option_context_and_with_context() {
+        let none: Option<u8> = None;
+        assert_eq!(none.context("missing").unwrap_err().to_string(), "missing");
+        let none: Option<u8> = None;
+        let err = none.with_context(|| format!("missing {}", 7)).unwrap_err();
+        assert_eq!(err.to_string(), "missing 7");
+        assert_eq!(Some(3u8).context("unused").unwrap(), 3);
+    }
+
+    #[test]
+    fn context_on_anyhow_result() {
+        let r: Result<()> = Err(anyhow!("inner {}", 42));
+        let err = r.context("outer").unwrap_err();
+        assert_eq!(err.to_string(), "outer: inner 42");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too large: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("negative input -1"));
+        assert!(f(101).unwrap_err().to_string().contains("too large: 101"));
+    }
+}

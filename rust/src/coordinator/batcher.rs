@@ -1,13 +1,17 @@
 //! Dynamic batcher — forms execution batches from an asynchronous
 //! request stream (the vLLM-router pattern scaled to this repo).
 //!
-//! The lowered HLO has a fixed batch dimension B, so the batcher's job
-//! is: collect up to B requests, or whatever arrived when the oldest
-//! request hits its latency deadline; pad the tail of a short batch by
-//! repeating the last image (padded outputs are discarded); execute;
-//! scatter per-request results. Threads + channels, no async runtime —
-//! tokio is not in this image's vendored set, and one worker thread per
-//! model is the right shape for a single-device PJRT client anyway.
+//! The batcher collects up to `max_batch` requests, or whatever arrived
+//! when the oldest request hits its latency deadline, then executes the
+//! batch **at its true size**: the executor receives the packed images
+//! for exactly `bsz` requests plus `bsz` itself. Executors with a fixed
+//! lowered batch dimension (the PJRT path) pad internally at the last
+//! possible layer; the native engine executes short batches without any
+//! padded compute. Per-request results are scattered back, and executor
+//! failures are carried to every waiting `infer` caller with the real
+//! underlying message. Threads + channels, no async runtime — tokio is
+//! not in this image's vendored set, and one worker thread per model is
+//! the right shape for a single-device backend anyway.
 
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -18,7 +22,8 @@ use anyhow::Result;
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// Hardware batch (the HLO's lowered batch dimension).
+    /// Maximum formed batch (for PJRT executors: the HLO's lowered batch
+    /// dimension).
     pub max_batch: usize,
     /// Max time the oldest queued request may wait before a (possibly
     /// short) batch is launched.
@@ -35,7 +40,7 @@ impl Default for BatchPolicy {
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
-    reply: Sender<Reply>,
+    reply: Sender<Result<Reply, String>>,
 }
 
 /// Per-request result: logits row + timing.
@@ -46,9 +51,11 @@ pub struct Reply {
     pub batch_size: usize,
 }
 
-/// The batch executor supplied by the server: takes a padded image
-/// buffer `[max_batch, ...]` and returns row-major logits.
-pub type ExecuteFn = dyn Fn(&[f32], usize) -> Result<Vec<f32>> + Send;
+/// The batch executor supplied by the server: receives the packed image
+/// buffer for the *actual* batch (`bsz * image_len` floats) and `bsz`,
+/// and returns at least `bsz` row-major logits rows. `FnMut` so an
+/// executor can own reusable state (engine scratch, padding buffers).
+pub type ExecuteFn = dyn FnMut(&[f32], usize) -> Result<Vec<f32>> + Send;
 
 /// Handle for submitting requests.
 #[derive(Clone)]
@@ -63,6 +70,10 @@ pub struct BatcherStats {
     pub batches: u64,
     pub requests: u64,
     pub full_batches: u64,
+    /// Batches whose execution failed — executor errors and malformed
+    /// (too-short) logits alike, each surfaced to all of that batch's
+    /// callers.
+    pub exec_errors: u64,
 }
 
 impl Batcher {
@@ -72,12 +83,14 @@ impl Batcher {
         policy: BatchPolicy,
         image_len: usize,
         classes: usize,
-        execute: Box<ExecuteFn>,
+        mut execute: Box<ExecuteFn>,
         stats: Arc<Mutex<BatcherStats>>,
     ) -> Self {
         let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
         std::thread::spawn(move || {
             let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
+            // Hoisted: one packing buffer for the worker's lifetime.
+            let mut buf: Vec<f32> = Vec::with_capacity(policy.max_batch * image_len);
             loop {
                 // Block for the first request of a batch.
                 if pending.is_empty() {
@@ -98,16 +111,20 @@ impl Batcher {
                 }
                 let batch = std::mem::take(&mut pending);
                 let bsz = batch.len();
-                // Pad to max_batch by repeating the last image.
-                let mut buf = Vec::with_capacity(policy.max_batch * image_len);
+                buf.clear();
                 for r in &batch {
                     buf.extend_from_slice(&r.image);
                 }
-                for _ in bsz..policy.max_batch {
-                    let last = buf[(bsz - 1) * image_len..bsz * image_len].to_vec();
-                    buf.extend_from_slice(&last);
-                }
-                let result = execute(&buf, policy.max_batch);
+                // True-size execution: no padded rows, no padded compute.
+                let outcome: Result<Vec<f32>, String> = match execute(&buf, bsz) {
+                    Ok(logits) if logits.len() >= bsz * classes => Ok(logits),
+                    Ok(logits) => Err(format!(
+                        "executor returned {} logits for a batch of {bsz} (need {})",
+                        logits.len(),
+                        bsz * classes
+                    )),
+                    Err(e) => Err(e.to_string()),
+                };
                 {
                     let mut s = stats.lock().unwrap();
                     s.batches += 1;
@@ -115,22 +132,27 @@ impl Batcher {
                     if bsz == policy.max_batch {
                         s.full_batches += 1;
                     }
+                    if outcome.is_err() {
+                        s.exec_errors += 1;
+                    }
                 }
-                match result {
+                match outcome {
                     Ok(logits) => {
                         for (i, r) in batch.into_iter().enumerate() {
                             let row = logits[i * classes..(i + 1) * classes].to_vec();
-                            let _ = r.reply.send(Reply {
+                            let _ = r.reply.send(Ok(Reply {
                                 logits: row,
                                 queue_time: r.enqueued.elapsed(),
                                 batch_size: bsz,
-                            });
+                            }));
                         }
                     }
-                    Err(_) => {
-                        // Drop the replies; senders observe a closed
-                        // channel and surface an error upstream.
-                        drop(batch);
+                    Err(msg) => {
+                        // Carry the real failure to every caller of this
+                        // batch instead of dropping the reply channels.
+                        for r in batch {
+                            let _ = r.reply.send(Err(msg.clone()));
+                        }
                     }
                 }
             }
@@ -138,7 +160,8 @@ impl Batcher {
         Self { tx, image_len }
     }
 
-    /// Submit one image; blocks until the reply arrives.
+    /// Submit one image; blocks until the reply arrives. Executor
+    /// failures surface here with the underlying message.
     pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
         anyhow::ensure!(
             image.len() == self.image_len,
@@ -150,7 +173,11 @@ impl Batcher {
         self.tx
             .send(Request { image, enqueued: Instant::now(), reply: reply_tx })
             .map_err(|_| anyhow::anyhow!("batcher worker has shut down"))?;
-        reply_rx.recv().map_err(|_| anyhow::anyhow!("batch execution failed"))
+        match reply_rx.recv() {
+            Ok(Ok(reply)) => Ok(reply),
+            Ok(Err(msg)) => Err(anyhow::anyhow!("batch execution failed: {msg}")),
+            Err(_) => Err(anyhow::anyhow!("batcher worker dropped the request")),
+        }
     }
 }
 
@@ -166,6 +193,7 @@ mod tests {
             4,
             2,
             Box::new(|buf, batch| {
+                assert_eq!(buf.len(), batch * 4, "executor must see the true batch size");
                 let mut out = Vec::new();
                 for i in 0..batch {
                     let s: f32 = buf[i * 4..(i + 1) * 4].iter().sum();
@@ -188,6 +216,9 @@ mod tests {
         let r = b.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_eq!(r.logits[0], 10.0);
         assert_eq!(r.batch_size, 1);
+        // true-size execution: the executor's batch marker equals 1, not
+        // the padded hardware batch
+        assert_eq!(r.logits[1], 1.0);
         assert_eq!(stats.lock().unwrap().batches, 1);
     }
 
@@ -216,5 +247,71 @@ mod tests {
     fn rejects_wrong_image_len() {
         let (b, _) = spawn_echo(BatchPolicy::default());
         assert!(b.infer(vec![0.0; 3]).is_err());
+    }
+
+    #[test]
+    fn executor_error_reaches_every_caller_with_message() {
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let b = Batcher::spawn(
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+            2,
+            1,
+            Box::new(|_buf, _batch| Err(anyhow::anyhow!("kernel exploded at layer 3"))),
+            stats.clone(),
+        );
+        let handles: Vec<_> = (0..3)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || b.infer(vec![i as f32, 0.0]).unwrap_err().to_string())
+            })
+            .collect();
+        for h in handles {
+            let msg = h.join().unwrap();
+            assert!(
+                msg.contains("kernel exploded at layer 3"),
+                "root cause missing from `{msg}`"
+            );
+        }
+        assert!(stats.lock().unwrap().exec_errors >= 1);
+    }
+
+    #[test]
+    fn short_logits_vector_is_an_error_not_a_panic() {
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let b = Batcher::spawn(
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) },
+            1,
+            3,
+            Box::new(|_buf, _batch| Ok(vec![0.0])), // too short
+            stats.clone(),
+        );
+        let msg = b.infer(vec![1.0]).unwrap_err().to_string();
+        assert!(msg.contains("need 3"), "{msg}");
+        // malformed output counts as an execution error in the stats
+        assert_eq!(stats.lock().unwrap().exec_errors, 1);
+    }
+
+    #[test]
+    fn stateful_executor_reuses_buffers() {
+        // FnMut executor owning scratch: counts calls without realloc.
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let mut calls = 0u32;
+        let mut scratch: Vec<f32> = Vec::new();
+        let b = Batcher::spawn(
+            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            1,
+            1,
+            Box::new(move |buf, batch| {
+                calls += 1;
+                scratch.clear();
+                scratch.extend_from_slice(buf);
+                Ok(scratch.iter().take(batch).map(|v| v + calls as f32).collect())
+            }),
+            stats,
+        );
+        let r1 = b.infer(vec![10.0]).unwrap();
+        let r2 = b.infer(vec![10.0]).unwrap();
+        assert_eq!(r1.logits[0], 11.0);
+        assert_eq!(r2.logits[0], 12.0);
     }
 }

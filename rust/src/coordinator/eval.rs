@@ -98,6 +98,7 @@ pub fn evaluate_pjrt(
 }
 
 /// Evaluate through the native engine (dense or STC datapath).
+#[allow(clippy::too_many_arguments)]
 pub fn evaluate_native(
     graph: &Graph,
     weights: &Weights,
@@ -113,11 +114,14 @@ pub fn evaluate_native(
     let t0 = Instant::now();
     let mut correct = 0usize;
     let mut buf = Vec::new();
+    // One scratch for the whole eval: steady-state batches reuse the
+    // quantize/im2col/pack/accumulate buffers allocation-free.
+    let mut scratch = crate::model::Scratch::default();
     let mut start = 0usize;
     while start < n {
         let take = batch.min(n - start);
         ds.batch_f32_into(start, take, &mut buf);
-        let logits = engine.forward(&buf, take)?;
+        let logits = engine.forward_scratch(&buf, take, &mut scratch)?;
         for (i, pred) in top1(&logits, graph.num_classes).into_iter().enumerate() {
             if pred == ds.label(start + i) {
                 correct += 1;

@@ -1,14 +1,23 @@
-//! In-process inference service: PJRT executable behind the dynamic
-//! batcher, plus latency/throughput metrics. `examples/serve_bench.rs`
-//! drives it with concurrent synthetic clients.
+//! In-process inference service: an executor (PJRT executable or the
+//! native engine) behind the dynamic batcher, plus latency/throughput
+//! metrics. `examples/serve_bench.rs` drives it with concurrent
+//! synthetic clients.
+//!
+//! Batches execute at their true size. The PJRT executor is the one
+//! place that still pads — its HLO has a fixed lowered batch dimension —
+//! and it does so internally, slicing the padded rows back off before
+//! they reach the batcher. The native executor
+//! ([`InferenceServer::start_native`]) runs short batches directly and
+//! reuses one [`Scratch`](crate::model::Scratch) across all requests.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::model::{Engine, EngineMode, Graph, Scratch, Weights};
 use crate::quant::SparqConfig;
-use crate::runtime::{ArtifactKind, ModelArtifacts, PjrtRuntime, TensorArg};
+use crate::runtime::{ArtifactKind, ModelArtifacts, PjrtRuntime, TensorArg, TensorData};
 
 use super::batcher::{BatchPolicy, Batcher, BatcherStats, Reply};
 
@@ -65,7 +74,7 @@ pub struct ServerMetrics {
     pub batcher: BatcherStats,
 }
 
-/// A model served through the batched PJRT path.
+/// A model served through the dynamically batched executor path.
 pub struct InferenceServer {
     batcher: Batcher,
     metrics: Arc<Mutex<ServerMetrics>>,
@@ -74,7 +83,10 @@ pub struct InferenceServer {
 }
 
 impl InferenceServer {
-    /// Load the model's sparq artifact and start the batching worker.
+    /// Load the model's sparq artifact and start the batching worker on
+    /// the PJRT path. The executable's batch dimension is fixed at
+    /// `policy.max_batch`; short batches are padded inside this
+    /// executor and the padded rows sliced off.
     pub fn start(
         rt: Arc<PjrtRuntime>,
         model: &ModelArtifacts,
@@ -89,15 +101,65 @@ impl InferenceServer {
         let stats = Arc::new(Mutex::new(BatcherStats::default()));
         let [h, w, c] = image_dims;
         let image_len = h * w * c;
+        let hw_batch = policy.max_batch;
         let nscales = scales.len();
         let cfg_vec = cfg.to_vec().to_vec();
-        let execute = move |buf: &[f32], batch: usize| -> Result<Vec<f32>> {
+        let execute = move |buf: &[f32], bsz: usize| -> Result<Vec<f32>> {
+            // TensorArg owns its data, so one allocation per batch is
+            // inherent to this backend; pad straight into it.
+            let mut padded = buf.to_vec();
+            padded.resize(hw_batch * image_len, 0.0);
             let out = exe.run(&[
-                TensorArg::f32(&[batch, h, w, c], buf.to_vec()),
+                TensorArg::f32(&[hw_batch, h, w, c], padded),
                 TensorArg::f32(&[nscales], scales.clone()),
                 TensorArg::i32(&[5], cfg_vec.clone()),
             ])?;
-            Ok(out[0].as_f32().to_vec())
+            // Error (don't panic) on malformed executable output: a
+            // panic here would kill the batcher worker for good, while
+            // an Err is surfaced per-batch and the server keeps serving.
+            let first = out
+                .first()
+                .ok_or_else(|| anyhow::anyhow!("executable returned no outputs"))?;
+            let logits = match &first.data {
+                TensorData::F32(v) => v,
+                TensorData::I32(_) => {
+                    anyhow::bail!("executable returned i32 logits, expected f32")
+                }
+            };
+            let need = bsz * classes;
+            anyhow::ensure!(
+                logits.len() >= need,
+                "executable returned {} logits, need {need}",
+                logits.len()
+            );
+            Ok(logits[..need].to_vec())
+        };
+        let batcher = Batcher::spawn(policy, image_len, classes, Box::new(execute), stats);
+        Ok(Self { batcher, metrics, classes, image_dims })
+    }
+
+    /// Serve a model through the native integer engine — no PJRT, no
+    /// artifacts, true variable-batch execution. The worker owns the
+    /// engine and one [`Scratch`], so steady-state requests allocate
+    /// nothing on the quantized path.
+    pub fn start_native(
+        graph: &Graph,
+        weights: &Weights,
+        scales: &[f32],
+        cfg: SparqConfig,
+        mode: EngineMode,
+        policy: BatchPolicy,
+    ) -> Result<Self> {
+        let engine = Engine::new(graph, weights, cfg, scales, mode)?;
+        let [h, w, c] = graph.input_hwc;
+        let image_len = h * w * c;
+        let classes = graph.num_classes;
+        let image_dims = graph.input_hwc;
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let mut scratch = Scratch::default();
+        let execute = move |buf: &[f32], bsz: usize| -> Result<Vec<f32>> {
+            engine.forward_scratch(buf, bsz, &mut scratch)
         };
         let batcher = Batcher::spawn(policy, image_len, classes, Box::new(execute), stats);
         Ok(Self { batcher, metrics, classes, image_dims })
@@ -121,6 +183,8 @@ impl InferenceServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::{Node, Op};
+    use std::collections::HashMap;
 
     #[test]
     fn histogram_quantiles_ordered() {
@@ -132,5 +196,88 @@ mod tests {
         assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
         assert!(h.mean_us() > 0.0);
         assert_eq!(h.max_us(), 100_000);
+    }
+
+    /// Tiny all-native model for serving tests: one quantized conv.
+    fn tiny_native_model() -> (Graph, Weights) {
+        let graph = Graph {
+            arch: "tinyq".into(),
+            variant: "serve-test".into(),
+            num_classes: 2,
+            input_hwc: [4, 4, 1],
+            eval_batch: 4,
+            quant_convs: vec!["q1".into()],
+            nodes: vec![
+                Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+                Node {
+                    name: "q1".into(),
+                    op: Op::Conv { k: 3, stride: 1, out_ch: 2, relu: true, quant: true },
+                    inputs: vec!["img".into()],
+                },
+                Node { name: "g".into(), op: Op::Gap, inputs: vec!["q1".into()] },
+                Node { name: "fc".into(), op: Op::Fc { out: 2 }, inputs: vec!["g".into()] },
+            ],
+        };
+        let mut quant = HashMap::new();
+        quant.insert(
+            "q1".to_string(),
+            crate::model::weights::QuantConv {
+                wq: (0..18).map(|i| (((i * 37) % 255) as i32 - 127) as i8).collect(),
+                k: 9,
+                o: 2,
+                scale: vec![0.015, 0.02],
+                bias: vec![0.05, -0.05],
+            },
+        );
+        let weights = Weights {
+            quant,
+            float: HashMap::new(),
+            fc_w: vec![1.0, -0.5, 0.25, 1.0],
+            fc_in: 2,
+            fc_out: 2,
+            fc_b: vec![0.1, 0.2],
+        };
+        (graph, weights)
+    }
+
+    #[test]
+    fn native_server_matches_direct_engine_forward() {
+        let (graph, weights) = tiny_native_model();
+        let cfg = SparqConfig::named("5opt_r").unwrap();
+        let scales = [0.02f32];
+        let server = Arc::new(
+            InferenceServer::start_native(
+                &graph,
+                &weights,
+                &scales,
+                cfg,
+                EngineMode::Dense,
+                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) },
+            )
+            .unwrap(),
+        );
+        let engine =
+            Engine::new(&graph, &weights, cfg, &scales, EngineMode::Dense).unwrap();
+
+        // 6 concurrent clients with distinct images; every reply must
+        // equal the direct single-image forward (no cross-wiring, no
+        // padded-row contamination).
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                let s = server.clone();
+                std::thread::spawn(move || {
+                    let img: Vec<f32> = (0..16).map(|j| ((i * 16 + j) as f32) / 40.0).collect();
+                    (img.clone(), s.infer(img).unwrap())
+                })
+            })
+            .collect();
+        for h in handles {
+            let (img, reply) = h.join().unwrap();
+            let want = engine.forward(&img, 1).unwrap();
+            assert_eq!(reply.logits, want, "served logits diverge from direct forward");
+            assert!(reply.batch_size >= 1 && reply.batch_size <= 4);
+        }
+        let metrics = server.metrics();
+        assert_eq!(metrics.lock().unwrap().e2e.count(), 6);
     }
 }

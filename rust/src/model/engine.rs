@@ -1,4 +1,15 @@
 //! Graph executor — float ops + SPARQ integer convs (DESIGN.md S15).
+//!
+//! Serving hot path (see the module doc in [`super`]): per quantized
+//! conv the input is uniform-quantized into reusable scratch, im2col'd
+//! into reusable scratch, trimmed through the [`TrimLut`] fused into
+//! row packing, and multiplied by the prepared (O, K) i16 weights with
+//! the cache-blocked row-parallel GEMM. A [`Scratch`] carries the four
+//! hot buffers (quantized input, im2col patches, packed rows, i32
+//! accumulator) across layers *and* across requests, so steady-state
+//! serving performs zero per-request heap allocation on those paths.
+//! Intermediate tensors are dropped from the value map as soon as their
+//! last consumer has run, holding peak memory to the graph's live set.
 
 use std::collections::HashMap;
 
@@ -7,10 +18,11 @@ use anyhow::{bail, Context, Result};
 use crate::hw::stc::{stc_gemm, CompressedWeights};
 use crate::quant::minmax::ActScale;
 use crate::quant::SparqConfig;
-use crate::tensor::{im2col_u8, out_dim, same_padding, TensorF32};
+use crate::tensor::{im2col_u8_into, out_dim, same_padding, TensorF32};
 
 use super::gemm::QuantGemm;
 use super::graph::{Graph, Node, Op};
+use super::threadpool;
 use super::weights::Weights;
 
 /// How quantized convs execute.
@@ -37,10 +49,41 @@ impl TraceSink for NoTrace {
     fn record(&mut self, _layer: &str, _acts_q: &[u8]) {}
 }
 
+/// Reusable per-worker forward buffers. All four grow to the largest
+/// layer shape on the first forward and are then reused allocation-free;
+/// one `Scratch` must not be shared across concurrent forwards (give
+/// each serving worker its own).
+#[derive(Default)]
+pub struct Scratch {
+    /// Uniform-quantized input activations (u8).
+    xq: Vec<u8>,
+    /// im2col patch matrix (M x K, u8).
+    patches: Vec<u8>,
+    /// Trimmed rows packed to i16 for the vectorized inner dot.
+    pack: Vec<i16>,
+    /// Integer GEMM accumulator (M x O, i32).
+    acc: Vec<i32>,
+    /// K-padded patch copy for the STC datapath (K % 4 != 0 only).
+    stc_pad: Vec<u8>,
+}
+
+/// Grow-only view: resizes the buffer if needed, returns exactly `n`
+/// elements. Capacity is retained across calls, so repeated forwards
+/// with stable shapes never reallocate.
+fn grown<T: Copy + Default>(buf: &mut Vec<T>, n: usize) -> &mut [T] {
+    if buf.len() < n {
+        buf.resize(n, T::default());
+    }
+    &mut buf[..n]
+}
+
 /// A ready-to-run model: graph + weights + config + scales.
-pub struct Engine<'a> {
-    pub graph: &'a Graph,
-    weights: &'a Weights,
+///
+/// Owns its graph and weights (cloned at construction), so an `Engine`
+/// can be moved into long-lived serving workers without borrowing.
+pub struct Engine {
+    pub graph: Graph,
+    weights: Weights,
     pub cfg: SparqConfig,
     mode: EngineMode,
     scales: HashMap<String, ActScale>,
@@ -49,13 +92,18 @@ pub struct Engine<'a> {
     prepared: HashMap<String, Vec<i16>>,
     /// Per-layer 2:4 compressed weights (STC mode).
     compressed: HashMap<String, CompressedWeights>,
+    /// Value name -> index of its last consuming node (drives eager
+    /// dropping of dead intermediates during forward).
+    last_use: HashMap<String, usize>,
+    /// Worker threads for the GEMM / float-conv row partition.
+    threads: usize,
 }
 
-impl<'a> Engine<'a> {
+impl Engine {
     /// `act_scales` ordered by `graph.quant_convs` (from calibration).
     pub fn new(
-        graph: &'a Graph,
-        weights: &'a Weights,
+        graph: &Graph,
+        weights: &Weights,
         cfg: SparqConfig,
         act_scales: &[f32],
         mode: EngineMode,
@@ -79,8 +127,8 @@ impl<'a> Engine<'a> {
                     prepared.insert(name.clone(), gemm.prepare_weights(&qc.wq, qc.k, qc.o));
                 }
                 EngineMode::Stc => {
-                    // STC stores pre-requantized weights? No: requantize
-                    // survivors at execute time (stc_gemm handles w_bits).
+                    // Requantization of the survivors happens at execute
+                    // time (stc_gemm handles w_bits).
                     let padded;
                     let (wq, k) = if qc.k % 4 == 0 {
                         (&qc.wq, qc.k)
@@ -101,19 +149,69 @@ impl<'a> Engine<'a> {
                 }
             }
         }
-        Ok(Self { graph, weights, cfg, mode, scales, gemm, prepared, compressed })
+        let mut last_use = HashMap::new();
+        for (i, node) in graph.nodes.iter().enumerate() {
+            for input in &node.inputs {
+                last_use.insert(input.clone(), i);
+            }
+        }
+        Ok(Self {
+            graph: graph.clone(),
+            weights: weights.clone(),
+            cfg,
+            mode,
+            scales,
+            gemm,
+            prepared,
+            compressed,
+            last_use,
+            threads: threadpool::max_threads(),
+        })
+    }
+
+    /// Override the worker-thread count (1 = fully serial). Defaults to
+    /// [`threadpool::max_threads`]. Results are identical for any value.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Forward a normalized image batch `[batch, H, W, C]` -> logits
-    /// `[batch, classes]` row-major.
+    /// `[batch, classes]` row-major. Allocates transient scratch; the
+    /// serving path uses [`Engine::forward_scratch`] instead.
     pub fn forward(&self, images: &[f32], batch: usize) -> Result<Vec<f32>> {
-        self.forward_traced(images, batch, &mut NoTrace)
+        self.forward_scratch(images, batch, &mut Scratch::default())
+    }
+
+    /// Forward with caller-owned reusable [`Scratch`] — the steady-state
+    /// serving entry point (zero per-request allocation on the quantized
+    /// hot path once the scratch has warmed up).
+    pub fn forward_scratch(
+        &self,
+        images: &[f32],
+        batch: usize,
+        scratch: &mut Scratch,
+    ) -> Result<Vec<f32>> {
+        self.forward_traced_scratch(images, batch, scratch, &mut NoTrace)
     }
 
     pub fn forward_traced(
         &self,
         images: &[f32],
         batch: usize,
+        sink: &mut dyn TraceSink,
+    ) -> Result<Vec<f32>> {
+        self.forward_traced_scratch(images, batch, &mut Scratch::default(), sink)
+    }
+
+    pub fn forward_traced_scratch(
+        &self,
+        images: &[f32],
+        batch: usize,
+        scratch: &mut Scratch,
         sink: &mut dyn TraceSink,
     ) -> Result<Vec<f32>> {
         let [h, w, c] = self.graph.input_hwc;
@@ -123,11 +221,12 @@ impl<'a> Engine<'a> {
         let mut vals: HashMap<&str, TensorF32> = HashMap::new();
         vals.insert("img", TensorF32::from_vec(batch, h, w, c, images.to_vec()));
         let mut logits = Vec::new();
-        for node in &self.graph.nodes {
+        for (idx, node) in self.graph.nodes.iter().enumerate() {
             let get = |name: &String| -> Result<&TensorF32> {
                 vals.get(name.as_str()).with_context(|| format!("missing value {name}"))
             };
-            let out = match &node.op {
+            // `None` means "produces no value-map entry" (a terminal fc).
+            let out: Option<TensorF32> = match &node.op {
                 Op::Input => continue,
                 Op::Conv { quant: false, k, stride, relu, .. } => {
                     let x = get(&node.inputs[0])?;
@@ -135,43 +234,58 @@ impl<'a> Engine<'a> {
                     if *relu {
                         y.relu_inplace();
                     }
-                    y
+                    Some(y)
                 }
                 Op::Conv { quant: true, k, stride, relu, .. } => {
                     let x = get(&node.inputs[0])?;
-                    let mut y = self.quant_conv(node, x, *k, *stride, sink)?;
+                    let mut y = self.quant_conv(node, x, *k, *stride, scratch, sink)?;
                     if *relu {
                         y.relu_inplace();
                     }
-                    y
+                    Some(y)
                 }
                 Op::Pool { avg } => {
                     let x = get(&node.inputs[0])?;
-                    if *avg {
-                        x.avgpool2()
-                    } else {
-                        x.maxpool2()
-                    }
+                    Some(if *avg { x.avgpool2() } else { x.maxpool2() })
                 }
                 Op::Gap => {
                     let x = get(&node.inputs[0])?;
                     let g = x.gap();
-                    TensorF32::from_vec(x.n, 1, 1, x.c, g)
+                    Some(TensorF32::from_vec(x.n, 1, 1, x.c, g))
                 }
-                Op::Add => get(&node.inputs[0])?.add(get(&node.inputs[1])?),
+                Op::Add => Some(get(&node.inputs[0])?.add(get(&node.inputs[1])?)),
                 Op::Relu => {
                     let mut y = get(&node.inputs[0])?.clone();
                     y.relu_inplace();
-                    y
+                    Some(y)
                 }
                 Op::Concat => {
                     let parts: Vec<&TensorF32> =
                         node.inputs.iter().map(|i| get(i)).collect::<Result<_>>()?;
-                    TensorF32::concat_channels(&parts)
+                    Some(TensorF32::concat_channels(&parts))
                 }
                 Op::Fc { out } => {
+                    // fc is the single, terminal logits sink. A second
+                    // head would silently overwrite the first (the seed
+                    // bug), and a downstream consumer's effect would be
+                    // silently ignored (forward returns `logits`, not a
+                    // vals entry) — refuse both loudly.
+                    if !logits.is_empty() {
+                        bail!(
+                            "node `{}` is a second fc head; the engine supports one logits sink",
+                            node.name
+                        );
+                    }
+                    if self.last_use.contains_key(node.name.as_str()) {
+                        bail!(
+                            "fc node `{}` has downstream consumers; fc must be terminal",
+                            node.name
+                        );
+                    }
                     let x = get(&node.inputs[0])?;
-                    assert_eq!(x.c, self.weights.fc_in, "fc input width");
+                    if x.c != self.weights.fc_in {
+                        bail!("fc input width {} != {}", x.c, self.weights.fc_in);
+                    }
                     logits = vec![0f32; x.n * out];
                     for n in 0..x.n {
                         for oi in 0..*out {
@@ -182,10 +296,19 @@ impl<'a> Engine<'a> {
                             logits[n * out + oi] = acc;
                         }
                     }
-                    continue;
+                    None
                 }
             };
-            vals.insert(node.name.as_str(), out);
+            // Drop dead intermediates: a value whose last consumer just
+            // ran can never be read again.
+            for input in &node.inputs {
+                if self.last_use.get(input.as_str()) == Some(&idx) {
+                    vals.remove(input.as_str());
+                }
+            }
+            if let Some(out) = out {
+                vals.insert(node.name.as_str(), out);
+            }
         }
         if logits.is_empty() {
             bail!("graph produced no logits");
@@ -193,85 +316,117 @@ impl<'a> Engine<'a> {
         Ok(logits)
     }
 
-    /// Direct float convolution (unquantized first layer), SAME padding.
+    /// Direct float convolution (unquantized first layer), SAME padding,
+    /// row-parallel: each (image, output-row) pair is an independent
+    /// unit, and per-element accumulation order is unchanged vs the
+    /// serial loop, so results are bit-identical for any thread count.
     fn float_conv(&self, node: &Node, x: &TensorF32, k: usize, stride: usize) -> Result<TensorF32> {
         let fw = self.weights.float_conv(&node.name)?;
-        assert_eq!((fw.kh, fw.kw, fw.c_in), (k, k, x.c), "conv {} shape", node.name);
+        if (fw.kh, fw.kw, fw.c_in) != (k, k, x.c) {
+            bail!("conv {} shape mismatch", node.name);
+        }
         let (oh, ow) = (out_dim(x.h, stride), out_dim(x.w, stride));
         let (pad_t, _) = same_padding(x.h, k, stride);
         let (pad_l, _) = same_padding(x.w, k, stride);
         let mut y = TensorF32::zeros(x.n, oh, ow, fw.c_out);
-        for n in 0..x.n {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    for co in 0..fw.c_out {
-                        let mut acc = fw.bias[co];
-                        for ky in 0..k {
-                            let iy = (oy * stride + ky) as isize - pad_t as isize;
-                            if iy < 0 || iy >= x.h as isize {
+        let unit = ow * fw.c_out;
+        // Same work-scaled worker count as the quantized GEMM: one per
+        // MIN_PARALLEL_MACS of work, so tiny convs run serial and sizes
+        // just above the cutoff don't spawn a full thread complement.
+        let macs = x.n * oh * ow * fw.c_out * k * k * x.c;
+        let threads = self.threads.min((macs / super::gemm::MIN_PARALLEL_MACS).max(1));
+        threadpool::par_units(&mut y.data, unit, threads, |row_idx, row| {
+            let (n, oy) = (row_idx / oh, row_idx % oh);
+            for ox in 0..ow {
+                for co in 0..fw.c_out {
+                    let mut acc = fw.bias[co];
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad_t as isize;
+                        if iy < 0 || iy >= x.h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad_l as isize;
+                            if ix < 0 || ix >= x.w as isize {
                                 continue;
                             }
-                            for kx in 0..k {
-                                let ix = (ox * stride + kx) as isize - pad_l as isize;
-                                if ix < 0 || ix >= x.w as isize {
-                                    continue;
-                                }
-                                for ci in 0..x.c {
-                                    acc += x.at(n, iy as usize, ix as usize, ci)
-                                        * fw.w[((ky * k + kx) * fw.c_in + ci) * fw.c_out + co];
-                                }
+                            for ci in 0..x.c {
+                                acc += x.at(n, iy as usize, ix as usize, ci)
+                                    * fw.w[((ky * k + kx) * fw.c_in + ci) * fw.c_out + co];
                             }
                         }
-                        *y.at_mut(n, oy, ox, co) = acc;
                     }
+                    row[ox * fw.c_out + co] = acc;
                 }
             }
-        }
+        });
         Ok(y)
     }
 
-    /// SPARQ quantized conv: quantize input, im2col, trim+GEMM, dequant.
+    /// SPARQ quantized conv: quantize input, im2col, trim+GEMM, dequant —
+    /// all integer stages through reusable scratch.
     fn quant_conv(
         &self,
         node: &Node,
         x: &TensorF32,
         k: usize,
         stride: usize,
+        scratch: &mut Scratch,
         sink: &mut dyn TraceSink,
     ) -> Result<TensorF32> {
         let qc = self.weights.quant_conv(&node.name)?;
         let scale = self.scales[&node.name];
         // quantize the (non-negative) float input to u8
-        let mut xq = vec![0u8; x.data.len()];
-        scale.quantize_slice_into(&x.data, &mut xq);
+        let xq = grown(&mut scratch.xq, x.data.len());
+        scale.quantize_slice_into(&x.data, xq);
         // im2col in the shared (C, kh, kw) feature order
-        let (mut patches, oh, ow) = im2col_u8(&xq, x.n, x.h, x.w, x.c, k, stride);
+        let (oh, ow) = (out_dim(x.h, stride), out_dim(x.w, stride));
         let m = x.n * oh * ow;
         let kk = x.c * k * k;
-        sink.record(&node.name, &patches);
+        let patches = grown(&mut scratch.patches, m * kk);
+        im2col_u8_into(xq, x.n, x.h, x.w, x.c, k, stride, patches);
+        sink.record(&node.name, patches);
 
         let wrs = self.cfg.weight_rescale();
-        let mut acc = vec![0i32; m * qc.o];
-        match self.mode {
+        let stc_out;
+        let acc: &[i32] = match self.mode {
             EngineMode::Dense => {
+                let acc = grown(&mut scratch.acc, m * qc.o);
                 let wt = &self.prepared[&node.name];
-                self.gemm.gemm(&mut patches, m, kk, wt, qc.o, &mut acc);
+                self.gemm.gemm_with(
+                    patches,
+                    m,
+                    kk,
+                    wt,
+                    qc.o,
+                    acc,
+                    &mut scratch.pack,
+                    self.threads,
+                );
+                acc
             }
             EngineMode::Stc => {
                 let cw = &self.compressed[&node.name];
                 // pad patches K to the compressed K if needed
-                if cw.k != kk {
-                    let mut padded = vec![0u8; m * cw.k];
+                let src: &[u8] = if cw.k != kk {
+                    let padded = grown(&mut scratch.stc_pad, m * cw.k);
+                    padded.fill(0);
                     for mi in 0..m {
                         padded[mi * cw.k..mi * cw.k + kk]
                             .copy_from_slice(&patches[mi * kk..(mi + 1) * kk]);
                     }
-                    patches = padded;
-                }
-                let (out, _) = stc_gemm(&patches, cw, m, self.cfg);
-                acc = out;
+                    padded
+                } else {
+                    patches
+                };
+                // stc_gemm owns its output; read it in place (the STC
+                // datapath is the Table-6 simulation, not the serving
+                // hot path, so its internal allocation is acceptable).
+                let (out, _) = stc_gemm(src, cw, m, self.cfg);
+                stc_out = out;
+                &stc_out
             }
-        }
+        };
         // dequantize + bias
         let mut y = TensorF32::zeros(x.n, oh, ow, qc.o);
         for mi in 0..m {
@@ -296,5 +451,235 @@ impl<'a> Engine<'a> {
                     .unwrap()
             })
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::graph::{Graph, Node, Op};
+    use crate::model::weights::{FloatConv, QuantConv, Weights};
+
+    /// Tiny hand-built model: img(1x1x2) -> float 1x1 conv (identity)
+    /// -> add(c1, c1) -> gap -> fc(identity) => logits = 2 * img.
+    fn tiny_float_model(extra_fc_head: bool) -> (Graph, Weights) {
+        let mut nodes = vec![
+            Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+            Node {
+                name: "c1".into(),
+                op: Op::Conv { k: 1, stride: 1, out_ch: 2, relu: false, quant: false },
+                inputs: vec!["img".into()],
+            },
+            Node { name: "a".into(), op: Op::Add, inputs: vec!["c1".into(), "c1".into()] },
+            Node { name: "g".into(), op: Op::Gap, inputs: vec!["a".into()] },
+            Node { name: "fc".into(), op: Op::Fc { out: 2 }, inputs: vec!["g".into()] },
+        ];
+        if extra_fc_head {
+            nodes.push(Node {
+                name: "fc2".into(),
+                op: Op::Fc { out: 2 },
+                inputs: vec!["g".into()],
+            });
+        }
+        let graph = Graph {
+            arch: "tiny".into(),
+            variant: "test".into(),
+            num_classes: 2,
+            input_hwc: [1, 1, 2],
+            eval_batch: 2,
+            quant_convs: vec![],
+            nodes,
+        };
+        let mut float = HashMap::new();
+        float.insert(
+            "c1".to_string(),
+            FloatConv {
+                // HWIO 1x1x2x2 identity
+                w: vec![1.0, 0.0, 0.0, 1.0],
+                kh: 1,
+                kw: 1,
+                c_in: 2,
+                c_out: 2,
+                bias: vec![0.0, 0.0],
+            },
+        );
+        let weights = Weights {
+            quant: HashMap::new(),
+            float,
+            fc_w: vec![1.0, 0.0, 0.0, 1.0],
+            fc_in: 2,
+            fc_out: 2,
+            fc_b: vec![0.0, 0.0],
+        };
+        (graph, weights)
+    }
+
+    #[test]
+    fn forward_through_shared_inputs_and_dead_value_dropping() {
+        let (graph, weights) = tiny_float_model(false);
+        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
+            .unwrap();
+        let logits = engine.forward(&[1.5, -2.0, 0.25, 3.0], 2).unwrap();
+        // add(c1, c1) doubles; gap of 1x1 is identity; fc identity
+        assert_eq!(logits, vec![3.0, -4.0, 0.5, 6.0]);
+    }
+
+    #[test]
+    fn second_fc_head_is_rejected_not_silently_overwritten() {
+        let (graph, weights) = tiny_float_model(true);
+        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
+            .unwrap();
+        let err = engine.forward(&[1.0, 1.0], 1).unwrap_err().to_string();
+        assert!(err.contains("second fc head"), "{err}");
+    }
+
+    #[test]
+    fn post_fc_consumer_is_rejected_not_silently_ignored() {
+        let (mut graph, weights) = tiny_float_model(false);
+        // fc -> relu: the relu's effect could never reach the returned
+        // logits, so the engine must refuse rather than drop it.
+        graph.nodes.push(Node {
+            name: "r".into(),
+            op: Op::Relu,
+            inputs: vec!["fc".into()],
+        });
+        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
+            .unwrap();
+        let err = engine.forward(&[1.0, 1.0], 1).unwrap_err().to_string();
+        assert!(err.contains("must be terminal"), "{err}");
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic_and_allocation_stable() {
+        // One quantized conv so every scratch buffer is exercised.
+        let graph = Graph {
+            arch: "tinyq".into(),
+            variant: "test".into(),
+            num_classes: 2,
+            input_hwc: [4, 4, 1],
+            eval_batch: 1,
+            quant_convs: vec!["q1".into()],
+            nodes: vec![
+                Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+                Node {
+                    name: "q1".into(),
+                    op: Op::Conv { k: 3, stride: 1, out_ch: 2, relu: true, quant: true },
+                    inputs: vec!["img".into()],
+                },
+                Node { name: "g".into(), op: Op::Gap, inputs: vec!["q1".into()] },
+                Node { name: "fc".into(), op: Op::Fc { out: 2 }, inputs: vec!["g".into()] },
+            ],
+        };
+        let mut quant = HashMap::new();
+        quant.insert(
+            "q1".to_string(),
+            QuantConv {
+                wq: (0..9 * 2).map(|i| ((i * 29) % 255) as i32 as i8).collect(),
+                k: 9,
+                o: 2,
+                scale: vec![0.01, 0.02],
+                bias: vec![0.1, -0.1],
+            },
+        );
+        let weights = Weights {
+            quant,
+            float: HashMap::new(),
+            fc_w: vec![1.0, 0.0, 0.0, 1.0],
+            fc_in: 2,
+            fc_out: 2,
+            fc_b: vec![0.0, 0.0],
+        };
+        let engine =
+            Engine::new(&graph, &weights, SparqConfig::named("5opt_r").unwrap(), &[0.02],
+                EngineMode::Dense)
+            .unwrap();
+        let img: Vec<f32> = (0..16).map(|i| (i as f32) / 8.0).collect();
+        let fresh = engine.forward(&img, 1).unwrap();
+        let mut scratch = Scratch::default();
+        let first = engine.forward_scratch(&img, 1, &mut scratch).unwrap();
+        let caps = (
+            scratch.xq.capacity(),
+            scratch.patches.capacity(),
+            scratch.pack.capacity(),
+            scratch.acc.capacity(),
+        );
+        let second = engine.forward_scratch(&img, 1, &mut scratch).unwrap();
+        assert_eq!(first, fresh, "scratch path diverges from fresh-buffer path");
+        assert_eq!(second, fresh, "dirty scratch changes results");
+        assert_eq!(
+            caps,
+            (
+                scratch.xq.capacity(),
+                scratch.patches.capacity(),
+                scratch.pack.capacity(),
+                scratch.acc.capacity(),
+            ),
+            "steady-state forward reallocated scratch"
+        );
+    }
+
+    #[test]
+    fn parallel_float_conv_matches_serial_above_cutoff() {
+        // Large enough that float_conv's work-scaled worker count is
+        // >= 2 (8 * 16*16 * 16 * 9 * 8 MACs is several multiples of
+        // MIN_PARALLEL_MACS), so a regression in the row_idx -> (n, oy)
+        // partition math shows up as a serial/parallel mismatch.
+        let (n, h, w, c, co) = (8usize, 16usize, 16usize, 8usize, 16usize);
+        let graph = Graph {
+            arch: "par".into(),
+            variant: "test".into(),
+            num_classes: co,
+            input_hwc: [h, w, c],
+            eval_batch: n,
+            quant_convs: vec![],
+            nodes: vec![
+                Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+                Node {
+                    name: "c1".into(),
+                    op: Op::Conv { k: 3, stride: 1, out_ch: co, relu: true, quant: false },
+                    inputs: vec!["img".into()],
+                },
+                Node { name: "g".into(), op: Op::Gap, inputs: vec!["c1".into()] },
+                Node { name: "fc".into(), op: Op::Fc { out: co }, inputs: vec!["g".into()] },
+            ],
+        };
+        let mut float = HashMap::new();
+        float.insert(
+            "c1".to_string(),
+            FloatConv {
+                w: (0..9 * c * co).map(|i| ((i * 13) % 17) as f32 / 10.0 - 0.8).collect(),
+                kh: 3,
+                kw: 3,
+                c_in: c,
+                c_out: co,
+                bias: (0..co).map(|i| i as f32 * 0.01).collect(),
+            },
+        );
+        let mut fc_w = vec![0f32; co * co];
+        for i in 0..co {
+            fc_w[i * co + i] = 1.0;
+        }
+        let weights = Weights {
+            quant: HashMap::new(),
+            float,
+            fc_w,
+            fc_in: co,
+            fc_out: co,
+            fc_b: vec![0.0; co],
+        };
+        assert!(
+            n * h * w * co * 9 * c >= 2 * crate::model::gemm::MIN_PARALLEL_MACS,
+            "test model too small for >= 2 workers; grow it"
+        );
+        let img: Vec<f32> = (0..n * h * w * c).map(|i| ((i * 7) % 23) as f32 / 23.0).collect();
+        let mut engine =
+            Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense).unwrap();
+        engine.set_threads(1);
+        let serial = engine.forward(&img, n).unwrap();
+        engine.set_threads(8);
+        let parallel = engine.forward(&img, n).unwrap();
+        // per-element accumulation order is identical -> exact equality
+        assert_eq!(serial, parallel);
+        assert!(serial.iter().any(|&v| v != 0.0), "degenerate all-zero logits");
     }
 }

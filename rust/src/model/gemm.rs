@@ -4,13 +4,37 @@
 //! element; the implementation factors the work for speed:
 //!
 //! 1. the SPARQ trim touches each activation once per *row* (not once
-//!    per output column) through the 256-entry [`TrimLut`],
+//!    per output column) through the 256-entry [`TrimLut`], fused into
+//!    the i16 row packing,
 //! 2. weights are requantized once and transposed to (O, K) so the
 //!    inner dot product walks two contiguous slices,
-//! 3. the inner loop accumulates i32 over u8 x i8 products, which LLVM
-//!    auto-vectorizes well (verified in the §Perf pass).
+//! 3. the kernel is cache-blocked (M x O tiles over K panels) with a
+//!    4-column register accumulator, and output rows are partitioned
+//!    across scoped threads ([`super::threadpool`]).
+//!
+//! Integer accumulation is associative, so tiling and threading cannot
+//! change results: every path here is bit-identical to
+//! [`QuantGemm::gemm_naive`], the retained unblocked single-threaded
+//! reference (asserted by unit tests, property tests, and the
+//! `benches/hotpath.rs` before/after comparison).
 
 use crate::quant::{SparqConfig, TrimLut};
+
+use super::threadpool;
+
+/// Rows per register tile.
+const MC: usize = 16;
+/// Output columns per tile (4-way unrolled inner loop).
+const NC: usize = 32;
+/// Reduction panel: per tile the packed activation rows (`MC * KC` i16,
+/// 24 KB) plus the weight panel (`NC * KC` i16, 48 KB) stay L2-resident.
+const KC: usize = 768;
+/// Target MACs per worker thread: below this a GEMM runs serial, and
+/// above it the worker count grows one per multiple (capped by the
+/// requested count). At the kernel's measured throughput this keeps
+/// every worker busy for hundreds of microseconds, comfortably
+/// amortizing scoped-thread spawn/join (~tens of microseconds).
+pub const MIN_PARALLEL_MACS: usize = 512 * 1024;
 
 /// A reusable GEMM context for one configuration.
 pub struct QuantGemm {
@@ -45,7 +69,158 @@ impl QuantGemm {
 
     /// `a (M x K, u8, already uniform-quantized)` x `wt (O x K, prepared)`
     /// -> `out (M x O, i32)`. `a` is trimmed in place (it is scratch).
+    ///
+    /// Convenience wrapper that allocates its own pack buffer and uses
+    /// the default thread count; steady-state callers (the engine) use
+    /// [`QuantGemm::gemm_with`] with reused scratch instead.
     pub fn gemm(&self, a: &mut [u8], m: usize, k: usize, wt: &[i16], o: usize, out: &mut [i32]) {
+        let mut pack = Vec::new();
+        self.gemm_with(a, m, k, wt, o, out, &mut pack, threadpool::max_threads());
+    }
+
+    /// Cache-blocked, row-parallel GEMM with caller-owned scratch.
+    ///
+    /// `pack` is the i16 packed-row buffer (grown to `m * k` on first
+    /// use, then reused allocation-free); `threads` bounds the scoped
+    /// worker count (1 = fully serial). Results are bit-identical for
+    /// every `threads` value.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gemm_with(
+        &self,
+        a: &mut [u8],
+        m: usize,
+        k: usize,
+        wt: &[i16],
+        o: usize,
+        out: &mut [i32],
+        pack: &mut Vec<i16>,
+        threads: usize,
+    ) {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(wt.len(), o * k);
+        assert_eq!(out.len(), m * o);
+        if m == 0 || o == 0 {
+            return;
+        }
+        if k == 0 {
+            out.fill(0);
+            return;
+        }
+        if pack.len() < m * k {
+            pack.resize(m * k, 0);
+        }
+        let pack = &mut pack[..m * k];
+        // Scale workers to the work: one per MIN_PARALLEL_MACS of MACs,
+        // capped by the requested count and the row count. Small GEMMs
+        // run serial; sizes just above the cutoff get few threads, so
+        // spawn/join never dominates. Results are identical either way
+        // (integer accumulation is associative).
+        let nt = threads.min((m * k * o / MIN_PARALLEL_MACS).max(1)).clamp(1, m);
+        if nt == 1 {
+            self.gemm_block(a, m, k, wt, o, out, pack);
+            return;
+        }
+        // Partition output rows into contiguous per-thread blocks; each
+        // worker owns disjoint row ranges of `a`, `pack` and `out`.
+        let rows_per = m.div_ceil(nt);
+        std::thread::scope(|s| {
+            let mut a_rest = a;
+            let mut p_rest = pack;
+            let mut o_rest = out;
+            loop {
+                let rows = rows_per.min(a_rest.len() / k);
+                if rows == 0 {
+                    break;
+                }
+                let (a_blk, a_tail) = std::mem::take(&mut a_rest).split_at_mut(rows * k);
+                let (p_blk, p_tail) = std::mem::take(&mut p_rest).split_at_mut(rows * k);
+                let (o_blk, o_tail) = std::mem::take(&mut o_rest).split_at_mut(rows * o);
+                a_rest = a_tail;
+                p_rest = p_tail;
+                o_rest = o_tail;
+                s.spawn(move || self.gemm_block(a_blk, rows, k, wt, o, o_blk, p_blk));
+            }
+        });
+    }
+
+    /// One thread's share: trim + pack its rows, then the blocked kernel.
+    #[allow(clippy::too_many_arguments)]
+    fn gemm_block(
+        &self,
+        a: &mut [u8],
+        m: usize,
+        k: usize,
+        wt: &[i16],
+        o: usize,
+        out: &mut [i32],
+        pack: &mut [i16],
+    ) {
+        // SPARQ trim fused into row packing: each activation is touched
+        // once, written back (so callers observe the trimmed row, as the
+        // naive path did) and widened into the i16 panel.
+        for (row, prow) in a.chunks_exact_mut(k).zip(pack.chunks_exact_mut(k)) {
+            self.lut.trim_slice(row);
+            for (d, &s) in prow.iter_mut().zip(row.iter()) {
+                *d = i16::from(s);
+            }
+        }
+        for m0 in (0..m).step_by(MC) {
+            let mh = MC.min(m - m0);
+            for o0 in (0..o).step_by(NC) {
+                let oh = NC.min(o - o0);
+                for mi in 0..mh {
+                    let base = (m0 + mi) * o + o0;
+                    out[base..base + oh].fill(0);
+                }
+                for k0 in (0..k).step_by(KC) {
+                    let kh = KC.min(k - k0);
+                    for mi in 0..mh {
+                        let arow = &pack[(m0 + mi) * k + k0..(m0 + mi) * k + k0 + kh];
+                        let obase = (m0 + mi) * o + o0;
+                        let mut oi = 0;
+                        // 4-column unroll: the packed row is reused from
+                        // registers/L1 across four weight streams.
+                        while oi + 4 <= oh {
+                            let w0 = &wt[(o0 + oi) * k + k0..][..kh];
+                            let w1 = &wt[(o0 + oi + 1) * k + k0..][..kh];
+                            let w2 = &wt[(o0 + oi + 2) * k + k0..][..kh];
+                            let w3 = &wt[(o0 + oi + 3) * k + k0..][..kh];
+                            let (mut s0, mut s1, mut s2, mut s3) = (0i32, 0i32, 0i32, 0i32);
+                            for (j, &x) in arow.iter().enumerate() {
+                                let xv = i32::from(x);
+                                s0 += xv * i32::from(w0[j]);
+                                s1 += xv * i32::from(w1[j]);
+                                s2 += xv * i32::from(w2[j]);
+                                s3 += xv * i32::from(w3[j]);
+                            }
+                            out[obase + oi] += s0;
+                            out[obase + oi + 1] += s1;
+                            out[obase + oi + 2] += s2;
+                            out[obase + oi + 3] += s3;
+                            oi += 4;
+                        }
+                        while oi < oh {
+                            out[obase + oi] += dot_i16(arow, &wt[(o0 + oi) * k + k0..][..kh]);
+                            oi += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The pre-blocking implementation: unblocked, single-threaded,
+    /// fresh row buffer per call. Retained as the bit-exactness baseline
+    /// for tests and the before/after measurement in `benches/hotpath.rs`.
+    pub fn gemm_naive(
+        &self,
+        a: &mut [u8],
+        m: usize,
+        k: usize,
+        wt: &[i16],
+        o: usize,
+        out: &mut [i32],
+    ) {
         assert_eq!(a.len(), m * k);
         assert_eq!(wt.len(), o * k);
         assert_eq!(out.len(), m * o);
@@ -81,13 +256,18 @@ mod tests {
     use super::*;
     use crate::quant::vsparq::sparq_dot;
 
-    #[test]
-    fn gemm_matches_scalar_reference() {
-        let (m, k, o) = (7, 34, 5);
-        let a0: Vec<u8> = (0..m * k)
+    fn synth(m: usize, k: usize, o: usize) -> (Vec<u8>, Vec<i8>) {
+        let a: Vec<u8> = (0..m * k)
             .map(|i| if i % 4 == 0 { 0 } else { ((i * 67) % 256) as u8 })
             .collect();
         let w: Vec<i8> = (0..k * o).map(|i| (((i * 19) % 255) as i32 - 127) as i8).collect();
+        (a, w)
+    }
+
+    #[test]
+    fn gemm_matches_scalar_reference() {
+        let (m, k, o) = (7, 34, 5);
+        let (a0, w) = synth(m, k, o);
         for name in ["a8w8", "a8w4", "a4w8", "5opt_r", "3opt", "2opt_r", "6opt_r", "7opt_r_novs"] {
             let cfg = SparqConfig::named(name).unwrap();
             let g = QuantGemm::new(cfg);
@@ -123,5 +303,54 @@ mod tests {
         for mi in 0..m {
             assert_eq!(out[mi * o], sparq_dot(&a0[mi * k..(mi + 1) * k], &col, cfg));
         }
+    }
+
+    #[test]
+    fn blocked_parallel_bit_identical_to_naive_across_tile_edges() {
+        // Sizes straddling the MC/NC/KC tile boundaries and the thread
+        // partition, including ragged tails.
+        let cases = [(1, 1, 1), (3, 17, 4), (16, 768, 32), (17, 769, 33), (40, 1100, 70)];
+        for &(m, k, o) in &cases {
+            let (a0, w) = synth(m, k, o);
+            for name in ["a8w8", "5opt_r", "2opt", "7opt_r"] {
+                let cfg = SparqConfig::named(name).unwrap();
+                let g = QuantGemm::new(cfg);
+                let wt = g.prepare_weights(&w, k, o);
+
+                let mut a_ref = a0.clone();
+                let mut want = vec![0i32; m * o];
+                g.gemm_naive(&mut a_ref, m, k, &wt, o, &mut want);
+
+                for threads in [1usize, 2, 5, 16] {
+                    let mut a = a0.clone();
+                    let mut out = vec![-1i32; m * o];
+                    let mut pack = Vec::new();
+                    g.gemm_with(&mut a, m, k, &wt, o, &mut out, &mut pack, threads);
+                    assert_eq!(out, want, "{name} m={m} k={k} o={o} threads={threads}");
+                    // the trimmed scratch rows must also agree
+                    assert_eq!(a, a_ref, "{name} trimmed rows diverge");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_pack_buffer_is_reused() {
+        let (m, k, o) = (6, 50, 4);
+        let (a0, w) = synth(m, k, o);
+        let cfg = SparqConfig::named("5opt_r").unwrap();
+        let g = QuantGemm::new(cfg);
+        let wt = g.prepare_weights(&w, k, o);
+        let mut pack = Vec::new();
+        let mut out1 = vec![0i32; m * o];
+        let mut a = a0.clone();
+        g.gemm_with(&mut a, m, k, &wt, o, &mut out1, &mut pack, 2);
+        let cap = pack.capacity();
+        // second run with the same shapes must not reallocate
+        let mut out2 = vec![0i32; m * o];
+        let mut a = a0.clone();
+        g.gemm_with(&mut a, m, k, &wt, o, &mut out2, &mut pack, 2);
+        assert_eq!(pack.capacity(), cap);
+        assert_eq!(out1, out2);
     }
 }

@@ -11,13 +11,57 @@
 //! 2. the STC / Table 6 path — 2:4 compressed execution that the HLO
 //!    graphs do not model;
 //! 3. activation tracing for the toggle/sparsity statistics (exp. F2).
+//!
+//! # Hot-path architecture
+//!
+//! A quantized conv travels through four stages, each designed so the
+//! steady state is allocation-free and embarrassingly row-parallel:
+//!
+//! ```text
+//!  float input ──quantize──▶ u8 ──im2col──▶ patches (M x K)
+//!        │                                      │
+//!        │              ┌───────────────────────┘
+//!        │              ▼
+//!        │   TrimLut trim fused into i16 row packing   (quant::lut)
+//!        │              │
+//!        │              ▼
+//!        │   cache-blocked GEMM: M x O tiles over K panels,
+//!        │   4-column register accumulator                (model::gemm)
+//!        │              │    rows partitioned over scoped threads
+//!        │              ▼                                 (model::threadpool)
+//!        └──dequant + bias ◀── i32 accumulator
+//! ```
+//!
+//! * **LUT trim** — the SPARQ eq.-2 case analysis collapses to two
+//!   256-entry tables; each activation is touched once per row, not
+//!   once per output column.
+//! * **Blocked GEMM** — [`gemm::QuantGemm::gemm_with`] tiles M x O with
+//!   K panels so the packed rows and the active weight panel stay
+//!   cache-resident; integer accumulation is associative, so tiling
+//!   and threading are bit-exact vs the retained naive baseline
+//!   ([`gemm::QuantGemm::gemm_naive`]).
+//! * **Threading** — [`threadpool::par_units`] fans disjoint `&mut`
+//!   row ranges over `std::thread::scope` workers (no deps, no locks on
+//!   the data path). `SPARQ_THREADS` overrides the worker count.
+//! * **Scratch reuse** — [`engine::Scratch`] carries the quantized
+//!   input, im2col patches, packed rows and i32 accumulator across
+//!   layers and across requests: steady-state serving performs zero
+//!   per-request heap allocation on the integer path, and the engine
+//!   drops dead intermediate tensors as soon as their last consumer has
+//!   run.
+//!
+//! Measure it with `cargo bench --bench hotpath` (no artifacts needed):
+//! the bench compares the naive single-threaded seed GEMM against the
+//! blocked serial and blocked parallel kernels, and runs an end-to-end
+//! synthetic-model forward at 1 vs N threads.
 
 pub mod engine;
 pub mod gemm;
 pub mod graph;
+pub mod threadpool;
 pub mod weights;
 
-pub use engine::{Engine, EngineMode, TraceSink};
+pub use engine::{Engine, EngineMode, Scratch, TraceSink};
 pub use gemm::QuantGemm;
 pub use graph::{Graph, Node, Op};
 pub use weights::Weights;

@@ -1,0 +1,118 @@
+//! Scoped-thread row-parallel driver for the engine's hot loops.
+//!
+//! std threads only (rayon is not in the image's offline crate set). The
+//! model is deliberately simple: a caller partitions a flat output
+//! buffer into fixed-size *units* (GEMM row blocks, conv output rows),
+//! and [`par_units`] fans contiguous unit ranges out across scoped
+//! threads. Because every unit is a disjoint `&mut` sub-slice, there is
+//! no synchronization on the data path at all — the only cost is thread
+//! spawn/join, which for the engine's per-conv granularity (hundreds of
+//! microseconds to milliseconds of work) is noise.
+//!
+//! Thread count resolution: `SPARQ_THREADS` env var if set (>= 1),
+//! otherwise `std::thread::available_parallelism()`. Benchmarks pass an
+//! explicit count to compare serial vs parallel on the same build.
+
+use std::sync::OnceLock;
+
+/// Default worker count: `SPARQ_THREADS` override or the machine's
+/// available parallelism. Cached after first read.
+pub fn max_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("SPARQ_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Split `data` into `data.len() / unit` contiguous units and run
+/// `f(unit_index, unit_slice)` for every unit, distributing contiguous
+/// unit ranges over at most `threads` scoped threads.
+///
+/// `data.len()` must be a multiple of `unit`. With `threads <= 1` (or a
+/// single unit) everything runs on the caller's thread — the serial and
+/// parallel paths execute the identical per-unit closure, so results are
+/// bit-identical by construction.
+pub fn par_units<T, F>(data: &mut [T], unit: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(unit > 0, "unit size must be non-zero");
+    assert_eq!(data.len() % unit, 0, "data length {} not a multiple of unit {unit}", data.len());
+    let n = data.len() / unit;
+    if n == 0 {
+        return;
+    }
+    let nt = threads.clamp(1, n);
+    if nt == 1 {
+        for (i, chunk) in data.chunks_mut(unit).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let per = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        let f = &f;
+        let mut rest = data;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len() / unit);
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(take * unit);
+            rest = tail;
+            s.spawn(move || {
+                for (j, chunk) in head.chunks_mut(unit).enumerate() {
+                    f(base + j, chunk);
+                }
+            });
+            base += take;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let unit = 7;
+        let n = 23; // deliberately not a multiple of any thread count
+        let mut serial = vec![0i64; unit * n];
+        let mut parallel = serial.clone();
+        let fill = |i: usize, chunk: &mut [i64]| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v = (i * 1000 + j) as i64;
+            }
+        };
+        par_units(&mut serial, unit, 1, fill);
+        for threads in [2, 3, 5, 64] {
+            parallel.iter_mut().for_each(|v| *v = -1);
+            par_units(&mut parallel, unit, threads, fill);
+            assert_eq!(parallel, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single_unit() {
+        let mut empty: Vec<u8> = Vec::new();
+        par_units(&mut empty, 4, 8, |_, _| panic!("no units to run"));
+        let mut one = vec![0u8; 4];
+        par_units(&mut one, 4, 8, |i, c| {
+            assert_eq!(i, 0);
+            c.fill(9);
+        });
+        assert_eq!(one, vec![9; 4]);
+    }
+}

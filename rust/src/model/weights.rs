@@ -33,7 +33,7 @@ pub struct FloatConv {
 }
 
 /// All parameters of one exported model variant.
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct Weights {
     pub quant: HashMap<String, QuantConv>,
     pub float: HashMap<String, FloatConv>,

@@ -15,7 +15,15 @@ mod artifacts;
 mod executable;
 
 pub use artifacts::{ArtifactKind, Manifest, ModelArtifacts};
-pub use executable::{Executable, TensorArg, TensorOut};
+pub use executable::{Executable, TensorArg, TensorData, TensorOut};
+
+/// Marker substring carried by every error the offline `xla` stub
+/// (rust/crates/xla) raises. Artifact-gated tests match on it to tell
+/// "offline build — skip" from a genuine runtime failure. Kept here —
+/// not re-exported from `xla` — so swapping the stub for the real
+/// bindings stays a manifest-only change; must stay in sync with
+/// `STUB_UNAVAILABLE` in rust/crates/xla/src/lib.rs.
+pub const PJRT_STUB_MARKER: &str = "xla_extension is not available in this offline build";
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

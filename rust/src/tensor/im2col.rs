@@ -32,12 +32,34 @@ pub fn im2col_u8(
     k: usize,
     stride: usize,
 ) -> (Vec<u8>, usize, usize) {
+    let (oh, ow) = (out_dim(h, stride), out_dim(w, stride));
+    let mut out = vec![0u8; n * oh * ow * c * k * k];
+    im2col_u8_into(acts, n, h, w, c, k, stride, &mut out);
+    (out, oh, ow)
+}
+
+/// Allocation-free [`im2col_u8`]: fills a caller-owned buffer of exactly
+/// `n * oh * ow * c * k * k` bytes (the engine's reusable scratch) and
+/// returns `(oh, ow)`. The buffer is cleared first, so stale contents
+/// from a previous layer never leak into padding taps.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col_u8_into(
+    acts: &[u8],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    stride: usize,
+    out: &mut [u8],
+) -> (usize, usize) {
     assert_eq!(acts.len(), n * h * w * c);
     let (oh, ow) = (out_dim(h, stride), out_dim(w, stride));
     let (pad_t, _) = same_padding(h, k, stride);
     let (pad_l, _) = same_padding(w, k, stride);
     let feat = c * k * k;
-    let mut out = vec![0u8; n * oh * ow * feat];
+    assert_eq!(out.len(), n * oh * ow * feat, "im2col buffer size");
+    out.fill(0);
 
     for ni in 0..n {
         for oy in 0..oh {
@@ -62,7 +84,7 @@ pub fn im2col_u8(
             }
         }
     }
-    (out, oh, ow)
+    (oh, ow)
 }
 
 #[cfg(test)]
@@ -117,6 +139,16 @@ mod tests {
         // c0: ky=1 row -> [pad, 10, 30]; c1: [pad, 20, 40]
         assert_eq!(row0[3..6], [0, 10, 30]);
         assert_eq!(row0[9 + 3..9 + 6], [0, 20, 40]);
+    }
+
+    #[test]
+    fn into_variant_clears_stale_buffer() {
+        let acts: Vec<u8> = (1..=9).collect();
+        let (want, oh, ow) = im2col_u8(&acts, 1, 3, 3, 1, 3, 1);
+        let mut buf = vec![0xAAu8; oh * ow * 9];
+        let (oh2, ow2) = im2col_u8_into(&acts, 1, 3, 3, 1, 3, 1, &mut buf);
+        assert_eq!((oh2, ow2), (oh, ow));
+        assert_eq!(buf, want);
     }
 
     #[test]

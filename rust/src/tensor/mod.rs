@@ -5,7 +5,7 @@
 
 pub mod im2col;
 
-pub use im2col::{im2col_u8, out_dim, same_padding};
+pub use im2col::{im2col_u8, im2col_u8_into, out_dim, same_padding};
 
 /// Plain NHWC f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

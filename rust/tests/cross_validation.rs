@@ -5,8 +5,11 @@
 //! rust — so agreement here validates the entire integer semantics
 //! chain: ref.py == Pallas == quant:: == model::gemm, plus the float
 //! plumbing (im2col order, SAME padding, scales, bias, dequant).
-
-use std::path::PathBuf;
+//!
+//! These tests require the exported artifacts and a real PJRT backend;
+//! when either is missing (no `artifacts/manifest.json`, or the offline
+//! `xla` stub is linked) setup errors turn each test into a logged skip.
+//! Assertion failures still fail the suite.
 
 use sparq::coordinator::{calibrate, evaluate_native, evaluate_pjrt};
 use sparq::data::Dataset;
@@ -14,9 +17,8 @@ use sparq::model::{Engine, EngineMode, Graph, Weights};
 use sparq::quant::SparqConfig;
 use sparq::runtime::{ArtifactKind, Manifest, PjrtRuntime, TensorArg};
 
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
+mod common;
+use common::{artifacts_dir, artifacts_present, skip_or_fail};
 
 struct Ctx {
     rt: PjrtRuntime,
@@ -26,42 +28,56 @@ struct Ctx {
 }
 
 impl Ctx {
-    fn new() -> Self {
+    fn new() -> anyhow::Result<Self> {
         let dir = artifacts_dir();
-        Self {
-            rt: PjrtRuntime::cpu().unwrap(),
-            manifest: Manifest::load(&dir).unwrap(),
-            eval: Dataset::load(&dir.join("test.bin")).unwrap(),
-            calib_ds: Dataset::load(&dir.join("train.bin")).unwrap(),
+        Ok(Self {
+            rt: PjrtRuntime::cpu()?,
+            manifest: Manifest::load(&dir)?,
+            eval: Dataset::load(&dir.join("test.bin"))?,
+            calib_ds: Dataset::load(&dir.join("train.bin"))?,
+        })
+    }
+}
+
+/// Gate an artifact-dependent test under the shared policy (see
+/// tests/common/mod.rs): missing artifacts or the offline xla stub
+/// skip; everything else fails.
+fn with_ctx(name: &str, body: impl FnOnce(&Ctx) -> anyhow::Result<()>) {
+    if !artifacts_present(name) {
+        return;
+    }
+    match Ctx::new() {
+        Ok(ctx) => {
+            if let Err(e) = body(&ctx) {
+                skip_or_fail(name, e);
+            }
         }
+        Err(e) => skip_or_fail(name, e),
     }
 }
 
 /// Max |logit difference| between native and PJRT on one batch.
-fn logit_gap(ctx: &Ctx, tag: &str, cfg: SparqConfig, batch: usize) -> f32 {
-    let model = ctx.manifest.get(tag).unwrap();
-    let graph = Graph::load(&model.meta_path()).unwrap();
-    let weights = Weights::load(&model.weights_path()).unwrap();
-    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128).unwrap().scales();
+fn logit_gap(ctx: &Ctx, tag: &str, cfg: SparqConfig, batch: usize) -> anyhow::Result<f32> {
+    let model = ctx.manifest.get(tag)?;
+    let graph = Graph::load(&model.meta_path())?;
+    let weights = Weights::load(&model.weights_path())?;
+    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128)?.scales();
 
-    let engine =
-        Engine::new(&graph, &weights, cfg, &scales, EngineMode::Dense).unwrap();
+    let engine = Engine::new(&graph, &weights, cfg, &scales, EngineMode::Dense)?;
     let mut buf = Vec::new();
     ctx.eval.batch_f32_into(0, batch, &mut buf);
-    let native = engine.forward(&buf, batch).unwrap();
+    let native = engine.forward(&buf, batch)?;
 
     // PJRT path needs the full lowered batch
     let mut full = Vec::new();
     ctx.eval.batch_f32_into(0, graph.eval_batch, &mut full);
-    let exe = ctx.rt.load(&model.hlo_path(ArtifactKind::Sparq)).unwrap();
+    let exe = ctx.rt.load(&model.hlo_path(ArtifactKind::Sparq))?;
     let [h, w, c] = graph.input_hwc;
-    let out = exe
-        .run(&[
-            TensorArg::f32(&[graph.eval_batch, h, w, c], full),
-            TensorArg::f32(&[scales.len()], scales.clone()),
-            TensorArg::i32(&[5], cfg.to_vec().to_vec()),
-        ])
-        .unwrap();
+    let out = exe.run(&[
+        TensorArg::f32(&[graph.eval_batch, h, w, c], full),
+        TensorArg::f32(&[scales.len()], scales.clone()),
+        TensorArg::i32(&[5], cfg.to_vec().to_vec()),
+    ])?;
     let pjrt = out[0].as_f32();
 
     let mut gap = 0f32;
@@ -70,80 +86,89 @@ fn logit_gap(ctx: &Ctx, tag: &str, cfg: SparqConfig, batch: usize) -> f32 {
         gap = gap.max((native[i] - pjrt[i]).abs());
         scale = scale.max(pjrt[i].abs());
     }
-    gap / scale.max(1.0)
+    Ok(gap / scale.max(1.0))
 }
 
 #[test]
 fn native_matches_pjrt_resnet10_across_configs() {
-    let ctx = Ctx::new();
-    for name in ["a8w8", "5opt_r", "2opt", "7opt_r", "a4w8", "a8w4"] {
-        let gap = logit_gap(&ctx, "resnet10", SparqConfig::named(name).unwrap(), 16);
-        // integer cores are bit-exact; the float epilogue (dequant, bias,
-        // gap, fc) accumulates in different orders -> tiny fp error only
-        assert!(gap < 2e-4, "{name}: relative logit gap {gap}");
-    }
+    with_ctx("native_matches_pjrt_resnet10_across_configs", |ctx| {
+        for name in ["a8w8", "5opt_r", "2opt", "7opt_r", "a4w8", "a8w4"] {
+            let gap = logit_gap(ctx, "resnet10", SparqConfig::named(name).unwrap(), 16)?;
+            // integer cores are bit-exact; the float epilogue (dequant,
+            // bias, gap, fc) accumulates in different orders -> tiny fp
+            // error only
+            assert!(gap < 2e-4, "{name}: relative logit gap {gap}");
+        }
+        Ok(())
+    });
 }
 
 #[test]
 fn native_matches_pjrt_every_dense_arch() {
-    let ctx = Ctx::new();
-    let cfg = SparqConfig::named("3opt_r").unwrap();
-    for tag in ctx.manifest.dense_tags().iter().map(|s| s.to_string()).collect::<Vec<_>>() {
-        let gap = logit_gap(&ctx, &tag, cfg, 8);
-        assert!(gap < 5e-4, "{tag}: relative logit gap {gap}");
-    }
+    with_ctx("native_matches_pjrt_every_dense_arch", |ctx| {
+        let cfg = SparqConfig::named("3opt_r").unwrap();
+        let tags: Vec<String> =
+            ctx.manifest.dense_tags().iter().map(|s| s.to_string()).collect();
+        for tag in tags {
+            let gap = logit_gap(ctx, &tag, cfg, 8)?;
+            assert!(gap < 5e-4, "{tag}: relative logit gap {gap}");
+        }
+        Ok(())
+    });
 }
 
 #[test]
 fn native_accuracy_equals_pjrt_accuracy() {
-    let ctx = Ctx::new();
-    let model = ctx.manifest.get("vgg11m").unwrap();
-    let graph = Graph::load(&model.meta_path()).unwrap();
-    let weights = Weights::load(&model.weights_path()).unwrap();
-    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128).unwrap().scales();
-    let cfg = SparqConfig::named("5opt_r").unwrap();
-    let native = evaluate_native(
-        &graph, &weights, &ctx.eval, 64, &scales, cfg, EngineMode::Dense, 256,
-    )
-    .unwrap();
-    let pjrt =
-        evaluate_pjrt(&ctx.rt, model, &ctx.eval, 64, &scales, Some(cfg), 256).unwrap();
-    assert_eq!(native.correct, pjrt.correct, "prediction sets diverge");
+    with_ctx("native_accuracy_equals_pjrt_accuracy", |ctx| {
+        let model = ctx.manifest.get("vgg11m")?;
+        let graph = Graph::load(&model.meta_path())?;
+        let weights = Weights::load(&model.weights_path())?;
+        let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128)?.scales();
+        let cfg = SparqConfig::named("5opt_r").unwrap();
+        let native = evaluate_native(
+            &graph, &weights, &ctx.eval, 64, &scales, cfg, EngineMode::Dense, 256,
+        )?;
+        let pjrt =
+            evaluate_pjrt(&ctx.rt, model, &ctx.eval, 64, &scales, Some(cfg), 256)?;
+        assert_eq!(native.correct, pjrt.correct, "prediction sets diverge");
+        Ok(())
+    });
 }
 
 #[test]
 fn stc_engine_runs_pruned_models_and_rejects_dense() {
-    let ctx = Ctx::new();
-    // pruned model: STC engine must accept and produce sane accuracy
-    let model = ctx.manifest.get("resnet10_p24").unwrap();
-    let graph = Graph::load(&model.meta_path()).unwrap();
-    let weights = Weights::load(&model.weights_path()).unwrap();
-    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128).unwrap().scales();
-    let rep = evaluate_native(
-        &graph,
-        &weights,
-        &ctx.eval,
-        32,
-        &scales,
-        SparqConfig::A8W8,
-        EngineMode::Stc,
-        128,
-    )
-    .unwrap();
-    assert!(rep.accuracy() > 0.9, "stc a8w8 accuracy {}", rep.accuracy());
+    with_ctx("stc_engine_runs_pruned_models_and_rejects_dense", |ctx| {
+        // pruned model: STC engine must accept and produce sane accuracy
+        let model = ctx.manifest.get("resnet10_p24")?;
+        let graph = Graph::load(&model.meta_path())?;
+        let weights = Weights::load(&model.weights_path())?;
+        let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128)?.scales();
+        let rep = evaluate_native(
+            &graph,
+            &weights,
+            &ctx.eval,
+            32,
+            &scales,
+            SparqConfig::A8W8,
+            EngineMode::Stc,
+            128,
+        )?;
+        assert!(rep.accuracy() > 0.9, "stc a8w8 accuracy {}", rep.accuracy());
 
-    // dense model: STC engine must refuse (weights not 2:4)
-    let dense = ctx.manifest.get("resnet10").unwrap();
-    let dgraph = Graph::load(&dense.meta_path()).unwrap();
-    let dweights = Weights::load(&dense.weights_path()).unwrap();
-    let err = Engine::new(
-        &dgraph,
-        &dweights,
-        SparqConfig::A8W8,
-        &vec![0.01; dgraph.quant_convs.len()],
-        EngineMode::Stc,
-    );
-    assert!(err.is_err(), "dense weights must not pass 2:4 compression");
+        // dense model: STC engine must refuse (weights not 2:4)
+        let dense = ctx.manifest.get("resnet10")?;
+        let dgraph = Graph::load(&dense.meta_path())?;
+        let dweights = Weights::load(&dense.weights_path())?;
+        let err = Engine::new(
+            &dgraph,
+            &dweights,
+            SparqConfig::A8W8,
+            &vec![0.01; dgraph.quant_convs.len()],
+            EngineMode::Stc,
+        );
+        assert!(err.is_err(), "dense weights must not pass 2:4 compression");
+        Ok(())
+    });
 }
 
 #[test]
@@ -151,22 +176,20 @@ fn stc_matches_dense_engine_when_weights_are_24() {
     // On a 2:4-pruned model, the dense datapath and the STC datapath use
     // different pairings (adjacent vs survivor) — but at A8W8 (no
     // trimming) both must give the same logits exactly.
-    let ctx = Ctx::new();
-    let model = ctx.manifest.get("resnet18m_p24").unwrap();
-    let graph = Graph::load(&model.meta_path()).unwrap();
-    let weights = Weights::load(&model.weights_path()).unwrap();
-    let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128).unwrap().scales();
-    let mut buf = Vec::new();
-    ctx.eval.batch_f32_into(0, 8, &mut buf);
-    let dense = Engine::new(&graph, &weights, SparqConfig::A8W8, &scales, EngineMode::Dense)
-        .unwrap()
-        .forward(&buf, 8)
-        .unwrap();
-    let stc = Engine::new(&graph, &weights, SparqConfig::A8W8, &scales, EngineMode::Stc)
-        .unwrap()
-        .forward(&buf, 8)
-        .unwrap();
-    for (a, b) in dense.iter().zip(&stc) {
-        assert!((a - b).abs() < 1e-4, "dense {a} vs stc {b}");
-    }
+    with_ctx("stc_matches_dense_engine_when_weights_are_24", |ctx| {
+        let model = ctx.manifest.get("resnet18m_p24")?;
+        let graph = Graph::load(&model.meta_path())?;
+        let weights = Weights::load(&model.weights_path())?;
+        let scales = calibrate(&ctx.rt, model, &ctx.calib_ds, 64, 128)?.scales();
+        let mut buf = Vec::new();
+        ctx.eval.batch_f32_into(0, 8, &mut buf);
+        let dense = Engine::new(&graph, &weights, SparqConfig::A8W8, &scales, EngineMode::Dense)?
+            .forward(&buf, 8)?;
+        let stc = Engine::new(&graph, &weights, SparqConfig::A8W8, &scales, EngineMode::Stc)?
+            .forward(&buf, 8)?;
+        for (a, b) in dense.iter().zip(&stc) {
+            assert!((a - b).abs() < 1e-4, "dense {a} vs stc {b}");
+        }
+        Ok(())
+    });
 }

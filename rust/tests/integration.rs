@@ -1,8 +1,14 @@
 //! Integration tests over the runtime + coordinator, using the real
-//! exported artifacts (run `make artifacts` first; tests locate the
-//! repo's artifacts/ directory relative to the crate manifest).
+//! exported artifacts.
+//!
+//! Artifact-dependent tests are *gated*: when `artifacts/manifest.json`
+//! is absent (artifacts not built — they require the python/compile JAX
+//! toolchain) or the PJRT backend is unavailable (the offline `xla` stub
+//! is linked), the body's setup errors turn the test into a logged skip.
+//! Semantic assertion failures still panic and fail the suite. The
+//! always-on tests at the top run in every environment.
 
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 use sparq::coordinator::{
     calibrate, evaluate_pjrt, scales_for_policy, BatchPolicy, InferenceServer,
@@ -13,8 +19,19 @@ use sparq::quant::baselines::ScalePolicy;
 use sparq::quant::SparqConfig;
 use sparq::runtime::{ArtifactKind, Manifest, PjrtRuntime, TensorArg};
 
-fn artifacts_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+mod common;
+use common::{artifacts_dir, artifacts_present, skip_or_fail};
+
+/// Run an artifact-dependent test body under the shared gating policy
+/// (see tests/common/mod.rs): missing artifacts or the offline xla
+/// stub skip; everything else fails.
+fn with_artifacts(name: &str, body: impl FnOnce() -> anyhow::Result<()>) {
+    if !artifacts_present(name) {
+        return;
+    }
+    if let Err(e) = body() {
+        skip_or_fail(name, e);
+    }
 }
 
 #[test]
@@ -32,19 +49,28 @@ fn untyped_literal_roundtrip() {
 }
 
 #[test]
+fn runtime_rejects_missing_artifact() {
+    let rt = PjrtRuntime::cpu().unwrap();
+    assert!(rt.load(Path::new("/nonexistent/foo.hlo.txt")).is_err());
+}
+
+#[test]
 fn manifest_lists_all_variants() {
-    let m = Manifest::load(&artifacts_dir()).unwrap();
-    assert_eq!(m.dense_tags().len(), 6, "dense zoo");
-    assert_eq!(m.pruned_tags().len(), 3, "2:4 pruned subset");
-    for tag in m.tags() {
-        let model = m.get(tag).unwrap();
-        for kind in [ArtifactKind::Float, ArtifactKind::Calib, ArtifactKind::Sparq] {
-            assert!(model.hlo_path(kind).exists(), "{tag} missing {kind:?}");
+    with_artifacts("manifest_lists_all_variants", || {
+        let m = Manifest::load(&artifacts_dir())?;
+        assert_eq!(m.dense_tags().len(), 6, "dense zoo");
+        assert_eq!(m.pruned_tags().len(), 3, "2:4 pruned subset");
+        for tag in m.tags() {
+            let model = m.get(tag)?;
+            for kind in [ArtifactKind::Float, ArtifactKind::Calib, ArtifactKind::Sparq] {
+                assert!(model.hlo_path(kind).exists(), "{tag} missing {kind:?}");
+            }
+            assert!(model.weights_path().exists());
+            let graph = Graph::load(&model.meta_path())?;
+            assert_eq!(graph.quant_convs.len(), model.quant_convs);
         }
-        assert!(model.weights_path().exists());
-        let graph = Graph::load(&model.meta_path()).unwrap();
-        assert_eq!(graph.quant_convs.len(), model.quant_convs);
-    }
+        Ok(())
+    });
 }
 
 /// Guard against the elided-constant failure mode: xla_extension 0.5.1
@@ -52,118 +78,128 @@ fn manifest_lists_all_variants() {
 /// (this bit during bring-up — see python/compile/aot.py::to_hlo_text).
 #[test]
 fn exported_graphs_have_no_elided_constants() {
-    let m = Manifest::load(&artifacts_dir()).unwrap();
-    for model in &m.models {
-        for kind in [ArtifactKind::Float, ArtifactKind::Calib, ArtifactKind::Sparq] {
-            let text = std::fs::read_to_string(model.hlo_path(kind)).unwrap();
-            assert!(
-                !text.contains("constant({...})"),
-                "{}: elided constants in {kind:?} artifact",
-                model.tag
-            );
-            // convolution/reduce-window also mis-execute on 0.5.1
-            assert!(
-                !text.contains(" convolution("),
-                "{}: convolution op leaked into {kind:?} export",
-                model.tag
-            );
-            assert!(
-                !text.contains(" reduce-window("),
-                "{}: reduce-window op leaked into {kind:?} export",
-                model.tag
-            );
+    with_artifacts("exported_graphs_have_no_elided_constants", || {
+        let m = Manifest::load(&artifacts_dir())?;
+        for model in &m.models {
+            for kind in [ArtifactKind::Float, ArtifactKind::Calib, ArtifactKind::Sparq] {
+                let text = std::fs::read_to_string(model.hlo_path(kind))?;
+                assert!(
+                    !text.contains("constant({...})"),
+                    "{}: elided constants in {kind:?} artifact",
+                    model.tag
+                );
+                // convolution/reduce-window also mis-execute on 0.5.1
+                assert!(
+                    !text.contains(" convolution("),
+                    "{}: convolution op leaked into {kind:?} export",
+                    model.tag
+                );
+                assert!(
+                    !text.contains(" reduce-window("),
+                    "{}: reduce-window op leaked into {kind:?} export",
+                    model.tag
+                );
+            }
         }
-    }
+        Ok(())
+    });
 }
 
 #[test]
 fn calibration_produces_positive_scales() {
-    let dir = artifacts_dir();
-    let rt = PjrtRuntime::cpu().unwrap();
-    let m = Manifest::load(&dir).unwrap();
-    let ds = Dataset::load(&dir.join("train.bin")).unwrap();
-    let model = m.get("resnet10").unwrap();
-    let stats = calibrate(&rt, model, &ds, 64, 128).unwrap();
-    assert_eq!(stats.maxes.len(), model.quant_convs);
-    for (&mx, &mean) in stats.maxes.iter().zip(&stats.layer_means()) {
-        assert!(mx > 0.1, "max {mx} suspiciously small");
-        assert!(mean > 0.0 && mean < mx, "mean {mean} outside (0, {mx})");
-    }
-    // ACIQ clipping never exceeds min-max
-    let mm = scales_for_policy(&stats, ScalePolicy::MinMax, 4);
-    let ac = scales_for_policy(&stats, ScalePolicy::AciqClip, 4);
-    for (a, m_) in ac.iter().zip(&mm) {
-        assert!(a <= m_);
-    }
+    with_artifacts("calibration_produces_positive_scales", || {
+        let dir = artifacts_dir();
+        let rt = PjrtRuntime::cpu()?;
+        let m = Manifest::load(&dir)?;
+        let ds = Dataset::load(&dir.join("train.bin"))?;
+        let model = m.get("resnet10")?;
+        let stats = calibrate(&rt, model, &ds, 64, 128)?;
+        assert_eq!(stats.maxes.len(), model.quant_convs);
+        for (&mx, &mean) in stats.maxes.iter().zip(&stats.layer_means()) {
+            assert!(mx > 0.1, "max {mx} suspiciously small");
+            assert!(mean > 0.0 && mean < mx, "mean {mean} outside (0, {mx})");
+        }
+        // ACIQ clipping never exceeds min-max
+        let mm = scales_for_policy(&stats, ScalePolicy::MinMax, 4);
+        let ac = scales_for_policy(&stats, ScalePolicy::AciqClip, 4);
+        for (a, m_) in ac.iter().zip(&mm) {
+            assert!(a <= m_);
+        }
+        Ok(())
+    });
 }
 
 #[test]
 fn fp32_eval_beats_ninety_percent_and_a8w8_matches() {
-    let dir = artifacts_dir();
-    let rt = PjrtRuntime::cpu().unwrap();
-    let m = Manifest::load(&dir).unwrap();
-    let model = m.get("resnet10").unwrap();
-    let eval = Dataset::load(&dir.join("test.bin")).unwrap();
-    let calib_ds = Dataset::load(&dir.join("train.bin")).unwrap();
+    with_artifacts("fp32_eval_beats_ninety_percent_and_a8w8_matches", || {
+        let dir = artifacts_dir();
+        let rt = PjrtRuntime::cpu()?;
+        let m = Manifest::load(&dir)?;
+        let model = m.get("resnet10")?;
+        let eval = Dataset::load(&dir.join("test.bin"))?;
+        let calib_ds = Dataset::load(&dir.join("train.bin"))?;
 
-    let fp32 = evaluate_pjrt(&rt, model, &eval, 64, &[], None, 256).unwrap();
-    assert!(fp32.accuracy() > 0.9, "fp32 acc {}", fp32.accuracy());
+        let fp32 = evaluate_pjrt(&rt, model, &eval, 64, &[], None, 256)?;
+        assert!(fp32.accuracy() > 0.9, "fp32 acc {}", fp32.accuracy());
 
-    let stats = calibrate(&rt, model, &calib_ds, 64, 128).unwrap();
-    let scales = stats.scales();
-    let a8w8 =
-        evaluate_pjrt(&rt, model, &eval, 64, &scales, Some(SparqConfig::A8W8), 256)
-            .unwrap();
-    // paper Table 1: A8W8 ~ FP32
-    assert!(
-        (a8w8.accuracy() - fp32.accuracy()).abs() < 0.02,
-        "a8w8 {} vs fp32 {}",
-        a8w8.accuracy(),
-        fp32.accuracy()
-    );
+        let stats = calibrate(&rt, model, &calib_ds, 64, 128)?;
+        let scales = stats.scales();
+        let a8w8 =
+            evaluate_pjrt(&rt, model, &eval, 64, &scales, Some(SparqConfig::A8W8), 256)?;
+        // paper Table 1: A8W8 ~ FP32
+        assert!(
+            (a8w8.accuracy() - fp32.accuracy()).abs() < 0.02,
+            "a8w8 {} vs fp32 {}",
+            a8w8.accuracy(),
+            fp32.accuracy()
+        );
+        Ok(())
+    });
 }
 
 #[test]
 fn sparq_configs_rank_sanely_on_one_model() {
     // 5opt+R >= 2opt trim (the paper's central ordering), on squeezem,
     // the most quantization-fragile architecture.
-    let dir = artifacts_dir();
-    let rt = PjrtRuntime::cpu().unwrap();
-    let m = Manifest::load(&dir).unwrap();
-    let model = m.get("squeezem").unwrap();
-    let eval = Dataset::load(&dir.join("test.bin")).unwrap();
-    let calib_ds = Dataset::load(&dir.join("train.bin")).unwrap();
-    let scales = calibrate(&rt, model, &calib_ds, 64, 128).unwrap().scales();
-    let acc = |name: &str| {
-        evaluate_pjrt(
-            &rt,
-            model,
-            &eval,
-            64,
-            &scales,
-            Some(SparqConfig::named(name).unwrap()),
-            256,
-        )
-        .unwrap()
-        .accuracy()
-    };
-    let a5 = acc("5opt_r");
-    let a2 = acc("2opt");
-    assert!(a5 > a2 + 0.05, "5opt_r {a5} should beat 2opt {a2} clearly");
+    with_artifacts("sparq_configs_rank_sanely_on_one_model", || {
+        let dir = artifacts_dir();
+        let rt = PjrtRuntime::cpu()?;
+        let m = Manifest::load(&dir)?;
+        let model = m.get("squeezem")?;
+        let eval = Dataset::load(&dir.join("test.bin"))?;
+        let calib_ds = Dataset::load(&dir.join("train.bin"))?;
+        let scales = calibrate(&rt, model, &calib_ds, 64, 128)?.scales();
+        let mut acc = |name: &str| -> anyhow::Result<f64> {
+            Ok(evaluate_pjrt(
+                &rt,
+                model,
+                &eval,
+                64,
+                &scales,
+                Some(SparqConfig::named(name).unwrap()),
+                256,
+            )?
+            .accuracy())
+        };
+        let a5 = acc("5opt_r")?;
+        let a2 = acc("2opt")?;
+        assert!(a5 > a2 + 0.05, "5opt_r {a5} should beat 2opt {a2} clearly");
+        Ok(())
+    });
 }
 
 #[test]
 fn server_batches_and_answers_correctly() {
-    let dir = artifacts_dir();
-    let rt = std::sync::Arc::new(PjrtRuntime::cpu().unwrap());
-    let m = Manifest::load(&dir).unwrap();
-    let model = m.get("resnet10").unwrap();
-    let eval = Dataset::load(&dir.join("test.bin")).unwrap();
-    let calib_ds = Dataset::load(&dir.join("train.bin")).unwrap();
-    let scales = calibrate(&rt, model, &calib_ds, 64, 128).unwrap().scales();
-    let graph = Graph::load(&model.meta_path()).unwrap();
-    let server = std::sync::Arc::new(
-        InferenceServer::start(
+    with_artifacts("server_batches_and_answers_correctly", || {
+        let dir = artifacts_dir();
+        let rt = std::sync::Arc::new(PjrtRuntime::cpu()?);
+        let m = Manifest::load(&dir)?;
+        let model = m.get("resnet10")?;
+        let eval = Dataset::load(&dir.join("test.bin"))?;
+        let calib_ds = Dataset::load(&dir.join("train.bin"))?;
+        let scales = calibrate(&rt, model, &calib_ds, 64, 128)?.scales();
+        let graph = Graph::load(&model.meta_path())?;
+        let server = std::sync::Arc::new(InferenceServer::start(
             rt,
             model,
             graph.input_hwc,
@@ -174,56 +210,53 @@ fn server_batches_and_answers_correctly() {
                 max_batch: graph.eval_batch,
                 max_wait: std::time::Duration::from_millis(10),
             },
-        )
-        .unwrap(),
-    );
-    // 32 concurrent clients, each sending one real eval image
-    let eval = std::sync::Arc::new(eval);
-    let handles: Vec<_> = (0..32)
-        .map(|i| {
-            let s = server.clone();
-            let d = eval.clone();
-            std::thread::spawn(move || {
-                let reply = s.infer(d.image_f32(i)).unwrap();
-                let pred = reply
-                    .logits
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .unwrap()
-                    .0;
-                (i, pred)
+        )?);
+        // 32 concurrent clients, each sending one real eval image
+        let eval = std::sync::Arc::new(eval);
+        let handles: Vec<_> = (0..32)
+            .map(|i| {
+                let s = server.clone();
+                let d = eval.clone();
+                std::thread::spawn(move || {
+                    let reply = s.infer(d.image_f32(i)).unwrap();
+                    let pred = reply
+                        .logits
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    (i, pred)
+                })
             })
-        })
-        .collect();
-    let mut correct = 0;
-    for h in handles {
-        let (i, pred) = h.join().unwrap();
-        if pred == eval.label(i) {
-            correct += 1;
+            .collect();
+        let mut correct = 0;
+        for h in handles {
+            let (i, pred) = h.join().unwrap();
+            if pred == eval.label(i) {
+                correct += 1;
+            }
         }
-    }
-    assert!(correct >= 28, "batched serving accuracy collapsed: {correct}/32");
-    let metrics = server.metrics();
-    let m = metrics.lock().unwrap();
-    assert_eq!(m.e2e.count(), 32);
-}
-
-#[test]
-fn runtime_rejects_missing_artifact() {
-    let rt = PjrtRuntime::cpu().unwrap();
-    assert!(rt.load(Path::new("/nonexistent/foo.hlo.txt")).is_err());
+        assert!(correct >= 28, "batched serving accuracy collapsed: {correct}/32");
+        let metrics = server.metrics();
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.e2e.count(), 32);
+        Ok(())
+    });
 }
 
 #[test]
 fn executable_rejects_wrong_arity_gracefully() {
-    let dir = artifacts_dir();
-    let rt = PjrtRuntime::cpu().unwrap();
-    let m = Manifest::load(&dir).unwrap();
-    let model = m.get("resnet10").unwrap();
-    let exe = rt.load(&model.hlo_path(ArtifactKind::Float)).unwrap();
-    // feeding zero inputs must error, not crash
-    assert!(exe.run(&[]).is_err());
-    // wrong shape must error
-    assert!(exe.run(&[TensorArg::f32(&[1, 2], vec![0.0, 0.0])]).is_err());
+    with_artifacts("executable_rejects_wrong_arity_gracefully", || {
+        let dir = artifacts_dir();
+        let rt = PjrtRuntime::cpu()?;
+        let m = Manifest::load(&dir)?;
+        let model = m.get("resnet10")?;
+        let exe = rt.load(&model.hlo_path(ArtifactKind::Float))?;
+        // feeding zero inputs must error, not crash
+        assert!(exe.run(&[]).is_err());
+        // wrong shape must error
+        assert!(exe.run(&[TensorArg::f32(&[1, 2], vec![0.0, 0.0])]).is_err());
+        Ok(())
+    });
 }

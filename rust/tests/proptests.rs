@@ -1,9 +1,13 @@
-//! Property-based tests over the quant / hw / coordinator invariants.
+//! Property-based tests over the quant / tensor / hw / coordinator
+//! invariants.
 //!
 //! The image's offline crate set has no `proptest`, so this file carries
 //! a small deterministic-PRNG property harness (`props!`): each property
 //! runs across many seeded random cases and failures print the seed for
-//! replay.
+//! replay. Coverage includes the trim-window error/fit invariants, the
+//! LUT-vs-scalar dot equivalence on random sparse slices, the blocked
+//! parallel GEMM vs the naive reference and `sparq_dot`, im2col vs a
+//! scalar gather, and multi-threaded batcher routing/error propagation.
 
 use sparq::hw::pe::SparqPe;
 use sparq::hw::stc::{stc_gemm, CompressedWeights};
@@ -322,7 +326,10 @@ fn prop_batcher_routes_every_request_correctly() {
             },
             2,
             1,
-            Box::new(|buf, batch| {
+            Box::new(|buf: &[f32], batch: usize| {
+                // true-size contract: the executor sees exactly the
+                // packed images for `batch` requests, never padding
+                assert_eq!(buf.len(), batch * 2, "executor saw a padded buffer");
                 Ok((0..batch).map(|i| buf[i * 2] * 10.0 + buf[i * 2 + 1]).collect())
             }),
             stats,
@@ -341,6 +348,188 @@ fn prop_batcher_routes_every_request_correctly() {
             prop_assert!(
                 (got - (i as f32 * 10.0 + 0.5)).abs() < 1e-6,
                 "client {i} got {got}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_trim_window_fits_window() {
+    // The reconstructed value is always `q << s` with q occupying at
+    // most `width` bits — the window-fit invariant the ShiftCtrl
+    // hardware metadata relies on — for every mode and rounding choice.
+    props!(400, |rng| {
+        let x = rng.act(10);
+        for (width, mode) in [
+            (2u8, Mode::Full),
+            (3, Mode::Full),
+            (4, Mode::Full),
+            (4, Mode::Opt3),
+            (4, Mode::Opt2),
+        ] {
+            let s = sparq::quant::bsparq::shift_for(x, width, mode);
+            for round in [false, true] {
+                let y = trim_window(x, width, mode, round);
+                prop_assert!(
+                    y % (1u8 << s.min(7)) == 0 || s == 0,
+                    "x={x} w={width} {mode:?} r={round}: y={y} not aligned to shift {s}"
+                );
+                prop_assert!(
+                    (u32::from(y) >> s) < (1u32 << width),
+                    "x={x} w={width} {mode:?} r={round}: y={y} overflows the window"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_lut_dot_matches_reference_on_random_sparse_slices() {
+    // TrimLut::dot == vsparq::sparq_dot for every config, sparsity mix
+    // and slice length (odd lengths exercise the zero-padded last lane).
+    props!(250, |rng| {
+        let cfg = rng.config();
+        let lut = TrimLut::new(cfg);
+        let len = 1 + rng.below(257) as usize;
+        let sparsity = rng.below(95);
+        let acts: Vec<u8> = (0..len).map(|_| rng.act(sparsity)).collect();
+        let weights: Vec<i8> = (0..len).map(|_| rng.weight()).collect();
+        prop_assert!(
+            lut.dot(&acts, &weights) == sparq_dot(&acts, &weights, cfg),
+            "cfg={cfg} len={len} sparsity={sparsity}%"
+        );
+    });
+}
+
+#[test]
+fn prop_blocked_parallel_gemm_matches_naive_and_scalar() {
+    // The cache-blocked threaded GEMM must be bit-identical to the
+    // retained naive kernel for any shape/thread count, and both must
+    // equal the scalar sparq_dot ground truth.
+    props!(40, |rng| {
+        let cfg = rng.config();
+        let (m, k, o) = (
+            1 + rng.below(22) as usize,
+            1 + rng.below(200) as usize,
+            1 + rng.below(40) as usize,
+        );
+        let sparsity = rng.below(80);
+        let a0: Vec<u8> = (0..m * k).map(|_| rng.act(sparsity)).collect();
+        let w: Vec<i8> = (0..k * o).map(|_| rng.weight()).collect();
+        let gemm = QuantGemm::new(cfg);
+        let wt = gemm.prepare_weights(&w, k, o);
+
+        let mut a_ref = a0.clone();
+        let mut want = vec![0i32; m * o];
+        gemm.gemm_naive(&mut a_ref, m, k, &wt, o, &mut want);
+
+        let threads = 1 + rng.below(8) as usize;
+        let mut a = a0.clone();
+        let mut got = vec![0i32; m * o];
+        let mut pack = Vec::new();
+        gemm.gemm_with(&mut a, m, k, &wt, o, &mut got, &mut pack, threads);
+        prop_assert!(got == want, "cfg={cfg} m={m} k={k} o={o} threads={threads}");
+        prop_assert!(a == a_ref, "trimmed scratch rows diverge (cfg={cfg})");
+
+        // spot-check one element against the scalar ground truth
+        let (mi, oi) = (rng.below(m as u64) as usize, rng.below(o as u64) as usize);
+        let col: Vec<i8> = (0..k).map(|r| w[r * o + oi]).collect();
+        let scalar = sparq_dot(&a0[mi * k..(mi + 1) * k], &col, cfg);
+        prop_assert!(
+            got[mi * o + oi] == scalar,
+            "cfg={cfg} ({mi},{oi}): blocked {} != scalar {scalar}",
+            got[mi * o + oi]
+        );
+    });
+}
+
+#[test]
+fn prop_im2col_matches_scalar_gather() {
+    use sparq::tensor::{im2col_u8, out_dim, same_padding};
+    props!(60, |rng| {
+        let (n, h, w, c) = (
+            1 + rng.below(2) as usize,
+            2 + rng.below(7) as usize,
+            2 + rng.below(7) as usize,
+            1 + rng.below(3) as usize,
+        );
+        let k = [1usize, 3, 5][rng.below(3) as usize];
+        let stride = 1 + rng.below(2) as usize;
+        let acts: Vec<u8> = (0..n * h * w * c).map(|_| rng.act(25)).collect();
+        let (p, oh, ow) = im2col_u8(&acts, n, h, w, c, k, stride);
+        prop_assert!(oh == out_dim(h, stride) && ow == out_dim(w, stride), "shape");
+        let (pad_t, _) = same_padding(h, k, stride);
+        let (pad_l, _) = same_padding(w, k, stride);
+        let feat = c * k * k;
+        for ni in 0..n {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            for kx in 0..k {
+                                let iy = (oy * stride + ky) as isize - pad_t as isize;
+                                let ix = (ox * stride + kx) as isize - pad_l as isize;
+                                let want = if iy >= 0
+                                    && iy < h as isize
+                                    && ix >= 0
+                                    && ix < w as isize
+                                {
+                                    acts[((ni * h + iy as usize) * w + ix as usize) * c + ci]
+                                } else {
+                                    0
+                                };
+                                let got = p[((ni * oh + oy) * ow + ox) * feat
+                                    + ci * k * k
+                                    + ky * k
+                                    + kx];
+                                prop_assert!(
+                                    got == want,
+                                    "n={ni} oy={oy} ox={ox} c={ci} ky={ky} kx={kx}: \
+                                     {got} != {want}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_surfaces_executor_errors() {
+    use sparq::coordinator::{BatchPolicy, Batcher};
+    use std::sync::{Arc, Mutex};
+    props!(8, |rng| {
+        let n_clients = 1 + rng.below(6) as usize;
+        let stats = Arc::new(Mutex::new(Default::default()));
+        let b = Batcher::spawn(
+            BatchPolicy {
+                max_batch: 1 + rng.below(4) as usize,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+            1,
+            1,
+            Box::new(|_buf: &[f32], _batch: usize| {
+                Err(anyhow::anyhow!("backend wedged: device lost"))
+            }),
+            stats,
+        );
+        let handles: Vec<_> = (0..n_clients)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || b.infer(vec![i as f32]))
+            })
+            .collect();
+        for h in handles {
+            let res = h.join().unwrap();
+            let msg = match res {
+                Ok(_) => return Err("executor error was swallowed".to_string()),
+                Err(e) => e.to_string(),
+            };
+            prop_assert!(
+                msg.contains("backend wedged: device lost"),
+                "root cause missing from `{msg}`"
             );
         }
     });
