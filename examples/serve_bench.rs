@@ -1,19 +1,27 @@
 //! Serving benchmark: the dynamically batched SPARQ inference service
 //! under concurrent client load — latency/throughput for the paper's
-//! "increase execution performance" motivation, on the real artifacts.
+//! "increase execution performance" motivation.
 //!
 //! ```bash
 //! cargo run --release --example serve_bench [artifacts-dir] [clients] [requests-per-client]
 //! ```
+//!
+//! With exported artifacts + a real PJRT backend the bench drives the
+//! single-model `InferenceServer` over the compiled HLO. Without them
+//! (this image's default) it falls back to the **native sharded
+//! router**: a synthetic model served by N replica shards that share
+//! one `Arc<ModelParams>` parameter copy, printing per-shard and
+//! aggregate metrics — queue depth, shed/rejected counts included.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
-use sparq::coordinator::{calibrate, BatchPolicy, InferenceServer};
+use sparq::coordinator::{calibrate, BatchPolicy, InferenceRouter, InferenceServer};
 use sparq::data::Dataset;
-use sparq::model::Graph;
+use sparq::model::demo::synth_model;
+use sparq::model::{EngineMode, Graph, ModelParams};
 use sparq::quant::SparqConfig;
 use sparq::runtime::{Manifest, PjrtRuntime};
 
@@ -23,8 +31,35 @@ fn main() -> Result<()> {
     let clients: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(16);
     let per_client: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(32);
 
-    let rt = Arc::new(PjrtRuntime::cpu()?);
-    let manifest = Manifest::load(&dir)?;
+    // Probe *availability* only (backend + manifest). A failure here
+    // means the PJRT path can't run at all and the native router demo
+    // is the right fallback; a failure later — mid-serving, on an
+    // artifacts dir that does exist — is a real error and must
+    // propagate, not be silently downgraded to the synthetic bench.
+    let probe = || -> Result<(Arc<PjrtRuntime>, Manifest)> {
+        Ok((Arc::new(PjrtRuntime::cpu()?), Manifest::load(&dir)?))
+    };
+    match probe() {
+        Ok((rt, manifest)) => pjrt_serving(rt, &manifest, &dir, clients, per_client),
+        Err(e) => {
+            eprintln!(
+                "PJRT serving path unavailable ({e}); \
+                 running the native sharded-router benchmark instead\n"
+            );
+            native_router_bench(clients, per_client)
+        }
+    }
+}
+
+/// The original artifact-backed path: one PJRT-executed model behind
+/// the dynamic batcher.
+fn pjrt_serving(
+    rt: Arc<PjrtRuntime>,
+    manifest: &Manifest,
+    dir: &Path,
+    clients: usize,
+    per_client: usize,
+) -> Result<()> {
     let model = manifest.get("resnet10")?;
     let graph = Graph::load(&model.meta_path())?;
     let eval = Arc::new(Dataset::load(&dir.join("test.bin"))?);
@@ -41,6 +76,7 @@ fn main() -> Result<()> {
         BatchPolicy {
             max_batch: graph.eval_batch,
             max_wait: Duration::from_millis(4),
+            ..BatchPolicy::default()
         },
     )?);
 
@@ -89,8 +125,10 @@ fn main() -> Result<()> {
 
     let metrics = server.metrics();
     let m = metrics.lock().unwrap();
+    let b = m.batcher.snapshot();
     println!("\nresults:");
-    println!("  requests        {total}  ({correct} correct = {:.2}%)", 100.0 * correct as f64 / total as f64);
+    let pct = 100.0 * correct as f64 / total as f64;
+    println!("  requests        {total}  ({correct} correct = {pct:.2}%)");
     println!("  wall time       {wall:.2}s");
     println!("  throughput      {:.1} req/s", total as f64 / wall);
     println!("  latency mean    {:.1} ms", m.e2e.mean_us() / 1000.0);
@@ -98,5 +136,98 @@ fn main() -> Result<()> {
     println!("  latency p99     {:.1} ms", m.e2e.quantile_us(0.99) as f64 / 1000.0);
     println!("  latency max     {:.1} ms", m.e2e.max_us() as f64 / 1000.0);
     println!("  queue mean      {:.1} ms", m.queue.mean_us() / 1000.0);
+    println!(
+        "  batches         {}  (full: {}, exec errors: {})",
+        b.batches, b.full_batches, b.exec_errors
+    );
+    println!(
+        "  peak queue      {}  (shed: {}, rejected: {})",
+        b.peak_queue_depth, b.shed, b.rejected
+    );
+    Ok(())
+}
+
+/// Artifact-free path: a synthetic model served by the sharded router,
+/// 1 replica vs all-cores replicas, parameters Arc-shared throughout.
+fn native_router_bench(clients: usize, per_client: usize) -> Result<()> {
+    let (graph, weights, scales) = synth_model();
+    let cfg = SparqConfig::named("5opt_r").unwrap();
+    let params = Arc::new(ModelParams::new(
+        Arc::new(graph),
+        Arc::new(weights),
+        cfg,
+        &scales,
+        EngineMode::Dense,
+    )?);
+    let [h, w, c] = params.graph.input_hwc;
+    let image: Vec<f32> = (0..h * w * c)
+        .map(|i| ((i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33) as f32 % 251.0 / 251.0)
+        .collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let replicas = cores.max(2);
+    println!(
+        "native router: synthetic model (SPARQ 5opt+R), {} parameter bytes shared by \
+         every replica; {clients} clients x {per_client} requests",
+        params.weights.param_bytes()
+    );
+
+    for nrep in [1usize, replicas] {
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_with_threads(
+                    "synth",
+                    params.clone(),
+                    nrep,
+                    BatchPolicy {
+                        max_batch: 8,
+                        max_wait: Duration::from_micros(500),
+                        ..BatchPolicy::default()
+                    },
+                    1,
+                )
+                .build()?,
+        );
+        let _ = router.infer("synth", image.clone())?; // warmup
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..clients)
+            .map(|_| {
+                let r = router.clone();
+                let im = image.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..per_client {
+                        r.infer("synth", im.clone()).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let total = clients * per_client;
+        let m = router.metrics("synth")?;
+        println!("\n{nrep} replica shard(s):");
+        println!(
+            "  throughput      {:.1} req/s ({total} requests in {wall:.2}s)",
+            total as f64 / wall
+        );
+        for s in &m.shards {
+            println!(
+                "  shard {}        {} reqs, {} batches (full: {}), mean {:.1} ms, p99 {:.1} ms, \
+                 peak queue {}",
+                s.shard,
+                s.batcher.requests,
+                s.batcher.batches,
+                s.batcher.full_batches,
+                s.mean_latency_us / 1000.0,
+                s.p99_latency_us as f64 / 1000.0,
+                s.batcher.peak_queue_depth,
+            );
+        }
+        println!(
+            "  aggregate       {} reqs, {} exec errors, {} shed, {} rejected",
+            m.total.requests, m.total.exec_errors, m.total.shed, m.total.rejected
+        );
+    }
     Ok(())
 }

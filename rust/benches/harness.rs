@@ -55,9 +55,9 @@ pub fn synth_acts(n: usize, sparsity_pct: u64) -> Vec<u8> {
         .collect()
 }
 
+/// Single source of truth lives in the library so the benches and the
+/// demo model can't drift apart.
 #[allow(dead_code)]
 pub fn synth_weights(n: usize) -> Vec<i8> {
-    (0..n)
-        .map(|i| ((((i as u64).wrapping_mul(0xbf58476d1ce4e5b9) >> 33) % 255) as i32 - 127) as i8)
-        .collect()
+    sparq::model::demo::synth_weights(n)
 }

@@ -8,19 +8,24 @@
 //!    kernel vs the cache-blocked kernel, serial and row-parallel;
 //! 3. end-to-end native forward on a synthetic 4-conv model — engine at
 //!    1 thread vs all cores, with reused scratch (the serving shape);
-//! 4. PJRT end-to-end batch latency (skipped when artifacts/xla absent).
+//! 4. sharded serving router over the same model: 1 vs N single-thread
+//!    replica shards sharing one Arc'd parameter copy, under concurrent
+//!    client load (img/s);
+//! 5. PJRT end-to-end batch latency (skipped when artifacts/xla absent).
 //!
 //! Run with `cargo bench --bench hotpath`; set `SPARQ_THREADS` to pin
 //! the parallel sections.
 
 include!("harness.rs");
 
-use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
 
-use sparq::model::{Engine, EngineMode, Graph, Node, Op, QuantGemm, Scratch, Weights};
+use sparq::coordinator::{BatchPolicy, InferenceRouter};
+use sparq::model::demo::synth_model;
 use sparq::model::threadpool;
-use sparq::model::weights::{FloatConv, QuantConv};
+use sparq::model::{Engine, EngineMode, ModelParams, QuantGemm, Scratch};
 use sparq::quant::vsparq::sparq_dot;
 use sparq::quant::{SparqConfig, TrimLut};
 use sparq::runtime::{ArtifactKind, Manifest, PjrtRuntime, TensorArg};
@@ -108,90 +113,78 @@ fn main() {
         r_e2e_1.median_us / r_e2e_n.median_us
     );
 
-    // 4. PJRT end-to-end batch (compile once, then per-batch latency)
+    // 4. sharded serving router: the same model behind 1 vs N replica
+    // shards. Every shard is a single-threaded engine over one shared
+    // Arc<ModelParams> (replicas ARE the parallelism), so the scaling
+    // here is the router's, not the GEMM's.
+    let params = Arc::new(
+        ModelParams::new(
+            Arc::new(graph.clone()),
+            Arc::new(wts.clone()),
+            cfg,
+            &scales,
+            EngineMode::Dense,
+        )
+        .unwrap(),
+    );
+    let single = img[..20 * 20 * 3].to_vec();
+    let mut baseline_us = 0.0;
+    let max_replicas = nt.max(2);
+    for replicas in [1usize, max_replicas] {
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_with_threads(
+                    "bench",
+                    params.clone(),
+                    replicas,
+                    BatchPolicy {
+                        max_batch: 8,
+                        max_wait: Duration::from_micros(500),
+                        ..BatchPolicy::default()
+                    },
+                    1,
+                )
+                .build()
+                .unwrap(),
+        );
+        let clients = max_replicas * 2;
+        let per = 48usize;
+        let _ = router.infer("bench", single.clone()).unwrap(); // warmup
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for _ in 0..clients {
+                let r = router.clone();
+                let im = single.clone();
+                s.spawn(move || {
+                    for _ in 0..per {
+                        r.infer("bench", im.clone()).unwrap();
+                    }
+                });
+            }
+        });
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        let total = (clients * per) as f64;
+        println!(
+            "router {replicas} replica(s) x 1-thread shards        {:>10.1} img/s \
+             ({clients} clients x {per} reqs)",
+            total / (us * 1e-6)
+        );
+        if replicas == 1 {
+            baseline_us = us;
+        } else {
+            println!(
+                "    => router throughput 1 -> {replicas} replicas: {:.2}x",
+                baseline_us / us
+            );
+        }
+    }
+
+    // 5. PJRT end-to-end batch (compile once, then per-batch latency)
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Manifest::load(&dir) {
         Ok(manifest) => pjrt_section(&manifest, cfg),
         Err(_) => eprintln!("artifacts missing; PJRT section skipped"),
     }
-}
-
-/// Synthetic 4-layer model shaped like the zoo's resnet10 stem: float
-/// stem conv + two quantized convs + gap + fc. Weights are the shared
-/// deterministic generators, so runs are comparable across builds.
-fn synth_model() -> (Graph, Weights, Vec<f32>) {
-    let graph = Graph {
-        arch: "bench".into(),
-        variant: "synthetic".into(),
-        num_classes: 10,
-        input_hwc: [20, 20, 3],
-        eval_batch: 32,
-        quant_convs: vec!["q1".into(), "q2".into()],
-        nodes: vec![
-            Node { name: "img".into(), op: Op::Input, inputs: vec![] },
-            Node {
-                name: "c1".into(),
-                op: Op::Conv { k: 3, stride: 1, out_ch: 16, relu: true, quant: false },
-                inputs: vec!["img".into()],
-            },
-            Node {
-                name: "q1".into(),
-                op: Op::Conv { k: 3, stride: 2, out_ch: 32, relu: true, quant: true },
-                inputs: vec!["c1".into()],
-            },
-            Node {
-                name: "q2".into(),
-                op: Op::Conv { k: 3, stride: 1, out_ch: 64, relu: true, quant: true },
-                inputs: vec!["q1".into()],
-            },
-            Node { name: "g".into(), op: Op::Gap, inputs: vec!["q2".into()] },
-            Node { name: "fc".into(), op: Op::Fc { out: 10 }, inputs: vec!["g".into()] },
-        ],
-    };
-    let mut float = HashMap::new();
-    let c1_len = 3 * 3 * 3 * 16;
-    float.insert(
-        "c1".to_string(),
-        FloatConv {
-            w: synth_weights(c1_len).iter().map(|&v| f32::from(v) / 400.0).collect(),
-            kh: 3,
-            kw: 3,
-            c_in: 3,
-            c_out: 16,
-            bias: vec![0.01; 16],
-        },
-    );
-    let mut quant = HashMap::new();
-    quant.insert(
-        "q1".to_string(),
-        QuantConv {
-            wq: synth_weights(16 * 9 * 32),
-            k: 16 * 9,
-            o: 32,
-            scale: vec![0.002; 32],
-            bias: vec![0.0; 32],
-        },
-    );
-    quant.insert(
-        "q2".to_string(),
-        QuantConv {
-            wq: synth_weights(32 * 9 * 64),
-            k: 32 * 9,
-            o: 64,
-            scale: vec![0.002; 64],
-            bias: vec![0.0; 64],
-        },
-    );
-    let fc_len = 64 * 10;
-    let weights = Weights {
-        quant,
-        float,
-        fc_w: synth_weights(fc_len).iter().map(|&v| f32::from(v) / 127.0).collect(),
-        fc_in: 64,
-        fc_out: 10,
-        fc_b: vec![0.0; 10],
-    };
-    (graph, weights, vec![0.02, 0.02])
 }
 
 fn pjrt_section(manifest: &Manifest, cfg: SparqConfig) {

@@ -12,12 +12,47 @@
 //! underlying message. Threads + channels, no async runtime — tokio is
 //! not in this image's vendored set, and one worker thread per model is
 //! the right shape for a single-device backend anyway.
+//!
+//! # Backpressure
+//!
+//! The queue is **bounded**: [`BatchPolicy::max_queue_depth`] caps the
+//! number of requests waiting for a batch slot (requests already being
+//! executed don't count). When a submit would exceed the cap, the
+//! [`OverloadPolicy`] decides who loses:
+//!
+//! * [`OverloadPolicy::RejectNewest`] — the submitting caller gets an
+//!   immediate, descriptive overload error; everyone already queued
+//!   keeps their slot. Predictable for upstream retry loops.
+//! * [`OverloadPolicy::ShedOldest`] — the oldest *queued* request is
+//!   shed (its waiting caller receives the overload error) and the new
+//!   request takes the tail slot. Favors fresh traffic when stale
+//!   results are worthless.
+//!
+//! Either way memory is bounded under burst traffic, the event is
+//! counted ([`BatcherStats::rejected`] / [`BatcherStats::shed`]) and
+//! the live depth is observable ([`BatcherStats::queue_depth`],
+//! [`BatcherStats::peak_queue_depth`]) — overload is an error plus a
+//! metric, never silent unbounded growth.
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
+
+/// What to do with a submit that would push the queue past
+/// [`BatchPolicy::max_queue_depth`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Fail the incoming request immediately with an overload error.
+    #[default]
+    RejectNewest,
+    /// Shed the oldest queued request (its caller gets the overload
+    /// error) and admit the incoming one.
+    ShedOldest,
+}
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
@@ -28,19 +63,40 @@ pub struct BatchPolicy {
     /// Max time the oldest queued request may wait before a (possibly
     /// short) batch is launched.
     pub max_wait: Duration,
+    /// Max requests waiting for a batch slot before the overload policy
+    /// kicks in (the in-flight batch does not count).
+    pub max_queue_depth: usize,
+    /// Who loses when the queue is full.
+    pub overload: OverloadPolicy,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        Self { max_batch: 64, max_wait: Duration::from_millis(5) }
+        Self {
+            max_batch: 64,
+            max_wait: Duration::from_millis(5),
+            max_queue_depth: 1024,
+            overload: OverloadPolicy::RejectNewest,
+        }
     }
+}
+
+/// Why a request failed, as carried over the reply channel. Kept
+/// distinct so overload sheds (the request never ran) don't masquerade
+/// as execution failures to the caller.
+enum BatchError {
+    /// The batch executed and failed (executor error, malformed output).
+    Exec(String),
+    /// The request was shed from the queue head by
+    /// [`OverloadPolicy::ShedOldest`] — it never executed.
+    Shed(String),
 }
 
 /// One queued inference request.
 struct Request {
     image: Vec<f32>,
     enqueued: Instant,
-    reply: Sender<Result<Reply, String>>,
+    reply: Sender<Result<Reply, BatchError>>,
 }
 
 /// Per-request result: logits row + timing.
@@ -57,23 +113,150 @@ pub struct Reply {
 /// executor can own reusable state (engine scratch, padding buffers).
 pub type ExecuteFn = dyn FnMut(&[f32], usize) -> Result<Vec<f32>> + Send;
 
-/// Handle for submitting requests.
-#[derive(Clone)]
-pub struct Batcher {
-    tx: Sender<Request>,
-    image_len: usize,
-}
-
-/// Statistics the worker exposes.
+/// Statistics the worker and the submit path expose. All fields are
+/// atomics so the hot paths never contend on a stats lock and readers
+/// (metrics endpoints, the router aggregator) can sample without
+/// stopping the world; take a coherent copy with
+/// [`BatcherStats::snapshot`].
 #[derive(Default, Debug)]
 pub struct BatcherStats {
-    pub batches: u64,
-    pub requests: u64,
-    pub full_batches: u64,
+    pub batches: AtomicU64,
+    pub requests: AtomicU64,
+    pub full_batches: AtomicU64,
     /// Batches whose execution failed — executor errors and malformed
     /// (too-short) logits alike, each surfaced to all of that batch's
     /// callers.
+    pub exec_errors: AtomicU64,
+    /// Live gauge: requests currently waiting for a batch slot.
+    pub queue_depth: AtomicU64,
+    /// High-water mark of `queue_depth` (never exceeds the policy's
+    /// `max_queue_depth` — the bounded-queue invariant).
+    pub peak_queue_depth: AtomicU64,
+    /// Requests dropped from the queue head by [`OverloadPolicy::ShedOldest`].
+    pub shed: AtomicU64,
+    /// Submissions refused by [`OverloadPolicy::RejectNewest`].
+    pub rejected: AtomicU64,
+}
+
+/// Plain-value copy of [`BatcherStats`] at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct BatcherSnapshot {
+    pub batches: u64,
+    pub requests: u64,
+    pub full_batches: u64,
     pub exec_errors: u64,
+    pub queue_depth: u64,
+    pub peak_queue_depth: u64,
+    pub shed: u64,
+    pub rejected: u64,
+}
+
+impl BatcherStats {
+    pub fn snapshot(&self) -> BatcherSnapshot {
+        BatcherSnapshot {
+            batches: self.batches.load(Relaxed),
+            requests: self.requests.load(Relaxed),
+            full_batches: self.full_batches.load(Relaxed),
+            exec_errors: self.exec_errors.load(Relaxed),
+            queue_depth: self.queue_depth.load(Relaxed),
+            peak_queue_depth: self.peak_queue_depth.load(Relaxed),
+            shed: self.shed.load(Relaxed),
+            rejected: self.rejected.load(Relaxed),
+        }
+    }
+}
+
+impl BatcherSnapshot {
+    /// Accumulate another shard's snapshot into this one (the router's
+    /// aggregate view). Counters and the live depth gauge sum;
+    /// `peak_queue_depth` takes the per-shard maximum.
+    pub fn merge(&mut self, other: &BatcherSnapshot) {
+        self.batches += other.batches;
+        self.requests += other.requests;
+        self.full_batches += other.full_batches;
+        self.exec_errors += other.exec_errors;
+        self.queue_depth += other.queue_depth;
+        self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
+        self.shed += other.shed;
+        self.rejected += other.rejected;
+    }
+}
+
+/// Queue shared between submit handles and the worker.
+struct QueueState {
+    deque: VecDeque<Request>,
+    /// False once every [`Batcher`] handle has dropped; the worker
+    /// drains what is left and exits.
+    open: bool,
+    /// True once the worker thread has exited (normally or by panic);
+    /// further submits fail fast instead of feeding a dead queue.
+    dead: bool,
+}
+
+struct Shared {
+    q: Mutex<QueueState>,
+    avail: Condvar,
+    stats: Arc<BatcherStats>,
+    policy: BatchPolicy,
+}
+
+/// Closes the queue when the last `Batcher` handle drops, so the worker
+/// thread shuts down instead of leaking.
+struct HandleGuard(Arc<Shared>);
+
+impl Drop for HandleGuard {
+    fn drop(&mut self) {
+        self.0.q.lock().unwrap().open = false;
+        self.0.avail.notify_all();
+    }
+}
+
+/// Runs when the worker thread exits for any reason — including a
+/// panic that escaped [`worker_loop`]'s per-batch containment. Marks
+/// the queue dead (submits fail fast with a shutdown error) and drops
+/// everything still queued, which drops those requests' reply senders
+/// so their waiting callers unblock with "worker dropped the request"
+/// instead of hanging forever.
+struct WorkerGuard(Arc<Shared>);
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        let mut q = self.0.q.lock().unwrap();
+        q.dead = true;
+        q.deque.clear();
+        self.0.stats.queue_depth.store(0, Relaxed);
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Batcher {
+    shared: Arc<Shared>,
+    image_len: usize,
+    _guard: Arc<HandleGuard>,
+}
+
+/// An in-flight request: wait for its reply with [`PendingReply::wait`].
+pub struct PendingReply {
+    rx: Receiver<Result<Reply, BatchError>>,
+}
+
+impl PendingReply {
+    /// Block until the batch containing this request has executed (or
+    /// the request was shed). Executor failures and overload sheds
+    /// surface here with the underlying message.
+    pub fn wait(self) -> Result<Reply> {
+        match self.rx.recv() {
+            Ok(Ok(reply)) => Ok(reply),
+            Ok(Err(BatchError::Exec(msg))) => {
+                Err(anyhow::anyhow!("batch execution failed: {msg}"))
+            }
+            // A shed request never executed — don't report it as an
+            // execution failure.
+            Ok(Err(BatchError::Shed(msg))) => Err(anyhow::anyhow!("{msg}")),
+            Err(_) => Err(anyhow::anyhow!("batcher worker dropped the request")),
+        }
+    }
 }
 
 impl Batcher {
@@ -83,86 +266,29 @@ impl Batcher {
         policy: BatchPolicy,
         image_len: usize,
         classes: usize,
-        mut execute: Box<ExecuteFn>,
-        stats: Arc<Mutex<BatcherStats>>,
+        execute: Box<ExecuteFn>,
+        stats: Arc<BatcherStats>,
     ) -> Self {
-        let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
-        std::thread::spawn(move || {
-            let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
-            // Hoisted: one packing buffer for the worker's lifetime.
-            let mut buf: Vec<f32> = Vec::with_capacity(policy.max_batch * image_len);
-            loop {
-                // Block for the first request of a batch.
-                if pending.is_empty() {
-                    match rx.recv() {
-                        Ok(r) => pending.push(r),
-                        Err(_) => return, // all senders dropped: shut down
-                    }
-                }
-                // Admit until full or the oldest request's deadline.
-                while pending.len() < policy.max_batch {
-                    let elapsed = pending[0].enqueued.elapsed();
-                    let Some(budget) = policy.max_wait.checked_sub(elapsed) else { break };
-                    match rx.recv_timeout(budget) {
-                        Ok(r) => pending.push(r),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => break,
-                    }
-                }
-                let batch = std::mem::take(&mut pending);
-                let bsz = batch.len();
-                buf.clear();
-                for r in &batch {
-                    buf.extend_from_slice(&r.image);
-                }
-                // True-size execution: no padded rows, no padded compute.
-                let outcome: Result<Vec<f32>, String> = match execute(&buf, bsz) {
-                    Ok(logits) if logits.len() >= bsz * classes => Ok(logits),
-                    Ok(logits) => Err(format!(
-                        "executor returned {} logits for a batch of {bsz} (need {})",
-                        logits.len(),
-                        bsz * classes
-                    )),
-                    Err(e) => Err(e.to_string()),
-                };
-                {
-                    let mut s = stats.lock().unwrap();
-                    s.batches += 1;
-                    s.requests += bsz as u64;
-                    if bsz == policy.max_batch {
-                        s.full_batches += 1;
-                    }
-                    if outcome.is_err() {
-                        s.exec_errors += 1;
-                    }
-                }
-                match outcome {
-                    Ok(logits) => {
-                        for (i, r) in batch.into_iter().enumerate() {
-                            let row = logits[i * classes..(i + 1) * classes].to_vec();
-                            let _ = r.reply.send(Ok(Reply {
-                                logits: row,
-                                queue_time: r.enqueued.elapsed(),
-                                batch_size: bsz,
-                            }));
-                        }
-                    }
-                    Err(msg) => {
-                        // Carry the real failure to every caller of this
-                        // batch instead of dropping the reply channels.
-                        for r in batch {
-                            let _ = r.reply.send(Err(msg.clone()));
-                        }
-                    }
-                }
-            }
+        assert!(policy.max_batch >= 1, "max_batch must be >= 1");
+        assert!(policy.max_queue_depth >= 1, "max_queue_depth must be >= 1");
+        let shared = Arc::new(Shared {
+            q: Mutex::new(QueueState { deque: VecDeque::new(), open: true, dead: false }),
+            avail: Condvar::new(),
+            stats,
+            policy,
         });
-        Self { tx, image_len }
+        let worker_shared = shared.clone();
+        std::thread::spawn(move || {
+            let _on_exit = WorkerGuard(worker_shared.clone());
+            worker_loop(worker_shared, image_len, classes, execute);
+        });
+        Self { shared: shared.clone(), image_len, _guard: Arc::new(HandleGuard(shared)) }
     }
 
-    /// Submit one image; blocks until the reply arrives. Executor
-    /// failures surface here with the underlying message.
-    pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
+    /// Enqueue one image without blocking for the result. Returns the
+    /// overload error immediately when the bounded queue is full under
+    /// [`OverloadPolicy::RejectNewest`].
+    pub fn submit(&self, image: Vec<f32>) -> Result<PendingReply> {
         anyhow::ensure!(
             image.len() == self.image_len,
             "image length {} != {}",
@@ -170,13 +296,175 @@ impl Batcher {
             self.image_len
         );
         let (reply_tx, reply_rx) = channel();
-        self.tx
-            .send(Request { image, enqueued: Instant::now(), reply: reply_tx })
-            .map_err(|_| anyhow::anyhow!("batcher worker has shut down"))?;
-        match reply_rx.recv() {
-            Ok(Ok(reply)) => Ok(reply),
-            Ok(Err(msg)) => Err(anyhow::anyhow!("batch execution failed: {msg}")),
-            Err(_) => Err(anyhow::anyhow!("batcher worker dropped the request")),
+        let req = Request { image, enqueued: Instant::now(), reply: reply_tx };
+        let policy = &self.shared.policy;
+        let stats = &self.shared.stats;
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            if q.dead {
+                anyhow::bail!("batcher worker has shut down");
+            }
+            if q.deque.len() >= policy.max_queue_depth {
+                match policy.overload {
+                    OverloadPolicy::RejectNewest => {
+                        stats.rejected.fetch_add(1, Relaxed);
+                        anyhow::bail!(
+                            "batcher overloaded: queue depth {} is at the limit {} \
+                             (reject-newest); retry later or raise max_queue_depth",
+                            q.deque.len(),
+                            policy.max_queue_depth
+                        );
+                    }
+                    OverloadPolicy::ShedOldest => {
+                        if let Some(oldest) = q.deque.pop_front() {
+                            stats.shed.fetch_add(1, Relaxed);
+                            let _ = oldest.reply.send(Err(BatchError::Shed(format!(
+                                "batcher overloaded: request shed from the queue head after \
+                                 {:?} waiting (shed-oldest, depth limit {})",
+                                oldest.enqueued.elapsed(),
+                                policy.max_queue_depth
+                            ))));
+                        }
+                    }
+                }
+            }
+            q.deque.push_back(req);
+            let depth = q.deque.len() as u64;
+            stats.queue_depth.store(depth, Relaxed);
+            stats.peak_queue_depth.fetch_max(depth, Relaxed);
+        }
+        self.shared.avail.notify_one();
+        Ok(PendingReply { rx: reply_rx })
+    }
+
+    /// Submit one image; blocks until the reply arrives. Executor
+    /// failures and overload errors surface here with the underlying
+    /// message.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
+        self.submit(image)?.wait()
+    }
+
+    /// Live stats handle (shared with the worker).
+    pub fn stats(&self) -> Arc<BatcherStats> {
+        self.shared.stats.clone()
+    }
+}
+
+/// Pop everything currently queued (up to `max_batch` total in
+/// `pending`) and refresh the depth gauge. Call with the lock held.
+fn drain_into(
+    q: &mut QueueState,
+    pending: &mut Vec<Request>,
+    max_batch: usize,
+    stats: &BatcherStats,
+) {
+    while pending.len() < max_batch {
+        match q.deque.pop_front() {
+            Some(r) => pending.push(r),
+            None => break,
+        }
+    }
+    stats.queue_depth.store(q.deque.len() as u64, Relaxed);
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, image_len: usize, classes: usize, mut execute: Box<ExecuteFn>) {
+    let policy = shared.policy;
+    let mut pending: Vec<Request> = Vec::with_capacity(policy.max_batch);
+    // Hoisted: one packing buffer for the worker's lifetime.
+    let mut buf: Vec<f32> = Vec::with_capacity(policy.max_batch * image_len);
+    loop {
+        // Block for the first request of a batch (or shutdown: queue
+        // closed and fully drained).
+        {
+            let mut q = shared.q.lock().unwrap();
+            loop {
+                if !q.deque.is_empty() {
+                    break;
+                }
+                if !q.open {
+                    return;
+                }
+                q = shared.avail.wait(q).unwrap();
+            }
+            drain_into(&mut q, &mut pending, policy.max_batch, &shared.stats);
+        }
+        // Admit until full or the oldest request's deadline.
+        while pending.len() < policy.max_batch {
+            let elapsed = pending[0].enqueued.elapsed();
+            let Some(budget) = policy.max_wait.checked_sub(elapsed) else { break };
+            let mut q = shared.q.lock().unwrap();
+            if q.deque.is_empty() {
+                if !q.open {
+                    break;
+                }
+                let (guard, timeout) = shared.avail.wait_timeout(q, budget).unwrap();
+                q = guard;
+                if q.deque.is_empty() && timeout.timed_out() {
+                    break;
+                }
+            }
+            drain_into(&mut q, &mut pending, policy.max_batch, &shared.stats);
+        }
+        let batch = std::mem::take(&mut pending);
+        let bsz = batch.len();
+        buf.clear();
+        for r in &batch {
+            buf.extend_from_slice(&r.image);
+        }
+        // True-size execution: no padded rows, no padded compute. A
+        // panicking executor is contained to this batch (its callers
+        // get the panic message as an error) so the worker — and every
+        // request queued behind the bad batch — survives.
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute(&buf, bsz)
+        }));
+        let outcome: Result<Vec<f32>, String> = match caught {
+            Ok(Ok(logits)) if logits.len() >= bsz * classes => Ok(logits),
+            Ok(Ok(logits)) => Err(format!(
+                "executor returned {} logits for a batch of {bsz} (need {})",
+                logits.len(),
+                bsz * classes
+            )),
+            Ok(Err(e)) => Err(e.to_string()),
+            Err(payload) => Err(format!("executor panicked: {}", panic_message(&payload))),
+        };
+        shared.stats.batches.fetch_add(1, Relaxed);
+        shared.stats.requests.fetch_add(bsz as u64, Relaxed);
+        if bsz == policy.max_batch {
+            shared.stats.full_batches.fetch_add(1, Relaxed);
+        }
+        if outcome.is_err() {
+            shared.stats.exec_errors.fetch_add(1, Relaxed);
+        }
+        match outcome {
+            Ok(logits) => {
+                for (i, r) in batch.into_iter().enumerate() {
+                    let row = logits[i * classes..(i + 1) * classes].to_vec();
+                    let _ = r.reply.send(Ok(Reply {
+                        logits: row,
+                        queue_time: r.enqueued.elapsed(),
+                        batch_size: bsz,
+                    }));
+                }
+            }
+            Err(msg) => {
+                // Carry the real failure to every caller of this
+                // batch instead of dropping the reply channels.
+                for r in batch {
+                    let _ = r.reply.send(Err(BatchError::Exec(msg.clone())));
+                }
+            }
         }
     }
 }
@@ -185,8 +473,8 @@ impl Batcher {
 mod tests {
     use super::*;
 
-    fn spawn_echo(policy: BatchPolicy) -> (Batcher, Arc<Mutex<BatcherStats>>) {
-        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+    fn spawn_echo(policy: BatchPolicy) -> (Batcher, Arc<BatcherStats>) {
+        let stats = Arc::new(BatcherStats::default());
         // "model": logits = [sum(image), batch_marker]
         let b = Batcher::spawn(
             policy,
@@ -207,11 +495,33 @@ mod tests {
         (b, stats)
     }
 
+    /// A batcher whose executor blocks until a token arrives on `gate`,
+    /// signalling `entered` first — lets tests park the worker mid-batch
+    /// and fill the queue deterministically.
+    fn spawn_gated(policy: BatchPolicy) -> (Batcher, Arc<BatcherStats>, Sender<()>, Receiver<()>) {
+        let stats = Arc::new(BatcherStats::default());
+        let (gate_tx, gate_rx) = channel::<()>();
+        let (entered_tx, entered_rx) = channel::<()>();
+        let b = Batcher::spawn(
+            policy,
+            1,
+            1,
+            Box::new(move |buf, bsz| {
+                entered_tx.send(()).ok();
+                gate_rx.recv().ok();
+                Ok(buf[..bsz].to_vec())
+            }),
+            stats.clone(),
+        );
+        (b, stats, gate_tx, entered_rx)
+    }
+
     #[test]
     fn single_request_flushes_on_deadline() {
         let (b, stats) = spawn_echo(BatchPolicy {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
+            ..BatchPolicy::default()
         });
         let r = b.infer(vec![1.0, 2.0, 3.0, 4.0]).unwrap();
         assert_eq!(r.logits[0], 10.0);
@@ -219,7 +529,7 @@ mod tests {
         // true-size execution: the executor's batch marker equals 1, not
         // the padded hardware batch
         assert_eq!(r.logits[1], 1.0);
-        assert_eq!(stats.lock().unwrap().batches, 1);
+        assert_eq!(stats.batches.load(Relaxed), 1);
     }
 
     #[test]
@@ -227,6 +537,7 @@ mod tests {
         let (b, stats) = spawn_echo(BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(50),
+            ..BatchPolicy::default()
         });
         let handles: Vec<_> = (0..8)
             .map(|i| {
@@ -238,9 +549,10 @@ mod tests {
         for (i, r) in replies.iter().enumerate() {
             assert_eq!(r.logits[0], 4.0 * i as f32);
         }
-        let s = stats.lock().unwrap();
+        let s = stats.snapshot();
         assert_eq!(s.requests, 8);
         assert!(s.batches <= 4, "8 requests should pack into few batches, got {}", s.batches);
+        assert_eq!(s.queue_depth, 0, "queue must drain back to empty");
     }
 
     #[test]
@@ -251,9 +563,13 @@ mod tests {
 
     #[test]
     fn executor_error_reaches_every_caller_with_message() {
-        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let stats = Arc::new(BatcherStats::default());
         let b = Batcher::spawn(
-            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(20) },
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+                ..BatchPolicy::default()
+            },
             2,
             1,
             Box::new(|_buf, _batch| Err(anyhow::anyhow!("kernel exploded at layer 3"))),
@@ -272,14 +588,18 @@ mod tests {
                 "root cause missing from `{msg}`"
             );
         }
-        assert!(stats.lock().unwrap().exec_errors >= 1);
+        assert!(stats.exec_errors.load(Relaxed) >= 1);
     }
 
     #[test]
     fn short_logits_vector_is_an_error_not_a_panic() {
-        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let stats = Arc::new(BatcherStats::default());
         let b = Batcher::spawn(
-            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(2) },
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(2),
+                ..BatchPolicy::default()
+            },
             1,
             3,
             Box::new(|_buf, _batch| Ok(vec![0.0])), // too short
@@ -288,17 +608,21 @@ mod tests {
         let msg = b.infer(vec![1.0]).unwrap_err().to_string();
         assert!(msg.contains("need 3"), "{msg}");
         // malformed output counts as an execution error in the stats
-        assert_eq!(stats.lock().unwrap().exec_errors, 1);
+        assert_eq!(stats.exec_errors.load(Relaxed), 1);
     }
 
     #[test]
     fn stateful_executor_reuses_buffers() {
         // FnMut executor owning scratch: counts calls without realloc.
-        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let stats = Arc::new(BatcherStats::default());
         let mut calls = 0u32;
         let mut scratch: Vec<f32> = Vec::new();
         let b = Batcher::spawn(
-            BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
             1,
             1,
             Box::new(move |buf, batch| {
@@ -313,5 +637,150 @@ mod tests {
         let r2 = b.infer(vec![10.0]).unwrap();
         assert_eq!(r1.logits[0], 11.0);
         assert_eq!(r2.logits[0], 12.0);
+    }
+
+    #[test]
+    fn reject_newest_returns_descriptive_overload_error() {
+        let (b, stats, gate, entered) = spawn_gated(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            max_queue_depth: 2,
+            overload: OverloadPolicy::RejectNewest,
+        });
+        // Park the worker inside execute() so the queue state is ours.
+        let a = b.submit(vec![1.0]).unwrap();
+        entered.recv().unwrap();
+        let c = b.submit(vec![2.0]).unwrap(); // depth 1
+        let d = b.submit(vec![3.0]).unwrap(); // depth 2 == limit
+        let err = b.submit(vec![4.0]).unwrap_err().to_string();
+        assert!(err.contains("overloaded"), "not a descriptive overload error: {err}");
+        assert!(err.contains("limit 2"), "limit missing from error: {err}");
+        let s = stats.snapshot();
+        assert_eq!((s.rejected, s.shed, s.queue_depth), (1, 0, 2));
+        // Everyone admitted still completes, in order, once released.
+        for _ in 0..3 {
+            gate.send(()).unwrap();
+        }
+        assert_eq!(a.wait().unwrap().logits[0], 1.0);
+        assert_eq!(c.wait().unwrap().logits[0], 2.0);
+        assert_eq!(d.wait().unwrap().logits[0], 3.0);
+        assert_eq!(stats.snapshot().peak_queue_depth, 2);
+    }
+
+    #[test]
+    fn shed_oldest_errors_the_oldest_waiter_and_admits_the_newest() {
+        let (b, stats, gate, entered) = spawn_gated(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            max_queue_depth: 2,
+            overload: OverloadPolicy::ShedOldest,
+        });
+        let a = b.submit(vec![1.0]).unwrap();
+        entered.recv().unwrap();
+        let c = b.submit(vec![2.0]).unwrap(); // depth 1 — oldest queued
+        let d = b.submit(vec![3.0]).unwrap(); // depth 2 == limit
+        let e = b.submit(vec![4.0]).unwrap(); // sheds c, takes its place
+        let s = stats.snapshot();
+        assert_eq!((s.rejected, s.shed, s.queue_depth), (0, 1, 2));
+        // The shed victim gets the overload error without waiting for
+        // any execution; the in-flight request and the survivors finish.
+        let msg = c.wait().unwrap_err().to_string();
+        assert!(msg.contains("shed"), "shed victim got wrong error: {msg}");
+        for _ in 0..3 {
+            gate.send(()).unwrap();
+        }
+        assert_eq!(a.wait().unwrap().logits[0], 1.0);
+        assert_eq!(d.wait().unwrap().logits[0], 3.0);
+        assert_eq!(e.wait().unwrap().logits[0], 4.0);
+    }
+
+    #[test]
+    fn executor_panic_becomes_an_error_and_the_worker_survives() {
+        // A panic inside execute() must not kill the worker: the
+        // panicking batch's caller gets the panic message as an error,
+        // and the batcher keeps serving subsequent requests.
+        let stats = Arc::new(BatcherStats::default());
+        let mut first = true;
+        let b = Batcher::spawn(
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+            1,
+            1,
+            Box::new(move |buf, bsz| {
+                if std::mem::take(&mut first) {
+                    panic!("executor blew up at layer 7");
+                }
+                Ok(buf[..bsz].to_vec())
+            }),
+            stats.clone(),
+        );
+        let msg = b.infer(vec![1.0]).unwrap_err().to_string();
+        assert!(msg.contains("executor blew up at layer 7"), "{msg}");
+        assert_eq!(stats.exec_errors.load(Relaxed), 1);
+        // the worker survived and the queue is not dead
+        assert_eq!(b.infer(vec![2.0]).unwrap().logits[0], 2.0);
+    }
+
+    #[test]
+    fn burst_traffic_is_bounded_and_fully_accounted() {
+        // 16 client threads x 16 requests against a slow executor and a
+        // tiny queue: every request either completes or fails with the
+        // overload error, the depth never exceeds the bound (no OOM
+        // growth), and the books balance exactly.
+        let stats = Arc::new(BatcherStats::default());
+        let depth = 4u64;
+        let b = Batcher::spawn(
+            BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_micros(100),
+                max_queue_depth: depth as usize,
+                overload: OverloadPolicy::RejectNewest,
+            },
+            1,
+            1,
+            Box::new(|buf, bsz| {
+                std::thread::sleep(Duration::from_micros(300));
+                Ok(buf[..bsz].to_vec())
+            }),
+            stats.clone(),
+        );
+        let (clients, per) = (16usize, 16usize);
+        let handles: Vec<_> = (0..clients)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    let mut ok = 0u64;
+                    for j in 0..per {
+                        match b.infer(vec![(i * per + j) as f32]) {
+                            Ok(r) => {
+                                assert_eq!(r.logits[0], (i * per + j) as f32);
+                                ok += 1;
+                            }
+                            Err(e) => {
+                                let msg = e.to_string();
+                                assert!(
+                                    msg.contains("overloaded"),
+                                    "burst failure was not an overload error: {msg}"
+                                );
+                            }
+                        }
+                    }
+                    ok
+                })
+            })
+            .collect();
+        let completed: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let s = stats.snapshot();
+        assert!(s.peak_queue_depth <= depth, "queue grew past the bound: {s:?}");
+        assert_eq!(s.requests, completed, "executed requests vs successful replies");
+        assert_eq!(
+            s.requests + s.rejected,
+            (clients * per) as u64,
+            "every request must be either executed or rejected: {s:?}"
+        );
+        assert_eq!(s.shed, 0);
     }
 }

@@ -97,7 +97,10 @@ pub fn evaluate_pjrt(
     })
 }
 
-/// Evaluate through the native engine (dense or STC datapath).
+/// Evaluate through the native engine (dense or STC datapath). Builds
+/// a throwaway engine; callers that already hold one (or a shared
+/// `Arc<ModelParams>` replica) should use [`evaluate_with_engine`] so
+/// per-config sweeps don't rebuild the prepared weight tables.
 #[allow(clippy::too_many_arguments)]
 pub fn evaluate_native(
     graph: &Graph,
@@ -110,6 +113,19 @@ pub fn evaluate_native(
     limit: usize,
 ) -> Result<EvalReport> {
     let engine = Engine::new(graph, weights, cfg, scales, mode)?;
+    evaluate_with_engine(&engine, ds, batch, limit)
+}
+
+/// Evaluate an existing engine handle — the parameter-sharing path:
+/// the engine may be a cheap replica over shared [`crate::model::ModelParams`],
+/// so nothing is cloned or re-prepared here.
+pub fn evaluate_with_engine(
+    engine: &Engine,
+    ds: &Dataset,
+    batch: usize,
+    limit: usize,
+) -> Result<EvalReport> {
+    let graph = engine.graph();
     let n = ds.n.min(limit);
     let t0 = Instant::now();
     let mut correct = 0usize;
@@ -130,8 +146,8 @@ pub fn evaluate_native(
         start += take;
     }
     Ok(EvalReport {
-        tag: format!("{}[native-{:?}]", graph.arch, mode),
-        config: cfg.to_string(),
+        tag: format!("{}[native-{:?}]", graph.arch, engine.mode()),
+        config: engine.cfg().to_string(),
         correct,
         total: n,
         seconds: t0.elapsed().as_secs_f64(),

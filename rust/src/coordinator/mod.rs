@@ -4,8 +4,8 @@
 //! architecture contract L3 is the *driver* tier: it owns process
 //! lifecycle, artifact loading, the calibration pass (paper §5's
 //! preprocessing stage), the accuracy-evaluation loops behind every
-//! table, and a dynamically batched inference service that shows the
-//! SPARQ artifacts serving real request streams.
+//! table, and the in-process serving stack that shows the SPARQ
+//! artifacts serving real request streams.
 //!
 //! * [`calibrate`] — runs the calib HLO over calibration batches and
 //!   reduces min-max / mean statistics into activation scales.
@@ -14,14 +14,47 @@
 //! * [`batcher`]   — dynamic batcher: requests queue, a worker forms
 //!   batches up to the artifact's lowered batch size or a deadline,
 //!   executes, and scatters results (vLLM-style, scaled down).
-//! * [`server`]    — in-process inference service facade + metrics.
+//! * [`server`]    — single-model inference service facade + metrics.
+//! * [`router`]    — sharded multi-engine front door over the batcher.
+//!
+//! # Serving architecture
+//!
+//! The serving stack is three layers, smallest to largest:
+//!
+//! 1. **Batcher** ([`batcher`]) — one worker thread per shard forming
+//!    true-size batches from a **bounded** queue.
+//!    [`BatchPolicy::max_queue_depth`] caps waiting requests; on
+//!    overload, [`batcher::OverloadPolicy`] either rejects the incoming
+//!    request (`RejectNewest`) or sheds the oldest queued one
+//!    (`ShedOldest`) — in both cases the losing caller gets a
+//!    descriptive error and the event lands in [`batcher::BatcherStats`]
+//!    (`rejected` / `shed`, plus the live `queue_depth` gauge and its
+//!    high-water mark). Burst traffic costs an error, never unbounded
+//!    memory.
+//! 2. **Server** ([`server`]) — one batcher + one executor (a PJRT
+//!    executable or a native [`Engine`](crate::model::Engine)), with
+//!    e2e/queue latency histograms and the live batcher stats exposed
+//!    through [`ServerMetrics`].
+//! 3. **Router** ([`router`]) — N named models x M replica shards per
+//!    model in one process. All replicas of a model execute over one
+//!    shared `Arc<`[`ModelParams`](crate::model::ModelParams)`>`:
+//!    graph, weights and prepared weight tables are built once and
+//!    Arc-shared, so replica count is a throughput knob, not a memory
+//!    multiplier. Requests round-robin across shards (atomic cursor);
+//!    each shard has its own queue, worker and scratch, so a poisoned
+//!    replica fails only its own callers. Per-shard and merged
+//!    aggregate metrics come from [`router::InferenceRouter::metrics`].
 
 pub mod batcher;
 pub mod calibrate;
 pub mod eval;
+pub mod router;
 pub mod server;
 
-pub use batcher::{BatchPolicy, Batcher};
+pub use batcher::{
+    BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, OverloadPolicy, PendingReply, Reply,
+};
 pub use calibrate::{calibrate, scales_for_policy};
-pub use eval::{evaluate_native, evaluate_pjrt, EvalReport};
-pub use server::{InferenceServer, ServerMetrics};
+pub use eval::{evaluate_native, evaluate_pjrt, evaluate_with_engine, EvalReport};
+pub use router::{InferenceRouter, ModelMetrics, RouterBuilder, ShardMetrics};
+pub use server::{InferenceServer, LatencyHist, ServerMetrics};

@@ -1,0 +1,653 @@
+//! Sharded multi-engine serving router.
+//!
+//! One process, N engines: an [`InferenceRouter`] hosts any number of
+//! **named models**, each served by one or more **replica shards**. A
+//! shard is a dynamic [`Batcher`](super::batcher::Batcher) with its own
+//! worker thread and its own engine scratch; all shards of a model
+//! execute through cheap [`Engine`] handles over one shared
+//! `Arc<ModelParams>` — the graph, weights and prepared weight tables
+//! exist **once** per model no matter how many replicas serve it.
+//! Replica count is a runtime throughput knob, not a memory multiplier
+//! (the whole point of SPARQ's memory economy).
+//!
+//! ```text
+//!   infer("resnet10", img)                 infer("resnet18", img)
+//!          │                                        │
+//!          ▼ round-robin cursor                     ▼
+//!   ┌─────────────────────────────┐        ┌────────────────────┐
+//!   │ shard 0   shard 1   shard 2 │        │ shard 0    shard 1 │
+//!   │ batcher   batcher   batcher │        │ batcher    batcher │
+//!   │ engine────engine────engine  │        │ engine─────engine  │
+//!   │     └──── Arc<ModelParams> ─┘        │    └─ Arc<ModelParams>
+//!   └─────────────────────────────┘        └────────────────────┘
+//! ```
+//!
+//! * **Sharding** — requests round-robin across a model's shards via an
+//!   atomic cursor ([`InferenceRouter::infer`]); [`InferenceRouter::infer_on`]
+//!   pins a shard (tests, session affinity).
+//! * **Isolation** — each shard has its own queue, worker and executor:
+//!   a failing replica errors its *own* callers with the real message
+//!   while sibling shards keep serving.
+//! * **Backpressure** — every shard queue is bounded by its
+//!   [`BatchPolicy`]; overload surfaces as an error to the caller and
+//!   as shed/rejected counts in the shard's stats, never as unbounded
+//!   memory growth.
+//! * **Metrics** — [`InferenceRouter::metrics`] reports per-shard
+//!   latency + batcher snapshots and the merged aggregate per model;
+//!   [`InferenceRouter::aggregate`] merges across every model.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{Engine, ModelParams, Scratch};
+
+use super::batcher::{BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, ExecuteFn, Reply};
+use super::server::LatencyHist;
+
+/// One replica: a batcher worker plus its metrics.
+struct Shard {
+    batcher: Batcher,
+    stats: Arc<BatcherStats>,
+    /// End-to-end latency of successful requests routed to this shard.
+    e2e: Mutex<LatencyHist>,
+}
+
+/// All shards serving one named model.
+struct ModelShards {
+    image_len: usize,
+    classes: usize,
+    shards: Vec<Shard>,
+    /// Round-robin cursor; wraps on overflow (harmless modulo shards).
+    cursor: AtomicUsize,
+    /// Bytes of the parameter store shared by every shard (0 for
+    /// executor-backed entries where the router can't see parameters).
+    param_bytes: usize,
+}
+
+/// Per-shard metrics view.
+#[derive(Clone, Debug, Default)]
+pub struct ShardMetrics {
+    pub shard: usize,
+    /// Successful requests completed through this shard.
+    pub completed: u64,
+    pub mean_latency_us: f64,
+    pub p99_latency_us: u64,
+    pub batcher: BatcherSnapshot,
+}
+
+/// Per-model metrics: every shard plus the merged aggregate.
+#[derive(Clone, Debug, Default)]
+pub struct ModelMetrics {
+    pub model: String,
+    pub replicas: usize,
+    /// Parameter bytes held once and shared by all replicas.
+    pub param_bytes: usize,
+    pub shards: Vec<ShardMetrics>,
+    pub total: BatcherSnapshot,
+}
+
+enum EntrySource {
+    /// Native-engine replicas over one shared parameter block.
+    Params { params: Arc<ModelParams>, threads: Option<usize> },
+    /// Caller-supplied executors, one per replica (PJRT executables,
+    /// test doubles). `executors.len()` is the replica count.
+    Executors { image_len: usize, classes: usize, executors: Vec<Box<ExecuteFn>> },
+}
+
+struct Entry {
+    name: String,
+    replicas: usize,
+    policy: BatchPolicy,
+    source: EntrySource,
+}
+
+/// Builder for [`InferenceRouter`]. Add models, then [`RouterBuilder::build`].
+#[derive(Default)]
+pub struct RouterBuilder {
+    entries: Vec<Entry>,
+}
+
+impl RouterBuilder {
+    /// Serve `replicas` native-engine shards of one model, all sharing
+    /// `params`. Each replica uses the engine's default thread count.
+    pub fn model(
+        self,
+        name: &str,
+        params: Arc<ModelParams>,
+        replicas: usize,
+        policy: BatchPolicy,
+    ) -> Self {
+        self.model_entry(name, params, replicas, policy, None)
+    }
+
+    /// Like [`RouterBuilder::model`] but pins every replica engine to
+    /// `threads` workers — use `1` when the replicas themselves are the
+    /// parallelism (one core per shard) to avoid oversubscription.
+    pub fn model_with_threads(
+        self,
+        name: &str,
+        params: Arc<ModelParams>,
+        replicas: usize,
+        policy: BatchPolicy,
+        threads: usize,
+    ) -> Self {
+        self.model_entry(name, params, replicas, policy, Some(threads))
+    }
+
+    fn model_entry(
+        mut self,
+        name: &str,
+        params: Arc<ModelParams>,
+        replicas: usize,
+        policy: BatchPolicy,
+        threads: Option<usize>,
+    ) -> Self {
+        self.entries.push(Entry {
+            name: name.to_string(),
+            replicas,
+            policy,
+            source: EntrySource::Params { params, threads },
+        });
+        self
+    }
+
+    /// Serve a model through caller-supplied batch executors, one per
+    /// replica — the escape hatch for PJRT-backed shards and for tests
+    /// that need a deliberately failing replica.
+    pub fn model_from_executors(
+        mut self,
+        name: &str,
+        image_len: usize,
+        classes: usize,
+        executors: Vec<Box<ExecuteFn>>,
+        policy: BatchPolicy,
+    ) -> Self {
+        let replicas = executors.len();
+        self.entries.push(Entry {
+            name: name.to_string(),
+            replicas,
+            policy,
+            source: EntrySource::Executors { image_len, classes, executors },
+        });
+        self
+    }
+
+    /// Spawn every shard worker and produce the router.
+    pub fn build(self) -> Result<InferenceRouter> {
+        let mut models = HashMap::new();
+        for entry in self.entries {
+            if entry.replicas == 0 {
+                bail!("model `{}`: replica count must be >= 1", entry.name);
+            }
+            if models.contains_key(&entry.name) {
+                bail!("duplicate model name `{}` in router", entry.name);
+            }
+            // Validate the policy here so a bad config is a build error,
+            // not a panic inside Batcher::spawn's asserts.
+            if entry.policy.max_batch == 0 {
+                bail!("model `{}`: policy.max_batch must be >= 1", entry.name);
+            }
+            if entry.policy.max_queue_depth == 0 {
+                bail!("model `{}`: policy.max_queue_depth must be >= 1", entry.name);
+            }
+            let (image_len, classes, param_bytes, executors): (
+                usize,
+                usize,
+                usize,
+                Vec<Box<ExecuteFn>>,
+            ) = match entry.source {
+                EntrySource::Params { params, threads } => {
+                    let [h, w, c] = params.graph.input_hwc;
+                    let image_len = h * w * c;
+                    let classes = params.graph.num_classes;
+                    let param_bytes = params.weights.param_bytes();
+                    let executors = (0..entry.replicas)
+                        .map(|_| {
+                            // A cheap handle per shard — Arc bumps, no
+                            // parameter copies — plus shard-private scratch.
+                            let mut engine = Engine::from_params(params.clone());
+                            if let Some(t) = threads {
+                                engine.set_threads(t);
+                            }
+                            let mut scratch = Scratch::default();
+                            Box::new(move |buf: &[f32], bsz: usize| {
+                                engine.forward_scratch(buf, bsz, &mut scratch)
+                            }) as Box<ExecuteFn>
+                        })
+                        .collect();
+                    (image_len, classes, param_bytes, executors)
+                }
+                EntrySource::Executors { image_len, classes, executors } => {
+                    (image_len, classes, 0, executors)
+                }
+            };
+            let shards = executors
+                .into_iter()
+                .map(|exec| {
+                    let stats = Arc::new(BatcherStats::default());
+                    let batcher =
+                        Batcher::spawn(entry.policy, image_len, classes, exec, stats.clone());
+                    Shard { batcher, stats, e2e: Mutex::new(LatencyHist::default()) }
+                })
+                .collect();
+            models.insert(
+                entry.name,
+                ModelShards {
+                    image_len,
+                    classes,
+                    shards,
+                    cursor: AtomicUsize::new(0),
+                    param_bytes,
+                },
+            );
+        }
+        if models.is_empty() {
+            bail!("router has no models; add at least one before build()");
+        }
+        Ok(InferenceRouter { models })
+    }
+}
+
+/// Routes inference requests across named models and their replica
+/// shards. See the module docs for the architecture.
+pub struct InferenceRouter {
+    models: HashMap<String, ModelShards>,
+}
+
+impl InferenceRouter {
+    pub fn builder() -> RouterBuilder {
+        RouterBuilder::default()
+    }
+
+    /// Registered model names, sorted.
+    pub fn model_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.models.keys().map(String::as_str).collect();
+        names.sort_unstable();
+        names
+    }
+
+    pub fn replicas(&self, model: &str) -> Result<usize> {
+        Ok(self.shards_of(model)?.shards.len())
+    }
+
+    /// (image_len, classes) the named model expects/produces.
+    pub fn shape(&self, model: &str) -> Result<(usize, usize)> {
+        let ms = self.shards_of(model)?;
+        Ok((ms.image_len, ms.classes))
+    }
+
+    fn shards_of(&self, model: &str) -> Result<&ModelShards> {
+        self.models.get(model).with_context(|| {
+            format!("router has no model named `{model}` (available: {:?})", self.model_names())
+        })
+    }
+
+    /// Dispatch by model name, round-robin across that model's shards.
+    /// Blocks until the reply; executor failures and overload errors
+    /// carry the shard's real message.
+    pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Reply> {
+        let ms = self.shards_of(model)?;
+        let idx = ms.cursor.fetch_add(1, Relaxed) % ms.shards.len();
+        Self::shard_infer(&ms.shards[idx], image)
+    }
+
+    /// Dispatch to one specific shard of a model (session affinity,
+    /// deterministic tests).
+    pub fn infer_on(&self, model: &str, shard: usize, image: Vec<f32>) -> Result<Reply> {
+        let ms = self.shards_of(model)?;
+        if shard >= ms.shards.len() {
+            bail!(
+                "model `{model}` has {} shard(s); no shard {shard}",
+                ms.shards.len()
+            );
+        }
+        Self::shard_infer(&ms.shards[shard], image)
+    }
+
+    fn shard_infer(shard: &Shard, image: Vec<f32>) -> Result<Reply> {
+        let t0 = Instant::now();
+        let reply = shard.batcher.infer(image)?;
+        // Successful requests only: overload rejections return in
+        // microseconds and would drag the latency histogram down.
+        shard.e2e.lock().unwrap().record(t0.elapsed());
+        Ok(reply)
+    }
+
+    /// Per-shard and aggregate metrics for one model.
+    pub fn metrics(&self, model: &str) -> Result<ModelMetrics> {
+        let ms = self.shards_of(model)?;
+        let mut shards = Vec::with_capacity(ms.shards.len());
+        let mut total = BatcherSnapshot::default();
+        for (i, s) in ms.shards.iter().enumerate() {
+            let snap = s.stats.snapshot();
+            total.merge(&snap);
+            let e2e = s.e2e.lock().unwrap();
+            shards.push(ShardMetrics {
+                shard: i,
+                completed: e2e.count(),
+                mean_latency_us: e2e.mean_us(),
+                p99_latency_us: e2e.quantile_us(0.99),
+                batcher: snap,
+            });
+        }
+        Ok(ModelMetrics {
+            model: model.to_string(),
+            replicas: ms.shards.len(),
+            param_bytes: ms.param_bytes,
+            shards,
+            total,
+        })
+    }
+
+    /// Merged batcher snapshot across every model and shard.
+    pub fn aggregate(&self) -> BatcherSnapshot {
+        let mut total = BatcherSnapshot::default();
+        for ms in self.models.values() {
+            for s in &ms.shards {
+                total.merge(&s.stats.snapshot());
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::OverloadPolicy;
+    use crate::model::{EngineMode, Graph, Node, Op, Weights};
+    use crate::model::weights::QuantConv;
+    use crate::quant::SparqConfig;
+    use std::collections::HashMap;
+    use std::time::Duration;
+
+    /// Tiny all-native model: one quantized conv, 4x4x1 -> 2 classes.
+    fn tiny_params(seed: i8) -> Arc<ModelParams> {
+        let graph = Graph {
+            arch: "tinyq".into(),
+            variant: "router-test".into(),
+            num_classes: 2,
+            input_hwc: [4, 4, 1],
+            eval_batch: 4,
+            quant_convs: vec!["q1".into()],
+            nodes: vec![
+                Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+                Node {
+                    name: "q1".into(),
+                    op: Op::Conv { k: 3, stride: 1, out_ch: 2, relu: true, quant: true },
+                    inputs: vec!["img".into()],
+                },
+                Node { name: "g".into(), op: Op::Gap, inputs: vec!["q1".into()] },
+                Node { name: "fc".into(), op: Op::Fc { out: 2 }, inputs: vec!["g".into()] },
+            ],
+        };
+        let mut quant = HashMap::new();
+        quant.insert(
+            "q1".to_string(),
+            QuantConv {
+                wq: (0..18)
+                    .map(|i| ((((i * 37) % 255) as i32 - 127) as i8).wrapping_add(seed))
+                    .collect(),
+                k: 9,
+                o: 2,
+                scale: vec![0.015, 0.02],
+                bias: vec![0.05, -0.05],
+            },
+        );
+        let weights = Weights {
+            quant,
+            float: HashMap::new(),
+            fc_w: vec![1.0, -0.5, 0.25, 1.0],
+            fc_in: 2,
+            fc_out: 2,
+            fc_b: vec![0.1, 0.2],
+        };
+        Arc::new(
+            ModelParams::new(
+                Arc::new(graph),
+                Arc::new(weights),
+                SparqConfig::named("5opt_r").unwrap(),
+                &[0.02],
+                EngineMode::Dense,
+            )
+            .unwrap(),
+        )
+    }
+
+    fn img(i: usize) -> Vec<f32> {
+        (0..16).map(|j| ((i * 16 + j) as f32) / 40.0).collect()
+    }
+
+    fn quick_policy(max_batch: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(200),
+            ..BatchPolicy::default()
+        }
+    }
+
+    #[test]
+    fn replicas_share_one_parameter_copy() {
+        let params = tiny_params(0);
+        let before = Arc::strong_count(&params);
+        let router = InferenceRouter::builder()
+            .model("m", params.clone(), 3, quick_policy(2))
+            .build()
+            .unwrap();
+        // 3 replica engines = 3 Arc bumps over the builder-held copy —
+        // shared storage, not 3 deep clones (the acceptance criterion).
+        assert_eq!(Arc::strong_count(&params), before + 3);
+        assert_eq!(router.replicas("m").unwrap(), 3);
+        let m = router.metrics("m").unwrap();
+        assert_eq!(m.param_bytes, params.weights.param_bytes());
+        assert!(m.param_bytes > 0);
+        // all replicas compute the same function as a direct engine
+        let engine = Engine::from_params(params.clone());
+        let want = engine.forward(&img(7), 1).unwrap();
+        for shard in 0..3 {
+            let got = router.infer_on("m", shard, img(7)).unwrap();
+            assert_eq!(got.logits, want, "shard {shard} diverged from the shared model");
+        }
+        // Dropping the router closes every shard queue; the workers
+        // (which own the replica engines) exit asynchronously, so poll.
+        drop(router);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while Arc::strong_count(&params) != before + 1 && Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(
+            Arc::strong_count(&params),
+            before + 1,
+            "replica engines were not released after router shutdown"
+        );
+    }
+
+    #[test]
+    fn round_robin_sharding_is_deterministic() {
+        let router = InferenceRouter::builder()
+            .model("m", tiny_params(0), 3, quick_policy(1))
+            .build()
+            .unwrap();
+        // 9 sequential requests over 3 shards: the cursor must deal
+        // exactly 3 to each shard, in order 0,1,2,0,1,2,...
+        for i in 0..9 {
+            router.infer("m", img(i)).unwrap();
+        }
+        let m = router.metrics("m").unwrap();
+        let per_shard: Vec<u64> = m.shards.iter().map(|s| s.batcher.requests).collect();
+        assert_eq!(per_shard, vec![3, 3, 3], "round-robin skewed: {per_shard:?}");
+        assert_eq!(m.total.requests, 9);
+    }
+
+    #[test]
+    fn dispatch_by_model_name() {
+        // Two different parameterizations under one router: replies must
+        // come from the model addressed by name.
+        let pa = tiny_params(0);
+        let pb = tiny_params(11);
+        let router = InferenceRouter::builder()
+            .model("alpha", pa.clone(), 2, quick_policy(2))
+            .model("beta", pb.clone(), 1, quick_policy(2))
+            .build()
+            .unwrap();
+        assert_eq!(router.model_names(), vec!["alpha", "beta"]);
+        let want_a = Engine::from_params(pa).forward(&img(3), 1).unwrap();
+        let want_b = Engine::from_params(pb).forward(&img(3), 1).unwrap();
+        assert_ne!(want_a, want_b, "test models degenerate: identical outputs");
+        assert_eq!(router.infer("alpha", img(3)).unwrap().logits, want_a);
+        assert_eq!(router.infer("beta", img(3)).unwrap().logits, want_b);
+        // unknown names are a descriptive error, not a panic
+        let err = router.infer("gamma", img(0)).unwrap_err().to_string();
+        assert!(err.contains("gamma") && err.contains("alpha"), "{err}");
+    }
+
+    #[test]
+    fn poisoned_replica_errors_its_own_callers_only() {
+        // shard 0 echoes; shard 1 always fails. Callers pinned to shard
+        // 1 get the real error; shard 0 callers are unaffected — before
+        // and after the failures.
+        let ok: Box<ExecuteFn> =
+            Box::new(|buf: &[f32], bsz: usize| Ok(buf[..bsz].to_vec()));
+        let poisoned: Box<ExecuteFn> =
+            Box::new(|_buf: &[f32], _bsz: usize| Err(anyhow::anyhow!("replica 1 lost its device")));
+        let router = InferenceRouter::builder()
+            .model_from_executors("m", 1, 1, vec![ok, poisoned], quick_policy(2))
+            .build()
+            .unwrap();
+        assert_eq!(router.infer_on("m", 0, vec![5.0]).unwrap().logits, vec![5.0]);
+        for _ in 0..3 {
+            let msg = router.infer_on("m", 1, vec![6.0]).unwrap_err().to_string();
+            assert!(msg.contains("replica 1 lost its device"), "{msg}");
+        }
+        // sibling shard still healthy after repeated failures next door
+        assert_eq!(router.infer_on("m", 0, vec![7.0]).unwrap().logits, vec![7.0]);
+        let m = router.metrics("m").unwrap();
+        assert_eq!(m.shards[0].batcher.exec_errors, 0, "healthy shard counted errors");
+        assert!(m.shards[1].batcher.exec_errors >= 3);
+        assert!(m.total.exec_errors >= 3);
+        // out-of-range shard index is an error, not a panic
+        assert!(router.infer_on("m", 2, vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn aggregate_metrics_are_consistent_under_concurrent_load() {
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model("m", tiny_params(0), 3, quick_policy(4))
+                .build()
+                .unwrap(),
+        );
+        let engine = Engine::from_params(tiny_params(0));
+        let (threads, per) = (8usize, 12usize);
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let r = router.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        let idx = t * per + i;
+                        let reply = r.infer("m", img(idx)).unwrap();
+                        assert_eq!(reply.logits.len(), 2);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // spot-check correctness of a routed answer after the storm
+        assert_eq!(
+            router.infer("m", img(1)).unwrap().logits,
+            engine.forward(&img(1), 1).unwrap()
+        );
+        let total_sent = (threads * per) as u64 + 1;
+        let m = router.metrics("m").unwrap();
+        assert_eq!(m.total.requests, total_sent, "aggregate lost requests");
+        let per_shard_sum: u64 = m.shards.iter().map(|s| s.batcher.requests).sum();
+        assert_eq!(per_shard_sum, total_sent, "shard sum != aggregate");
+        let completed_sum: u64 = m.shards.iter().map(|s| s.completed).sum();
+        assert_eq!(completed_sum, total_sent, "latency counts lost requests");
+        assert_eq!(m.total.exec_errors, 0);
+        assert_eq!(m.total.queue_depth, 0, "queues must drain");
+        assert_eq!(router.aggregate().requests, total_sent);
+    }
+
+    #[test]
+    fn bounded_shard_queue_returns_overload_not_oom() {
+        // One slow executor shard with queue depth 2: a burst must see
+        // overload errors while admitted requests all finish.
+        let slow: Box<ExecuteFn> = Box::new(|buf: &[f32], bsz: usize| {
+            std::thread::sleep(Duration::from_millis(2));
+            Ok(buf[..bsz].to_vec())
+        });
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_from_executors(
+                    "m",
+                    1,
+                    1,
+                    vec![slow],
+                    BatchPolicy {
+                        max_batch: 1,
+                        max_wait: Duration::from_micros(50),
+                        max_queue_depth: 2,
+                        overload: OverloadPolicy::RejectNewest,
+                    },
+                )
+                .build()
+                .unwrap(),
+        );
+        let handles: Vec<_> = (0..12)
+            .map(|i| {
+                let r = router.clone();
+                std::thread::spawn(move || r.infer("m", vec![i as f32]).map(|_| ()))
+            })
+            .collect();
+        let mut overloads = 0;
+        for h in handles {
+            if let Err(e) = h.join().unwrap() {
+                assert!(e.to_string().contains("overloaded"), "{e}");
+                overloads += 1;
+            }
+        }
+        let m = router.metrics("m").unwrap();
+        assert_eq!(m.total.rejected, overloads);
+        assert_eq!(m.total.requests + m.total.rejected, 12);
+        assert!(m.total.peak_queue_depth <= 2, "queue exceeded bound: {:?}", m.total);
+    }
+
+    #[test]
+    fn builder_rejects_bad_configs() {
+        assert!(InferenceRouter::builder().build().is_err(), "empty router must not build");
+        let err = InferenceRouter::builder()
+            .model("m", tiny_params(0), 0, quick_policy(1))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains(">= 1"), "{err}");
+        let err = InferenceRouter::builder()
+            .model("m", tiny_params(0), 1, quick_policy(1))
+            .model("m", tiny_params(0), 1, quick_policy(1))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+        // degenerate policies are build errors, not spawn panics
+        let err = InferenceRouter::builder()
+            .model("m", tiny_params(0), 1, quick_policy(0))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max_batch"), "{err}");
+        let bad_depth = BatchPolicy { max_queue_depth: 0, ..BatchPolicy::default() };
+        let err = InferenceRouter::builder()
+            .model("m", tiny_params(0), 1, bad_depth)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max_queue_depth"), "{err}");
+    }
+}

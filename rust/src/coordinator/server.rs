@@ -8,14 +8,21 @@
 //! and it does so internally, slicing the padded rows back off before
 //! they reach the batcher. The native executor
 //! ([`InferenceServer::start_native`]) runs short batches directly and
-//! reuses one [`Scratch`](crate::model::Scratch) across all requests.
+//! reuses one [`Scratch`](crate::model::Scratch) across all requests;
+//! [`InferenceServer::start_native_shared`] serves replicas off an
+//! existing `Arc<ModelParams>` without copying any parameters.
+//!
+//! [`ServerMetrics`] carries the latency histograms *and* a live handle
+//! to the batcher's [`BatcherStats`] — queue depth, peak depth, shed and
+//! rejected counts are observable per server, so overload shows up in
+//! metrics rather than silently as memory growth.
 
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::model::{Engine, EngineMode, Graph, Scratch, Weights};
+use crate::model::{Engine, EngineMode, Graph, ModelParams, Scratch, Weights};
 use crate::quant::SparqConfig;
 use crate::runtime::{ArtifactKind, ModelArtifacts, PjrtRuntime, TensorArg, TensorData};
 
@@ -66,12 +73,15 @@ impl LatencyHist {
     }
 }
 
-/// Aggregated server metrics.
+/// Aggregated server metrics: latency histograms plus the live batcher
+/// stats (queue depth, shed/rejected counts, batch/exec counters). The
+/// `batcher` arc is the same one the worker updates, so reads are
+/// always current — sample it with `batcher.snapshot()`.
 #[derive(Default, Debug)]
 pub struct ServerMetrics {
     pub e2e: LatencyHist,
     pub queue: LatencyHist,
-    pub batcher: BatcherStats,
+    pub batcher: Arc<BatcherStats>,
 }
 
 /// A model served through the dynamically batched executor path.
@@ -98,7 +108,7 @@ impl InferenceServer {
     ) -> Result<Self> {
         let exe = rt.load(&model.hlo_path(ArtifactKind::Sparq))?;
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
-        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let stats = metrics.lock().unwrap().batcher.clone();
         let [h, w, c] = image_dims;
         let image_len = h * w * c;
         let hw_batch = policy.max_batch;
@@ -139,9 +149,9 @@ impl InferenceServer {
     }
 
     /// Serve a model through the native integer engine — no PJRT, no
-    /// artifacts, true variable-batch execution. The worker owns the
-    /// engine and one [`Scratch`], so steady-state requests allocate
-    /// nothing on the quantized path.
+    /// artifacts, true variable-batch execution. Builds the shared
+    /// parameter block once and delegates to
+    /// [`InferenceServer::start_native_shared`].
     pub fn start_native(
         graph: &Graph,
         weights: &Weights,
@@ -150,13 +160,28 @@ impl InferenceServer {
         mode: EngineMode,
         policy: BatchPolicy,
     ) -> Result<Self> {
-        let engine = Engine::new(graph, weights, cfg, scales, mode)?;
-        let [h, w, c] = graph.input_hwc;
+        let params = Arc::new(ModelParams::new(
+            Arc::new(graph.clone()),
+            Arc::new(weights.clone()),
+            cfg,
+            scales,
+            mode,
+        )?);
+        Self::start_native_shared(params, policy)
+    }
+
+    /// Serve a replica off an existing shared parameter block — zero
+    /// parameter copies. The worker owns a cheap [`Engine`] handle and
+    /// one [`Scratch`], so steady-state requests allocate nothing on
+    /// the quantized path.
+    pub fn start_native_shared(params: Arc<ModelParams>, policy: BatchPolicy) -> Result<Self> {
+        let engine = Engine::from_params(params);
+        let [h, w, c] = engine.graph().input_hwc;
         let image_len = h * w * c;
-        let classes = graph.num_classes;
-        let image_dims = graph.input_hwc;
+        let classes = engine.graph().num_classes;
+        let image_dims = engine.graph().input_hwc;
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
-        let stats = Arc::new(Mutex::new(BatcherStats::default()));
+        let stats = metrics.lock().unwrap().batcher.clone();
         let mut scratch = Scratch::default();
         let execute = move |buf: &[f32], bsz: usize| -> Result<Vec<f32>> {
             engine.forward_scratch(buf, bsz, &mut scratch)
@@ -183,6 +208,7 @@ impl InferenceServer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::batcher::OverloadPolicy;
     use crate::model::{Node, Op};
     use std::collections::HashMap;
 
@@ -252,7 +278,11 @@ mod tests {
                 &scales,
                 cfg,
                 EngineMode::Dense,
-                BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) },
+                BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(5),
+                    ..BatchPolicy::default()
+                },
             )
             .unwrap(),
         );
@@ -278,6 +308,63 @@ mod tests {
             assert!(reply.batch_size >= 1 && reply.batch_size <= 4);
         }
         let metrics = server.metrics();
-        assert_eq!(metrics.lock().unwrap().e2e.count(), 6);
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.e2e.count(), 6);
+        // the batcher stats are live through ServerMetrics now — not a
+        // dead default-zero copy (the pre-fix behaviour)
+        let s = m.batcher.snapshot();
+        assert_eq!(s.requests, 6, "batcher stats not wired into ServerMetrics");
+        assert!(s.batches >= 1);
+        assert_eq!(s.queue_depth, 0, "queue depth gauge must drain to zero");
+    }
+
+    #[test]
+    fn overload_is_observable_through_server_metrics() {
+        // A server over a gated executor: queue fills, the overload is
+        // returned to callers *and* visible in ServerMetrics.
+        let metrics_probe;
+        {
+            let (graph, weights) = tiny_native_model();
+            let server = InferenceServer::start_native(
+                &graph,
+                &weights,
+                &[0.02f32],
+                SparqConfig::A8W8,
+                EngineMode::Dense,
+                BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::from_micros(50),
+                    max_queue_depth: 1,
+                    overload: OverloadPolicy::RejectNewest,
+                },
+            )
+            .unwrap();
+            // Saturate from several threads; with depth 1 and a real
+            // engine at least some submissions must hit the bound or
+            // complete — both counters land in the same snapshot.
+            let server = Arc::new(server);
+            let handles: Vec<_> = (0..8)
+                .map(|i| {
+                    let s = server.clone();
+                    std::thread::spawn(move || {
+                        let img: Vec<f32> = (0..16).map(|j| ((i + j) as f32) / 20.0).collect();
+                        s.infer(img).map(|_| ()).map_err(|e| e.to_string())
+                    })
+                })
+                .collect();
+            let mut rejected_seen = 0u64;
+            for h in handles {
+                if let Err(msg) = h.join().unwrap() {
+                    assert!(msg.contains("overloaded"), "{msg}");
+                    rejected_seen += 1;
+                }
+            }
+            let m = server.metrics();
+            let s = m.lock().unwrap().batcher.snapshot();
+            assert_eq!(s.rejected, rejected_seen, "metrics disagree with caller errors");
+            assert_eq!(s.requests + s.rejected, 8, "unaccounted requests: {s:?}");
+            metrics_probe = s;
+        }
+        assert!(metrics_probe.peak_queue_depth <= 1);
     }
 }

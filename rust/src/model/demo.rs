@@ -1,0 +1,95 @@
+//! Deterministic synthetic demo model shared by artifact-free drivers
+//! (`benches/hotpath.rs`, `examples/serve_bench.rs`): a float stem conv
+//! + two quantized convs + gap + fc over 20x20x3 inputs, shaped like
+//! the zoo's resnet10 stem. Hidden from the documented API — it exists
+//! so the bench and the example can't drift apart.
+
+use std::collections::HashMap;
+
+use super::graph::{Graph, Node, Op};
+use super::weights::{FloatConv, QuantConv, Weights};
+
+/// splitmix-style deterministic i8 weights (same constants as the
+/// bench harness's generator, so results are comparable across
+/// targets and builds).
+pub fn synth_weights(n: usize) -> Vec<i8> {
+    (0..n)
+        .map(|i| ((((i as u64).wrapping_mul(0xbf58476d1ce4e5b9) >> 33) % 255) as i32 - 127) as i8)
+        .collect()
+}
+
+/// Synthetic 4-layer model + its activation scales.
+pub fn synth_model() -> (Graph, Weights, Vec<f32>) {
+    let graph = Graph {
+        arch: "bench".into(),
+        variant: "synthetic".into(),
+        num_classes: 10,
+        input_hwc: [20, 20, 3],
+        eval_batch: 32,
+        quant_convs: vec!["q1".into(), "q2".into()],
+        nodes: vec![
+            Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+            Node {
+                name: "c1".into(),
+                op: Op::Conv { k: 3, stride: 1, out_ch: 16, relu: true, quant: false },
+                inputs: vec!["img".into()],
+            },
+            Node {
+                name: "q1".into(),
+                op: Op::Conv { k: 3, stride: 2, out_ch: 32, relu: true, quant: true },
+                inputs: vec!["c1".into()],
+            },
+            Node {
+                name: "q2".into(),
+                op: Op::Conv { k: 3, stride: 1, out_ch: 64, relu: true, quant: true },
+                inputs: vec!["q1".into()],
+            },
+            Node { name: "g".into(), op: Op::Gap, inputs: vec!["q2".into()] },
+            Node { name: "fc".into(), op: Op::Fc { out: 10 }, inputs: vec!["g".into()] },
+        ],
+    };
+    let mut float = HashMap::new();
+    let c1_len = 3 * 3 * 3 * 16;
+    float.insert(
+        "c1".to_string(),
+        FloatConv {
+            w: synth_weights(c1_len).iter().map(|&v| f32::from(v) / 400.0).collect(),
+            kh: 3,
+            kw: 3,
+            c_in: 3,
+            c_out: 16,
+            bias: vec![0.01; 16],
+        },
+    );
+    let mut quant = HashMap::new();
+    quant.insert(
+        "q1".to_string(),
+        QuantConv {
+            wq: synth_weights(16 * 9 * 32),
+            k: 16 * 9,
+            o: 32,
+            scale: vec![0.002; 32],
+            bias: vec![0.0; 32],
+        },
+    );
+    quant.insert(
+        "q2".to_string(),
+        QuantConv {
+            wq: synth_weights(32 * 9 * 64),
+            k: 32 * 9,
+            o: 64,
+            scale: vec![0.002; 64],
+            bias: vec![0.0; 64],
+        },
+    );
+    let fc_len = 64 * 10;
+    let weights = Weights {
+        quant,
+        float,
+        fc_w: synth_weights(fc_len).iter().map(|&v| f32::from(v) / 127.0).collect(),
+        fc_in: 64,
+        fc_out: 10,
+        fc_b: vec![0.0; 10],
+    };
+    (graph, weights, vec![0.02, 0.02])
+}

@@ -10,8 +10,20 @@
 //! serving performs zero per-request heap allocation on those paths.
 //! Intermediate tensors are dropped from the value map as soon as their
 //! last consumer has run, holding peak memory to the graph's live set.
+//!
+//! # Shared parameters
+//!
+//! Everything immutable about a ready-to-run model — graph, weights,
+//! prepared/compressed weight tables, activation scales, liveness map —
+//! lives in one [`ModelParams`] behind an `Arc`. An [`Engine`] is a
+//! cheap handle (`Arc` + a thread-count knob): N replica engines for
+//! serving, per-config sweeps, or traced statistics runs all share a
+//! single parameter copy instead of each paying a full deep clone of
+//! graph + weights + prepared tables (the pre-Arc behaviour). Replica
+//! count is therefore a runtime knob, not a memory multiplier.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -77,13 +89,15 @@ fn grown<T: Copy + Default>(buf: &mut Vec<T>, n: usize) -> &mut [T] {
     &mut buf[..n]
 }
 
-/// A ready-to-run model: graph + weights + config + scales.
-///
-/// Owns its graph and weights (cloned at construction), so an `Engine`
-/// can be moved into long-lived serving workers without borrowing.
-pub struct Engine {
-    pub graph: Graph,
-    weights: Weights,
+/// The immutable, shareable half of a ready-to-run model: graph,
+/// weights, config, activation scales, and the one-off derived tables
+/// (requantized+transposed dense weights or 2:4 compressed weights,
+/// plus the value-liveness map). Built once, shared by every
+/// [`Engine`] replica via `Arc` — the prepared tables are the expensive
+/// part of engine construction and are never duplicated.
+pub struct ModelParams {
+    pub graph: Arc<Graph>,
+    pub weights: Arc<Weights>,
     pub cfg: SparqConfig,
     mode: EngineMode,
     scales: HashMap<String, ActScale>,
@@ -95,15 +109,13 @@ pub struct Engine {
     /// Value name -> index of its last consuming node (drives eager
     /// dropping of dead intermediates during forward).
     last_use: HashMap<String, usize>,
-    /// Worker threads for the GEMM / float-conv row partition.
-    threads: usize,
 }
 
-impl Engine {
+impl ModelParams {
     /// `act_scales` ordered by `graph.quant_convs` (from calibration).
     pub fn new(
-        graph: &Graph,
-        weights: &Weights,
+        graph: Arc<Graph>,
+        weights: Arc<Weights>,
         cfg: SparqConfig,
         act_scales: &[f32],
         mode: EngineMode,
@@ -155,18 +167,71 @@ impl Engine {
                 last_use.insert(input.clone(), i);
             }
         }
-        Ok(Self {
-            graph: graph.clone(),
-            weights: weights.clone(),
+        Ok(Self { graph, weights, cfg, mode, scales, gemm, prepared, compressed, last_use })
+    }
+
+    pub fn mode(&self) -> EngineMode {
+        self.mode
+    }
+}
+
+/// A ready-to-run model handle: shared [`ModelParams`] + a per-handle
+/// worker-thread knob.
+///
+/// Construct with [`Engine::new`] (builds its own params from borrowed
+/// graph/weights — one copy, source-compatible with the pre-Arc API) or
+/// [`Engine::from_params`] (shares an existing `Arc<ModelParams>` with
+/// zero parameter copying — the multi-replica path).
+pub struct Engine {
+    params: Arc<ModelParams>,
+    /// Worker threads for the GEMM / float-conv row partition.
+    threads: usize,
+}
+
+impl Engine {
+    /// `act_scales` ordered by `graph.quant_convs` (from calibration).
+    pub fn new(
+        graph: &Graph,
+        weights: &Weights,
+        cfg: SparqConfig,
+        act_scales: &[f32],
+        mode: EngineMode,
+    ) -> Result<Self> {
+        let params = ModelParams::new(
+            Arc::new(graph.clone()),
+            Arc::new(weights.clone()),
             cfg,
+            act_scales,
             mode,
-            scales,
-            gemm,
-            prepared,
-            compressed,
-            last_use,
-            threads: threadpool::max_threads(),
-        })
+        )?;
+        Ok(Self::from_params(Arc::new(params)))
+    }
+
+    /// A replica engine sharing `params` — no graph/weights/prepared-
+    /// table copies. This is what the serving router spawns per shard.
+    pub fn from_params(params: Arc<ModelParams>) -> Self {
+        Self { params, threads: threadpool::max_threads() }
+    }
+
+    /// The shared parameter block (graph, weights, prepared tables).
+    pub fn params(&self) -> &Arc<ModelParams> {
+        &self.params
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.params.graph
+    }
+
+    pub fn weights(&self) -> &Weights {
+        &self.params.weights
+    }
+
+    pub fn cfg(&self) -> SparqConfig {
+        self.params.cfg
+    }
+
+    pub fn mode(&self) -> EngineMode {
+        self.params.mode
     }
 
     /// Override the worker-thread count (1 = fully serial). Defaults to
@@ -214,14 +279,15 @@ impl Engine {
         scratch: &mut Scratch,
         sink: &mut dyn TraceSink,
     ) -> Result<Vec<f32>> {
-        let [h, w, c] = self.graph.input_hwc;
+        let p = &*self.params;
+        let [h, w, c] = p.graph.input_hwc;
         if images.len() != batch * h * w * c {
             bail!("input length {} != {}", images.len(), batch * h * w * c);
         }
         let mut vals: HashMap<&str, TensorF32> = HashMap::new();
         vals.insert("img", TensorF32::from_vec(batch, h, w, c, images.to_vec()));
         let mut logits = Vec::new();
-        for (idx, node) in self.graph.nodes.iter().enumerate() {
+        for (idx, node) in p.graph.nodes.iter().enumerate() {
             let get = |name: &String| -> Result<&TensorF32> {
                 vals.get(name.as_str()).with_context(|| format!("missing value {name}"))
             };
@@ -276,22 +342,22 @@ impl Engine {
                             node.name
                         );
                     }
-                    if self.last_use.contains_key(node.name.as_str()) {
+                    if p.last_use.contains_key(node.name.as_str()) {
                         bail!(
                             "fc node `{}` has downstream consumers; fc must be terminal",
                             node.name
                         );
                     }
                     let x = get(&node.inputs[0])?;
-                    if x.c != self.weights.fc_in {
-                        bail!("fc input width {} != {}", x.c, self.weights.fc_in);
+                    if x.c != p.weights.fc_in {
+                        bail!("fc input width {} != {}", x.c, p.weights.fc_in);
                     }
                     logits = vec![0f32; x.n * out];
                     for n in 0..x.n {
                         for oi in 0..*out {
-                            let mut acc = self.weights.fc_b[oi];
+                            let mut acc = p.weights.fc_b[oi];
                             for ci in 0..x.c {
-                                acc += x.data[n * x.c + ci] * self.weights.fc_w[ci * out + oi];
+                                acc += x.data[n * x.c + ci] * p.weights.fc_w[ci * out + oi];
                             }
                             logits[n * out + oi] = acc;
                         }
@@ -302,7 +368,7 @@ impl Engine {
             // Drop dead intermediates: a value whose last consumer just
             // ran can never be read again.
             for input in &node.inputs {
-                if self.last_use.get(input.as_str()) == Some(&idx) {
+                if p.last_use.get(input.as_str()) == Some(&idx) {
                     vals.remove(input.as_str());
                 }
             }
@@ -321,7 +387,7 @@ impl Engine {
     /// unit, and per-element accumulation order is unchanged vs the
     /// serial loop, so results are bit-identical for any thread count.
     fn float_conv(&self, node: &Node, x: &TensorF32, k: usize, stride: usize) -> Result<TensorF32> {
-        let fw = self.weights.float_conv(&node.name)?;
+        let fw = self.params.weights.float_conv(&node.name)?;
         if (fw.kh, fw.kw, fw.c_in) != (k, k, x.c) {
             bail!("conv {} shape mismatch", node.name);
         }
@@ -374,8 +440,9 @@ impl Engine {
         scratch: &mut Scratch,
         sink: &mut dyn TraceSink,
     ) -> Result<TensorF32> {
-        let qc = self.weights.quant_conv(&node.name)?;
-        let scale = self.scales[&node.name];
+        let p = &*self.params;
+        let qc = p.weights.quant_conv(&node.name)?;
+        let scale = p.scales[&node.name];
         // quantize the (non-negative) float input to u8
         let xq = grown(&mut scratch.xq, x.data.len());
         scale.quantize_slice_into(&x.data, xq);
@@ -387,13 +454,13 @@ impl Engine {
         im2col_u8_into(xq, x.n, x.h, x.w, x.c, k, stride, patches);
         sink.record(&node.name, patches);
 
-        let wrs = self.cfg.weight_rescale();
+        let wrs = p.cfg.weight_rescale();
         let stc_out;
-        let acc: &[i32] = match self.mode {
+        let acc: &[i32] = match p.mode {
             EngineMode::Dense => {
                 let acc = grown(&mut scratch.acc, m * qc.o);
-                let wt = &self.prepared[&node.name];
-                self.gemm.gemm_with(
+                let wt = &p.prepared[&node.name];
+                p.gemm.gemm_with(
                     patches,
                     m,
                     kk,
@@ -406,7 +473,7 @@ impl Engine {
                 acc
             }
             EngineMode::Stc => {
-                let cw = &self.compressed[&node.name];
+                let cw = &p.compressed[&node.name];
                 // pad patches K to the compressed K if needed
                 let src: &[u8] = if cw.k != kk {
                     let padded = grown(&mut scratch.stc_pad, m * cw.k);
@@ -422,7 +489,7 @@ impl Engine {
                 // stc_gemm owns its output; read it in place (the STC
                 // datapath is the Table-6 simulation, not the serving
                 // hot path, so its internal allocation is acceptable).
-                let (out, _) = stc_gemm(src, cw, m, self.cfg);
+                let (out, _) = stc_gemm(src, cw, m, p.cfg);
                 stc_out = out;
                 &stc_out
             }
@@ -514,44 +581,9 @@ mod tests {
         (graph, weights)
     }
 
-    #[test]
-    fn forward_through_shared_inputs_and_dead_value_dropping() {
-        let (graph, weights) = tiny_float_model(false);
-        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
-            .unwrap();
-        let logits = engine.forward(&[1.5, -2.0, 0.25, 3.0], 2).unwrap();
-        // add(c1, c1) doubles; gap of 1x1 is identity; fc identity
-        assert_eq!(logits, vec![3.0, -4.0, 0.5, 6.0]);
-    }
-
-    #[test]
-    fn second_fc_head_is_rejected_not_silently_overwritten() {
-        let (graph, weights) = tiny_float_model(true);
-        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
-            .unwrap();
-        let err = engine.forward(&[1.0, 1.0], 1).unwrap_err().to_string();
-        assert!(err.contains("second fc head"), "{err}");
-    }
-
-    #[test]
-    fn post_fc_consumer_is_rejected_not_silently_ignored() {
-        let (mut graph, weights) = tiny_float_model(false);
-        // fc -> relu: the relu's effect could never reach the returned
-        // logits, so the engine must refuse rather than drop it.
-        graph.nodes.push(Node {
-            name: "r".into(),
-            op: Op::Relu,
-            inputs: vec!["fc".into()],
-        });
-        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
-            .unwrap();
-        let err = engine.forward(&[1.0, 1.0], 1).unwrap_err().to_string();
-        assert!(err.contains("must be terminal"), "{err}");
-    }
-
-    #[test]
-    fn scratch_reuse_is_deterministic_and_allocation_stable() {
-        // One quantized conv so every scratch buffer is exercised.
+    /// Tiny model with one quantized conv, exercising every scratch
+    /// buffer and the prepared-weight table.
+    fn tiny_quant_model() -> (Graph, Weights) {
         let graph = Graph {
             arch: "tinyq".into(),
             variant: "test".into(),
@@ -589,6 +621,87 @@ mod tests {
             fc_out: 2,
             fc_b: vec![0.0, 0.0],
         };
+        (graph, weights)
+    }
+
+    #[test]
+    fn forward_through_shared_inputs_and_dead_value_dropping() {
+        let (graph, weights) = tiny_float_model(false);
+        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
+            .unwrap();
+        let logits = engine.forward(&[1.5, -2.0, 0.25, 3.0], 2).unwrap();
+        // add(c1, c1) doubles; gap of 1x1 is identity; fc identity
+        assert_eq!(logits, vec![3.0, -4.0, 0.5, 6.0]);
+    }
+
+    #[test]
+    fn second_fc_head_is_rejected_not_silently_overwritten() {
+        let (graph, weights) = tiny_float_model(true);
+        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
+            .unwrap();
+        let err = engine.forward(&[1.0, 1.0], 1).unwrap_err().to_string();
+        assert!(err.contains("second fc head"), "{err}");
+    }
+
+    #[test]
+    fn post_fc_consumer_is_rejected_not_silently_ignored() {
+        let (mut graph, weights) = tiny_float_model(false);
+        // fc -> relu: the relu's effect could never reach the returned
+        // logits, so the engine must refuse rather than drop it.
+        graph.nodes.push(Node {
+            name: "r".into(),
+            op: Op::Relu,
+            inputs: vec!["fc".into()],
+        });
+        let engine = Engine::new(&graph, &weights, SparqConfig::A8W8, &[], EngineMode::Dense)
+            .unwrap();
+        let err = engine.forward(&[1.0, 1.0], 1).unwrap_err().to_string();
+        assert!(err.contains("must be terminal"), "{err}");
+    }
+
+    #[test]
+    fn engines_share_one_parameter_copy_and_match_bitwise() {
+        // Two replicas from one ModelParams: pointer-equal parameter
+        // storage (no deep clone per engine — the pre-Arc bug) and
+        // bit-identical logits, also across different thread counts.
+        let (graph, weights) = tiny_quant_model();
+        let cfg = SparqConfig::named("5opt_r").unwrap();
+        let params = Arc::new(
+            ModelParams::new(
+                Arc::new(graph),
+                Arc::new(weights),
+                cfg,
+                &[0.02],
+                EngineMode::Dense,
+            )
+            .unwrap(),
+        );
+        let e1 = Engine::from_params(params.clone());
+        let mut e2 = Engine::from_params(params.clone());
+        // shared storage: both engines point at the *same* allocations
+        assert!(Arc::ptr_eq(e1.params(), e2.params()), "engines built distinct param blocks");
+        assert!(Arc::ptr_eq(&e1.params().graph, &e2.params().graph));
+        assert!(Arc::ptr_eq(&e1.params().weights, &e2.params().weights));
+        assert!(std::ptr::eq(e1.graph(), e2.graph()), "graph refs resolve to different copies");
+        assert_eq!(Arc::strong_count(&params), 3, "params + 2 replicas");
+        // replicas stay numerically identical to each other and to a
+        // from-scratch engine, independent of the per-replica knob
+        e2.set_threads(1);
+        let img: Vec<f32> = (0..16).map(|i| (i as f32) / 8.0).collect();
+        let l1 = e1.forward(&img, 1).unwrap();
+        let l2 = e2.forward(&img, 1).unwrap();
+        assert_eq!(l1, l2, "shared-params replicas diverged");
+        let (graph2, weights2) = tiny_quant_model();
+        let fresh = Engine::new(&graph2, &weights2, cfg, &[0.02], EngineMode::Dense).unwrap();
+        assert_eq!(l1, fresh.forward(&img, 1).unwrap());
+        // dropping a replica releases its handle, not the parameters
+        drop(e1);
+        assert_eq!(Arc::strong_count(&params), 2);
+    }
+
+    #[test]
+    fn scratch_reuse_is_deterministic_and_allocation_stable() {
+        let (graph, weights) = tiny_quant_model();
         let engine =
             Engine::new(&graph, &weights, SparqConfig::named("5opt_r").unwrap(), &[0.02],
                 EngineMode::Dense)

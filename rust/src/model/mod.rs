@@ -49,19 +49,26 @@
 //!   per-request heap allocation on the integer path, and the engine
 //!   drops dead intermediate tensors as soon as their last consumer has
 //!   run.
+//! * **Shared parameters** — [`engine::ModelParams`] holds the graph,
+//!   weights and one-off prepared weight tables behind an `Arc`;
+//!   [`engine::Engine`] is a cheap per-replica handle, so N serving
+//!   replicas (see `coordinator::router`) share a single parameter
+//!   copy instead of N deep clones.
 //!
 //! Measure it with `cargo bench --bench hotpath` (no artifacts needed):
 //! the bench compares the naive single-threaded seed GEMM against the
 //! blocked serial and blocked parallel kernels, and runs an end-to-end
 //! synthetic-model forward at 1 vs N threads.
 
+#[doc(hidden)]
+pub mod demo;
 pub mod engine;
 pub mod gemm;
 pub mod graph;
 pub mod threadpool;
 pub mod weights;
 
-pub use engine::{Engine, EngineMode, Scratch, TraceSink};
+pub use engine::{Engine, EngineMode, ModelParams, Scratch, TraceSink};
 pub use gemm::QuantGemm;
 pub use graph::{Graph, Node, Op};
 pub use weights::Weights;

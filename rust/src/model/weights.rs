@@ -118,6 +118,23 @@ impl Weights {
         self.float.get(name).with_context(|| format!("no float weights for `{name}`"))
     }
 
+    /// Approximate heap bytes held by the parameter store — the cost a
+    /// replica engine used to pay per deep clone before Arc sharing,
+    /// and what the serving router reports as the (single) shared
+    /// parameter footprint.
+    pub fn param_bytes(&self) -> usize {
+        let f32s = self
+            .float
+            .values()
+            .map(|f| f.w.len() + f.bias.len())
+            .sum::<usize>()
+            + self.quant.values().map(|q| q.scale.len() + q.bias.len()).sum::<usize>()
+            + self.fc_w.len()
+            + self.fc_b.len();
+        let i8s = self.quant.values().map(|q| q.wq.len()).sum::<usize>();
+        f32s * std::mem::size_of::<f32>() + i8s
+    }
+
     /// Total parameter count (reporting).
     pub fn param_count(&self) -> usize {
         self.quant.values().map(|q| q.wq.len() + q.scale.len() + q.bias.len()).sum::<usize>()

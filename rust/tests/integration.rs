@@ -209,6 +209,7 @@ fn server_batches_and_answers_correctly() {
             BatchPolicy {
                 max_batch: graph.eval_batch,
                 max_wait: std::time::Duration::from_millis(10),
+                ..BatchPolicy::default()
             },
         )?);
         // 32 concurrent clients, each sending one real eval image

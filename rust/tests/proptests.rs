@@ -313,16 +313,17 @@ fn prop_json_roundtrip() {
 
 #[test]
 fn prop_batcher_routes_every_request_correctly() {
-    use sparq::coordinator::{BatchPolicy, Batcher};
-    use std::sync::{Arc, Mutex};
+    use sparq::coordinator::{BatchPolicy, Batcher, BatcherStats};
+    use std::sync::Arc;
     props!(10, |rng| {
         let max_batch = 1 + rng.below(7) as usize;
         let n_clients = 1 + rng.below(12) as usize;
-        let stats = Arc::new(Mutex::new(Default::default()));
+        let stats = Arc::new(BatcherStats::default());
         let b = Batcher::spawn(
             BatchPolicy {
                 max_batch,
                 max_wait: std::time::Duration::from_millis(3),
+                ..BatchPolicy::default()
             },
             2,
             1,
@@ -498,15 +499,16 @@ fn prop_im2col_matches_scalar_gather() {
 
 #[test]
 fn prop_batcher_surfaces_executor_errors() {
-    use sparq::coordinator::{BatchPolicy, Batcher};
-    use std::sync::{Arc, Mutex};
+    use sparq::coordinator::{BatchPolicy, Batcher, BatcherStats};
+    use std::sync::Arc;
     props!(8, |rng| {
         let n_clients = 1 + rng.below(6) as usize;
-        let stats = Arc::new(Mutex::new(Default::default()));
+        let stats = Arc::new(BatcherStats::default());
         let b = Batcher::spawn(
             BatchPolicy {
                 max_batch: 1 + rng.below(4) as usize,
                 max_wait: std::time::Duration::from_millis(2),
+                ..BatchPolicy::default()
             },
             1,
             1,
@@ -532,6 +534,87 @@ fn prop_batcher_surfaces_executor_errors() {
                 "root cause missing from `{msg}`"
             );
         }
+    });
+}
+
+#[test]
+fn prop_bounded_batcher_accounts_every_request_and_respects_depth() {
+    // Burst traffic against a bounded queue under either overload
+    // policy: the depth never exceeds the bound, and every request is
+    // exactly one of executed / shed / rejected — with the caller-side
+    // outcomes matching the stats counters.
+    use sparq::coordinator::{BatchPolicy, Batcher, BatcherStats, OverloadPolicy};
+    use std::sync::Arc;
+    props!(8, |rng| {
+        let depth = 1 + rng.below(6) as usize;
+        let n_clients = 2 + rng.below(10) as usize;
+        let per = 1 + rng.below(6) as usize;
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.below(4) as usize,
+            max_wait: std::time::Duration::from_micros(100),
+            max_queue_depth: depth,
+            overload: if rng.below(2) == 0 {
+                OverloadPolicy::RejectNewest
+            } else {
+                OverloadPolicy::ShedOldest
+            },
+        };
+        let stats = Arc::new(BatcherStats::default());
+        let b = Batcher::spawn(
+            policy,
+            1,
+            1,
+            Box::new(|buf: &[f32], bsz: usize| {
+                std::thread::sleep(std::time::Duration::from_micros(200));
+                Ok(buf[..bsz].to_vec())
+            }),
+            stats.clone(),
+        );
+        let handles: Vec<_> = (0..n_clients)
+            .map(|i| {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    let (mut ok, mut overload) = (0u64, 0u64);
+                    for j in 0..per {
+                        match b.infer(vec![(i * per + j) as f32]) {
+                            Ok(r) => {
+                                assert_eq!(r.logits[0], (i * per + j) as f32);
+                                ok += 1;
+                            }
+                            Err(e) => {
+                                assert!(e.to_string().contains("overloaded"), "{e}");
+                                overload += 1;
+                            }
+                        }
+                    }
+                    (ok, overload)
+                })
+            })
+            .collect();
+        let (mut ok, mut overload) = (0u64, 0u64);
+        for h in handles {
+            let (o, v) = h.join().unwrap();
+            ok += o;
+            overload += v;
+        }
+        let s = stats.snapshot();
+        let total = (n_clients * per) as u64;
+        prop_assert!(
+            s.peak_queue_depth <= depth as u64,
+            "queue depth {} exceeded bound {depth}",
+            s.peak_queue_depth
+        );
+        prop_assert!(s.requests == ok, "executed {} != ok replies {ok}", s.requests);
+        prop_assert!(
+            s.shed + s.rejected == overload,
+            "overload counters {} + {} != caller-side errors {overload}",
+            s.shed,
+            s.rejected
+        );
+        prop_assert!(
+            s.requests + s.shed + s.rejected == total,
+            "books don't balance for {total} requests: {s:?}"
+        );
     });
 }
 
