@@ -4,32 +4,64 @@
 //!
 //! ```bash
 //! cargo run --release --example serve_bench [artifacts-dir] [clients] [requests-per-client]
+//! cargo run --release --example serve_bench -- --http [clients] [requests-per-client]
+//! cargo run --release --example serve_bench -- --http-smoke
 //! ```
 //!
-//! With exported artifacts + a real PJRT backend the bench drives the
-//! single-model `InferenceServer` over the compiled HLO. Without them
-//! (this image's default) it falls back to the **native sharded
-//! router**: a synthetic model served by N replica shards that share
-//! one `Arc<ModelParams>` parameter copy, printing per-shard and
+//! With exported artifacts + a real PJRT backend the default mode
+//! drives the single-model `InferenceServer` over the compiled HLO.
+//! Without them (this image's default) it falls back to the **native
+//! sharded router**: a synthetic model served by N replica shards that
+//! share one `Arc<ModelParams>` parameter copy, printing per-shard and
 //! aggregate metrics — queue depth, shed/rejected counts included.
+//!
+//! `--http` serves the same native demo router through the HTTP/1.1
+//! front door on an ephemeral loopback port and benchmarks it with
+//! keep-alive `std::net::TcpStream` clients; `--http-smoke` drives one
+//! request end-to-end, asserts a 200 with logits bit-identical to
+//! `Engine::forward`, and exits non-zero on any mismatch (the CI smoke
+//! job).
 
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
-use sparq::coordinator::{calibrate, BatchPolicy, InferenceRouter, InferenceServer};
+use anyhow::{Context as _, Result};
+use sparq::coordinator::{
+    calibrate, BatchPolicy, HttpConfig, HttpServer, InferenceRouter, InferenceServer,
+};
 use sparq::data::Dataset;
+use sparq::json::JsonValue;
+use sparq::json_obj;
 use sparq::model::demo::synth_model;
-use sparq::model::{EngineMode, Graph, ModelParams};
+use sparq::model::{Engine, EngineMode, Graph, ModelParams};
 use sparq::quant::SparqConfig;
 use sparq::runtime::{Manifest, PjrtRuntime};
 
 fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().collect();
-    let dir = PathBuf::from(args.get(1).map(String::as_str).unwrap_or("artifacts"));
-    let clients: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(16);
-    let per_client: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let mut http_mode = false;
+    let mut smoke = false;
+    let mut positional: Vec<String> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--http" => http_mode = true,
+            "--http-smoke" => smoke = true,
+            other => positional.push(other.to_string()),
+        }
+    }
+    if smoke {
+        return http_smoke();
+    }
+    if http_mode {
+        let clients: usize = positional.first().map(|s| s.parse()).transpose()?.unwrap_or(16);
+        let per_client: usize = positional.get(1).map(|s| s.parse()).transpose()?.unwrap_or(32);
+        return http_bench(clients, per_client);
+    }
+    let dir = PathBuf::from(positional.first().map(String::as_str).unwrap_or("artifacts"));
+    let clients: usize = positional.get(1).map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let per_client: usize = positional.get(2).map(|s| s.parse()).transpose()?.unwrap_or(32);
 
     // Probe *availability* only (backend + manifest). A failure here
     // means the PJRT path can't run at all and the native router demo
@@ -229,5 +261,215 @@ fn native_router_bench(clients: usize, per_client: usize) -> Result<()> {
             m.total.requests, m.total.exec_errors, m.total.shed, m.total.rejected
         );
     }
+    Ok(())
+}
+
+/// Minimal blocking HTTP/1.1 client over one keep-alive connection —
+/// `std::net::TcpStream` only, no curl in the image.
+struct MiniClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl MiniClient {
+    fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).context("connecting to the http front door")?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        stream.set_nodelay(true)?;
+        Ok(Self { stream, buf: Vec::new() })
+    }
+
+    /// Send one raw request and read one response: (status, body).
+    fn request(&mut self, raw: &[u8]) -> Result<(u16, String)> {
+        self.stream.write_all(raw)?;
+        let find = |buf: &[u8]| buf.windows(4).position(|w| w == b"\r\n\r\n");
+        let head_end = loop {
+            if let Some(i) = find(&self.buf) {
+                break i;
+            }
+            let mut chunk = [0u8; 4096];
+            let n = self.stream.read(&mut chunk)?;
+            anyhow::ensure!(n > 0, "server closed the connection mid-response");
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let head = std::str::from_utf8(&self.buf[..head_end])?.to_string();
+        let status: u16 = head
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("unparseable status line `{head}`"))?;
+        let mut content_length = 0usize;
+        for line in head.split("\r\n").skip(1) {
+            if let Some((name, value)) = line.split_once(':') {
+                if name.trim().eq_ignore_ascii_case("content-length") {
+                    content_length = value.trim().parse()?;
+                }
+            }
+        }
+        let total = head_end + 4 + content_length;
+        while self.buf.len() < total {
+            let mut chunk = [0u8; 4096];
+            let n = self.stream.read(&mut chunk)?;
+            anyhow::ensure!(n > 0, "server closed the connection mid-body");
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let body = String::from_utf8(self.buf[head_end + 4..total].to_vec())?;
+        self.buf.drain(..total);
+        Ok((status, body))
+    }
+}
+
+/// Demo router + front door on an ephemeral loopback port; returns the
+/// server (keep it alive!), router, reference engine and input width.
+fn demo_http_stack(replicas: usize) -> Result<(HttpServer, Arc<InferenceRouter>, Engine, usize)> {
+    let (graph, weights, scales) = synth_model();
+    let cfg = SparqConfig::named("5opt_r").unwrap();
+    let params = Arc::new(ModelParams::new(
+        Arc::new(graph),
+        Arc::new(weights),
+        cfg,
+        &scales,
+        EngineMode::Dense,
+    )?);
+    let engine = Engine::from_params(params.clone());
+    let [h, w, c] = params.graph.input_hwc;
+    let router = Arc::new(
+        InferenceRouter::builder()
+            .model_with_threads(
+                "synth",
+                params,
+                replicas,
+                BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_micros(500),
+                    ..BatchPolicy::default()
+                },
+                1,
+            )
+            .build()?,
+    );
+    let server = HttpServer::bind("127.0.0.1:0", router.clone(), HttpConfig::default())?;
+    Ok((server, router, engine, h * w * c))
+}
+
+/// Deterministic image whose values survive the f32 -> JSON -> f32
+/// round trip bit-exactly (24-bit fractions).
+fn http_image(image_len: usize) -> Vec<f32> {
+    (0..image_len)
+        .map(|j| {
+            let h = (j as u64).wrapping_mul(0x9e3779b97f4a7c15);
+            (h >> 40) as f32 / 16_777_216.0
+        })
+        .collect()
+}
+
+fn infer_request(body: &str) -> Vec<u8> {
+    format!(
+        "POST /v1/infer/synth HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// `--http`: benchmark the front door with keep-alive TCP clients.
+fn http_bench(clients: usize, per_client: usize) -> Result<()> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let replicas = cores.max(2);
+    let (server, router, engine, image_len) = demo_http_stack(replicas)?;
+    let addr = server.addr();
+    let image = http_image(image_len);
+    let want = engine.forward(&image, 1)?;
+    let body = json_obj! {
+        "image" => image.iter().map(|&v| f64::from(v)).collect::<Vec<f64>>()
+    }
+    .to_string();
+    let raw = Arc::new(infer_request(&body));
+    println!(
+        "http front door on {addr}: {replicas} replica shard(s), \
+         {clients} keep-alive clients x {per_client} requests"
+    );
+    // Warmup + correctness gate before timing anything.
+    let (status, resp) = MiniClient::connect(addr)?.request(&raw)?;
+    anyhow::ensure!(status == 200, "warmup request failed: {status} {resp}");
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let raw = raw.clone();
+            std::thread::spawn(move || -> Result<()> {
+                let mut client = MiniClient::connect(addr)?;
+                for _ in 0..per_client {
+                    let (status, resp) = client.request(&raw)?;
+                    anyhow::ensure!(status == 200, "request failed: {status} {resp}");
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked")?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = clients * per_client;
+    println!("\nresults:");
+    println!(
+        "  throughput      {:.1} req/s ({total} requests in {wall:.2}s, one event-loop thread)",
+        total as f64 / wall
+    );
+    // Spot-check the served answer and print the served metrics.
+    let (_, resp) = MiniClient::connect(addr)?.request(&raw)?;
+    let logits: Vec<f32> = JsonValue::parse(&resp)?
+        .get("logits")
+        .and_then(|l| l.as_array().map(|a| a.to_vec()))
+        .context("no logits in response")?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
+        .collect();
+    anyhow::ensure!(logits == want, "HTTP logits diverge from direct Engine::forward");
+    let m = router.metrics("synth")?;
+    println!(
+        "  aggregate       {} reqs, peak queue {}, {} shed, {} rejected, {} expired",
+        m.total.requests, m.total.peak_queue_depth, m.total.shed, m.total.rejected,
+        m.total.expired
+    );
+    let (status, metrics) =
+        MiniClient::connect(addr)?.request(b"GET /v1/metrics HTTP/1.1\r\nHost: bench\r\n\r\n")?;
+    anyhow::ensure!(status == 200, "metrics endpoint failed: {status}");
+    println!("  GET /v1/metrics ({} bytes of JSON) OK", metrics.len());
+    Ok(())
+}
+
+/// `--http-smoke`: one request end-to-end; non-zero exit on mismatch.
+fn http_smoke() -> Result<()> {
+    let (server, _router, engine, image_len) = demo_http_stack(2)?;
+    let addr = server.addr();
+    let image = http_image(image_len);
+    let body = json_obj! {
+        "image" => image.iter().map(|&v| f64::from(v)).collect::<Vec<f64>>()
+    }
+    .to_string();
+    let mut client = MiniClient::connect(addr)?;
+    let (status, resp) = client.request(&infer_request(&body))?;
+    anyhow::ensure!(status == 200, "smoke request failed: {status} {resp}");
+    let parsed = JsonValue::parse(&resp).context("response body is not well-formed JSON")?;
+    let logits: Vec<f32> = parsed
+        .get("logits")
+        .and_then(|l| l.as_array().map(|a| a.to_vec()))
+        .context("no logits array in response")?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
+        .collect();
+    let want = engine.forward(&image, 1)?;
+    anyhow::ensure!(
+        logits == want,
+        "HTTP logits diverge from direct Engine::forward: {logits:?} vs {want:?}"
+    );
+    // Same keep-alive connection: healthz must answer too.
+    let (status, health) = client.request(b"GET /healthz HTTP/1.1\r\nHost: smoke\r\n\r\n")?;
+    anyhow::ensure!(status == 200 && health.contains("ok"), "healthz failed: {status} {health}");
+    println!(
+        "HTTP smoke OK: 200 with {} logits bit-identical to Engine::forward; healthz {health}",
+        logits.len()
+    );
     Ok(())
 }

@@ -11,18 +11,24 @@
 //! 4. sharded serving router over the same model: 1 vs N single-thread
 //!    replica shards sharing one Arc'd parameter copy, under concurrent
 //!    client load (img/s);
-//! 5. PJRT end-to-end batch latency (skipped when artifacts/xla absent).
+//! 5. the HTTP front door over that router: keep-alive TcpStream
+//!    clients through the single event-loop thread vs the in-process
+//!    router path (req/s — the network edge's overhead);
+//! 6. PJRT end-to-end batch latency (skipped when artifacts/xla absent).
 //!
 //! Run with `cargo bench --bench hotpath`; set `SPARQ_THREADS` to pin
 //! the parallel sections.
 
 include!("harness.rs");
 
+use std::io::{Read, Write};
+use std::net::TcpStream;
 use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use sparq::coordinator::{BatchPolicy, InferenceRouter};
+use sparq::coordinator::{BatchPolicy, HttpConfig, HttpServer, InferenceRouter};
+use sparq::json_obj;
 use sparq::model::demo::synth_model;
 use sparq::model::threadpool;
 use sparq::model::{Engine, EngineMode, ModelParams, QuantGemm, Scratch};
@@ -129,6 +135,7 @@ fn main() {
     );
     let single = img[..20 * 20 * 3].to_vec();
     let mut baseline_us = 0.0;
+    let mut router_n_us = 0.0;
     let max_replicas = nt.max(2);
     for replicas in [1usize, max_replicas] {
         let router = Arc::new(
@@ -172,6 +179,7 @@ fn main() {
         if replicas == 1 {
             baseline_us = us;
         } else {
+            router_n_us = us;
             println!(
                 "    => router throughput 1 -> {replicas} replicas: {:.2}x",
                 baseline_us / us
@@ -179,7 +187,105 @@ fn main() {
         }
     }
 
-    // 5. PJRT end-to-end batch (compile once, then per-batch latency)
+    // 5. HTTP front door: the same sharded router behind the single
+    // event-loop thread, driven by keep-alive TcpStream clients —
+    // quantifies what the network edge costs over in-process dispatch.
+    {
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_with_threads(
+                    "bench",
+                    params.clone(),
+                    max_replicas,
+                    BatchPolicy {
+                        max_batch: 8,
+                        max_wait: Duration::from_micros(500),
+                        ..BatchPolicy::default()
+                    },
+                    1,
+                )
+                .build()
+                .unwrap(),
+        );
+        let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+        let addr = server.addr();
+        let body = json_obj! {
+            "image" => single.iter().map(|&v| f64::from(v)).collect::<Vec<f64>>()
+        }
+        .to_string();
+        let raw: Arc<Vec<u8>> = Arc::new(
+            format!(
+                "POST /v1/infer/bench HTTP/1.1\r\nHost: b\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .into_bytes(),
+        );
+        // One response per request; responses are Content-Length framed.
+        fn one_request(stream: &mut TcpStream, raw: &[u8], buf: &mut Vec<u8>) {
+            stream.write_all(raw).unwrap();
+            let head_end = loop {
+                if let Some(i) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                    break i;
+                }
+                let mut chunk = [0u8; 4096];
+                let n = stream.read(&mut chunk).unwrap();
+                assert!(n > 0, "server closed mid-response");
+                buf.extend_from_slice(&chunk[..n]);
+            };
+            let head = std::str::from_utf8(&buf[..head_end]).unwrap();
+            assert!(head.starts_with("HTTP/1.1 200"), "bench request failed: {head}");
+            let clen: usize = head
+                .split("\r\n")
+                .find_map(|l| l.strip_prefix("Content-Length: "))
+                .unwrap()
+                .parse()
+                .unwrap();
+            let total = head_end + 4 + clen;
+            while buf.len() < total {
+                let mut chunk = [0u8; 4096];
+                let n = stream.read(&mut chunk).unwrap();
+                assert!(n > 0, "server closed mid-body");
+                buf.extend_from_slice(&chunk[..n]);
+            }
+            buf.drain(..total);
+        }
+        let clients = max_replicas * 2;
+        let per = 48usize;
+        // warmup
+        {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_nodelay(true).unwrap();
+            one_request(&mut s, &raw, &mut Vec::new());
+        }
+        let t0 = Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..clients {
+                let raw = raw.clone();
+                scope.spawn(move || {
+                    let mut s = TcpStream::connect(addr).unwrap();
+                    s.set_nodelay(true).unwrap();
+                    let mut buf = Vec::new();
+                    for _ in 0..per {
+                        one_request(&mut s, &raw, &mut buf);
+                    }
+                });
+            }
+        });
+        let us = t0.elapsed().as_secs_f64() * 1e6;
+        let total = (clients * per) as f64;
+        println!(
+            "http front door {max_replicas} shard(s), 1 event loop    {:>10.1} req/s \
+             ({clients} keep-alive clients x {per} reqs)",
+            total / (us * 1e-6)
+        );
+        println!(
+            "    => network-edge overhead vs in-process {max_replicas}-replica router: \
+             {:.2}x wall time",
+            us / router_n_us.max(1.0)
+        );
+    }
+
+    // 6. PJRT end-to-end batch (compile once, then per-batch latency)
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Manifest::load(&dir) {
         Ok(manifest) => pjrt_section(&manifest, cfg),

@@ -1,0 +1,526 @@
+//! Zero-dependency readiness loop for event-driven servers.
+//!
+//! The container image carries no crates.io registry, so the HTTP front
+//! door cannot pull `mio` or `tokio`. This crate vendors the thin slice
+//! of readiness polling the serving stack actually needs, in the same
+//! offline-shim spirit as `crates/anyhow`:
+//!
+//! * [`Poller`] — register file descriptors with a `u64` token and an
+//!   [`Interest`] (readable / writable), then [`Poller::wait`] for
+//!   [`Event`]s, level-triggered.
+//! * On Linux the backend is **epoll** (`epoll_create1` /`epoll_ctl` /
+//!   `epoll_wait` via the libc symbols std already links). Everywhere
+//!   else — and as a runtime fallback if `epoll_create1` fails — it is
+//!   portable **`poll(2)`**, which rebuilds its descriptor array per
+//!   wait; fine at front-door connection counts.
+//!
+//! Semantics are deliberately level-triggered on both backends so the
+//! caller may ignore an event and see it again on the next wait.
+//! `EPOLLERR`/`EPOLLHUP` (and `POLLERR`/`POLLHUP`/`POLLNVAL`) are
+//! reported as both readable and writable, so whichever direction the
+//! caller services next observes the failure from the socket itself.
+//!
+//! The poller never owns the descriptors: callers register borrowed raw
+//! fds and must [`Poller::deregister`] before closing them (the poll
+//! backend has no kernel-side cleanup on close).
+
+#![cfg(unix)]
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// Which readiness directions a registration asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READABLE: Self = Self { readable: true, writable: false };
+    pub const WRITABLE: Self = Self { readable: false, writable: true };
+    pub const BOTH: Self = Self { readable: true, writable: true };
+}
+
+/// One readiness notification from [`Poller::wait`].
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// The token supplied at registration.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Convert a wait timeout to the millisecond argument `epoll_wait` and
+/// `poll` share: `None` blocks indefinitely; sub-millisecond non-zero
+/// durations round **up** to 1ms so a short timeout never busy-spins.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis();
+            if ms == 0 && d.as_nanos() > 0 {
+                1
+            } else {
+                ms.min(i32::MAX as u128) as i32
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod epoll {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    /// Mirror of the kernel's `struct epoll_event`; packed on x86_64
+    /// only, exactly as the kernel (and libc) declare it.
+    #[derive(Clone, Copy)]
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    fn mask(interest: Interest) -> u32 {
+        let mut m = 0;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    pub(crate) struct Epoll {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Epoll {
+        pub(crate) fn new() -> io::Result<Self> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Self { epfd, buf: vec![EpollEvent { events: 0, data: 0 }; 256] })
+        }
+
+        fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            // EPOLL_CTL_DEL ignores the event argument on modern
+            // kernels but pre-2.6.9 ones reject a null pointer, so a
+            // real struct is always passed.
+            let mut ev = EpollEvent { events: mask(interest), data: token };
+            if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub(crate) fn register(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+        }
+
+        pub(crate) fn modify(&self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+        }
+
+        pub(crate) fn deregister(&self, fd: RawFd) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, Interest { readable: false, writable: false })
+        }
+
+        pub(crate) fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            loop {
+                let n = unsafe {
+                    epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms)
+                };
+                if n < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(e);
+                }
+                for &ev in self.buf.iter().take(n as usize) {
+                    let bits = ev.events;
+                    let broken = bits & (EPOLLERR | EPOLLHUP) != 0;
+                    out.push(Event {
+                        token: ev.data,
+                        readable: bits & EPOLLIN != 0 || broken,
+                        writable: bits & EPOLLOUT != 0 || broken,
+                    });
+                }
+                return Ok(());
+            }
+        }
+    }
+
+    impl Drop for Epoll {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+mod poll_backend {
+    use super::{Event, Interest};
+    use std::io;
+    use std::os::unix::io::RawFd;
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const POLLNVAL: i16 = 0x020;
+
+    /// `nfds_t` is `c_ulong` on Linux and `u32` on the BSD-derived
+    /// platforms this fallback otherwise targets.
+    #[cfg(target_os = "linux")]
+    type Nfds = core::ffi::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type Nfds = u32;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: Nfds, timeout: i32) -> i32;
+    }
+
+    struct Registration {
+        fd: RawFd,
+        token: u64,
+        interest: Interest,
+    }
+
+    fn mask(interest: Interest) -> i16 {
+        let mut m = 0;
+        if interest.readable {
+            m |= POLLIN;
+        }
+        if interest.writable {
+            m |= POLLOUT;
+        }
+        m
+    }
+
+    #[derive(Default)]
+    pub(crate) struct PollSet {
+        entries: Vec<Registration>,
+        /// Scratch `pollfd` array rebuilt per wait (lives here so the
+        /// steady state allocates nothing).
+        fds: Vec<PollFd>,
+    }
+
+    impl PollSet {
+        pub(crate) fn new() -> Self {
+            Self::default()
+        }
+
+        fn position(&self, fd: RawFd) -> Option<usize> {
+            self.entries.iter().position(|e| e.fd == fd)
+        }
+
+        pub(crate) fn register(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            interest: Interest,
+        ) -> io::Result<()> {
+            if self.position(fd).is_some() {
+                return Err(io::Error::new(
+                    io::ErrorKind::AlreadyExists,
+                    format!("fd {fd} is already registered"),
+                ));
+            }
+            self.entries.push(Registration { fd, token, interest });
+            Ok(())
+        }
+
+        pub(crate) fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+            match self.position(fd) {
+                Some(i) => {
+                    self.entries[i].token = token;
+                    self.entries[i].interest = interest;
+                    Ok(())
+                }
+                None => Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    format!("fd {fd} is not registered"),
+                )),
+            }
+        }
+
+        pub(crate) fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+            match self.position(fd) {
+                Some(i) => {
+                    self.entries.swap_remove(i);
+                    Ok(())
+                }
+                None => Err(io::Error::new(
+                    io::ErrorKind::NotFound,
+                    format!("fd {fd} is not registered"),
+                )),
+            }
+        }
+
+        pub(crate) fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
+            self.fds.clear();
+            for e in &self.entries {
+                self.fds.push(PollFd { fd: e.fd, events: mask(e.interest), revents: 0 });
+            }
+            loop {
+                let n =
+                    unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as Nfds, timeout_ms) };
+                if n < 0 {
+                    let e = io::Error::last_os_error();
+                    if e.kind() == io::ErrorKind::Interrupted {
+                        continue;
+                    }
+                    return Err(e);
+                }
+                break;
+            }
+            for (e, p) in self.entries.iter().zip(&self.fds) {
+                let r = p.revents;
+                if r == 0 {
+                    continue;
+                }
+                let broken = r & (POLLERR | POLLHUP | POLLNVAL) != 0;
+                out.push(Event {
+                    token: e.token,
+                    readable: r & POLLIN != 0 || broken,
+                    writable: r & POLLOUT != 0 || broken,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll(epoll::Epoll),
+    Poll(poll_backend::PollSet),
+}
+
+/// Level-triggered readiness poller over borrowed raw fds.
+pub struct Poller {
+    backend: Backend,
+}
+
+impl Poller {
+    /// Best backend for the platform: epoll on Linux (falling back to
+    /// `poll(2)` if `epoll_create1` itself fails), `poll(2)` elsewhere.
+    pub fn new() -> io::Result<Self> {
+        #[cfg(target_os = "linux")]
+        if let Ok(ep) = epoll::Epoll::new() {
+            return Ok(Self { backend: Backend::Epoll(ep) });
+        }
+        Ok(Self::with_poll_backend())
+    }
+
+    /// Force the portable `poll(2)` backend (exercised by tests and the
+    /// `HttpConfig::use_poll_fallback` escape hatch).
+    pub fn with_poll_backend() -> Self {
+        Self { backend: Backend::Poll(poll_backend::PollSet::new()) }
+    }
+
+    /// Which backend this poller runs on: `"epoll"` or `"poll"`.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(_) => "epoll",
+            Backend::Poll(_) => "poll",
+        }
+    }
+
+    /// Start watching `fd` with the given token and interest. The fd
+    /// must stay open until [`Poller::deregister`].
+    pub fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => ep.register(fd, token, interest),
+            Backend::Poll(ps) => ps.register(fd, token, interest),
+        }
+    }
+
+    /// Replace the token/interest of an already registered fd.
+    pub fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => ep.modify(fd, token, interest),
+            Backend::Poll(ps) => ps.modify(fd, token, interest),
+        }
+    }
+
+    /// Stop watching `fd`. Call before closing the descriptor.
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => ep.deregister(fd),
+            Backend::Poll(ps) => ps.deregister(fd),
+        }
+    }
+
+    /// Clear `events` and fill it with whatever is ready, blocking up
+    /// to `timeout` (`None` = indefinitely). Returns with an empty vec
+    /// on timeout. `EINTR` retries internally.
+    pub fn wait(&mut self, events: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+        events.clear();
+        let ms = timeout_ms(timeout);
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(ep) => ep.wait(events, ms),
+            Backend::Poll(ps) => ps.wait(events, ms),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+    use std::time::Instant;
+
+    /// Wait (with a deadline) until an event for `token` shows up;
+    /// panics on timeout so a broken backend fails loudly.
+    fn wait_for(p: &mut Poller, token: u64, want_read: bool, want_write: bool) -> Event {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut events = Vec::new();
+        while Instant::now() < deadline {
+            p.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+            for ev in &events {
+                if ev.token == token
+                    && (!want_read || ev.readable)
+                    && (!want_write || ev.writable)
+                {
+                    return *ev;
+                }
+            }
+        }
+        panic!("no event for token {token} within deadline ({})", p.backend_name());
+    }
+
+    fn backends() -> Vec<Poller> {
+        let mut v = vec![Poller::with_poll_backend()];
+        #[cfg(target_os = "linux")]
+        v.push(Poller::new().unwrap());
+        v
+    }
+
+    #[test]
+    fn listener_becomes_readable_on_pending_connection() {
+        for mut p in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.set_nonblocking(true).unwrap();
+            p.register(listener.as_raw_fd(), 7, Interest::READABLE).unwrap();
+
+            // nothing pending: a short wait times out empty
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "spurious event on idle listener");
+
+            let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let ev = wait_for(&mut p, 7, true, false);
+            assert!(ev.readable);
+            p.deregister(listener.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn stream_readable_and_writable_transitions() {
+        for mut p in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (mut served, _) = listener.accept().unwrap();
+            served.set_nonblocking(true).unwrap();
+
+            // A fresh connected socket has send-buffer space: writable.
+            p.register(served.as_raw_fd(), 1, Interest::BOTH).unwrap();
+            let ev = wait_for(&mut p, 1, false, true);
+            assert!(ev.writable, "connected socket should be writable ({})", p.backend_name());
+
+            // Not readable until the peer sends something.
+            p.modify(served.as_raw_fd(), 1, Interest::READABLE).unwrap();
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "readable before any data ({})", p.backend_name());
+
+            client.write_all(b"ping").unwrap();
+            let ev = wait_for(&mut p, 1, true, false);
+            assert!(ev.readable);
+            let mut buf = [0u8; 8];
+            assert_eq!(served.read(&mut buf).unwrap(), 4);
+
+            // Level-triggered + drained: quiet again until the peer
+            // closes, which must surface as readable (EOF).
+            p.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+            assert!(events.is_empty(), "event after drain ({})", p.backend_name());
+            drop(client);
+            let ev = wait_for(&mut p, 1, true, false);
+            assert!(ev.readable, "peer close must read as EOF readiness");
+            p.deregister(served.as_raw_fd()).unwrap();
+        }
+    }
+
+    #[test]
+    fn deregistered_fd_stays_silent() {
+        for mut p in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            listener.set_nonblocking(true).unwrap();
+            p.register(listener.as_raw_fd(), 3, Interest::READABLE).unwrap();
+            p.deregister(listener.as_raw_fd()).unwrap();
+            let _client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(30))).unwrap();
+            assert!(events.is_empty(), "deregistered fd produced events");
+            // double deregister is a clean error, not UB or a panic
+            assert!(p.deregister(listener.as_raw_fd()).is_err());
+        }
+    }
+
+    #[test]
+    fn timeout_returns_promptly_when_idle() {
+        for mut p in backends() {
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            p.register(listener.as_raw_fd(), 1, Interest::READABLE).unwrap();
+            let t0 = Instant::now();
+            let mut events = Vec::new();
+            p.wait(&mut events, Some(Duration::from_millis(25))).unwrap();
+            let waited = t0.elapsed();
+            assert!(events.is_empty());
+            assert!(waited >= Duration::from_millis(15), "returned too early: {waited:?}");
+            assert!(waited < Duration::from_secs(5), "timeout overshot wildly: {waited:?}");
+        }
+    }
+}

@@ -33,6 +33,21 @@
 //! the live depth is observable ([`BatcherStats::queue_depth`],
 //! [`BatcherStats::peak_queue_depth`]) — overload is an error plus a
 //! metric, never silent unbounded growth.
+//!
+//! # Deadlines and non-blocking completion
+//!
+//! Admission under the depth bound is not a promise of freshness: a
+//! waiter can sit behind a slow executor indefinitely. The optional
+//! [`BatchPolicy::max_queue_wait`] deadline sheds over-age requests at
+//! batch-build time with a typed [`BatchError::Shed`] (counted in
+//! [`BatcherStats::expired`]), so compute is never spent on replies the
+//! caller has given up on.
+//!
+//! [`Batcher::submit`] is non-blocking and returns a [`PendingReply`];
+//! [`PendingReply::try_wait`] polls completion without blocking and
+//! reports the typed outcome. That pair is the seam the HTTP front door
+//! ([`super::http`]) builds on: one event-loop thread carries every
+//! in-flight request instead of pinning a blocked thread per request.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
@@ -68,6 +83,16 @@ pub struct BatchPolicy {
     pub max_queue_depth: usize,
     /// Who loses when the queue is full.
     pub overload: OverloadPolicy,
+    /// Optional deadline on queue time: a request that has already
+    /// waited longer than this when a batch is being built is shed
+    /// (typed [`BatchError::Shed`], counted in
+    /// [`BatcherStats::expired`]) instead of executed. Bounds how stale
+    /// a reply can be when a slow executor backs the queue up; `None`
+    /// disables the check. Queue age includes the deliberate
+    /// [`BatchPolicy::max_wait`] batch-fill window, so this must be
+    /// **strictly greater than `max_wait`** — otherwise even an idle
+    /// server would shed every request (validated at spawn/build).
+    pub max_queue_wait: Option<Duration>,
 }
 
 impl Default for BatchPolicy {
@@ -77,19 +102,37 @@ impl Default for BatchPolicy {
             max_wait: Duration::from_millis(5),
             max_queue_depth: 1024,
             overload: OverloadPolicy::RejectNewest,
+            max_queue_wait: None,
         }
     }
 }
 
-/// Why a request failed, as carried over the reply channel. Kept
-/// distinct so overload sheds (the request never ran) don't masquerade
-/// as execution failures to the caller.
-enum BatchError {
+/// Why a request failed, as carried over the reply channel. Public and
+/// typed so non-blocking front ends ([`PendingReply::try_wait`]) can
+/// map outcomes to transport status codes without sniffing message
+/// strings, and so overload sheds (the request never ran) don't
+/// masquerade as execution failures to the caller.
+#[derive(Clone, Debug)]
+pub enum BatchError {
     /// The batch executed and failed (executor error, malformed output).
     Exec(String),
-    /// The request was shed from the queue head by
-    /// [`OverloadPolicy::ShedOldest`] — it never executed.
+    /// The request was shed without executing: the queue head lost under
+    /// [`OverloadPolicy::ShedOldest`], or it aged past
+    /// [`BatchPolicy::max_queue_wait`] before a batch picked it up.
     Shed(String),
+    /// The worker dropped the request without replying (shutdown or
+    /// worker death).
+    Dropped,
+}
+
+impl std::fmt::Display for BatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Exec(msg) => write!(f, "batch execution failed: {msg}"),
+            Self::Shed(msg) => f.write_str(msg),
+            Self::Dropped => f.write_str("batcher worker dropped the request"),
+        }
+    }
 }
 
 /// One queued inference request.
@@ -136,6 +179,9 @@ pub struct BatcherStats {
     pub shed: AtomicU64,
     /// Submissions refused by [`OverloadPolicy::RejectNewest`].
     pub rejected: AtomicU64,
+    /// Requests shed at batch-build time because they aged past
+    /// [`BatchPolicy::max_queue_wait`].
+    pub expired: AtomicU64,
 }
 
 /// Plain-value copy of [`BatcherStats`] at one instant.
@@ -149,6 +195,7 @@ pub struct BatcherSnapshot {
     pub peak_queue_depth: u64,
     pub shed: u64,
     pub rejected: u64,
+    pub expired: u64,
 }
 
 impl BatcherStats {
@@ -162,6 +209,7 @@ impl BatcherStats {
             peak_queue_depth: self.peak_queue_depth.load(Relaxed),
             shed: self.shed.load(Relaxed),
             rejected: self.rejected.load(Relaxed),
+            expired: self.expired.load(Relaxed),
         }
     }
 }
@@ -179,6 +227,7 @@ impl BatcherSnapshot {
         self.peak_queue_depth = self.peak_queue_depth.max(other.peak_queue_depth);
         self.shed += other.shed;
         self.rejected += other.rejected;
+        self.expired += other.expired;
     }
 }
 
@@ -236,9 +285,17 @@ pub struct Batcher {
     _guard: Arc<HandleGuard>,
 }
 
-/// An in-flight request: wait for its reply with [`PendingReply::wait`].
+/// An in-flight request. Block for the outcome with
+/// [`PendingReply::wait`], or poll it without blocking via
+/// [`PendingReply::try_wait`] — the seam that lets one event-loop
+/// thread carry thousands of in-flight requests instead of pinning a
+/// blocked thread per request.
 pub struct PendingReply {
     rx: Receiver<Result<Reply, BatchError>>,
+    /// True once `try_wait` has yielded the terminal outcome; the
+    /// channel then reads Disconnected, which must not be re-reported
+    /// as a worker death.
+    done: bool,
 }
 
 impl PendingReply {
@@ -248,13 +305,30 @@ impl PendingReply {
     pub fn wait(self) -> Result<Reply> {
         match self.rx.recv() {
             Ok(Ok(reply)) => Ok(reply),
-            Ok(Err(BatchError::Exec(msg))) => {
-                Err(anyhow::anyhow!("batch execution failed: {msg}"))
+            Ok(Err(e)) => Err(anyhow::anyhow!("{e}")),
+            Err(_) => Err(anyhow::anyhow!("{}", BatchError::Dropped)),
+        }
+    }
+
+    /// Non-blocking completion poll: `None` while the request is still
+    /// queued or executing, `Some` exactly once when the outcome is
+    /// ready. A `PendingReply` is spent after yielding `Some`; polling
+    /// it again reports [`BatchError::Dropped`] (the reply was already
+    /// taken), so callers should drop it once resolved.
+    pub fn try_wait(&mut self) -> Option<Result<Reply, BatchError>> {
+        if self.done {
+            return Some(Err(BatchError::Dropped));
+        }
+        match self.rx.try_recv() {
+            Ok(outcome) => {
+                self.done = true;
+                Some(outcome)
             }
-            // A shed request never executed — don't report it as an
-            // execution failure.
-            Ok(Err(BatchError::Shed(msg))) => Err(anyhow::anyhow!("{msg}")),
-            Err(_) => Err(anyhow::anyhow!("batcher worker dropped the request")),
+            Err(std::sync::mpsc::TryRecvError::Empty) => None,
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                self.done = true;
+                Some(Err(BatchError::Dropped))
+            }
         }
     }
 }
@@ -271,6 +345,14 @@ impl Batcher {
     ) -> Self {
         assert!(policy.max_batch >= 1, "max_batch must be >= 1");
         assert!(policy.max_queue_depth >= 1, "max_queue_depth must be >= 1");
+        if let Some(limit) = policy.max_queue_wait {
+            assert!(
+                limit > policy.max_wait,
+                "max_queue_wait ({limit:?}) must exceed max_wait ({:?}): queue age includes \
+                 the deliberate batch-fill window, so a smaller deadline sheds all traffic",
+                policy.max_wait
+            );
+        }
         let shared = Arc::new(Shared {
             q: Mutex::new(QueueState { deque: VecDeque::new(), open: true, dead: false }),
             avail: Condvar::new(),
@@ -334,7 +416,7 @@ impl Batcher {
             stats.peak_queue_depth.fetch_max(depth, Relaxed);
         }
         self.shared.avail.notify_one();
-        Ok(PendingReply { rx: reply_rx })
+        Ok(PendingReply { rx: reply_rx, done: false })
     }
 
     /// Submit one image; blocks until the reply arrives. Executor
@@ -416,7 +498,32 @@ fn worker_loop(shared: Arc<Shared>, image_len: usize, classes: usize, mut execut
             }
             drain_into(&mut q, &mut pending, policy.max_batch, &shared.stats);
         }
-        let batch = std::mem::take(&mut pending);
+        let mut batch = std::mem::take(&mut pending);
+        // Deadline shed at batch-build time: requests that aged past
+        // max_queue_wait behind a slow executor are answered with a
+        // typed shed error instead of burning compute on a reply the
+        // caller has likely abandoned.
+        if let Some(limit) = policy.max_queue_wait {
+            let before = batch.len();
+            batch.retain(|r| {
+                let waited = r.enqueued.elapsed();
+                if waited <= limit {
+                    return true;
+                }
+                let _ = r.reply.send(Err(BatchError::Shed(format!(
+                    "request expired after {waited:?} queued (max_queue_wait {limit:?}); \
+                     shed before execution"
+                ))));
+                false
+            });
+            let expired = (before - batch.len()) as u64;
+            if expired > 0 {
+                shared.stats.expired.fetch_add(expired, Relaxed);
+            }
+            if batch.is_empty() {
+                continue;
+            }
+        }
         let bsz = batch.len();
         buf.clear();
         for r in &batch {
@@ -646,6 +753,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             max_queue_depth: 2,
             overload: OverloadPolicy::RejectNewest,
+            ..BatchPolicy::default()
         });
         // Park the worker inside execute() so the queue state is ours.
         let a = b.submit(vec![1.0]).unwrap();
@@ -674,6 +782,7 @@ mod tests {
             max_wait: Duration::from_millis(1),
             max_queue_depth: 2,
             overload: OverloadPolicy::ShedOldest,
+            ..BatchPolicy::default()
         });
         let a = b.submit(vec![1.0]).unwrap();
         entered.recv().unwrap();
@@ -738,6 +847,7 @@ mod tests {
                 max_wait: Duration::from_micros(100),
                 max_queue_depth: depth as usize,
                 overload: OverloadPolicy::RejectNewest,
+                ..BatchPolicy::default()
             },
             1,
             1,
@@ -782,5 +892,114 @@ mod tests {
             "every request must be either executed or rejected: {s:?}"
         );
         assert_eq!(s.shed, 0);
+    }
+
+    /// Poll a pending reply until it resolves, failing after a deadline
+    /// so a wedged worker can't hang the test suite.
+    fn poll_until_ready(p: &mut PendingReply) -> Result<Reply, BatchError> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if let Some(outcome) = p.try_wait() {
+                return outcome;
+            }
+            assert!(Instant::now() < deadline, "try_wait never became ready");
+            std::thread::sleep(Duration::from_micros(50));
+        }
+    }
+
+    #[test]
+    fn try_wait_is_pending_then_ready_exactly_once() {
+        let (b, _stats, gate, entered) = spawn_gated(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            ..BatchPolicy::default()
+        });
+        let mut p = b.submit(vec![7.0]).unwrap();
+        entered.recv().unwrap(); // worker parked inside execute()
+        assert!(p.try_wait().is_none(), "ready before the executor finished");
+        assert!(p.try_wait().is_none(), "pending poll must be repeatable");
+        gate.send(()).unwrap();
+        let reply = poll_until_ready(&mut p).expect("gated echo should succeed");
+        assert_eq!(reply.logits[0], 7.0);
+        // Spent: the outcome was taken once; polling again is a typed
+        // Dropped, not a hang, a panic, or a phantom second reply.
+        assert!(matches!(p.try_wait(), Some(Err(BatchError::Dropped))));
+    }
+
+    #[test]
+    fn try_wait_surfaces_typed_exec_and_shed_errors() {
+        // Execution failure: typed Exec with the real message.
+        let stats = Arc::new(BatcherStats::default());
+        let b = Batcher::spawn(
+            BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                ..BatchPolicy::default()
+            },
+            1,
+            1,
+            Box::new(|_buf, _bsz| Err(anyhow::anyhow!("device fell over"))),
+            stats,
+        );
+        let mut p = b.submit(vec![1.0]).unwrap();
+        match poll_until_ready(&mut p) {
+            Err(BatchError::Exec(msg)) => assert!(msg.contains("device fell over"), "{msg}"),
+            other => panic!("expected typed Exec error, got {other:?}"),
+        }
+
+        // Overload shed: typed Shed on the victim, no execution.
+        let (b, stats, gate, entered) = spawn_gated(BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            max_queue_depth: 1,
+            overload: OverloadPolicy::ShedOldest,
+            ..BatchPolicy::default()
+        });
+        let a = b.submit(vec![1.0]).unwrap();
+        entered.recv().unwrap();
+        let mut victim = b.submit(vec![2.0]).unwrap(); // queued, depth 1 == limit
+        let survivor = b.submit(vec![3.0]).unwrap(); // sheds `victim`
+        match victim.try_wait() {
+            Some(Err(BatchError::Shed(msg))) => assert!(msg.contains("shed"), "{msg}"),
+            other => panic!("expected typed Shed error, got {other:?}"),
+        }
+        gate.send(()).unwrap();
+        gate.send(()).unwrap();
+        assert_eq!(a.wait().unwrap().logits[0], 1.0);
+        assert_eq!(survivor.wait().unwrap().logits[0], 3.0);
+        assert_eq!(stats.snapshot().shed, 1);
+    }
+
+    #[test]
+    fn max_queue_wait_sheds_stale_requests_at_batch_build() {
+        let limit = Duration::from_millis(30);
+        let (b, stats, gate, entered) = spawn_gated(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            max_queue_wait: Some(limit),
+            ..BatchPolicy::default()
+        });
+        // `a` enters execution immediately (fresh — not shed); `stale`
+        // then ages in the queue behind the parked executor.
+        let a = b.submit(vec![1.0]).unwrap();
+        entered.recv().unwrap();
+        let stale = b.submit(vec![2.0]).unwrap();
+        std::thread::sleep(limit + Duration::from_millis(40));
+        gate.send(()).unwrap(); // release `a`
+        assert_eq!(a.wait().unwrap().logits[0], 1.0);
+        // The next batch build finds `stale` over-age and sheds it with
+        // a descriptive typed error instead of executing it.
+        let msg = stale.wait().unwrap_err().to_string();
+        assert!(msg.contains("expired"), "not a deadline shed error: {msg}");
+        assert!(msg.contains("max_queue_wait"), "limit missing from error: {msg}");
+        // Fresh traffic afterwards is unaffected.
+        let fresh = b.submit(vec![3.0]).unwrap();
+        entered.recv().unwrap();
+        gate.send(()).unwrap();
+        assert_eq!(fresh.wait().unwrap().logits[0], 3.0);
+        let s = stats.snapshot();
+        assert_eq!(s.expired, 1, "deadline shed must land in the expired counter: {s:?}");
+        assert_eq!(s.shed, 0, "deadline sheds must not count as overload sheds");
+        assert_eq!(s.requests, 2, "only executed requests count: {s:?}");
     }
 }

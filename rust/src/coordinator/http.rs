@@ -1,0 +1,911 @@
+//! HTTP/1.1 front door on the inference router — the network edge of
+//! the serving stack.
+//!
+//! One event-loop thread (no thread-per-connection, no async runtime —
+//! the offline set has no tokio) accepts non-blocking TCP connections
+//! through the vendored [`minipoll`] readiness loop, parses HTTP/1.1
+//! with keep-alive, decodes JSON bodies with the depth-capped
+//! [`crate::json`] parser, `submit`s into the
+//! [`InferenceRouter`](super::router::InferenceRouter), and completes
+//! responses by polling [`PendingReply::try_wait`] — so thousands of
+//! in-flight requests cost zero parked threads.
+//!
+//! # Routes
+//!
+//! * `POST /v1/infer/{model}` — body `{"image": [f32; image_len]}` for
+//!   one row or `{"images": [[…], …]}` for a micro-batch. Replies with
+//!   the logits row(s), the executed batch size and queue time.
+//! * `GET /v1/metrics` — per-shard and aggregate
+//!   [`RouterMetrics`](super::router::ModelMetrics) for every model,
+//!   plus the router-wide aggregate, as JSON.
+//! * `GET /healthz` — liveness plus the served model names.
+//!
+//! # Error mapping
+//!
+//! Backpressure is a status code, not a dropped connection: overload
+//! from `RejectNewest`/`ShedOldest`/`max_queue_wait` maps to **503**
+//! with the batcher's descriptive message; malformed requests (bad
+//! framing, invalid or too-deep JSON, wrong image length) map to
+//! **400** without killing the connection loop; unknown models are
+//! **404**; execution failures are **500**. A framing error the parser
+//! cannot recover from closes that one connection after the error
+//! response — never the accept loop.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context as _, Result};
+use minipoll::{Event, Interest, Poller};
+
+use crate::json::JsonValue;
+use crate::json_obj;
+
+use super::batcher::{BatchError, BatcherSnapshot, PendingReply, Reply};
+use super::router::InferenceRouter;
+
+/// Front-door limits. Defaults are sized for the native demo models;
+/// raise `max_body_bytes` for large input tensors.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Concurrent connections; accepts past this are answered 503.
+    pub max_connections: usize,
+    /// Cap on the request line + headers.
+    pub max_header_bytes: usize,
+    /// Cap on `Content-Length` (bodies above it are answered 413).
+    pub max_body_bytes: usize,
+    /// Cap on rows per `images` micro-batch.
+    pub max_batch_images: usize,
+    /// Force the portable `poll(2)` backend instead of epoll.
+    pub use_poll_fallback: bool,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            max_connections: 1024,
+            max_header_bytes: 16 * 1024,
+            max_body_bytes: 4 * 1024 * 1024,
+            max_batch_images: 64,
+            use_poll_fallback: false,
+        }
+    }
+}
+
+/// Handle to a running front door. Dropping it (or calling
+/// [`HttpServer::shutdown`]) stops the event loop and closes every
+/// connection; the shared router keeps serving in-process callers.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// spawn the event-loop thread over `router`.
+    pub fn bind<A: ToSocketAddrs + std::fmt::Debug>(
+        addr: A,
+        router: Arc<InferenceRouter>,
+        cfg: HttpConfig,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(&addr).with_context(|| format!("binding http server to {addr:?}"))?;
+        listener.set_nonblocking(true).context("non-blocking listener")?;
+        let local = listener.local_addr().context("listener local_addr")?;
+        let mut poller = if cfg.use_poll_fallback {
+            Poller::with_poll_backend()
+        } else {
+            Poller::new().context("creating readiness poller")?
+        };
+        poller
+            .register(listener.as_raw_fd(), LISTENER_TOKEN, Interest::READABLE)
+            .context("registering listener")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let event_loop = EventLoop {
+            listener,
+            router,
+            cfg,
+            poller,
+            conns: HashMap::new(),
+            next_token: LISTENER_TOKEN + 1,
+        };
+        let join = std::thread::Builder::new()
+            .name("sparq-http".into())
+            .spawn(move || {
+                if let Err(e) = event_loop.run(&flag) {
+                    eprintln!("sparq-http event loop exited: {e}");
+                }
+            })
+            .context("spawning http event loop thread")?;
+        Ok(Self { addr: local, stop, join: Some(join) })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the event loop and wait for it to exit.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.stop.store(true, Relaxed);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+const LISTENER_TOKEN: u64 = 0;
+
+/// One keep-alive connection's state machine. At any instant it is
+/// reading a request, polling an in-flight inference, or draining a
+/// response — the event loop drives all three without blocking.
+struct Conn {
+    stream: TcpStream,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    written: usize,
+    /// Submitted inference whose replies are still being polled.
+    inflight: Option<Inflight>,
+    /// Keep-alive decision of the request currently being answered.
+    keep_alive: bool,
+    /// Close once the write buffer drains (Connection: close, or a
+    /// framing error that poisoned the byte stream).
+    close_after_write: bool,
+    /// Whether the poller registration currently includes writable.
+    want_write: bool,
+    /// The peer half-closed its write side (read EOF). Requests already
+    /// buffered or in flight are still answered — one-shot clients that
+    /// `shutdown(Write)` after sending must get their response — and
+    /// the connection is reaped once nothing is left to answer.
+    peer_closed: bool,
+    /// Fatal IO error or fully drained after `peer_closed`: reap.
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Self {
+            stream,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            written: 0,
+            inflight: None,
+            keep_alive: true,
+            close_after_write: false,
+            want_write: false,
+            peer_closed: false,
+            dead: false,
+        }
+    }
+
+    /// Drain the socket into the read buffer (level-triggered: stop at
+    /// WouldBlock). EOF marks the peer's write side closed; hard IO
+    /// errors mark the connection dead.
+    fn fill_read_buf(&mut self, cap: usize) {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.peer_closed = true;
+                    return;
+                }
+                Ok(n) => {
+                    self.read_buf.extend_from_slice(&chunk[..n]);
+                    if self.read_buf.len() > cap {
+                        // A legitimate request always fits under the
+                        // configured caps; stop pulling more until the
+                        // parser consumes (or 4xx-rejects) this one.
+                        return;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+    }
+
+    fn has_pending_write(&self) -> bool {
+        self.written < self.write_buf.len()
+    }
+
+    /// Push queued response bytes out until WouldBlock or drained.
+    fn flush_write_buf(&mut self) {
+        while self.has_pending_write() {
+            match self.stream.write(&self.write_buf[self.written..]) {
+                Ok(0) => {
+                    self.dead = true;
+                    return;
+                }
+                Ok(n) => self.written += n,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => {
+                    self.dead = true;
+                    return;
+                }
+            }
+        }
+        self.write_buf.clear();
+        self.written = 0;
+        if self.close_after_write {
+            self.dead = true;
+        }
+    }
+
+    fn queue_response(&mut self, status: u16, body: &JsonValue, keep_alive: bool) {
+        debug_assert!(!self.has_pending_write(), "response queued over an undrained one");
+        self.close_after_write = !keep_alive;
+        let payload = body.to_string();
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
+             Connection: {}\r\n\r\n",
+            status,
+            status_text(status),
+            payload.len(),
+            if keep_alive { "keep-alive" } else { "close" },
+        );
+        self.write_buf.extend_from_slice(head.as_bytes());
+        self.write_buf.extend_from_slice(payload.as_bytes());
+    }
+}
+
+/// A submitted inference request: one pending reply per image row.
+struct Inflight {
+    model: String,
+    /// `{"image": …}` requests answer with a flat object; `{"images":
+    /// …}` answer with a `results` array.
+    single: bool,
+    slots: Vec<Slot>,
+}
+
+struct Slot {
+    pending: Option<PendingReply>,
+    outcome: Option<std::result::Result<Reply, BatchError>>,
+}
+
+impl Inflight {
+    /// Poll every unresolved slot once; true when all are resolved.
+    fn poll(&mut self) -> bool {
+        let mut all_done = true;
+        for slot in &mut self.slots {
+            if slot.outcome.is_some() {
+                continue;
+            }
+            let pending = slot.pending.as_mut().expect("unresolved slot keeps its reply");
+            match pending.try_wait() {
+                Some(outcome) => {
+                    slot.outcome = Some(outcome);
+                    slot.pending = None;
+                }
+                None => all_done = false,
+            }
+        }
+        all_done
+    }
+
+    /// Build the terminal response. Any shed reply turns the whole
+    /// request into 503 (the caller should retry); any execution
+    /// failure into 500 — both with the real underlying message.
+    fn response(self) -> (u16, JsonValue) {
+        let mut rows: Vec<JsonValue> = Vec::with_capacity(self.slots.len());
+        for slot in self.slots {
+            match slot.outcome.expect("response built before resolution") {
+                Ok(reply) => rows.push(reply_json(&reply)),
+                Err(e) => {
+                    let status = match &e {
+                        BatchError::Shed(_) => 503,
+                        BatchError::Exec(_) | BatchError::Dropped => 500,
+                    };
+                    return (status, error_body(status, &e.to_string()));
+                }
+            }
+        }
+        if self.single {
+            let JsonValue::Object(mut obj) = rows.remove(0) else {
+                unreachable!("reply_json builds objects");
+            };
+            obj.insert("model".to_string(), JsonValue::from(self.model));
+            (200, JsonValue::Object(obj))
+        } else {
+            (200, json_obj! { "model" => self.model, "results" => rows })
+        }
+    }
+}
+
+fn reply_json(r: &Reply) -> JsonValue {
+    json_obj! {
+        "logits" => r.logits.iter().map(|&v| f64::from(v)).collect::<Vec<f64>>(),
+        "batch_size" => r.batch_size,
+        "queue_us" => r.queue_time.as_micros() as usize,
+    }
+}
+
+fn error_body(status: u16, msg: &str) -> JsonValue {
+    json_obj! { "status" => status as usize, "error" => msg }
+}
+
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Error",
+    }
+}
+
+/// One fully framed request, decoded enough to route.
+struct ParsedRequest {
+    method: String,
+    path: String,
+    keep_alive: bool,
+    body: Vec<u8>,
+}
+
+enum ParseStatus {
+    /// Not enough bytes yet.
+    Incomplete,
+    /// A complete request and how many buffer bytes it consumed.
+    Complete(Box<ParsedRequest>, usize),
+    /// Framing is broken: answer with this status and close (the byte
+    /// stream can no longer be trusted for a next request).
+    Malformed(u16, String),
+}
+
+fn find_subsequence(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Try to frame one HTTP/1.1 request at the front of `buf`.
+fn parse_request(buf: &[u8], cfg: &HttpConfig) -> ParseStatus {
+    let Some(head_end) = find_subsequence(buf, b"\r\n\r\n") else {
+        return if buf.len() > cfg.max_header_bytes {
+            ParseStatus::Malformed(
+                431,
+                format!("header section exceeds {} bytes", cfg.max_header_bytes),
+            )
+        } else {
+            ParseStatus::Incomplete
+        };
+    };
+    if head_end > cfg.max_header_bytes {
+        return ParseStatus::Malformed(
+            431,
+            format!("header section exceeds {} bytes", cfg.max_header_bytes),
+        );
+    }
+    let Ok(head) = std::str::from_utf8(&buf[..head_end]) else {
+        return ParseStatus::Malformed(400, "header section is not UTF-8".to_string());
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (Some(method), Some(path), Some(version), None) =
+        (parts.next(), parts.next(), parts.next(), parts.next())
+    else {
+        return ParseStatus::Malformed(400, format!("malformed request line `{request_line}`"));
+    };
+    if method.is_empty() || path.is_empty() {
+        return ParseStatus::Malformed(400, format!("malformed request line `{request_line}`"));
+    }
+    if !version.starts_with("HTTP/1.") {
+        return ParseStatus::Malformed(505, format!("unsupported protocol version `{version}`"));
+    }
+    let mut keep_alive = version == "HTTP/1.1";
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return ParseStatus::Malformed(400, format!("malformed header line `{line}`"));
+        };
+        let value = value.trim();
+        match name.trim().to_ascii_lowercase().as_str() {
+            "content-length" => match value.parse::<usize>() {
+                Ok(n) => content_length = n,
+                Err(_) => {
+                    return ParseStatus::Malformed(400, format!("bad Content-Length `{value}`"));
+                }
+            },
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.split(',').any(|t| t.trim() == "close") {
+                    keep_alive = false;
+                } else if v.split(',').any(|t| t.trim() == "keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            "transfer-encoding" => {
+                return ParseStatus::Malformed(
+                    501,
+                    "transfer-encoded bodies are not supported; send Content-Length".to_string(),
+                );
+            }
+            _ => {}
+        }
+    }
+    if content_length > cfg.max_body_bytes {
+        return ParseStatus::Malformed(
+            413,
+            format!("body of {content_length} bytes exceeds the {} limit", cfg.max_body_bytes),
+        );
+    }
+    let total = head_end + 4 + content_length;
+    if buf.len() < total {
+        return ParseStatus::Incomplete;
+    }
+    let req = ParsedRequest {
+        method: method.to_string(),
+        path: path.to_string(),
+        keep_alive,
+        body: buf[head_end + 4..total].to_vec(),
+    };
+    ParseStatus::Complete(Box::new(req), total)
+}
+
+/// Routing outcome: either a response that can be written now, or an
+/// inference whose replies the event loop polls to completion.
+enum Routed {
+    Immediate(u16, JsonValue),
+    Infer(Inflight),
+}
+
+fn route(router: &InferenceRouter, cfg: &HttpConfig, req: &ParsedRequest) -> Routed {
+    const INFER_PREFIX: &str = "/v1/infer/";
+    // Route on the path only — clients (and load-balancer probes)
+    // append query strings that must not change resolution.
+    let path = req.path.split_once('?').map_or(req.path.as_str(), |(p, _)| p);
+    if let Some(model) = path.strip_prefix(INFER_PREFIX) {
+        return if req.method == "POST" {
+            route_infer(router, cfg, model, &req.body)
+        } else {
+            Routed::Immediate(405, error_body(405, "inference requires POST"))
+        };
+    }
+    match (req.method.as_str(), path) {
+        ("GET", "/healthz") => Routed::Immediate(200, health_json(router)),
+        ("GET", "/v1/metrics") => Routed::Immediate(200, metrics_json(router)),
+        (_, "/healthz") | (_, "/v1/metrics") => Routed::Immediate(
+            405,
+            error_body(405, &format!("{} only supports GET", req.path)),
+        ),
+        _ => Routed::Immediate(404, error_body(404, &format!("no route for `{}`", req.path))),
+    }
+}
+
+fn route_infer(router: &InferenceRouter, cfg: &HttpConfig, model: &str, body: &[u8]) -> Routed {
+    let (image_len, _classes) = match router.shape(model) {
+        Ok(shape) => shape,
+        Err(e) => return Routed::Immediate(404, error_body(404, &e.to_string())),
+    };
+    let Ok(text) = std::str::from_utf8(body) else {
+        return Routed::Immediate(400, error_body(400, "body is not UTF-8"));
+    };
+    let parsed = match JsonValue::parse(text) {
+        Ok(v) => v,
+        Err(e) => {
+            return Routed::Immediate(400, error_body(400, &format!("invalid JSON body: {e}")));
+        }
+    };
+    let (images, single) = match extract_images(&parsed, image_len, cfg) {
+        Ok(x) => x,
+        Err(msg) => return Routed::Immediate(400, error_body(400, &msg)),
+    };
+    let mut slots = Vec::with_capacity(images.len());
+    for image in images {
+        match router.submit(model, image) {
+            Ok(pending) => slots.push(Slot { pending: Some(pending), outcome: None }),
+            // Name and shape were validated above, so a submit failure
+            // is queue pressure (overload or worker shutdown): 503 with
+            // the batcher's descriptive message. Earlier rows of this
+            // micro-batch may still execute; their replies are dropped.
+            Err(e) => return Routed::Immediate(503, error_body(503, &e.to_string())),
+        }
+    }
+    Routed::Infer(Inflight { model: model.to_string(), single, slots })
+}
+
+/// Pull `image` (single row) or `images` (micro-batch) out of a
+/// request body, validating width and element types.
+#[allow(clippy::type_complexity)]
+fn extract_images(
+    v: &JsonValue,
+    image_len: usize,
+    cfg: &HttpConfig,
+) -> std::result::Result<(Vec<Vec<f32>>, bool), String> {
+    fn image_row(
+        v: &JsonValue,
+        image_len: usize,
+        which: usize,
+    ) -> std::result::Result<Vec<f32>, String> {
+        let arr = v
+            .as_array()
+            .ok_or_else(|| format!("image {which}: expected an array of numbers"))?;
+        if arr.len() != image_len {
+            return Err(format!(
+                "image {which}: expected {image_len} values, got {}",
+                arr.len()
+            ));
+        }
+        arr.iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|f| f as f32)
+                    .ok_or_else(|| format!("image {which}: non-numeric element"))
+            })
+            .collect()
+    }
+    if let Some(img) = v.get("image") {
+        Ok((vec![image_row(img, image_len, 0)?], true))
+    } else if let Some(list) = v.get("images") {
+        let arr = list
+            .as_array()
+            .ok_or_else(|| "images: expected an array of image rows".to_string())?;
+        if arr.is_empty() {
+            return Err("images: micro-batch is empty".to_string());
+        }
+        if arr.len() > cfg.max_batch_images {
+            return Err(format!(
+                "images: micro-batch of {} rows exceeds the limit {}",
+                arr.len(),
+                cfg.max_batch_images
+            ));
+        }
+        let rows = arr
+            .iter()
+            .enumerate()
+            .map(|(i, x)| image_row(x, image_len, i))
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        Ok((rows, false))
+    } else {
+        Err("body must contain `image` (one row) or `images` (micro-batch)".to_string())
+    }
+}
+
+fn health_json(router: &InferenceRouter) -> JsonValue {
+    let models: Vec<String> = router.model_names().iter().map(|s| s.to_string()).collect();
+    json_obj! { "status" => "ok", "models" => models }
+}
+
+fn snapshot_json(s: &BatcherSnapshot) -> JsonValue {
+    json_obj! {
+        "batches" => s.batches as usize,
+        "requests" => s.requests as usize,
+        "full_batches" => s.full_batches as usize,
+        "exec_errors" => s.exec_errors as usize,
+        "queue_depth" => s.queue_depth as usize,
+        "peak_queue_depth" => s.peak_queue_depth as usize,
+        "shed" => s.shed as usize,
+        "rejected" => s.rejected as usize,
+        "expired" => s.expired as usize,
+    }
+}
+
+fn metrics_json(router: &InferenceRouter) -> JsonValue {
+    let mut models = std::collections::BTreeMap::new();
+    for name in router.model_names() {
+        let Ok(m) = router.metrics(name) else { continue };
+        let shards: Vec<JsonValue> = m
+            .shards
+            .iter()
+            .map(|s| {
+                json_obj! {
+                    "shard" => s.shard,
+                    "completed" => s.completed as usize,
+                    "mean_latency_us" => s.mean_latency_us,
+                    "p99_latency_us" => s.p99_latency_us as usize,
+                    "batcher" => snapshot_json(&s.batcher),
+                }
+            })
+            .collect();
+        models.insert(
+            name.to_string(),
+            json_obj! {
+                "replicas" => m.replicas,
+                "param_bytes" => m.param_bytes,
+                "shards" => shards,
+                "total" => snapshot_json(&m.total),
+            },
+        );
+    }
+    let mut top = std::collections::BTreeMap::new();
+    top.insert("models".to_string(), JsonValue::Object(models));
+    top.insert("aggregate".to_string(), snapshot_json(&router.aggregate()));
+    JsonValue::Object(top)
+}
+
+/// The single-threaded reactor: accept, read, parse, submit, poll
+/// replies, write — every step non-blocking.
+struct EventLoop {
+    listener: TcpListener,
+    router: Arc<InferenceRouter>,
+    cfg: HttpConfig,
+    poller: Poller,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+}
+
+impl EventLoop {
+    fn run(mut self, stop: &AtomicBool) -> io::Result<()> {
+        let mut events: Vec<Event> = Vec::new();
+        loop {
+            if stop.load(Relaxed) {
+                return Ok(());
+            }
+            // Short tick while replies are in flight (completion is
+            // polled, not pushed); longer when purely idle so shutdown
+            // and new connections are still noticed promptly.
+            let waiting = self.conns.values().any(|c| c.inflight.is_some());
+            let timeout =
+                if waiting { Duration::from_millis(1) } else { Duration::from_millis(20) };
+            self.poller.wait(&mut events, Some(timeout))?;
+            let read_cap = self.cfg.max_header_bytes + self.cfg.max_body_bytes + 4;
+            for ev in &events {
+                if ev.token == LISTENER_TOKEN {
+                    self.accept_new();
+                } else if let Some(conn) = self.conns.get_mut(&ev.token) {
+                    // A half-closed socket stays readable (EOF) forever
+                    // under level triggering; read it only once.
+                    if ev.readable && !conn.peer_closed {
+                        conn.fill_read_buf(read_cap);
+                    }
+                    if ev.writable {
+                        conn.flush_write_buf();
+                    }
+                }
+            }
+            self.progress_all();
+            self.reap_dead();
+        }
+    }
+
+    fn accept_new(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((mut stream, _peer)) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    if self.conns.len() >= self.cfg.max_connections {
+                        // Best-effort 503 straight into the fresh
+                        // socket buffer, then drop.
+                        let body = error_body(503, "connection limit reached");
+                        let mut throwaway = Conn::new(stream);
+                        throwaway.queue_response(503, &body, false);
+                        throwaway.flush_write_buf();
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .poller
+                        .register(stream.as_raw_fd(), token, Interest::READABLE)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    self.conns.insert(token, Conn::new(stream));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Advance every connection's state machine: resolve in-flight
+    /// replies, flush writes, parse the next request when idle.
+    fn progress_all(&mut self) {
+        for (&token, conn) in self.conns.iter_mut() {
+            if conn.dead {
+                continue;
+            }
+            if let Some(inflight) = conn.inflight.as_mut() {
+                if inflight.poll() {
+                    let inflight = conn.inflight.take().expect("checked above");
+                    let (status, body) = inflight.response();
+                    let keep = conn.keep_alive;
+                    conn.queue_response(status, &body, keep);
+                }
+            }
+            if conn.has_pending_write() {
+                conn.flush_write_buf();
+            }
+            // Parse as many buffered requests as can be answered now
+            // (pipelining degrades gracefully: one in-flight inference
+            // per connection at a time).
+            while !conn.dead
+                && conn.inflight.is_none()
+                && !conn.has_pending_write()
+                && !conn.read_buf.is_empty()
+            {
+                match parse_request(&conn.read_buf, &self.cfg) {
+                    ParseStatus::Incomplete => break,
+                    ParseStatus::Malformed(status, msg) => {
+                        conn.read_buf.clear();
+                        conn.queue_response(status, &error_body(status, &msg), false);
+                        conn.flush_write_buf();
+                        break;
+                    }
+                    ParseStatus::Complete(req, consumed) => {
+                        conn.read_buf.drain(..consumed);
+                        conn.keep_alive = req.keep_alive;
+                        match route(&self.router, &self.cfg, &req) {
+                            Routed::Immediate(status, body) => {
+                                conn.queue_response(status, &body, req.keep_alive);
+                                conn.flush_write_buf();
+                            }
+                            Routed::Infer(inflight) => {
+                                conn.inflight = Some(inflight);
+                            }
+                        }
+                    }
+                }
+            }
+            // A half-closed peer gets every already-submitted answer;
+            // once nothing is in flight or buffered for write, no new
+            // request can ever arrive (any leftover bytes are a forever
+            // incomplete frame) — reap.
+            if conn.peer_closed && conn.inflight.is_none() && !conn.has_pending_write() {
+                conn.dead = true;
+            }
+            // Ask for writable readiness only while a response is
+            // actually stuck in the buffer.
+            let want_write = conn.has_pending_write();
+            if want_write != conn.want_write && !conn.dead {
+                let interest = if want_write { Interest::BOTH } else { Interest::READABLE };
+                if self
+                    .poller
+                    .modify(conn.stream.as_raw_fd(), token, interest)
+                    .is_err()
+                {
+                    conn.dead = true;
+                } else {
+                    conn.want_write = want_write;
+                }
+            }
+        }
+    }
+
+    fn reap_dead(&mut self) {
+        let dead: Vec<u64> = self.conns.iter().filter(|(_, c)| c.dead).map(|(&t, _)| t).collect();
+        for token in dead {
+            if let Some(conn) = self.conns.remove(&token) {
+                let _ = self.poller.deregister(conn.stream.as_raw_fd());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> HttpConfig {
+        HttpConfig::default()
+    }
+
+    fn parse_ok(raw: &str) -> (ParsedRequest, usize) {
+        match parse_request(raw.as_bytes(), &cfg()) {
+            ParseStatus::Complete(req, n) => (*req, n),
+            other => panic!(
+                "expected complete parse, got {}",
+                match other {
+                    ParseStatus::Incomplete => "Incomplete".to_string(),
+                    ParseStatus::Malformed(s, m) => format!("Malformed({s}, {m})"),
+                    ParseStatus::Complete(..) => unreachable!(),
+                }
+            ),
+        }
+    }
+
+    #[test]
+    fn parses_request_with_body_and_keepalive_rules() {
+        let raw = "POST /v1/infer/m HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd";
+        let (req, consumed) = parse_ok(raw);
+        assert_eq!(consumed, raw.len());
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer/m");
+        assert_eq!(req.body, b"abcd");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+
+        let (req, _) = parse_ok("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n");
+        assert!(!req.keep_alive);
+        let (req, _) = parse_ok("GET /healthz HTTP/1.0\r\n\r\n");
+        assert!(!req.keep_alive, "HTTP/1.0 defaults to close");
+        let (req, _) = parse_ok("GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n");
+        assert!(req.keep_alive);
+    }
+
+    #[test]
+    fn incomplete_frames_wait_for_more_bytes() {
+        for partial in [
+            "POST /v1/infer/m HT",
+            "POST /v1/infer/m HTTP/1.1\r\nContent-Length: 10\r\n\r\n",
+            "POST /v1/infer/m HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc",
+        ] {
+            assert!(
+                matches!(parse_request(partial.as_bytes(), &cfg()), ParseStatus::Incomplete),
+                "should be incomplete: {partial:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn malformed_frames_are_typed_errors() {
+        let cases: Vec<(&str, u16)> = vec![
+            ("GARBAGE\r\n\r\n", 400),
+            ("GET /x\r\n\r\n", 400),
+            ("GET /x SPDY/3\r\n\r\n", 505),
+            ("GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n", 400),
+            ("GET /x HTTP/1.1\r\nContent-Length: banana\r\n\r\n", 400),
+            ("POST /x HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n", 501),
+        ];
+        for (raw, want) in cases {
+            match parse_request(raw.as_bytes(), &cfg()) {
+                ParseStatus::Malformed(status, _) => {
+                    assert_eq!(status, want, "wrong status for {raw:?}");
+                }
+                _ => panic!("expected malformed: {raw:?}"),
+            }
+        }
+        // Oversized declared body is 413 before any body byte arrives.
+        let raw = format!(
+            "POST /x HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            cfg().max_body_bytes + 1
+        );
+        assert!(matches!(
+            parse_request(raw.as_bytes(), &cfg()),
+            ParseStatus::Malformed(413, _)
+        ));
+        // Unbounded header section is cut off at the cap.
+        let raw = format!("GET /x HTTP/1.1\r\nX-Pad: {}", "a".repeat(cfg().max_header_bytes));
+        assert!(matches!(
+            parse_request(raw.as_bytes(), &cfg()),
+            ParseStatus::Malformed(431, _)
+        ));
+    }
+
+    #[test]
+    fn response_encoding_has_exact_content_length() {
+        // Build a throwaway Conn around a loopback socket to exercise
+        // queue_response framing.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut conn = Conn::new(stream);
+        let body = json_obj! { "k" => "v" };
+        conn.queue_response(200, &body, true);
+        let raw = String::from_utf8(conn.write_buf.clone()).unwrap();
+        let payload = body.to_string();
+        assert!(raw.starts_with("HTTP/1.1 200 OK\r\n"), "{raw}");
+        assert!(raw.contains(&format!("Content-Length: {}\r\n", payload.len())), "{raw}");
+        assert!(raw.contains("Connection: keep-alive\r\n"), "{raw}");
+        assert!(raw.ends_with(&payload), "{raw}");
+    }
+}

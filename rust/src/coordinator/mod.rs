@@ -15,11 +15,12 @@
 //!   batches up to the artifact's lowered batch size or a deadline,
 //!   executes, and scatters results (vLLM-style, scaled down).
 //! * [`server`]    — single-model inference service facade + metrics.
-//! * [`router`]    — sharded multi-engine front door over the batcher.
+//! * [`router`]    — sharded multi-engine dispatch over the batcher.
+//! * [`http`]      — HTTP/1.1 network front door over the router.
 //!
 //! # Serving architecture
 //!
-//! The serving stack is three layers, smallest to largest:
+//! The serving stack is four layers, smallest to largest:
 //!
 //! 1. **Batcher** ([`batcher`]) — one worker thread per shard forming
 //!    true-size batches from a **bounded** queue.
@@ -29,8 +30,13 @@
 //!    (`ShedOldest`) — in both cases the losing caller gets a
 //!    descriptive error and the event lands in [`batcher::BatcherStats`]
 //!    (`rejected` / `shed`, plus the live `queue_depth` gauge and its
-//!    high-water mark). Burst traffic costs an error, never unbounded
-//!    memory.
+//!    high-water mark). [`BatchPolicy::max_queue_wait`] optionally
+//!    sheds requests that aged past a deadline at batch-build time
+//!    (typed [`batcher::BatchError::Shed`], counted in `expired`).
+//!    Burst traffic costs an error, never unbounded memory.
+//!    [`Batcher::submit`] returns a [`PendingReply`] whose non-blocking
+//!    [`try_wait`](PendingReply::try_wait) is the completion seam the
+//!    HTTP event loop polls.
 //! 2. **Server** ([`server`]) — one batcher + one executor (a PJRT
 //!    executable or a native [`Engine`](crate::model::Engine)), with
 //!    e2e/queue latency histograms and the live batcher stats exposed
@@ -40,21 +46,35 @@
 //!    shared `Arc<`[`ModelParams`](crate::model::ModelParams)`>`:
 //!    graph, weights and prepared weight tables are built once and
 //!    Arc-shared, so replica count is a throughput knob, not a memory
-//!    multiplier. Requests round-robin across shards (atomic cursor);
-//!    each shard has its own queue, worker and scratch, so a poisoned
-//!    replica fails only its own callers. Per-shard and merged
-//!    aggregate metrics come from [`router::InferenceRouter::metrics`].
+//!    multiplier. Dispatch is load-aware: the shard with the
+//!    shallowest live `queue_depth` gauge wins (rotating tie-break, so
+//!    idle traffic is exact round-robin and a backed-up shard stops
+//!    receiving new work); each shard has its own queue, worker and
+//!    scratch, so a poisoned replica fails only its own callers.
+//!    Per-shard and merged aggregate metrics come from
+//!    [`router::InferenceRouter::metrics`].
+//! 4. **HTTP front door** ([`http`]) — one event-loop thread (epoll /
+//!    `poll(2)` via the vendored `minipoll` crate; no tokio in the
+//!    offline set) accepts non-blocking keep-alive connections, parses
+//!    HTTP/1.1 + depth-capped JSON, `submit`s into the router, and
+//!    polls [`PendingReply::try_wait`] to complete responses — no
+//!    thread is ever parked per request. Overload maps to 503 with the
+//!    batcher's message, malformed input to 400, execution failures to
+//!    500; `GET /v1/metrics` serves the router metrics as JSON.
 
 pub mod batcher;
 pub mod calibrate;
 pub mod eval;
+pub mod http;
 pub mod router;
 pub mod server;
 
 pub use batcher::{
-    BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, OverloadPolicy, PendingReply, Reply,
+    BatchError, BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, OverloadPolicy, PendingReply,
+    Reply,
 };
 pub use calibrate::{calibrate, scales_for_policy};
 pub use eval::{evaluate_native, evaluate_pjrt, evaluate_with_engine, EvalReport};
+pub use http::{HttpConfig, HttpServer};
 pub use router::{InferenceRouter, ModelMetrics, RouterBuilder, ShardMetrics};
 pub use server::{InferenceServer, LatencyHist, ServerMetrics};

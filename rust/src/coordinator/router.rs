@@ -13,7 +13,7 @@
 //! ```text
 //!   infer("resnet10", img)                 infer("resnet18", img)
 //!          │                                        │
-//!          ▼ round-robin cursor                     ▼
+//!          ▼ shallowest queue wins                  ▼
 //!   ┌─────────────────────────────┐        ┌────────────────────┐
 //!   │ shard 0   shard 1   shard 2 │        │ shard 0    shard 1 │
 //!   │ batcher   batcher   batcher │        │ batcher    batcher │
@@ -22,9 +22,14 @@
 //!   └─────────────────────────────┘        └────────────────────┘
 //! ```
 //!
-//! * **Sharding** — requests round-robin across a model's shards via an
-//!   atomic cursor ([`InferenceRouter::infer`]); [`InferenceRouter::infer_on`]
-//!   pins a shard (tests, session affinity).
+//! * **Sharding** — dispatch is load-aware: [`InferenceRouter::infer`]
+//!   (and its non-blocking twin [`InferenceRouter::submit`]) sends each
+//!   request to the shard with the shallowest live `queue_depth` gauge,
+//!   breaking ties with a rotating cursor — all-idle traffic therefore
+//!   degenerates to exact round-robin, and a shard backed up behind a
+//!   slow executor stops receiving new work.
+//!   [`InferenceRouter::infer_on`] pins a shard (tests, session
+//!   affinity).
 //! * **Isolation** — each shard has its own queue, worker and executor:
 //!   a failing replica errors its *own* callers with the real message
 //!   while sibling shards keep serving.
@@ -45,7 +50,9 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::{Engine, ModelParams, Scratch};
 
-use super::batcher::{BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, ExecuteFn, Reply};
+use super::batcher::{
+    BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, ExecuteFn, PendingReply, Reply,
+};
 use super::server::LatencyHist;
 
 /// One replica: a batcher worker plus its metrics.
@@ -61,11 +68,40 @@ struct ModelShards {
     image_len: usize,
     classes: usize,
     shards: Vec<Shard>,
-    /// Round-robin cursor; wraps on overflow (harmless modulo shards).
+    /// Tie-break cursor for load-aware dispatch; wraps on overflow
+    /// (harmless modulo shards).
     cursor: AtomicUsize,
     /// Bytes of the parameter store shared by every shard (0 for
     /// executor-backed entries where the router can't see parameters).
     param_bytes: usize,
+}
+
+impl ModelShards {
+    /// Load-aware shard pick: the live `queue_depth` gauge decides —
+    /// the shallowest queue wins, so a shard backed up behind a slow
+    /// executor stops receiving new work while its siblings stay busy.
+    /// The scan starts at a rotating cursor so depth ties break fairly;
+    /// when every queue is empty (the common sequential case) that
+    /// degenerates to exact round-robin, keeping dispatch deterministic
+    /// for idle routers.
+    fn pick(&self) -> usize {
+        let n = self.shards.len();
+        let start = self.cursor.fetch_add(1, Relaxed) % n;
+        let mut best = start;
+        let mut best_depth = u64::MAX;
+        for off in 0..n {
+            let idx = (start + off) % n;
+            let depth = self.shards[idx].stats.queue_depth.load(Relaxed);
+            if depth < best_depth {
+                best_depth = depth;
+                best = idx;
+                if depth == 0 {
+                    break; // nothing beats an empty queue
+                }
+            }
+        }
+        best
+    }
 }
 
 /// Per-shard metrics view.
@@ -194,6 +230,18 @@ impl RouterBuilder {
             if entry.policy.max_queue_depth == 0 {
                 bail!("model `{}`: policy.max_queue_depth must be >= 1", entry.name);
             }
+            if let Some(limit) = entry.policy.max_queue_wait {
+                if limit <= entry.policy.max_wait {
+                    bail!(
+                        "model `{}`: policy.max_queue_wait ({:?}) must exceed max_wait ({:?}) \
+                         — queue age includes the batch-fill window, so a smaller deadline \
+                         would shed every request",
+                        entry.name,
+                        limit,
+                        entry.policy.max_wait
+                    );
+                }
+            }
             let (image_len, classes, param_bytes, executors): (
                 usize,
                 usize,
@@ -286,13 +334,25 @@ impl InferenceRouter {
         })
     }
 
-    /// Dispatch by model name, round-robin across that model's shards.
-    /// Blocks until the reply; executor failures and overload errors
-    /// carry the shard's real message.
+    /// Dispatch by model name, load-aware across that model's shards
+    /// (shallowest live queue wins; ties rotate round-robin). Blocks
+    /// until the reply; executor failures and overload errors carry the
+    /// shard's real message.
     pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Reply> {
         let ms = self.shards_of(model)?;
-        let idx = ms.cursor.fetch_add(1, Relaxed) % ms.shards.len();
-        Self::shard_infer(&ms.shards[idx], image)
+        Self::shard_infer(&ms.shards[ms.pick()], image)
+    }
+
+    /// Non-blocking dispatch for event-driven front ends (the HTTP
+    /// layer): the same load-aware shard pick as
+    /// [`InferenceRouter::infer`], but the caller gets a
+    /// [`PendingReply`] to poll via
+    /// [`try_wait`](PendingReply::try_wait) instead of parking a
+    /// thread. The per-shard latency histograms only track the blocking
+    /// path; submit traffic still lands in every batcher counter.
+    pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<PendingReply> {
+        let ms = self.shards_of(model)?;
+        ms.shards[ms.pick()].batcher.submit(image)
     }
 
     /// Dispatch to one specific shard of a model (session affinity,
@@ -472,8 +532,10 @@ mod tests {
             .model("m", tiny_params(0), 3, quick_policy(1))
             .build()
             .unwrap();
-        // 9 sequential requests over 3 shards: the cursor must deal
-        // exactly 3 to each shard, in order 0,1,2,0,1,2,...
+        // 9 sequential requests over 3 idle shards: every queue gauge
+        // reads 0 at dispatch time, so load-aware picking degenerates
+        // to its rotating tie-break — exactly 3 per shard, in order
+        // 0,1,2,0,1,2,... (deterministic dispatch for idle routers).
         for i in 0..9 {
             router.infer("m", img(i)).unwrap();
         }
@@ -595,6 +657,7 @@ mod tests {
                         max_wait: Duration::from_micros(50),
                         max_queue_depth: 2,
                         overload: OverloadPolicy::RejectNewest,
+                        ..BatchPolicy::default()
                     },
                 )
                 .build()
@@ -617,6 +680,87 @@ mod tests {
         assert_eq!(m.total.rejected, overloads);
         assert_eq!(m.total.requests + m.total.rejected, 12);
         assert!(m.total.peak_queue_depth <= 2, "queue exceeded bound: {:?}", m.total);
+    }
+
+    #[test]
+    fn load_aware_dispatch_starves_the_backed_up_shard() {
+        use std::sync::mpsc::channel;
+        // shard 0 parks inside execute() until gated; shard 1 replies
+        // instantly. ROADMAP "load-aware dispatch": the deep queue must
+        // stop receiving new work.
+        let (gate_tx, gate_rx) = channel::<()>();
+        let (entered_tx, entered_rx) = channel::<()>();
+        let gated: Box<ExecuteFn> = Box::new(move |buf: &[f32], bsz: usize| {
+            entered_tx.send(()).ok();
+            gate_rx.recv().ok();
+            Ok(buf[..bsz].to_vec())
+        });
+        let fast: Box<ExecuteFn> = Box::new(|buf: &[f32], bsz: usize| Ok(buf[..bsz].to_vec()));
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_from_executors("m", 1, 1, vec![gated, fast], quick_policy(1))
+                .build()
+                .unwrap(),
+        );
+        // Occupy shard 0: one in-flight request parks its worker, one
+        // queued request raises its live queue_depth gauge to 1.
+        let r0 = router.clone();
+        let inflight = std::thread::spawn(move || r0.infer_on("m", 0, vec![100.0]).unwrap());
+        entered_rx.recv().unwrap();
+        let r0 = router.clone();
+        let queued = std::thread::spawn(move || r0.infer_on("m", 0, vec![101.0]).unwrap());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while router.metrics("m").unwrap().shards[0].batcher.queue_depth == 0 {
+            assert!(Instant::now() < deadline, "queued request never raised the depth gauge");
+            std::thread::yield_now();
+        }
+        // Every new request must now route to shard 1 (gauge 0) rather
+        // than blind round-robin alternating onto the stuck shard.
+        for i in 0..8 {
+            assert_eq!(router.infer("m", vec![i as f32]).unwrap().logits, vec![i as f32]);
+        }
+        let m = router.metrics("m").unwrap();
+        assert_eq!(m.shards[1].batcher.requests, 8, "fast shard missed traffic");
+        assert_eq!(m.shards[0].batcher.requests, 0, "backed-up shard must be starved");
+        // Release the gate: the pinned requests still complete on shard
+        // 0 — load-awareness never touches pinned dispatch.
+        gate_tx.send(()).unwrap();
+        gate_tx.send(()).unwrap();
+        assert_eq!(inflight.join().unwrap().logits, vec![100.0]);
+        assert_eq!(queued.join().unwrap().logits, vec![101.0]);
+        assert_eq!(router.metrics("m").unwrap().shards[0].batcher.requests, 2);
+    }
+
+    #[test]
+    fn submit_returns_pollable_replies_with_live_results() {
+        let params = tiny_params(0);
+        let router = InferenceRouter::builder()
+            .model("m", params.clone(), 2, quick_policy(2))
+            .build()
+            .unwrap();
+        let engine = Engine::from_params(params);
+        // Non-blocking path: submit a burst, then poll every reply to
+        // completion — results must be bit-identical to direct forward.
+        let mut pending: Vec<_> =
+            (0..6).map(|i| (i, router.submit("m", img(i)).unwrap())).collect();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !pending.is_empty() {
+            assert!(Instant::now() < deadline, "submitted replies never resolved");
+            pending.retain_mut(|(i, p)| match p.try_wait() {
+                None => true,
+                Some(outcome) => {
+                    let reply = outcome.expect("healthy router must not fail");
+                    assert_eq!(
+                        reply.logits,
+                        engine.forward(&img(*i), 1).unwrap(),
+                        "submit path diverged from direct forward for image {i}"
+                    );
+                    false
+                }
+            });
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        assert_eq!(router.aggregate().requests, 6);
     }
 
     #[test]
@@ -649,5 +793,18 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("max_queue_depth"), "{err}");
+        // A queue deadline inside the batch-fill window would shed every
+        // request on an idle server — a build error, not a footgun.
+        let bad_deadline = BatchPolicy {
+            max_wait: Duration::from_millis(5),
+            max_queue_wait: Some(Duration::from_millis(3)),
+            ..BatchPolicy::default()
+        };
+        let err = InferenceRouter::builder()
+            .model("m", tiny_params(0), 1, bad_deadline)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("max_queue_wait"), "{err}");
     }
 }

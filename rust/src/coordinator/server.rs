@@ -336,6 +336,7 @@ mod tests {
                     max_wait: Duration::from_micros(50),
                     max_queue_depth: 1,
                     overload: OverloadPolicy::RejectNewest,
+                    ..BatchPolicy::default()
                 },
             )
             .unwrap();

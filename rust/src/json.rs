@@ -5,6 +5,11 @@
 //!
 //! Supports the full JSON grammar (RFC 8259) minus `\u` surrogate pairs
 //! beyond the BMP (not produced by our python exporters).
+//!
+//! The HTTP front door ([`crate::coordinator::http`]) feeds this parser
+//! **untrusted network bodies**, so recursion is bounded: containers
+//! nested deeper than [`MAX_DEPTH`] are a parse error, not a stack
+//! overflow that would take the serving thread down.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -21,9 +26,15 @@ pub enum JsonValue {
     Object(BTreeMap<String, JsonValue>),
 }
 
+/// Maximum container nesting the recursive-descent parser accepts.
+/// Deep enough for any format this repo exchanges (manifests, model
+/// meta, inference requests are < 10 levels), shallow enough that a
+/// hostile `[[[[…` body errors long before the thread stack is at risk.
+pub const MAX_DEPTH: usize = 128;
+
 impl JsonValue {
     pub fn parse(text: &str) -> Result<Self> {
-        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -189,9 +200,21 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
+    /// Account one level of container nesting; errors past [`MAX_DEPTH`]
+    /// so untrusted input cannot recurse the stack away. Paired with a
+    /// `depth -= 1` at each container's successful exit.
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH} levels at byte {}", self.pos);
+        }
+        Ok(())
+    }
     fn skip_ws(&mut self) {
         while self.pos < self.bytes.len()
             && matches!(self.bytes[self.pos], b' ' | b'\t' | b'\n' | b'\r')
@@ -299,10 +322,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<JsonValue> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(JsonValue::Array(items));
         }
         loop {
@@ -313,6 +338,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(JsonValue::Array(items));
                 }
                 other => bail!("expected , or ] got {other:?} at byte {}", self.pos),
@@ -322,10 +348,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<JsonValue> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(JsonValue::Object(map));
         }
         loop {
@@ -341,6 +369,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(JsonValue::Object(map));
                 }
                 other => bail!("expected , or }} got {other:?} at byte {}", self.pos),
@@ -389,5 +418,36 @@ mod tests {
     fn empty_containers() {
         assert_eq!(JsonValue::parse("[]").unwrap(), JsonValue::Array(vec![]));
         assert_eq!(JsonValue::parse("{}").unwrap(), JsonValue::Object(BTreeMap::new()));
+    }
+
+    #[test]
+    fn deep_nesting_is_a_parse_error_not_a_stack_overflow() {
+        // An attacker-sized body: 100k unclosed opens used to recurse
+        // once per byte and blow the serving thread's stack. It must be
+        // a descriptive error now.
+        for open in ["[", "{\"k\":"] {
+            let hostile = open.repeat(100_000);
+            let err = JsonValue::parse(&hostile).unwrap_err().to_string();
+            assert!(err.contains("deeper than"), "wrong error for {open:?}: {err}");
+        }
+        // Balanced-but-too-deep input errors the same way.
+        let too_deep = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(JsonValue::parse(&too_deep).is_err());
+        // The cap leaves honest nesting untouched: MAX_DEPTH exactly.
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        let v = JsonValue::parse(&ok).unwrap();
+        // siblings at the same level do not accumulate depth
+        let wide = "[[1,2],[3,4],[5,6]]".to_string();
+        assert!(JsonValue::parse(&wide).is_ok());
+        let mut probe = &v;
+        let mut levels = 0;
+        while let JsonValue::Array(items) = probe {
+            levels += 1;
+            match items.first() {
+                Some(inner) => probe = inner,
+                None => break,
+            }
+        }
+        assert_eq!(levels, MAX_DEPTH);
     }
 }

@@ -558,6 +558,7 @@ fn prop_bounded_batcher_accounts_every_request_and_respects_depth() {
             } else {
                 OverloadPolicy::ShedOldest
             },
+            ..BatchPolicy::default()
         };
         let stats = Arc::new(BatcherStats::default());
         let b = Batcher::spawn(
