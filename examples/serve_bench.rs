@@ -15,12 +15,15 @@
 //! share one `Arc<ModelParams>` parameter copy, printing per-shard and
 //! aggregate metrics — queue depth, shed/rejected counts included.
 //!
-//! `--http` serves the same native demo router through the HTTP/1.1
-//! front door on an ephemeral loopback port and benchmarks it with
-//! keep-alive `std::net::TcpStream` clients; `--http-smoke` drives one
-//! request end-to-end, asserts a 200 with logits bit-identical to
-//! `Engine::forward`, and exits non-zero on any mismatch (the CI smoke
-//! job).
+//! `--http` serves the native demo router — three policy variants
+//! (`5opt_r` default, `a8w8`, `first8`) sharing one weights allocation
+//! — through the HTTP/1.1 front door on an ephemeral loopback port and
+//! benchmarks it with keep-alive `std::net::TcpStream` clients;
+//! `--http-smoke` drives the same stack end-to-end: a default-variant
+//! request bit-identical to `Engine::forward`, `GET /v1/models` policy
+//! introspection, and a non-default-variant request whose logits must
+//! differ from the uniform-A8W8 variant's. Exits non-zero on any
+//! mismatch (the CI smoke job).
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -37,7 +40,7 @@ use sparq::json::JsonValue;
 use sparq::json_obj;
 use sparq::model::demo::synth_model;
 use sparq::model::{Engine, EngineMode, Graph, ModelParams};
-use sparq::quant::SparqConfig;
+use sparq::quant::{QuantPolicy, SparqConfig};
 use sparq::runtime::{Manifest, PjrtRuntime};
 
 fn main() -> Result<()> {
@@ -320,32 +323,41 @@ impl MiniClient {
 }
 
 /// Demo router + front door on an ephemeral loopback port; returns the
-/// server (keep it alive!), router, reference engine and input width.
+/// server (keep it alive!), router, reference engine (for the default
+/// `5opt_r` variant) and input width.
+///
+/// Three policy variants share ONE graph+weights allocation:
+/// `"5opt_r"` (default, the paper's headline config), `"a8w8"`
+/// (uniform 8-bit reference) and `"first8"` (first quantized conv at 8
+/// bits, rest uniform 4-bit) — the multi-operating-point serving shape
+/// the policy API exists for.
 fn demo_http_stack(replicas: usize) -> Result<(HttpServer, Arc<InferenceRouter>, Engine, usize)> {
     let (graph, weights, scales) = synth_model();
-    let cfg = SparqConfig::named("5opt_r").unwrap();
-    let params = Arc::new(ModelParams::new(
-        Arc::new(graph),
-        Arc::new(weights),
-        cfg,
-        &scales,
-        EngineMode::Dense,
-    )?);
-    let engine = Engine::from_params(params.clone());
-    let [h, w, c] = params.graph.input_hwc;
+    let (graph, weights) = (Arc::new(graph), Arc::new(weights));
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        ..BatchPolicy::default()
+    };
+    let mk = |p: QuantPolicy| -> Result<Arc<ModelParams>> {
+        Ok(Arc::new(ModelParams::with_policy(
+            graph.clone(),
+            weights.clone(),
+            p,
+            &scales,
+            EngineMode::Dense,
+        )?))
+    };
+    let sparq = mk(QuantPolicy::uniform(SparqConfig::named("5opt_r").unwrap()))?;
+    let a8w8 = mk(QuantPolicy::named("a8w8").expect("registry preset"))?;
+    let first8 = mk(QuantPolicy::named("first8").expect("policy preset"))?;
+    let engine = Engine::from_params(sparq.clone());
+    let [h, w, c] = graph.input_hwc;
     let router = Arc::new(
         InferenceRouter::builder()
-            .model_with_threads(
-                "synth",
-                params,
-                replicas,
-                BatchPolicy {
-                    max_batch: 8,
-                    max_wait: Duration::from_micros(500),
-                    ..BatchPolicy::default()
-                },
-                1,
-            )
+            .model_variant_with_threads("synth", "5opt_r", sparq, replicas, policy, 1)
+            .model_variant_with_threads("synth", "a8w8", a8w8, 1, policy, 1)
+            .model_variant_with_threads("synth", "first8", first8, 1, policy, 1)
             .build()?,
     );
     let server = HttpServer::bind("127.0.0.1:0", router.clone(), HttpConfig::default())?;
@@ -363,12 +375,23 @@ fn http_image(image_len: usize) -> Vec<f32> {
         .collect()
 }
 
-fn infer_request(body: &str) -> Vec<u8> {
+/// `target` is `synth` or `synth@{variant}`.
+fn infer_request(target: &str, body: &str) -> Vec<u8> {
     format!(
-        "POST /v1/infer/synth HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
+        "POST /v1/infer/{target} HTTP/1.1\r\nHost: bench\r\nContent-Length: {}\r\n\r\n{body}",
         body.len()
     )
     .into_bytes()
+}
+
+fn logits_from(resp: &str) -> Result<Vec<f32>> {
+    Ok(JsonValue::parse(resp)?
+        .get("logits")
+        .and_then(|l| l.as_array().map(|a| a.to_vec()))
+        .context("no logits in response")?
+        .iter()
+        .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
+        .collect())
 }
 
 /// `--http`: benchmark the front door with keep-alive TCP clients.
@@ -383,7 +406,7 @@ fn http_bench(clients: usize, per_client: usize) -> Result<()> {
         "image" => image.iter().map(|&v| f64::from(v)).collect::<Vec<f64>>()
     }
     .to_string();
-    let raw = Arc::new(infer_request(&body));
+    let raw = Arc::new(infer_request("synth", &body));
     println!(
         "http front door on {addr}: {replicas} replica shard(s), \
          {clients} keep-alive clients x {per_client} requests"
@@ -418,13 +441,7 @@ fn http_bench(clients: usize, per_client: usize) -> Result<()> {
     );
     // Spot-check the served answer and print the served metrics.
     let (_, resp) = MiniClient::connect(addr)?.request(&raw)?;
-    let logits: Vec<f32> = JsonValue::parse(&resp)?
-        .get("logits")
-        .and_then(|l| l.as_array().map(|a| a.to_vec()))
-        .context("no logits in response")?
-        .iter()
-        .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
-        .collect();
+    let logits = logits_from(&resp)?;
     anyhow::ensure!(logits == want, "HTTP logits diverge from direct Engine::forward");
     let m = router.metrics("synth")?;
     println!(
@@ -439,7 +456,11 @@ fn http_bench(clients: usize, per_client: usize) -> Result<()> {
     Ok(())
 }
 
-/// `--http-smoke`: one request end-to-end; non-zero exit on mismatch.
+/// `--http-smoke`: end-to-end front-door check CI runs on every push —
+/// one default-variant request bit-identical to `Engine::forward`,
+/// `GET /v1/models` introspection naming every variant, and an infer
+/// against a non-default variant whose logits differ from the uniform
+/// A8W8 variant's. Non-zero exit on any mismatch.
 fn http_smoke() -> Result<()> {
     let (server, _router, engine, image_len) = demo_http_stack(2)?;
     let addr = server.addr();
@@ -449,26 +470,62 @@ fn http_smoke() -> Result<()> {
     }
     .to_string();
     let mut client = MiniClient::connect(addr)?;
-    let (status, resp) = client.request(&infer_request(&body))?;
+    let (status, resp) = client.request(&infer_request("synth", &body))?;
     anyhow::ensure!(status == 200, "smoke request failed: {status} {resp}");
-    let parsed = JsonValue::parse(&resp).context("response body is not well-formed JSON")?;
-    let logits: Vec<f32> = parsed
-        .get("logits")
-        .and_then(|l| l.as_array().map(|a| a.to_vec()))
-        .context("no logits array in response")?
-        .iter()
-        .map(|x| x.as_f64().unwrap_or(f64::NAN) as f32)
-        .collect();
+    let logits = logits_from(&resp).context("default-variant response")?;
     let want = engine.forward(&image, 1)?;
     anyhow::ensure!(
         logits == want,
         "HTTP logits diverge from direct Engine::forward: {logits:?} vs {want:?}"
     );
+    // Policy introspection: /v1/models must name every variant and
+    // report a parseable policy for each.
+    let (status, models) =
+        client.request(b"GET /v1/models HTTP/1.1\r\nHost: smoke\r\n\r\n")?;
+    anyhow::ensure!(status == 200, "/v1/models failed: {status} {models}");
+    let parsed = JsonValue::parse(&models).context("/v1/models body is not JSON")?;
+    let synth = parsed
+        .get("models")
+        .and_then(|m| m.get("synth"))
+        .context("/v1/models lists no `synth` model")?;
+    anyhow::ensure!(
+        synth.get("default_variant").and_then(|v| v.as_str()) == Some("5opt_r"),
+        "wrong default variant in {models}"
+    );
+    for v in ["5opt_r", "a8w8", "first8"] {
+        let var = synth
+            .get("variants")
+            .and_then(|vs| vs.get(v))
+            .with_context(|| format!("/v1/models missing variant `{v}`"))?;
+        anyhow::ensure!(
+            var.get("policy").is_some() && var.get("layers").is_some(),
+            "variant `{v}` lacks policy introspection: {models}"
+        );
+    }
+    // Variant serving: the non-default `first8` variant must answer and
+    // differ numerically from the uniform A8W8 variant.
+    let (status, resp_a8) = client.request(&infer_request("synth@a8w8", &body))?;
+    anyhow::ensure!(status == 200, "a8w8 variant failed: {status} {resp_a8}");
+    let (status, resp_f8) = client.request(&infer_request("synth@first8", &body))?;
+    anyhow::ensure!(status == 200, "first8 variant failed: {status} {resp_f8}");
+    let (l_a8, l_f8) = (logits_from(&resp_a8)?, logits_from(&resp_f8)?);
+    // Finite-ness first: logits_from maps non-numeric elements to NaN,
+    // and NaN != NaN would make the distinctness check pass vacuously.
+    anyhow::ensure!(
+        l_a8.iter().all(|v| v.is_finite()) && l_f8.iter().all(|v| v.is_finite()),
+        "variant responses contain non-finite logits: {resp_a8} / {resp_f8}"
+    );
+    anyhow::ensure!(
+        l_a8 != l_f8,
+        "first8 variant served logits identical to uniform A8W8 — variants are not \
+         actually per-layer distinct"
+    );
     // Same keep-alive connection: healthz must answer too.
     let (status, health) = client.request(b"GET /healthz HTTP/1.1\r\nHost: smoke\r\n\r\n")?;
     anyhow::ensure!(status == 200 && health.contains("ok"), "healthz failed: {status} {health}");
     println!(
-        "HTTP smoke OK: 200 with {} logits bit-identical to Engine::forward; healthz {health}",
+        "HTTP smoke OK: 200 with {} logits bit-identical to Engine::forward; \
+         /v1/models lists 3 variants; first8 != a8w8 logits; healthz {health}",
         logits.len()
     );
     Ok(())

@@ -8,13 +8,17 @@
 //!    kernel vs the cache-blocked kernel, serial and row-parallel;
 //! 3. end-to-end native forward on a synthetic 4-conv model — engine at
 //!    1 thread vs all cores, with reused scratch (the serving shape);
-//! 4. sharded serving router over the same model: 1 vs N single-thread
+//! 4. per-layer quantization policies end-to-end — uniform A8W8 vs
+//!    uniform 4-bit vs first/last-at-8-bit, img/s + footprint
+//!    bits/activation (the cost of per-layer LUT selection in the hot
+//!    loop);
+//! 5. sharded serving router over the same model: 1 vs N single-thread
 //!    replica shards sharing one Arc'd parameter copy, under concurrent
 //!    client load (img/s);
-//! 5. the HTTP front door over that router: keep-alive TcpStream
+//! 6. the HTTP front door over that router: keep-alive TcpStream
 //!    clients through the single event-loop thread vs the in-process
 //!    router path (req/s — the network edge's overhead);
-//! 6. PJRT end-to-end batch latency (skipped when artifacts/xla absent).
+//! 7. PJRT end-to-end batch latency (skipped when artifacts/xla absent).
 //!
 //! Run with `cargo bench --bench hotpath`; set `SPARQ_THREADS` to pin
 //! the parallel sections.
@@ -119,7 +123,36 @@ fn main() {
         r_e2e_1.median_us / r_e2e_n.median_us
     );
 
-    // 4. sharded serving router: the same model behind 1 vs N replica
+    // 4. per-layer policies end-to-end: same engine/scratch shape as
+    // section 3, but the policy decides each layer's LUT/weight table.
+    // Shows the throughput cost of per-layer LUT selection (it should
+    // be ~zero — selection is one hash lookup per conv, not per MAC)
+    // next to the footprint each policy pays per activation.
+    {
+        use sparq::quant::QuantPolicy;
+        let policies = [
+            ("uniform a8w8", QuantPolicy::named("a8w8").unwrap()),
+            ("uniform a4w8", QuantPolicy::named("a4w8").unwrap()),
+            ("edge8 first/last@8", QuantPolicy::named("edge8").unwrap()),
+        ];
+        for (label, policy) in policies {
+            let mut e =
+                Engine::with_policy(&graph, &wts, policy, &scales, EngineMode::Dense).unwrap();
+            e.set_threads(nt);
+            let bits = e.params().footprint_bits(1);
+            let luts = e.params().distinct_configs();
+            let mut sc = Scratch::default();
+            let r = bench(&format!("policy fwd batch-32 {label}"), 15, || {
+                std::hint::black_box(e.forward_scratch(&img, batch, &mut sc).unwrap());
+            });
+            println!(
+                "    -> {:.1} img/s, {bits:.2} bits/act, {luts} LUT(s)",
+                batch as f64 / (r.median_us * 1e-6)
+            );
+        }
+    }
+
+    // 5. sharded serving router: the same model behind 1 vs N replica
     // shards. Every shard is a single-threaded engine over one shared
     // Arc<ModelParams> (replicas ARE the parallelism), so the scaling
     // here is the router's, not the GEMM's.
@@ -187,7 +220,7 @@ fn main() {
         }
     }
 
-    // 5. HTTP front door: the same sharded router behind the single
+    // 6. HTTP front door: the same sharded router behind the single
     // event-loop thread, driven by keep-alive TcpStream clients —
     // quantifies what the network edge costs over in-process dispatch.
     {
@@ -285,7 +318,7 @@ fn main() {
         );
     }
 
-    // 6. PJRT end-to-end batch (compile once, then per-batch latency)
+    // 7. PJRT end-to-end batch (compile once, then per-batch latency)
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     match Manifest::load(&dir) {
         Ok(manifest) => pjrt_section(&manifest, cfg),

@@ -14,8 +14,16 @@
 //!
 //! * `POST /v1/infer/{model}` — body `{"image": [f32; image_len]}` for
 //!   one row or `{"images": [[…], …]}` for a micro-batch. Replies with
-//!   the logits row(s), the executed batch size and queue time.
-//! * `GET /v1/metrics` — per-shard and aggregate
+//!   the logits row(s), the executed batch size, queue time, and the
+//!   variant that served the request. A **policy variant** is selected
+//!   with a path suffix (`POST /v1/infer/{model}@{variant}`) or a
+//!   `"variant"` field in the JSON body; without either the model's
+//!   default variant serves.
+//! * `GET /v1/models` — the introspection surface: every model with
+//!   its input shape, shared `param_bytes`, and per-variant resolved
+//!   policy (full JSON encoding + display string + per-layer configs +
+//!   policy-weighted footprint bits per activation).
+//! * `GET /v1/metrics` — per-variant, per-shard and aggregate
 //!   [`RouterMetrics`](super::router::ModelMetrics) for every model,
 //!   plus the router-wide aggregate, as JSON.
 //! * `GET /healthz` — liveness plus the served model names.
@@ -26,8 +34,10 @@
 //! from `RejectNewest`/`ShedOldest`/`max_queue_wait` maps to **503**
 //! with the batcher's descriptive message; malformed requests (bad
 //! framing, invalid or too-deep JSON, wrong image length) map to
-//! **400** without killing the connection loop; unknown models are
-//! **404**; execution failures are **500**. A framing error the parser
+//! **400** without killing the connection loop; unknown models *and
+//! unknown variants* are **404**; execution failures are **500**; a
+//! known route hit with the wrong method is **405 with an `Allow`
+//! header** (not a 404 fall-through). A framing error the parser
 //! cannot recover from closes that one connection after the error
 //! response — never the accept loop.
 
@@ -254,15 +264,29 @@ impl Conn {
     }
 
     fn queue_response(&mut self, status: u16, body: &JsonValue, keep_alive: bool) {
+        self.queue_response_with(status, body, keep_alive, None);
+    }
+
+    /// `allow`: the `Allow` header value for 405 responses (RFC 9110
+    /// requires it on Method Not Allowed).
+    fn queue_response_with(
+        &mut self,
+        status: u16,
+        body: &JsonValue,
+        keep_alive: bool,
+        allow: Option<&str>,
+    ) {
         debug_assert!(!self.has_pending_write(), "response queued over an undrained one");
         self.close_after_write = !keep_alive;
         let payload = body.to_string();
+        let allow_line = allow.map_or_else(String::new, |a| format!("Allow: {a}\r\n"));
         let head = format!(
             "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\
-             Connection: {}\r\n\r\n",
+             {}Connection: {}\r\n\r\n",
             status,
             status_text(status),
             payload.len(),
+            allow_line,
             if keep_alive { "keep-alive" } else { "close" },
         );
         self.write_buf.extend_from_slice(head.as_bytes());
@@ -273,6 +297,9 @@ impl Conn {
 /// A submitted inference request: one pending reply per image row.
 struct Inflight {
     model: String,
+    /// The policy variant that served the request (the model's default
+    /// when none was selected) — echoed in the response.
+    variant: String,
     /// `{"image": …}` requests answer with a flat object; `{"images":
     /// …}` answer with a `results` array.
     single: bool,
@@ -326,9 +353,17 @@ impl Inflight {
                 unreachable!("reply_json builds objects");
             };
             obj.insert("model".to_string(), JsonValue::from(self.model));
+            obj.insert("variant".to_string(), JsonValue::from(self.variant));
             (200, JsonValue::Object(obj))
         } else {
-            (200, json_obj! { "model" => self.model, "results" => rows })
+            (
+                200,
+                json_obj! {
+                    "model" => self.model,
+                    "variant" => self.variant,
+                    "results" => rows,
+                },
+            )
         }
     }
 }
@@ -468,11 +503,17 @@ fn parse_request(buf: &[u8], cfg: &HttpConfig) -> ParseStatus {
     ParseStatus::Complete(Box::new(req), total)
 }
 
-/// Routing outcome: either a response that can be written now, or an
+/// Routing outcome: either a response that can be written now (with an
+/// optional `Allow` header value — 405s carry one per RFC 9110), or an
 /// inference whose replies the event loop polls to completion.
 enum Routed {
-    Immediate(u16, JsonValue),
+    Immediate(u16, JsonValue, Option<&'static str>),
     Infer(Inflight),
+}
+
+/// Immediate response with no extra headers.
+fn imm(status: u16, body: JsonValue) -> Routed {
+    Routed::Immediate(status, body, None)
 }
 
 fn route(router: &InferenceRouter, cfg: &HttpConfig, req: &ParsedRequest) -> Routed {
@@ -480,54 +521,99 @@ fn route(router: &InferenceRouter, cfg: &HttpConfig, req: &ParsedRequest) -> Rou
     // Route on the path only — clients (and load-balancer probes)
     // append query strings that must not change resolution.
     let path = req.path.split_once('?').map_or(req.path.as_str(), |(p, _)| p);
-    if let Some(model) = path.strip_prefix(INFER_PREFIX) {
+    if let Some(target) = path.strip_prefix(INFER_PREFIX) {
         return if req.method == "POST" {
-            route_infer(router, cfg, model, &req.body)
+            route_infer(router, cfg, target, &req.body)
         } else {
-            Routed::Immediate(405, error_body(405, "inference requires POST"))
+            // Known route, wrong method: 405 + Allow, not a 404.
+            Routed::Immediate(405, error_body(405, "inference requires POST"), Some("POST"))
         };
     }
     match (req.method.as_str(), path) {
-        ("GET", "/healthz") => Routed::Immediate(200, health_json(router)),
-        ("GET", "/v1/metrics") => Routed::Immediate(200, metrics_json(router)),
-        (_, "/healthz") | (_, "/v1/metrics") => Routed::Immediate(
+        ("GET", "/healthz") => imm(200, health_json(router)),
+        ("GET", "/v1/metrics") => imm(200, metrics_json(router)),
+        ("GET", "/v1/models") => imm(200, models_json(router)),
+        (_, "/healthz") | (_, "/v1/metrics") | (_, "/v1/models") => Routed::Immediate(
             405,
-            error_body(405, &format!("{} only supports GET", req.path)),
+            error_body(405, &format!("{path} only supports GET")),
+            Some("GET"),
         ),
-        _ => Routed::Immediate(404, error_body(404, &format!("no route for `{}`", req.path))),
+        _ => imm(404, error_body(404, &format!("no route for `{}`", req.path))),
     }
 }
 
-fn route_infer(router: &InferenceRouter, cfg: &HttpConfig, model: &str, body: &[u8]) -> Routed {
+/// `target` is `{model}` or `{model}@{variant}`; the body may also name
+/// a `"variant"`. Path and body selections must agree if both present.
+fn route_infer(router: &InferenceRouter, cfg: &HttpConfig, target: &str, body: &[u8]) -> Routed {
+    let (model, path_variant) = match target.split_once('@') {
+        Some((m, v)) => (m, Some(v)),
+        None => (target, None),
+    };
     let (image_len, _classes) = match router.shape(model) {
         Ok(shape) => shape,
-        Err(e) => return Routed::Immediate(404, error_body(404, &e.to_string())),
+        Err(e) => return imm(404, error_body(404, &e.to_string())),
     };
     let Ok(text) = std::str::from_utf8(body) else {
-        return Routed::Immediate(400, error_body(400, "body is not UTF-8"));
+        return imm(400, error_body(400, "body is not UTF-8"));
     };
     let parsed = match JsonValue::parse(text) {
         Ok(v) => v,
         Err(e) => {
-            return Routed::Immediate(400, error_body(400, &format!("invalid JSON body: {e}")));
+            return imm(400, error_body(400, &format!("invalid JSON body: {e}")));
         }
+    };
+    let body_variant = match parsed.get("variant") {
+        None => None,
+        Some(v) => match v.as_str() {
+            Some(s) => Some(s),
+            None => return imm(400, error_body(400, "`variant` must be a string")),
+        },
+    };
+    let variant = match (path_variant, body_variant) {
+        (Some(p), Some(b)) if p != b => {
+            return imm(
+                400,
+                error_body(400, &format!("path selects variant `{p}` but body says `{b}`")),
+            );
+        }
+        (p, b) => p.or(b),
+    };
+    // Unknown variants are 404 — checked before submit so the error is
+    // typed as routing, not queue pressure. The common no-variant path
+    // stays allocation-free apart from the served-name copy.
+    let served = match variant {
+        Some(v) => {
+            let known = router.variant_names(model).unwrap_or_default();
+            if !known.contains(&v) {
+                return imm(
+                    404,
+                    error_body(
+                        404,
+                        &format!("model `{model}` has no variant `{v}` (available: {known:?})"),
+                    ),
+                );
+            }
+            v.to_string()
+        }
+        None => router.default_variant(model).unwrap_or("default").to_string(),
     };
     let (images, single) = match extract_images(&parsed, image_len, cfg) {
         Ok(x) => x,
-        Err(msg) => return Routed::Immediate(400, error_body(400, &msg)),
+        Err(msg) => return imm(400, error_body(400, &msg)),
     };
     let mut slots = Vec::with_capacity(images.len());
     for image in images {
-        match router.submit(model, image) {
+        match router.submit_variant(model, &served, image) {
             Ok(pending) => slots.push(Slot { pending: Some(pending), outcome: None }),
-            // Name and shape were validated above, so a submit failure
-            // is queue pressure (overload or worker shutdown): 503 with
-            // the batcher's descriptive message. Earlier rows of this
-            // micro-batch may still execute; their replies are dropped.
-            Err(e) => return Routed::Immediate(503, error_body(503, &e.to_string())),
+            // Name, variant and shape were validated above, so a submit
+            // failure is queue pressure (overload or worker shutdown):
+            // 503 with the batcher's descriptive message. Earlier rows
+            // of this micro-batch may still execute; their replies are
+            // dropped.
+            Err(e) => return imm(503, error_body(503, &e.to_string())),
         }
     }
-    Routed::Infer(Inflight { model: model.to_string(), single, slots })
+    Routed::Infer(Inflight { model: model.to_string(), variant: served, single, slots })
 }
 
 /// Pull `image` (single row) or `images` (micro-batch) out of a
@@ -606,20 +692,32 @@ fn snapshot_json(s: &BatcherSnapshot) -> JsonValue {
     }
 }
 
+fn shard_json(s: &super::router::ShardMetrics) -> JsonValue {
+    json_obj! {
+        "shard" => s.shard,
+        "completed" => s.completed as usize,
+        "mean_latency_us" => s.mean_latency_us,
+        "p99_latency_us" => s.p99_latency_us as usize,
+        "batcher" => snapshot_json(&s.batcher),
+    }
+}
+
 fn metrics_json(router: &InferenceRouter) -> JsonValue {
     let mut models = std::collections::BTreeMap::new();
     for name in router.model_names() {
         let Ok(m) = router.metrics(name) else { continue };
-        let shards: Vec<JsonValue> = m
-            .shards
+        let shards: Vec<JsonValue> = m.shards.iter().map(shard_json).collect();
+        let variants: Vec<JsonValue> = m
+            .variants
             .iter()
-            .map(|s| {
+            .map(|v| {
                 json_obj! {
-                    "shard" => s.shard,
-                    "completed" => s.completed as usize,
-                    "mean_latency_us" => s.mean_latency_us,
-                    "p99_latency_us" => s.p99_latency_us as usize,
-                    "batcher" => snapshot_json(&s.batcher),
+                    "variant" => v.variant.clone(),
+                    "replicas" => v.replicas,
+                    "policy" => v.policy.clone(),
+                    "footprint_bits_per_act" => v.footprint_bits,
+                    "shards" => v.shards.iter().map(shard_json).collect::<Vec<JsonValue>>(),
+                    "total" => snapshot_json(&v.total),
                 }
             })
             .collect();
@@ -628,6 +726,7 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
             json_obj! {
                 "replicas" => m.replicas,
                 "param_bytes" => m.param_bytes,
+                "variants" => variants,
                 "shards" => shards,
                 "total" => snapshot_json(&m.total),
             },
@@ -637,6 +736,67 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
     top.insert("models".to_string(), JsonValue::Object(models));
     top.insert("aggregate".to_string(), snapshot_json(&router.aggregate()));
     JsonValue::Object(top)
+}
+
+/// `GET /v1/models` — the policy introspection surface: every model
+/// with shape, shared parameter footprint, default variant, and each
+/// variant's resolved per-layer policy (wire-format JSON + display
+/// string + per-layer config list + footprint bits per activation).
+/// Built from the router's cheap accessors only — no stats snapshots,
+/// no latency-histogram locks, so polling this discovery endpoint
+/// never contends with the serving hot path.
+fn models_json(router: &InferenceRouter) -> JsonValue {
+    let mut models = std::collections::BTreeMap::new();
+    for name in router.model_names() {
+        let Ok((image_len, classes)) = router.shape(name) else { continue };
+        let Ok(variant_replicas) = router.variant_replicas(name) else { continue };
+        let mut total_replicas = 0usize;
+        let mut variants = std::collections::BTreeMap::new();
+        for (vname, replicas) in variant_replicas {
+            total_replicas += replicas;
+            let base = match router.variant_params(name, vname) {
+                Ok(Some(params)) => {
+                    let layers: Vec<JsonValue> = params
+                        .layer_cfgs()
+                        .iter()
+                        .map(|(lname, cfg)| {
+                            json_obj! {
+                                "layer" => lname.clone(),
+                                "config" => cfg.to_string(),
+                            }
+                        })
+                        .collect();
+                    json_obj! {
+                        "replicas" => replicas,
+                        "policy" => params.policy().to_json(),
+                        "policy_display" => params.policy().to_string(),
+                        "layers" => layers,
+                        "distinct_configs" => params.distinct_configs(),
+                        "footprint_bits_per_act" => params.footprint_bits(1),
+                    }
+                }
+                // Executor-backed variants (PJRT shards, test doubles)
+                // have no introspectable policy.
+                _ => json_obj! { "replicas" => replicas, "policy" => JsonValue::Null },
+            };
+            variants.insert(vname.to_string(), base);
+        }
+        models.insert(
+            name.to_string(),
+            json_obj! {
+                "image_len" => image_len,
+                "classes" => classes,
+                "param_bytes" => router.param_bytes(name).unwrap_or(0),
+                "replicas" => total_replicas,
+                "default_variant" => router
+                    .default_variant(name)
+                    .unwrap_or("default")
+                    .to_string(),
+                "variants" => JsonValue::Object(variants),
+            },
+        );
+    }
+    json_obj! { "models" => JsonValue::Object(models) }
 }
 
 /// The single-threaded reactor: accept, read, parse, submit, poll
@@ -757,8 +917,8 @@ impl EventLoop {
                         conn.read_buf.drain(..consumed);
                         conn.keep_alive = req.keep_alive;
                         match route(&self.router, &self.cfg, &req) {
-                            Routed::Immediate(status, body) => {
-                                conn.queue_response(status, &body, req.keep_alive);
+                            Routed::Immediate(status, body, allow) => {
+                                conn.queue_response_with(status, &body, req.keep_alive, allow);
                                 conn.flush_write_buf();
                             }
                             Routed::Infer(inflight) => {
@@ -890,6 +1050,23 @@ mod tests {
             parse_request(raw.as_bytes(), &cfg()),
             ParseStatus::Malformed(431, _)
         ));
+    }
+
+    #[test]
+    fn allow_header_is_emitted_on_405_responses() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let stream = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut conn = Conn::new(stream);
+        conn.queue_response_with(405, &error_body(405, "nope"), true, Some("GET"));
+        let raw = String::from_utf8(conn.write_buf.clone()).unwrap();
+        assert!(raw.starts_with("HTTP/1.1 405 Method Not Allowed\r\n"), "{raw}");
+        assert!(raw.contains("Allow: GET\r\n"), "{raw}");
+        // non-405 responses carry no Allow header
+        let stream2 = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let mut conn2 = Conn::new(stream2);
+        conn2.queue_response(200, &error_body(200, "ok"), true);
+        let raw2 = String::from_utf8(conn2.write_buf.clone()).unwrap();
+        assert!(!raw2.contains("Allow:"), "{raw2}");
     }
 
     #[test]

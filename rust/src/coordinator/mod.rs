@@ -41,26 +41,40 @@
 //!    executable or a native [`Engine`](crate::model::Engine)), with
 //!    e2e/queue latency histograms and the live batcher stats exposed
 //!    through [`ServerMetrics`].
-//! 3. **Router** ([`router`]) — N named models x M replica shards per
-//!    model in one process. All replicas of a model execute over one
-//!    shared `Arc<`[`ModelParams`](crate::model::ModelParams)`>`:
-//!    graph, weights and prepared weight tables are built once and
-//!    Arc-shared, so replica count is a throughput knob, not a memory
-//!    multiplier. Dispatch is load-aware: the shard with the
-//!    shallowest live `queue_depth` gauge wins (rotating tie-break, so
-//!    idle traffic is exact round-robin and a backed-up shard stops
-//!    receiving new work); each shard has its own queue, worker and
-//!    scratch, so a poisoned replica fails only its own callers.
-//!    Per-shard and merged aggregate metrics come from
+//! 3. **Router** ([`router`]) — N named models x V policy variants x M
+//!    replica shards per variant in one process. Every *variant* is a
+//!    quantization operating point: its own
+//!    `Arc<`[`ModelParams`](crate::model::ModelParams)`>` prepared
+//!    under a per-layer [`QuantPolicy`](crate::quant::QuantPolicy)
+//!    (own TrimLuts + requantized weight tables), over the **same**
+//!    `Arc<Graph>`/`Arc<Weights>` as its siblings (enforced at build) —
+//!    one shared weight copy serves many operating points at once.
+//!    Replicas of a variant additionally share that variant's prepared
+//!    tables, so neither replica nor variant count is a memory
+//!    multiplier. Dispatch is load-aware within a variant: the shard
+//!    with the shallowest live `queue_depth` gauge wins (rotating
+//!    tie-break, so idle traffic is exact round-robin and a backed-up
+//!    shard stops receiving new work); each shard has its own queue,
+//!    worker and scratch, so a poisoned replica fails only its own
+//!    callers. [`InferenceRouter::infer`] hits the default (first
+//!    registered) variant; [`InferenceRouter::infer_variant`] /
+//!    [`submit_variant`](InferenceRouter::submit_variant) address one
+//!    by name. Per-variant, per-shard and merged metrics come from
 //!    [`router::InferenceRouter::metrics`].
 //! 4. **HTTP front door** ([`http`]) — one event-loop thread (epoll /
 //!    `poll(2)` via the vendored `minipoll` crate; no tokio in the
 //!    offline set) accepts non-blocking keep-alive connections, parses
 //!    HTTP/1.1 + depth-capped JSON, `submit`s into the router, and
 //!    polls [`PendingReply::try_wait`] to complete responses — no
-//!    thread is ever parked per request. Overload maps to 503 with the
-//!    batcher's message, malformed input to 400, execution failures to
-//!    500; `GET /v1/metrics` serves the router metrics as JSON.
+//!    thread is ever parked per request. Variants are selected with a
+//!    `POST /v1/infer/{model}@{variant}` path suffix or a `"variant"`
+//!    body field (unknown variant → 404); `GET /v1/models` reports
+//!    every variant's resolved per-layer policy, footprint bits and
+//!    shared `param_bytes`; `GET /v1/metrics` serves the router
+//!    metrics as JSON. Overload maps to 503 with the batcher's
+//!    message, malformed input to 400, execution failures to 500, and
+//!    a known route hit with the wrong method to 405 with an `Allow`
+//!    header.
 
 pub mod batcher;
 pub mod calibrate;
@@ -74,7 +88,11 @@ pub use batcher::{
     Reply,
 };
 pub use calibrate::{calibrate, scales_for_policy};
-pub use eval::{evaluate_native, evaluate_pjrt, evaluate_with_engine, EvalReport};
+pub use eval::{
+    evaluate_native, evaluate_pjrt, evaluate_policy_native, evaluate_with_engine, EvalReport,
+};
 pub use http::{HttpConfig, HttpServer};
-pub use router::{InferenceRouter, ModelMetrics, RouterBuilder, ShardMetrics};
+pub use router::{
+    InferenceRouter, ModelMetrics, RouterBuilder, ShardMetrics, VariantMetrics, DEFAULT_VARIANT,
+};
 pub use server::{InferenceServer, LatencyHist, ServerMetrics};

@@ -1,27 +1,39 @@
 //! Sharded multi-engine serving router.
 //!
 //! One process, N engines: an [`InferenceRouter`] hosts any number of
-//! **named models**, each served by one or more **replica shards**. A
-//! shard is a dynamic [`Batcher`](super::batcher::Batcher) with its own
-//! worker thread and its own engine scratch; all shards of a model
+//! **named models**, each served through one or more **policy
+//! variants**, each variant by one or more **replica shards**. A shard
+//! is a dynamic [`Batcher`](super::batcher::Batcher) with its own
+//! worker thread and its own engine scratch; all shards of a variant
 //! execute through cheap [`Engine`] handles over one shared
-//! `Arc<ModelParams>` — the graph, weights and prepared weight tables
-//! exist **once** per model no matter how many replicas serve it.
-//! Replica count is a runtime throughput knob, not a memory multiplier
-//! (the whole point of SPARQ's memory economy).
+//! `Arc<ModelParams>`, and every variant of a model shares the *same*
+//! `Arc<Graph>` + `Arc<Weights>` (enforced at build) — the weight
+//! bytes exist **once** per model no matter how many replicas or
+//! quantization operating points serve it. Replica count is a runtime
+//! throughput knob, and variant count a quantization knob; neither is a
+//! memory multiplier (the whole point of SPARQ's memory economy).
 //!
 //! ```text
-//!   infer("resnet10", img)                 infer("resnet18", img)
+//!   infer("resnet18", img)        infer_variant("resnet18", "first8", img)
 //!          │                                        │
-//!          ▼ shallowest queue wins                  ▼
-//!   ┌─────────────────────────────┐        ┌────────────────────┐
-//!   │ shard 0   shard 1   shard 2 │        │ shard 0    shard 1 │
-//!   │ batcher   batcher   batcher │        │ batcher    batcher │
-//!   │ engine────engine────engine  │        │ engine─────engine  │
-//!   │     └──── Arc<ModelParams> ─┘        │    └─ Arc<ModelParams>
-//!   └─────────────────────────────┘        └────────────────────┘
+//!          ▼ default variant                        ▼ named variant
+//!   ┌───────────────────────────────────────────────────────────┐
+//!   │ variant "a4w8"                 variant "first8"           │
+//!   │ shard 0   shard 1              shard 0   shard 1          │
+//!   │ engine────engine               engine────engine           │
+//!   │    └─ Arc<ModelParams> A          └─ Arc<ModelParams> B   │
+//!   │           └────────── Arc<Graph> + Arc<Weights> ──┘       │
+//!   └───────────────────────────────────────────────────────────┘
 //! ```
 //!
+//! * **Variants** — [`RouterBuilder::model_variant`] registers one
+//!   quantization operating point of a model (its own prepared
+//!   per-layer policy tables — see
+//!   [`ModelParams::with_policy`](crate::model::ModelParams::with_policy));
+//!   the first registered variant is the default that plain
+//!   [`InferenceRouter::infer`] dispatches to. Build-time validation
+//!   rejects variants whose `ModelParams` do not share the model's
+//!   graph/weights allocations.
 //! * **Sharding** — dispatch is load-aware: [`InferenceRouter::infer`]
 //!   (and its non-blocking twin [`InferenceRouter::submit`]) sends each
 //!   request to the shard with the shallowest live `queue_depth` gauge,
@@ -63,20 +75,21 @@ struct Shard {
     e2e: Mutex<LatencyHist>,
 }
 
-/// All shards serving one named model.
-struct ModelShards {
-    image_len: usize,
-    classes: usize,
+/// One quantization variant of a model: its own prepared parameter
+/// block (per-layer policy tables) behind replica shards, sharing the
+/// graph/weights allocations with its sibling variants.
+struct VariantShards {
+    name: String,
     shards: Vec<Shard>,
     /// Tie-break cursor for load-aware dispatch; wraps on overflow
     /// (harmless modulo shards).
     cursor: AtomicUsize,
-    /// Bytes of the parameter store shared by every shard (0 for
-    /// executor-backed entries where the router can't see parameters).
-    param_bytes: usize,
+    /// Introspection handle (None for executor-backed entries where the
+    /// router can't see parameters).
+    params: Option<Arc<ModelParams>>,
 }
 
-impl ModelShards {
+impl VariantShards {
     /// Load-aware shard pick: the live `queue_depth` gauge decides —
     /// the shallowest queue wins, so a shard backed up behind a slow
     /// executor stops receiving new work while its siblings stay busy.
@@ -104,6 +117,28 @@ impl ModelShards {
     }
 }
 
+/// All variants serving one named model.
+struct ModelShards {
+    image_len: usize,
+    classes: usize,
+    /// Bytes of the weight store shared by every variant and shard (0
+    /// for executor-backed entries where the router can't see
+    /// parameters). Counted ONCE — the allocations are shared.
+    param_bytes: usize,
+    /// Registration order; index 0 is the default variant.
+    variants: Vec<VariantShards>,
+}
+
+impl ModelShards {
+    fn variant(&self, name: &str) -> Option<&VariantShards> {
+        self.variants.iter().find(|v| v.name == name)
+    }
+
+    fn default_variant(&self) -> &VariantShards {
+        &self.variants[0]
+    }
+}
+
 /// Per-shard metrics view.
 #[derive(Clone, Debug, Default)]
 pub struct ShardMetrics {
@@ -115,13 +150,33 @@ pub struct ShardMetrics {
     pub batcher: BatcherSnapshot,
 }
 
-/// Per-model metrics: every shard plus the merged aggregate.
+/// Per-variant metrics: one quantization operating point of a model.
+#[derive(Clone, Debug, Default)]
+pub struct VariantMetrics {
+    pub variant: String,
+    pub replicas: usize,
+    /// Resolved policy display (`"A4W8+R[first=A8W8]"`); empty for
+    /// executor-backed variants the router cannot introspect.
+    pub policy: String,
+    /// Policy-weighted storage bits per quantized activation (0 when
+    /// not introspectable).
+    pub footprint_bits: f64,
+    pub shards: Vec<ShardMetrics>,
+    pub total: BatcherSnapshot,
+}
+
+/// Per-model metrics: every variant and shard plus merged aggregates.
+/// `shards` flattens all variants' shards (registration order, shard
+/// indices continuing across variants) so single-variant callers see
+/// the pre-variant shape unchanged.
 #[derive(Clone, Debug, Default)]
 pub struct ModelMetrics {
     pub model: String,
+    /// Total replica shards across every variant.
     pub replicas: usize,
-    /// Parameter bytes held once and shared by all replicas.
+    /// Parameter bytes held once and shared by all variants+replicas.
     pub param_bytes: usize,
+    pub variants: Vec<VariantMetrics>,
     pub shards: Vec<ShardMetrics>,
     pub total: BatcherSnapshot,
 }
@@ -136,12 +191,17 @@ enum EntrySource {
 
 struct Entry {
     name: String,
+    variant: String,
     replicas: usize,
     policy: BatchPolicy,
     source: EntrySource,
 }
 
-/// Builder for [`InferenceRouter`]. Add models, then [`RouterBuilder::build`].
+/// Name [`RouterBuilder::model`] registers its (single) variant under.
+pub const DEFAULT_VARIANT: &str = "default";
+
+/// Builder for [`InferenceRouter`]. Add models (and optionally further
+/// policy variants of them), then [`RouterBuilder::build`].
 #[derive(Default)]
 pub struct RouterBuilder {
     entries: Vec<Entry>,
@@ -149,7 +209,8 @@ pub struct RouterBuilder {
 
 impl RouterBuilder {
     /// Serve `replicas` native-engine shards of one model, all sharing
-    /// `params`. Each replica uses the engine's default thread count.
+    /// `params`, as the variant named [`DEFAULT_VARIANT`]. Each replica
+    /// uses the engine's default thread count.
     pub fn model(
         self,
         name: &str,
@@ -157,7 +218,7 @@ impl RouterBuilder {
         replicas: usize,
         policy: BatchPolicy,
     ) -> Self {
-        self.model_entry(name, params, replicas, policy, None)
+        self.model_entry(name, DEFAULT_VARIANT, params, replicas, policy, None)
     }
 
     /// Like [`RouterBuilder::model`] but pins every replica engine to
@@ -171,12 +232,45 @@ impl RouterBuilder {
         policy: BatchPolicy,
         threads: usize,
     ) -> Self {
-        self.model_entry(name, params, replicas, policy, Some(threads))
+        self.model_entry(name, DEFAULT_VARIANT, params, replicas, policy, Some(threads))
     }
 
+    /// Register one **policy variant** of a model (e.g.
+    /// `"resnet18"`/`"first8"`): its own `Arc<ModelParams>` — and thus
+    /// its own per-layer LUT/weight tables — over the *same*
+    /// `Arc<Graph>`/`Arc<Weights>` as the model's other variants
+    /// (validated at build). The first variant registered for a model
+    /// is its default.
+    pub fn model_variant(
+        self,
+        name: &str,
+        variant: &str,
+        params: Arc<ModelParams>,
+        replicas: usize,
+        policy: BatchPolicy,
+    ) -> Self {
+        self.model_entry(name, variant, params, replicas, policy, None)
+    }
+
+    /// [`RouterBuilder::model_variant`] with the replica engines pinned
+    /// to `threads` workers.
+    pub fn model_variant_with_threads(
+        self,
+        name: &str,
+        variant: &str,
+        params: Arc<ModelParams>,
+        replicas: usize,
+        policy: BatchPolicy,
+        threads: usize,
+    ) -> Self {
+        self.model_entry(name, variant, params, replicas, policy, Some(threads))
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn model_entry(
         mut self,
         name: &str,
+        variant: &str,
         params: Arc<ModelParams>,
         replicas: usize,
         policy: BatchPolicy,
@@ -184,6 +278,7 @@ impl RouterBuilder {
     ) -> Self {
         self.entries.push(Entry {
             name: name.to_string(),
+            variant: variant.to_string(),
             replicas,
             policy,
             source: EntrySource::Params { params, threads },
@@ -193,7 +288,8 @@ impl RouterBuilder {
 
     /// Serve a model through caller-supplied batch executors, one per
     /// replica — the escape hatch for PJRT-backed shards and for tests
-    /// that need a deliberately failing replica.
+    /// that need a deliberately failing replica. Registers the
+    /// [`DEFAULT_VARIANT`].
     pub fn model_from_executors(
         mut self,
         name: &str,
@@ -205,6 +301,7 @@ impl RouterBuilder {
         let replicas = executors.len();
         self.entries.push(Entry {
             name: name.to_string(),
+            variant: DEFAULT_VARIANT.to_string(),
             replicas,
             policy,
             source: EntrySource::Executors { image_len, classes, executors },
@@ -214,13 +311,24 @@ impl RouterBuilder {
 
     /// Spawn every shard worker and produce the router.
     pub fn build(self) -> Result<InferenceRouter> {
-        let mut models = HashMap::new();
+        let mut models: HashMap<String, ModelShards> = HashMap::new();
         for entry in self.entries {
+            // '@' is the HTTP front door's model/variant separator
+            // (`POST /v1/infer/{model}@{variant}`): a model name
+            // containing it would build fine yet be permanently
+            // unreachable over the network — reject at startup.
+            if entry.name.is_empty() || entry.name.contains('@') {
+                bail!(
+                    "model name `{}` is invalid: must be non-empty and must not contain \
+                     '@' (reserved for HTTP variant addressing)",
+                    entry.name
+                );
+            }
+            if entry.variant.is_empty() {
+                bail!("model `{}`: variant name must be non-empty", entry.name);
+            }
             if entry.replicas == 0 {
                 bail!("model `{}`: replica count must be >= 1", entry.name);
-            }
-            if models.contains_key(&entry.name) {
-                bail!("duplicate model name `{}` in router", entry.name);
             }
             // Validate the policy here so a bad config is a build error,
             // not a panic inside Batcher::spawn's asserts.
@@ -242,17 +350,16 @@ impl RouterBuilder {
                     );
                 }
             }
-            let (image_len, classes, param_bytes, executors): (
+            let (image_len, classes, params_opt, executors): (
                 usize,
                 usize,
-                usize,
+                Option<Arc<ModelParams>>,
                 Vec<Box<ExecuteFn>>,
             ) = match entry.source {
                 EntrySource::Params { params, threads } => {
                     let [h, w, c] = params.graph.input_hwc;
                     let image_len = h * w * c;
                     let classes = params.graph.num_classes;
-                    let param_bytes = params.weights.param_bytes();
                     let executors = (0..entry.replicas)
                         .map(|_| {
                             // A cheap handle per shard — Arc bumps, no
@@ -267,10 +374,10 @@ impl RouterBuilder {
                             }) as Box<ExecuteFn>
                         })
                         .collect();
-                    (image_len, classes, param_bytes, executors)
+                    (image_len, classes, Some(params), executors)
                 }
                 EntrySource::Executors { image_len, classes, executors } => {
-                    (image_len, classes, 0, executors)
+                    (image_len, classes, None, executors)
                 }
             };
             let shards = executors
@@ -282,16 +389,65 @@ impl RouterBuilder {
                     Shard { batcher, stats, e2e: Mutex::new(LatencyHist::default()) }
                 })
                 .collect();
-            models.insert(
-                entry.name,
-                ModelShards {
-                    image_len,
-                    classes,
-                    shards,
-                    cursor: AtomicUsize::new(0),
-                    param_bytes,
-                },
-            );
+            let vs = VariantShards {
+                name: entry.variant.clone(),
+                shards,
+                cursor: AtomicUsize::new(0),
+                params: params_opt,
+            };
+            match models.get_mut(&entry.name) {
+                Some(ms) => {
+                    if ms.variant(&vs.name).is_some() {
+                        bail!(
+                            "duplicate registration of model `{}` variant `{}` in router",
+                            entry.name,
+                            vs.name
+                        );
+                    }
+                    if ms.image_len != image_len || ms.classes != classes {
+                        bail!(
+                            "model `{}` variant `{}`: shape ({image_len}, {classes}) differs \
+                             from the model's ({}, {})",
+                            entry.name,
+                            vs.name,
+                            ms.image_len,
+                            ms.classes
+                        );
+                    }
+                    // Variants exist to serve many operating points off
+                    // ONE weight copy; silently accepting a second
+                    // allocation would defeat the design, so reject it.
+                    if let (Some(prev), Some(newp)) = (
+                        ms.variants.iter().find_map(|v| v.params.as_ref()),
+                        vs.params.as_ref(),
+                    ) {
+                        if !Arc::ptr_eq(&prev.graph, &newp.graph)
+                            || !Arc::ptr_eq(&prev.weights, &newp.weights)
+                        {
+                            bail!(
+                                "model `{}` variant `{}`: variants must share one \
+                                 graph+weights allocation — build each variant's \
+                                 ModelParams over the same Arc<Graph>/Arc<Weights>",
+                                entry.name,
+                                vs.name
+                            );
+                        }
+                    }
+                    if ms.param_bytes == 0 {
+                        ms.param_bytes =
+                            vs.params.as_ref().map_or(0, |p| p.weights.param_bytes());
+                    }
+                    ms.variants.push(vs);
+                }
+                None => {
+                    let param_bytes =
+                        vs.params.as_ref().map_or(0, |p| p.weights.param_bytes());
+                    models.insert(
+                        entry.name.clone(),
+                        ModelShards { image_len, classes, param_bytes, variants: vec![vs] },
+                    );
+                }
+            }
         }
         if models.is_empty() {
             bail!("router has no models; add at least one before build()");
@@ -318,8 +474,9 @@ impl InferenceRouter {
         names
     }
 
+    /// Total replica shards across every variant of the model.
     pub fn replicas(&self, model: &str) -> Result<usize> {
-        Ok(self.shards_of(model)?.shards.len())
+        Ok(self.shards_of(model)?.variants.iter().map(|v| v.shards.len()).sum())
     }
 
     /// (image_len, classes) the named model expects/produces.
@@ -328,19 +485,76 @@ impl InferenceRouter {
         Ok((ms.image_len, ms.classes))
     }
 
+    /// The model's variant names, registration order (index 0 is the
+    /// default).
+    pub fn variant_names(&self, model: &str) -> Result<Vec<&str>> {
+        Ok(self.shards_of(model)?.variants.iter().map(|v| v.name.as_str()).collect())
+    }
+
+    /// `(variant name, replica count)` pairs, registration order — the
+    /// cheap introspection view: unlike [`InferenceRouter::metrics`] it
+    /// touches no stats snapshots and no latency-histogram locks.
+    pub fn variant_replicas(&self, model: &str) -> Result<Vec<(&str, usize)>> {
+        Ok(self
+            .shards_of(model)?
+            .variants
+            .iter()
+            .map(|v| (v.name.as_str(), v.shards.len()))
+            .collect())
+    }
+
+    /// Bytes of the weight store shared by every variant and replica of
+    /// the model (0 for executor-backed entries).
+    pub fn param_bytes(&self, model: &str) -> Result<usize> {
+        Ok(self.shards_of(model)?.param_bytes)
+    }
+
+    /// The variant [`InferenceRouter::infer`] dispatches to.
+    pub fn default_variant(&self, model: &str) -> Result<&str> {
+        Ok(self.shards_of(model)?.default_variant().name.as_str())
+    }
+
+    /// The shared parameter block behind a variant — `None` for
+    /// executor-backed entries the router cannot introspect. This is
+    /// the seam the HTTP `GET /v1/models` policy report reads through.
+    pub fn variant_params(
+        &self,
+        model: &str,
+        variant: &str,
+    ) -> Result<Option<&Arc<ModelParams>>> {
+        Ok(self.variant_of(model, variant)?.params.as_ref())
+    }
+
     fn shards_of(&self, model: &str) -> Result<&ModelShards> {
         self.models.get(model).with_context(|| {
             format!("router has no model named `{model}` (available: {:?})", self.model_names())
         })
     }
 
-    /// Dispatch by model name, load-aware across that model's shards
-    /// (shallowest live queue wins; ties rotate round-robin). Blocks
-    /// until the reply; executor failures and overload errors carry the
-    /// shard's real message.
-    pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Reply> {
+    fn variant_of(&self, model: &str, variant: &str) -> Result<&VariantShards> {
         let ms = self.shards_of(model)?;
-        Self::shard_infer(&ms.shards[ms.pick()], image)
+        ms.variant(variant).with_context(|| {
+            format!(
+                "model `{model}` has no variant `{variant}` (available: {:?})",
+                ms.variants.iter().map(|v| v.name.as_str()).collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Dispatch by model name to its **default variant**, load-aware
+    /// across that variant's shards (shallowest live queue wins; ties
+    /// rotate round-robin). Blocks until the reply; executor failures
+    /// and overload errors carry the shard's real message.
+    pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Reply> {
+        let vs = self.shards_of(model)?.default_variant();
+        Self::shard_infer(&vs.shards[vs.pick()], image)
+    }
+
+    /// Dispatch to a named **policy variant** of a model — same
+    /// load-aware pick within that variant's shards.
+    pub fn infer_variant(&self, model: &str, variant: &str, image: Vec<f32>) -> Result<Reply> {
+        let vs = self.variant_of(model, variant)?;
+        Self::shard_infer(&vs.shards[vs.pick()], image)
     }
 
     /// Non-blocking dispatch for event-driven front ends (the HTTP
@@ -351,21 +565,38 @@ impl InferenceRouter {
     /// thread. The per-shard latency histograms only track the blocking
     /// path; submit traffic still lands in every batcher counter.
     pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<PendingReply> {
-        let ms = self.shards_of(model)?;
-        ms.shards[ms.pick()].batcher.submit(image)
+        let vs = self.shards_of(model)?.default_variant();
+        vs.shards[vs.pick()].batcher.submit(image)
     }
 
-    /// Dispatch to one specific shard of a model (session affinity,
-    /// deterministic tests).
+    /// Non-blocking dispatch to a named variant.
+    pub fn submit_variant(
+        &self,
+        model: &str,
+        variant: &str,
+        image: Vec<f32>,
+    ) -> Result<PendingReply> {
+        let vs = self.variant_of(model, variant)?;
+        vs.shards[vs.pick()].batcher.submit(image)
+    }
+
+    /// Dispatch to one specific shard (session affinity, deterministic
+    /// tests). `shard` is the model-wide **flattened** index exactly as
+    /// reported by [`InferenceRouter::metrics`]: variants in
+    /// registration order, shard indices continuing across variants —
+    /// so a pinning caller can drive this directly from the metrics
+    /// view. Single-variant models behave as before.
     pub fn infer_on(&self, model: &str, shard: usize, image: Vec<f32>) -> Result<Reply> {
         let ms = self.shards_of(model)?;
-        if shard >= ms.shards.len() {
-            bail!(
-                "model `{model}` has {} shard(s); no shard {shard}",
-                ms.shards.len()
-            );
+        let mut idx = shard;
+        for vs in &ms.variants {
+            if idx < vs.shards.len() {
+                return Self::shard_infer(&vs.shards[idx], image);
+            }
+            idx -= vs.shards.len();
         }
-        Self::shard_infer(&ms.shards[shard], image)
+        let total: usize = ms.variants.iter().map(|v| v.shards.len()).sum();
+        bail!("model `{model}` has {total} shard(s) across its variants; no shard {shard}")
     }
 
     fn shard_infer(shard: &Shard, image: Vec<f32>) -> Result<Reply> {
@@ -377,38 +608,59 @@ impl InferenceRouter {
         Ok(reply)
     }
 
-    /// Per-shard and aggregate metrics for one model.
+    /// Per-variant, per-shard and aggregate metrics for one model.
     pub fn metrics(&self, model: &str) -> Result<ModelMetrics> {
         let ms = self.shards_of(model)?;
-        let mut shards = Vec::with_capacity(ms.shards.len());
+        let mut variants = Vec::with_capacity(ms.variants.len());
+        let mut flat = Vec::new();
         let mut total = BatcherSnapshot::default();
-        for (i, s) in ms.shards.iter().enumerate() {
-            let snap = s.stats.snapshot();
-            total.merge(&snap);
-            let e2e = s.e2e.lock().unwrap();
-            shards.push(ShardMetrics {
-                shard: i,
-                completed: e2e.count(),
-                mean_latency_us: e2e.mean_us(),
-                p99_latency_us: e2e.quantile_us(0.99),
-                batcher: snap,
+        let mut shard_idx = 0usize;
+        for vs in &ms.variants {
+            let mut vshards = Vec::with_capacity(vs.shards.len());
+            let mut vtotal = BatcherSnapshot::default();
+            for s in &vs.shards {
+                let snap = s.stats.snapshot();
+                vtotal.merge(&snap);
+                total.merge(&snap);
+                let e2e = s.e2e.lock().unwrap();
+                let sm = ShardMetrics {
+                    shard: shard_idx,
+                    completed: e2e.count(),
+                    mean_latency_us: e2e.mean_us(),
+                    p99_latency_us: e2e.quantile_us(0.99),
+                    batcher: snap,
+                };
+                shard_idx += 1;
+                vshards.push(sm.clone());
+                flat.push(sm);
+            }
+            variants.push(VariantMetrics {
+                variant: vs.name.clone(),
+                replicas: vs.shards.len(),
+                policy: vs.params.as_ref().map_or_else(String::new, |p| p.policy().to_string()),
+                footprint_bits: vs.params.as_ref().map_or(0.0, |p| p.footprint_bits(1)),
+                shards: vshards,
+                total: vtotal,
             });
         }
         Ok(ModelMetrics {
             model: model.to_string(),
-            replicas: ms.shards.len(),
+            replicas: shard_idx,
             param_bytes: ms.param_bytes,
-            shards,
+            variants,
+            shards: flat,
             total,
         })
     }
 
-    /// Merged batcher snapshot across every model and shard.
+    /// Merged batcher snapshot across every model, variant and shard.
     pub fn aggregate(&self) -> BatcherSnapshot {
         let mut total = BatcherSnapshot::default();
         for ms in self.models.values() {
-            for s in &ms.shards {
-                total.merge(&s.stats.snapshot());
+            for vs in &ms.variants {
+                for s in &vs.shards {
+                    total.merge(&s.stats.snapshot());
+                }
             }
         }
         total
@@ -426,7 +678,7 @@ mod tests {
     use std::time::Duration;
 
     /// Tiny all-native model: one quantized conv, 4x4x1 -> 2 classes.
-    fn tiny_params(seed: i8) -> Arc<ModelParams> {
+    fn tiny_graph_weights(seed: i8) -> (Arc<Graph>, Arc<Weights>) {
         let graph = Graph {
             arch: "tinyq".into(),
             variant: "router-test".into(),
@@ -466,10 +718,15 @@ mod tests {
             fc_out: 2,
             fc_b: vec![0.1, 0.2],
         };
+        (Arc::new(graph), Arc::new(weights))
+    }
+
+    fn tiny_params(seed: i8) -> Arc<ModelParams> {
+        let (graph, weights) = tiny_graph_weights(seed);
         Arc::new(
             ModelParams::new(
-                Arc::new(graph),
-                Arc::new(weights),
+                graph,
+                weights,
                 SparqConfig::named("5opt_r").unwrap(),
                 &[0.02],
                 EngineMode::Dense,
@@ -524,6 +781,117 @@ mod tests {
             before + 1,
             "replica engines were not released after router shutdown"
         );
+    }
+
+    /// The variant acceptance bar: >= 2 policy variants of one model
+    /// share exactly one weights allocation (pointer equality +
+    /// `Arc::strong_count`) while serving bit-different logits, and the
+    /// router refuses variants over a second allocation.
+    #[test]
+    fn variants_share_one_weights_allocation_and_serve_distinct_logits() {
+        use crate::quant::QuantPolicy;
+        let (graph, weights) = tiny_graph_weights(0);
+        let before = Arc::strong_count(&weights);
+        let pa = Arc::new(
+            ModelParams::with_policy(
+                graph.clone(),
+                weights.clone(),
+                QuantPolicy::named("a8w8").unwrap(),
+                &[0.02],
+                EngineMode::Dense,
+            )
+            .unwrap(),
+        );
+        let pb = Arc::new(
+            ModelParams::with_policy(
+                graph.clone(),
+                weights.clone(),
+                QuantPolicy::named("a4w8").unwrap(),
+                &[0.02],
+                EngineMode::Dense,
+            )
+            .unwrap(),
+        );
+        // pointer equality: both variants hold the SAME allocations
+        assert!(Arc::ptr_eq(&pa.weights, &pb.weights), "variants must share weights");
+        assert!(Arc::ptr_eq(&pa.graph, &pb.graph), "variants must share the graph");
+        assert_eq!(
+            Arc::strong_count(&weights),
+            before + 2,
+            "each variant is an Arc bump, not a weight copy"
+        );
+        let router = InferenceRouter::builder()
+            .model_variant("m", "a8w8", pa.clone(), 2, quick_policy(2))
+            .model_variant("m", "a4w8", pb.clone(), 1, quick_policy(2))
+            .build()
+            .unwrap();
+        // router construction cost zero additional weight allocations
+        assert_eq!(Arc::strong_count(&weights), before + 2);
+        assert_eq!(router.replicas("m").unwrap(), 3);
+        assert_eq!(router.variant_names("m").unwrap(), vec!["a8w8", "a4w8"]);
+        assert_eq!(router.default_variant("m").unwrap(), "a8w8");
+        // default dispatch = first variant; named dispatch = that variant
+        let want_a = Engine::from_params(pa.clone()).forward(&img(5), 1).unwrap();
+        let want_b = Engine::from_params(pb.clone()).forward(&img(5), 1).unwrap();
+        assert_ne!(want_a, want_b, "test policies degenerate: identical outputs");
+        assert_eq!(router.infer("m", img(5)).unwrap().logits, want_a);
+        assert_eq!(router.infer_variant("m", "a8w8", img(5)).unwrap().logits, want_a);
+        assert_eq!(router.infer_variant("m", "a4w8", img(5)).unwrap().logits, want_b);
+        // unknown variants are descriptive errors naming the real ones
+        let err = router.infer_variant("m", "nope", img(0)).unwrap_err().to_string();
+        assert!(err.contains("nope") && err.contains("a4w8"), "{err}");
+        // introspection: the params behind each variant are reachable
+        assert!(Arc::ptr_eq(
+            router.variant_params("m", "a8w8").unwrap().unwrap(),
+            &pa
+        ));
+        // metrics: per-variant blocks + the flattened per-model view
+        let m = router.metrics("m").unwrap();
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!((m.variants[0].replicas, m.variants[1].replicas), (2, 1));
+        assert_eq!(m.variants[0].policy, "A8W8");
+        assert_eq!(m.variants[1].policy, "A4W8+R");
+        assert!(
+            m.variants[0].footprint_bits > m.variants[1].footprint_bits,
+            "8-bit variant must report the larger activation footprint"
+        );
+        assert_eq!(m.shards.len(), 3);
+        assert_eq!(m.replicas, 3);
+        assert_eq!(m.param_bytes, weights.param_bytes());
+        let per_variant: u64 = m.variants.iter().map(|v| v.total.requests).sum();
+        assert_eq!(per_variant, m.total.requests, "variant totals must sum to the model's");
+        // pinned dispatch uses the SAME flattened shard index as the
+        // metrics view: shards 0-1 are a8w8's, shard 2 is a4w8's only
+        // shard; one past the end is an error naming the real total.
+        assert_eq!(router.infer_on("m", 1, img(5)).unwrap().logits, want_a);
+        assert_eq!(router.infer_on("m", 2, img(5)).unwrap().logits, want_b);
+        let err = router.infer_on("m", 3, img(5)).unwrap_err().to_string();
+        assert!(err.contains("3 shard(s)"), "{err}");
+        // '@' in a model name would be unreachable over the HTTP front
+        // door's {model}@{variant} syntax — a build error, not a trap
+        let err = InferenceRouter::builder()
+            .model_variant("m@v2", "a", pa.clone(), 1, quick_policy(2))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains('@'), "{err}");
+        // a variant over a *different* weights allocation is rejected
+        let stranger = tiny_params(0);
+        let err = InferenceRouter::builder()
+            .model_variant("m", "a", pa.clone(), 1, quick_policy(2))
+            .model_variant("m", "b", stranger, 1, quick_policy(2))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("share"), "{err}");
+        // duplicate (model, variant) pairs are rejected
+        let err = InferenceRouter::builder()
+            .model_variant("m", "a", pa.clone(), 1, quick_policy(2))
+            .model_variant("m", "a", pb.clone(), 1, quick_policy(2))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("duplicate"), "{err}");
     }
 
     #[test]

@@ -1,11 +1,17 @@
 //! Deterministic synthetic demo model shared by artifact-free drivers
-//! (`benches/hotpath.rs`, `examples/serve_bench.rs`): a float stem conv
-//! + two quantized convs + gap + fc over 20x20x3 inputs, shaped like
-//! the zoo's resnet10 stem. Hidden from the documented API — it exists
-//! so the bench and the example can't drift apart.
+//! (`benches/hotpath.rs`, `examples/serve_bench.rs`, the policy eval
+//! tests): a float stem conv + three quantized convs + gap + fc over
+//! 20x20x3 inputs, shaped like the zoo's resnet10 stem. Hidden from the
+//! documented API — it exists so the bench, the example and the tests
+//! can't drift apart. Three quantized convs (not two) so first/last
+//! per-layer policies leave a genuinely distinct middle layer.
 
 use std::collections::HashMap;
 
+use crate::data::Dataset;
+use crate::quant::SparqConfig;
+
+use super::engine::{Engine, EngineMode, Scratch};
 use super::graph::{Graph, Node, Op};
 use super::weights::{FloatConv, QuantConv, Weights};
 
@@ -18,7 +24,8 @@ pub fn synth_weights(n: usize) -> Vec<i8> {
         .collect()
 }
 
-/// Synthetic 4-layer model + its activation scales.
+/// Synthetic 5-layer model (1 float + 3 quantized convs) + its
+/// activation scales.
 pub fn synth_model() -> (Graph, Weights, Vec<f32>) {
     let graph = Graph {
         arch: "bench".into(),
@@ -26,7 +33,7 @@ pub fn synth_model() -> (Graph, Weights, Vec<f32>) {
         num_classes: 10,
         input_hwc: [20, 20, 3],
         eval_batch: 32,
-        quant_convs: vec!["q1".into(), "q2".into()],
+        quant_convs: vec!["q1".into(), "q2".into(), "q3".into()],
         nodes: vec![
             Node { name: "img".into(), op: Op::Input, inputs: vec![] },
             Node {
@@ -44,7 +51,12 @@ pub fn synth_model() -> (Graph, Weights, Vec<f32>) {
                 op: Op::Conv { k: 3, stride: 1, out_ch: 64, relu: true, quant: true },
                 inputs: vec!["q1".into()],
             },
-            Node { name: "g".into(), op: Op::Gap, inputs: vec!["q2".into()] },
+            Node {
+                name: "q3".into(),
+                op: Op::Conv { k: 1, stride: 1, out_ch: 64, relu: true, quant: true },
+                inputs: vec!["q2".into()],
+            },
+            Node { name: "g".into(), op: Op::Gap, inputs: vec!["q3".into()] },
             Node { name: "fc".into(), op: Op::Fc { out: 10 }, inputs: vec!["g".into()] },
         ],
     };
@@ -82,6 +94,16 @@ pub fn synth_model() -> (Graph, Weights, Vec<f32>) {
             bias: vec![0.0; 64],
         },
     );
+    quant.insert(
+        "q3".to_string(),
+        QuantConv {
+            wq: synth_weights(64 * 64),
+            k: 64,
+            o: 64,
+            scale: vec![0.002; 64],
+            bias: vec![0.0; 64],
+        },
+    );
     let fc_len = 64 * 10;
     let weights = Weights {
         quant,
@@ -91,5 +113,63 @@ pub fn synth_model() -> (Graph, Weights, Vec<f32>) {
         fc_out: 10,
         fc_b: vec![0.0; 10],
     };
-    (graph, weights, vec![0.02, 0.02])
+    (graph, weights, vec![0.02, 0.02, 0.02])
+}
+
+/// Linear test graph with `n` quantized 1x1 convs named `l0..l{n-1}`
+/// (img -> l0 -> … -> gap -> fc): the minimal shape for per-layer
+/// policy tests. Shared by the policy unit tests and the `layer_plan`
+/// property tests so the two cannot drift apart. Carries no weights —
+/// it exists for plan/selector resolution, not execution.
+pub fn chain_graph(n: usize) -> Graph {
+    let mut nodes = vec![Node { name: "img".into(), op: Op::Input, inputs: vec![] }];
+    let mut prev = "img".to_string();
+    let mut quant_convs = Vec::new();
+    for i in 0..n {
+        let name = format!("l{i}");
+        nodes.push(Node {
+            name: name.clone(),
+            op: Op::Conv { k: 1, stride: 1, out_ch: 2, relu: true, quant: true },
+            inputs: vec![prev.clone()],
+        });
+        quant_convs.push(name.clone());
+        prev = name;
+    }
+    nodes.push(Node { name: "g".into(), op: Op::Gap, inputs: vec![prev] });
+    nodes.push(Node { name: "fc".into(), op: Op::Fc { out: 2 }, inputs: vec!["g".into()] });
+    Graph {
+        arch: "chain".into(),
+        variant: "policy-test".into(),
+        num_classes: 2,
+        input_hwc: [2, 2, 2],
+        eval_batch: 1,
+        quant_convs,
+        nodes,
+    }
+}
+
+/// Deterministic synthetic dataset for the demo model, **labelled by
+/// the uniform-A8W8 engine's own top-1 predictions**: the 8-bit
+/// reference scores 100% by construction, so "accuracy" measures
+/// agreement with the reference and more aggressive per-layer policies
+/// can be ordered meaningfully without real data (the policy eval
+/// tests and the CI smoke lean on this).
+pub fn synth_dataset(graph: &Graph, weights: &Weights, scales: &[f32], n: usize) -> Dataset {
+    let [h, w, c] = graph.input_hwc;
+    let stride = h * w * c;
+    let images: Vec<u8> = (0..n * stride)
+        .map(|i| (((i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33) % 256) as u8)
+        .collect();
+    let engine = Engine::new(graph, weights, SparqConfig::A8W8, scales, EngineMode::Dense)
+        .expect("demo A8W8 engine");
+    let mut scratch = Scratch::default();
+    let mut labels = Vec::with_capacity(n);
+    let mut img = Vec::with_capacity(stride);
+    for i in 0..n {
+        img.clear();
+        img.extend(images[i * stride..(i + 1) * stride].iter().map(|&p| f32::from(p) / 255.0));
+        let logits = engine.forward_scratch(&img, 1, &mut scratch).expect("demo forward");
+        labels.push(Engine::argmax(&logits, graph.num_classes)[0] as u8);
+    }
+    Dataset { n, h, w, c, num_classes: graph.num_classes, images, labels }
 }

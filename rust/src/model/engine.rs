@@ -21,6 +21,19 @@
 //! single parameter copy instead of each paying a full deep clone of
 //! graph + weights + prepared tables (the pre-Arc behaviour). Replica
 //! count is therefore a runtime knob, not a memory multiplier.
+//!
+//! # Per-layer policies
+//!
+//! Parameters are prepared under a [`QuantPolicy`]
+//! ([`ModelParams::with_policy`]): the policy lowers to one
+//! [`SparqConfig`] per quantized conv, the params build one
+//! [`QuantGemm`] (TrimLut) per *distinct* config plus a per-layer
+//! requantized weight table, and the forward pass selects each layer's
+//! context by name. `ModelParams::new` / [`Engine::new`] remain the
+//! uniform-policy convenience. Multiple policy *variants* of one model
+//! (see `coordinator::router`) each carry their own `ModelParams` while
+//! sharing the same `Arc<Graph>` and `Arc<Weights>` — the weight bytes
+//! exist once no matter how many operating points are served.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -29,7 +42,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::hw::stc::{stc_gemm, CompressedWeights};
 use crate::quant::minmax::ActScale;
-use crate::quant::SparqConfig;
+use crate::quant::{QuantPolicy, SparqConfig};
 use crate::tensor::{im2col_u8_into, out_dim, same_padding, TensorF32};
 
 use super::gemm::QuantGemm;
@@ -89,34 +102,73 @@ fn grown<T: Copy + Default>(buf: &mut Vec<T>, n: usize) -> &mut [T] {
     &mut buf[..n]
 }
 
+/// Per-layer execution state: which of the deduplicated GEMM contexts
+/// (TrimLuts) this layer runs, plus the weights prepared under exactly
+/// that layer's config.
+struct LayerExec {
+    /// Index into [`ModelParams`]'s `gemms` vector.
+    gemm: usize,
+    /// Dense-mode prepared (O, K) i16 weights (empty in STC mode).
+    prepared: Vec<i16>,
+    /// STC-mode 2:4 compressed weights.
+    compressed: Option<CompressedWeights>,
+}
+
 /// The immutable, shareable half of a ready-to-run model: graph,
-/// weights, config, activation scales, and the one-off derived tables
-/// (requantized+transposed dense weights or 2:4 compressed weights,
-/// plus the value-liveness map). Built once, shared by every
-/// [`Engine`] replica via `Arc` — the prepared tables are the expensive
-/// part of engine construction and are never duplicated.
+/// weights, the resolved per-layer quantization policy, activation
+/// scales, and the one-off derived tables (requantized+transposed dense
+/// weights or 2:4 compressed weights, plus the value-liveness map).
+/// Built once, shared by every [`Engine`] replica via `Arc` — the
+/// prepared tables are the expensive part of engine construction and
+/// are never duplicated.
+///
+/// A [`QuantPolicy`] lowers to one [`SparqConfig`] per quantized conv;
+/// the params prepare **one [`QuantGemm`] (TrimLut) per *distinct*
+/// layer config** and point each layer at its context, so a
+/// first/last-at-8-bit policy over a 50-layer model costs two LUTs, not
+/// fifty — and a uniform policy costs exactly one, as before.
 pub struct ModelParams {
     pub graph: Arc<Graph>,
     pub weights: Arc<Weights>,
-    pub cfg: SparqConfig,
+    policy: QuantPolicy,
+    /// The lowered policy: one config per quant conv, `quant_convs`
+    /// order.
+    plan: Vec<SparqConfig>,
     mode: EngineMode,
     scales: HashMap<String, ActScale>,
-    gemm: QuantGemm,
-    /// Per-layer prepared (requantized + transposed) weights.
-    prepared: HashMap<String, Vec<i16>>,
-    /// Per-layer 2:4 compressed weights (STC mode).
-    compressed: HashMap<String, CompressedWeights>,
+    /// Deduplicated GEMM contexts, one per distinct config in `plan`.
+    gemms: Vec<QuantGemm>,
+    /// Layer name -> its GEMM context + prepared weight tables.
+    layers: HashMap<String, LayerExec>,
+    /// Per-image im2col activation volume per quant conv (`quant_convs`
+    /// order) — the weights for policy footprint accounting.
+    act_volumes: Vec<usize>,
     /// Value name -> index of its last consuming node (drives eager
     /// dropping of dead intermediates during forward).
     last_use: HashMap<String, usize>,
 }
 
 impl ModelParams {
+    /// Uniform-policy convenience: every quantized conv runs `cfg`.
     /// `act_scales` ordered by `graph.quant_convs` (from calibration).
     pub fn new(
         graph: Arc<Graph>,
         weights: Arc<Weights>,
         cfg: SparqConfig,
+        act_scales: &[f32],
+        mode: EngineMode,
+    ) -> Result<Self> {
+        Self::with_policy(graph, weights, QuantPolicy::uniform(cfg), act_scales, mode)
+    }
+
+    /// Build the parameter block under a per-layer [`QuantPolicy`]: the
+    /// policy is lowered against the graph, one GEMM context (TrimLut)
+    /// is prepared per *distinct* layer config, and every layer's
+    /// weight table is requantized under that layer's own config.
+    pub fn with_policy(
+        graph: Arc<Graph>,
+        weights: Arc<Weights>,
+        policy: QuantPolicy,
         act_scales: &[f32],
         mode: EngineMode,
     ) -> Result<Self> {
@@ -127,17 +179,27 @@ impl ModelParams {
                 act_scales.len()
             );
         }
-        let gemm = QuantGemm::new(cfg);
+        let plan = policy.layer_plan(&graph)?;
+        let act_volumes = graph.quant_act_volumes()?;
+        let mut gemms: Vec<QuantGemm> = Vec::new();
         let mut scales = HashMap::new();
-        let mut prepared = HashMap::new();
-        let mut compressed = HashMap::new();
-        for (name, &s) in graph.quant_convs.iter().zip(act_scales) {
+        let mut layers = HashMap::new();
+        for ((name, &s), &cfg) in graph.quant_convs.iter().zip(act_scales).zip(&plan) {
             scales.insert(name.clone(), ActScale(s));
-            let qc = weights.quant_conv(name)?;
-            match mode {
-                EngineMode::Dense => {
-                    prepared.insert(name.clone(), gemm.prepare_weights(&qc.wq, qc.k, qc.o));
+            let gemm_idx = match gemms.iter().position(|g| g.cfg() == cfg) {
+                Some(i) => i,
+                None => {
+                    gemms.push(QuantGemm::new(cfg));
+                    gemms.len() - 1
                 }
+            };
+            let qc = weights.quant_conv(name)?;
+            let exec = match mode {
+                EngineMode::Dense => LayerExec {
+                    gemm: gemm_idx,
+                    prepared: gemms[gemm_idx].prepare_weights(&qc.wq, qc.k, qc.o),
+                    compressed: None,
+                },
                 EngineMode::Stc => {
                     // Requantization of the survivors happens at execute
                     // time (stc_gemm handles w_bits).
@@ -157,9 +219,10 @@ impl ModelParams {
                     let c = CompressedWeights::compress(wq, k, qc.o).map_err(|e| {
                         anyhow::anyhow!("{name}: weights not 2:4 structured ({e})")
                     })?;
-                    compressed.insert(name.clone(), c);
+                    LayerExec { gemm: gemm_idx, prepared: Vec::new(), compressed: Some(c) }
                 }
-            }
+            };
+            layers.insert(name.clone(), exec);
         }
         let mut last_use = HashMap::new();
         for (i, node) in graph.nodes.iter().enumerate() {
@@ -167,11 +230,61 @@ impl ModelParams {
                 last_use.insert(input.clone(), i);
             }
         }
-        Ok(Self { graph, weights, cfg, mode, scales, gemm, prepared, compressed, last_use })
+        Ok(Self {
+            graph,
+            weights,
+            policy,
+            plan,
+            mode,
+            scales,
+            gemms,
+            layers,
+            act_volumes,
+            last_use,
+        })
     }
 
     pub fn mode(&self) -> EngineMode {
         self.mode
+    }
+
+    /// The per-layer policy these parameters were prepared under.
+    pub fn policy(&self) -> &QuantPolicy {
+        &self.policy
+    }
+
+    /// The policy's default config. For uniform-policy models (the
+    /// pre-policy API and every `ModelParams::new` caller) this is
+    /// *the* configuration of every layer.
+    pub fn default_cfg(&self) -> SparqConfig {
+        self.policy.default_cfg()
+    }
+
+    /// Resolved `(layer name, config)` pairs, `graph.quant_convs` order.
+    pub fn layer_cfgs(&self) -> Vec<(String, SparqConfig)> {
+        self.graph
+            .quant_convs
+            .iter()
+            .zip(&self.plan)
+            .map(|(n, &c)| (n.clone(), c))
+            .collect()
+    }
+
+    /// Number of distinct GEMM contexts (TrimLuts) the policy resolved
+    /// to — 1 for any uniform policy.
+    pub fn distinct_configs(&self) -> usize {
+        self.gemms.len()
+    }
+
+    /// Policy-weighted storage bits per quantized activation (§5.1
+    /// metadata model, weighted by each layer's im2col volume).
+    /// `shift_group` as in [`crate::quant::footprint::bits_per_activation`].
+    pub fn footprint_bits(&self, shift_group: u32) -> f64 {
+        crate::quant::footprint::policy_bits_per_activation(
+            &self.plan,
+            &self.act_volumes,
+            shift_group,
+        )
     }
 }
 
@@ -189,7 +302,8 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// `act_scales` ordered by `graph.quant_convs` (from calibration).
+    /// Uniform-config engine — `act_scales` ordered by
+    /// `graph.quant_convs` (from calibration).
     pub fn new(
         graph: &Graph,
         weights: &Weights,
@@ -197,10 +311,24 @@ impl Engine {
         act_scales: &[f32],
         mode: EngineMode,
     ) -> Result<Self> {
-        let params = ModelParams::new(
+        Self::with_policy(graph, weights, QuantPolicy::uniform(cfg), act_scales, mode)
+    }
+
+    /// Engine under a per-layer [`QuantPolicy`] (builds its own params
+    /// from borrowed graph/weights — one copy; the multi-variant
+    /// serving path shares an `Arc<ModelParams>` via
+    /// [`Engine::from_params`] instead).
+    pub fn with_policy(
+        graph: &Graph,
+        weights: &Weights,
+        policy: QuantPolicy,
+        act_scales: &[f32],
+        mode: EngineMode,
+    ) -> Result<Self> {
+        let params = ModelParams::with_policy(
             Arc::new(graph.clone()),
             Arc::new(weights.clone()),
-            cfg,
+            policy,
             act_scales,
             mode,
         )?;
@@ -226,8 +354,15 @@ impl Engine {
         &self.params.weights
     }
 
+    /// The policy's default config (for uniform-policy engines — every
+    /// `Engine::new` caller — this is *the* config of every layer).
     pub fn cfg(&self) -> SparqConfig {
-        self.params.cfg
+        self.params.default_cfg()
+    }
+
+    /// The per-layer quantization policy this engine runs.
+    pub fn policy(&self) -> &QuantPolicy {
+        self.params.policy()
     }
 
     pub fn mode(&self) -> EngineMode {
@@ -454,17 +589,21 @@ impl Engine {
         im2col_u8_into(xq, x.n, x.h, x.w, x.c, k, stride, patches);
         sink.record(&node.name, patches);
 
-        let wrs = p.cfg.weight_rescale();
+        // Per-layer config: the policy's plan decided which prepared
+        // GEMM context (TrimLut) and weight table this layer runs.
+        let le = &p.layers[&node.name];
+        let gemm = &p.gemms[le.gemm];
+        let lcfg = gemm.cfg();
+        let wrs = lcfg.weight_rescale();
         let stc_out;
         let acc: &[i32] = match p.mode {
             EngineMode::Dense => {
                 let acc = grown(&mut scratch.acc, m * qc.o);
-                let wt = &p.prepared[&node.name];
-                p.gemm.gemm_with(
+                gemm.gemm_with(
                     patches,
                     m,
                     kk,
-                    wt,
+                    &le.prepared,
                     qc.o,
                     acc,
                     &mut scratch.pack,
@@ -473,7 +612,7 @@ impl Engine {
                 acc
             }
             EngineMode::Stc => {
-                let cw = &p.compressed[&node.name];
+                let cw = le.compressed.as_ref().expect("STC layer has compressed weights");
                 // pad patches K to the compressed K if needed
                 let src: &[u8] = if cw.k != kk {
                     let padded = grown(&mut scratch.stc_pad, m * cw.k);
@@ -489,7 +628,7 @@ impl Engine {
                 // stc_gemm owns its output; read it in place (the STC
                 // datapath is the Table-6 simulation, not the serving
                 // hot path, so its internal allocation is acceptable).
-                let (out, _) = stc_gemm(src, cw, m, p.cfg);
+                let (out, _) = stc_gemm(src, cw, m, lcfg);
                 stc_out = out;
                 &stc_out
             }
@@ -697,6 +836,146 @@ mod tests {
         // dropping a replica releases its handle, not the parameters
         drop(e1);
         assert_eq!(Arc::strong_count(&params), 2);
+    }
+
+    /// Tiny model with TWO quantized convs for per-layer policy tests.
+    fn tiny_two_quant_model() -> (Graph, Weights) {
+        let graph = Graph {
+            arch: "tinyq2".into(),
+            variant: "test".into(),
+            num_classes: 2,
+            input_hwc: [4, 4, 1],
+            eval_batch: 1,
+            quant_convs: vec!["q1".into(), "q2".into()],
+            nodes: vec![
+                Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+                Node {
+                    name: "q1".into(),
+                    op: Op::Conv { k: 3, stride: 1, out_ch: 2, relu: true, quant: true },
+                    inputs: vec!["img".into()],
+                },
+                Node {
+                    name: "q2".into(),
+                    op: Op::Conv { k: 3, stride: 1, out_ch: 2, relu: true, quant: true },
+                    inputs: vec!["q1".into()],
+                },
+                Node { name: "g".into(), op: Op::Gap, inputs: vec!["q2".into()] },
+                Node { name: "fc".into(), op: Op::Fc { out: 2 }, inputs: vec!["g".into()] },
+            ],
+        };
+        let mut quant = HashMap::new();
+        quant.insert(
+            "q1".to_string(),
+            QuantConv {
+                wq: (0..9 * 2).map(|i| (((i * 29) % 255) as i32 - 127) as i8).collect(),
+                k: 9,
+                o: 2,
+                scale: vec![0.01, 0.02],
+                bias: vec![0.1, -0.1],
+            },
+        );
+        quant.insert(
+            "q2".to_string(),
+            QuantConv {
+                wq: (0..2 * 9 * 2).map(|i| (((i * 53) % 255) as i32 - 127) as i8).collect(),
+                k: 2 * 9,
+                o: 2,
+                scale: vec![0.015, 0.025],
+                bias: vec![0.05, -0.05],
+            },
+        );
+        let weights = Weights {
+            quant,
+            float: HashMap::new(),
+            fc_w: vec![1.0, 0.0, 0.0, 1.0],
+            fc_in: 2,
+            fc_out: 2,
+            fc_b: vec![0.0, 0.0],
+        };
+        (graph, weights)
+    }
+
+    #[test]
+    fn uniform_policy_is_bit_identical_to_uniform_config() {
+        use crate::quant::{LayerSelector, QuantPolicy};
+        let (graph, weights) = tiny_two_quant_model();
+        let scales = [0.02f32, 0.03];
+        let img: Vec<f32> = (0..16).map(|i| (i as f32) / 8.0).collect();
+        for name in ["a8w8", "a4w8", "5opt_r", "2opt", "a8w4"] {
+            let cfg = SparqConfig::named(name).unwrap();
+            let want = Engine::new(&graph, &weights, cfg, &scales, EngineMode::Dense)
+                .unwrap()
+                .forward(&img, 1)
+                .unwrap();
+            // uniform(cfg) and an all-layers-explicit policy with the
+            // same config must both be bit-identical to the plain path.
+            let uni = Engine::with_policy(
+                &graph,
+                &weights,
+                QuantPolicy::uniform(cfg),
+                &scales,
+                EngineMode::Dense,
+            )
+            .unwrap();
+            assert_eq!(uni.forward(&img, 1).unwrap(), want, "{name} uniform policy");
+            assert_eq!(uni.params().distinct_configs(), 1, "{name}: uniform needs 1 LUT");
+            let explicit = QuantPolicy::builder(SparqConfig::A8W8)
+                .set(LayerSelector::Name("q1".into()), cfg)
+                .set(LayerSelector::Name("q2".into()), cfg)
+                .build()
+                .unwrap();
+            let exp = Engine::with_policy(&graph, &weights, explicit, &scales, EngineMode::Dense)
+                .unwrap();
+            assert_eq!(exp.forward(&img, 1).unwrap(), want, "{name} explicit policy");
+        }
+    }
+
+    #[test]
+    fn per_layer_policy_prepares_one_lut_per_distinct_config() {
+        use crate::quant::QuantPolicy;
+        let (graph, weights) = tiny_two_quant_model();
+        let scales = [0.02f32, 0.03];
+        let img: Vec<f32> = (0..16).map(|i| ((i * 7) % 23) as f32 / 10.0).collect();
+        // first8: q1 at A8W8, q2 at A4W8+R -> 2 distinct contexts
+        let policy = QuantPolicy::named("first8").unwrap();
+        let mixed =
+            Engine::with_policy(&graph, &weights, policy, &scales, EngineMode::Dense).unwrap();
+        assert_eq!(mixed.params().distinct_configs(), 2);
+        let plan = mixed.params().layer_cfgs();
+        assert_eq!(plan[0], ("q1".to_string(), SparqConfig::A8W8));
+        assert_eq!(plan[1], ("q2".to_string(), SparqConfig::named("a4w8").unwrap()));
+        // the mixed engine differs from BOTH uniform endpoints…
+        let a8 = Engine::new(&graph, &weights, SparqConfig::A8W8, &scales, EngineMode::Dense)
+            .unwrap()
+            .forward(&img, 1)
+            .unwrap();
+        let a4 = Engine::new(
+            &graph,
+            &weights,
+            SparqConfig::named("a4w8").unwrap(),
+            &scales,
+            EngineMode::Dense,
+        )
+        .unwrap()
+        .forward(&img, 1)
+        .unwrap();
+        let got = mixed.forward(&img, 1).unwrap();
+        assert_ne!(got, a8, "first8 must not equal uniform A8W8");
+        assert_ne!(got, a4, "first8 must not equal uniform A4W8");
+        // …and the policy footprint sits strictly between the endpoints.
+        let bits = mixed.params().footprint_bits(1);
+        assert!(bits > 4.0 && bits < 8.0, "first8 footprint {bits}");
+        // edge8 on a 2-layer model pins both layers -> uniform A8W8.
+        let edge = Engine::with_policy(
+            &graph,
+            &weights,
+            QuantPolicy::named("edge8").unwrap(),
+            &scales,
+            EngineMode::Dense,
+        )
+        .unwrap();
+        assert_eq!(edge.params().distinct_configs(), 1);
+        assert_eq!(edge.forward(&img, 1).unwrap(), a8);
     }
 
     #[test]

@@ -162,6 +162,81 @@ impl Graph {
             .find(|n| n.name == name)
             .with_context(|| format!("node `{name}` not in graph"))
     }
+
+    /// Per-image im2col activation volume — `oh*ow * c_in*k*k` — for
+    /// each quantized conv, in `quant_convs` order: the number of
+    /// quantized activation values that layer's GEMM consumes per
+    /// image. This is the natural weight for policy-level footprint
+    /// accounting ([`crate::quant::footprint::policy_bits_per_activation`]),
+    /// derived by a static shape walk over the graph ops (the same
+    /// shape rules the engine applies at execute time).
+    ///
+    /// The walk is lenient about nodes whose input shape is unknown
+    /// (e.g. structurally invalid corners like a post-fc consumer,
+    /// which the engine rejects with a better error at forward time) —
+    /// it only fails if a *quantized conv's* input shape cannot be
+    /// derived.
+    pub fn quant_act_volumes(&self) -> Result<Vec<usize>> {
+        use crate::tensor::out_dim;
+        let mut shapes: std::collections::HashMap<&str, [usize; 3]> =
+            std::collections::HashMap::new();
+        let mut vols = Vec::new();
+        for node in &self.nodes {
+            let input = |i: usize| -> Option<[usize; 3]> {
+                shapes.get(node.inputs.get(i)?.as_str()).copied()
+            };
+            let out: Option<[usize; 3]> = match &node.op {
+                Op::Input => Some(self.input_hwc),
+                Op::Conv { k, stride, out_ch, quant, .. } => {
+                    let shape = input(0);
+                    if *quant {
+                        let [h, w, c] = shape.with_context(|| {
+                            format!(
+                                "cannot derive the input shape of quantized conv `{}`",
+                                node.name
+                            )
+                        })?;
+                        vols.push(out_dim(h, *stride) * out_dim(w, *stride) * c * k * k);
+                    }
+                    shape.map(|[h, w, _]| [out_dim(h, *stride), out_dim(w, *stride), *out_ch])
+                }
+                Op::Pool { .. } => input(0).map(|[h, w, c]| [h / 2, w / 2, c]),
+                Op::Gap => input(0).map(|[_, _, c]| [1, 1, c]),
+                Op::Add | Op::Relu => input(0),
+                Op::Concat => {
+                    let mut acc = input(0);
+                    if let Some([h, w, _]) = acc {
+                        let mut c_sum = 0usize;
+                        for i in 0..node.inputs.len() {
+                            match input(i) {
+                                Some(s) => c_sum += s[2],
+                                None => {
+                                    acc = None;
+                                    break;
+                                }
+                            }
+                        }
+                        if acc.is_some() {
+                            acc = Some([h, w, c_sum]);
+                        }
+                    }
+                    acc
+                }
+                Op::Fc { .. } => None,
+            };
+            if let Some(s) = out {
+                shapes.insert(node.name.as_str(), s);
+            }
+        }
+        if vols.len() != self.quant_convs.len() {
+            bail!(
+                "shape walk saw {} quantized convs, graph lists {}",
+                vols.len(),
+                self.quant_convs.len()
+            );
+        }
+        Ok(vols)
+    }
 }
 
 #[cfg(test)]
@@ -205,5 +280,14 @@ mod tests {
     fn rejects_quant_conv_mismatch() {
         let bad = TINY_META.replace(r#""quant_convs": ["c2"]"#, r#""quant_convs": ["c1"]"#);
         assert!(Graph::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn quant_act_volumes_match_the_engine_shape_rules() {
+        // tiny meta: img 4x4x2 -> c1 (float, 3x3 s1, 4ch) -> c2 (quant,
+        // 3x3 s2, 6ch) -> gap -> fc. c2's im2col per image:
+        // oh*ow = ceil(4/2)^2 = 4, K = c_in*k*k = 4*9 = 36.
+        let g = Graph::from_json(TINY_META).unwrap();
+        assert_eq!(g.quant_act_volumes().unwrap(), vec![2 * 2 * 4 * 3 * 3]);
     }
 }

@@ -54,6 +54,13 @@
 //!   [`engine::Engine`] is a cheap per-replica handle, so N serving
 //!   replicas (see `coordinator::router`) share a single parameter
 //!   copy instead of N deep clones.
+//! * **Per-layer policies** — parameters are prepared under a
+//!   [`crate::quant::QuantPolicy`]
+//!   ([`engine::ModelParams::with_policy`]): one TrimLut per distinct
+//!   layer config, per-layer requantized weight tables, and the
+//!   forward pass selects each quantized conv's context by name.
+//!   Policy *variants* of one model each carry their own `ModelParams`
+//!   over the same `Arc<Graph>`/`Arc<Weights>`.
 //!
 //! Measure it with `cargo bench --bench hotpath` (no artifacts needed):
 //! the bench compares the naive single-threaded seed GEMM against the

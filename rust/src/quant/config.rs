@@ -7,6 +7,8 @@
 
 use std::fmt;
 
+use anyhow::{bail, Result};
+
 /// Window-placement mode (field 1 of the config vector).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Mode {
@@ -75,52 +77,94 @@ impl SparqConfig {
         })
     }
 
-    /// Paper-named presets; mirrors `ref.named_config`.
+    /// The preset registry — the single source of truth for every
+    /// paper-named configuration. [`SparqConfig::named`], the Table 2/4
+    /// grids below, and the policy API ([`super::policy`]) all resolve
+    /// through this table, so the experiment sweeps and the serving
+    /// configuration surface cannot drift apart.
+    pub const PRESETS: &'static [(&'static str, Self)] = &[
+        ("a8w8", Self::A8W8),
+        ("a4w8", Self::new(4, Mode::Uniform, true, false)),
+        ("a3w8", Self::new(3, Mode::Uniform, true, false)),
+        ("a2w8", Self::new(2, Mode::Uniform, true, false)),
+        // Fully-4-bit baseline (activations AND weights on the reduced
+        // grid) — the harshest uniform PTQ point.
+        (
+            "a4w4",
+            Self { n_bits: 4, mode: Mode::Uniform, round: true, vsparq: false, w_bits: 4 },
+        ),
+        (
+            "a8w4",
+            Self { n_bits: 8, mode: Mode::Full, round: false, vsparq: false, w_bits: 4 },
+        ),
+        ("5opt", Self::new(4, Mode::Full, false, true)),
+        ("5opt_r", Self::new(4, Mode::Full, true, true)),
+        ("5opt_r_novs", Self::new(4, Mode::Full, true, false)),
+        ("3opt", Self::new(4, Mode::Opt3, false, true)),
+        ("3opt_r", Self::new(4, Mode::Opt3, true, true)),
+        ("3opt_r_novs", Self::new(4, Mode::Opt3, true, false)),
+        ("2opt", Self::new(4, Mode::Opt2, false, true)),
+        ("2opt_r", Self::new(4, Mode::Opt2, true, true)),
+        ("2opt_r_novs", Self::new(4, Mode::Opt2, true, false)),
+        ("sysmt", Self::new(4, Mode::Opt2, false, true)),
+        ("6opt_r", Self::new(3, Mode::Full, true, true)),
+        ("6opt_r_novs", Self::new(3, Mode::Full, true, false)),
+        ("7opt_r", Self::new(2, Mode::Full, true, true)),
+        ("7opt_r_novs", Self::new(2, Mode::Full, true, false)),
+    ];
+
+    /// The Table 2 grid's preset names: {5,3,2}opt x {Trim, +R, +R -vS}.
+    pub const TABLE2_NAMES: [&'static str; 9] = [
+        "5opt", "5opt_r", "5opt_r_novs", "3opt", "3opt_r", "3opt_r_novs", "2opt", "2opt_r",
+        "2opt_r_novs",
+    ];
+
+    /// The Table 4 grid's preset names: 3-bit (6opt) and 2-bit (7opt),
+    /// with and without vS.
+    pub const TABLE4_NAMES: [&'static str; 4] =
+        ["6opt_r", "7opt_r", "6opt_r_novs", "7opt_r_novs"];
+
+    /// Paper-named presets; mirrors `ref.named_config`. Resolves through
+    /// [`SparqConfig::PRESETS`].
     pub fn named(name: &str) -> Option<Self> {
-        use Mode::*;
-        let c = |n, m, r, v| Self::new(n, m, r, v);
-        Some(match name {
-            "a8w8" => Self::A8W8,
-            "a4w8" => c(4, Uniform, true, false),
-            "a3w8" => c(3, Uniform, true, false),
-            "a2w8" => c(2, Uniform, true, false),
-            "a8w4" => Self { w_bits: 4, ..Self::A8W8 },
-            "5opt" => c(4, Full, false, true),
-            "5opt_r" => c(4, Full, true, true),
-            "5opt_r_novs" => c(4, Full, true, false),
-            "3opt" => c(4, Opt3, false, true),
-            "3opt_r" => c(4, Opt3, true, true),
-            "3opt_r_novs" => c(4, Opt3, true, false),
-            "2opt" => c(4, Opt2, false, true),
-            "2opt_r" => c(4, Opt2, true, true),
-            "2opt_r_novs" => c(4, Opt2, true, false),
-            "sysmt" => c(4, Opt2, false, true),
-            "6opt_r" => c(3, Full, true, true),
-            "6opt_r_novs" => c(3, Full, true, false),
-            "7opt_r" => c(2, Full, true, true),
-            "7opt_r_novs" => c(2, Full, true, false),
-            _ => return None,
-        })
+        Self::PRESETS.iter().find(|(n, _)| *n == name).map(|&(_, cfg)| cfg)
     }
 
-    /// The 9 SPARQ cells of paper Table 2 (per model): {5,3,2}opt x
-    /// {Trim, +R, +R -vS}.
+    /// Every registered preset name, registry order.
+    pub fn preset_names() -> Vec<&'static str> {
+        Self::PRESETS.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// The 9 SPARQ cells of paper Table 2 (per model), resolved from
+    /// the shared preset registry.
     pub fn table2_grid() -> Vec<(&'static str, Self)> {
-        [
-            "5opt", "5opt_r", "5opt_r_novs", "3opt", "3opt_r", "3opt_r_novs", "2opt",
-            "2opt_r", "2opt_r_novs",
-        ]
-        .iter()
-        .map(|n| (*n, Self::named(n).unwrap()))
-        .collect()
+        Self::TABLE2_NAMES.iter().map(|n| (*n, Self::named(n).unwrap())).collect()
     }
 
-    /// Table 4 grid: 3-bit (6opt) and 2-bit (7opt), with and without vS.
+    /// Table 4 grid, resolved from the shared preset registry.
     pub fn table4_grid() -> Vec<(&'static str, Self)> {
-        ["6opt_r", "7opt_r", "6opt_r_novs", "7opt_r_novs"]
-            .iter()
-            .map(|n| (*n, Self::named(n).unwrap()))
-            .collect()
+        Self::TABLE4_NAMES.iter().map(|n| (*n, Self::named(n).unwrap())).collect()
+    }
+
+    /// Sanity-check a (possibly hand-built) configuration against the
+    /// invariants the trim/LUT/hardware paths assume. Every registry
+    /// preset passes; the policy builder runs this on every override so
+    /// an impossible config is a build error, not a wrong answer.
+    pub fn validate(self) -> Result<()> {
+        if !matches!(self.n_bits, 2 | 3 | 4 | 8) {
+            bail!("n_bits must be one of 2, 3, 4, 8 (got {})", self.n_bits);
+        }
+        if !(2..=8).contains(&self.w_bits) {
+            bail!("w_bits must be in 2..=8 (got {})", self.w_bits);
+        }
+        if matches!(self.mode, Mode::Opt3 | Mode::Opt2) && self.n_bits != 4 {
+            bail!(
+                "{:?} placement is defined for 4-bit windows only (got n_bits={})",
+                self.mode,
+                self.n_bits
+            );
+        }
+        Ok(())
     }
 
     /// Number of window-placement options this config needs in hardware
@@ -205,5 +249,39 @@ mod tests {
     fn table_grids_sized() {
         assert_eq!(SparqConfig::table2_grid().len(), 9);
         assert_eq!(SparqConfig::table4_grid().len(), 4);
+    }
+
+    #[test]
+    fn registry_is_the_single_source_of_truth() {
+        // No duplicate names, every preset validates, and every grid
+        // name resolves through the registry (so the experiment sweeps
+        // and the policy API cannot drift).
+        let names = SparqConfig::preset_names();
+        let mut uniq = names.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), names.len(), "duplicate preset names");
+        for (name, cfg) in SparqConfig::PRESETS {
+            cfg.validate().unwrap_or_else(|e| panic!("preset {name} invalid: {e}"));
+            assert_eq!(SparqConfig::named(name), Some(*cfg));
+        }
+        for name in SparqConfig::TABLE2_NAMES.iter().chain(SparqConfig::TABLE4_NAMES.iter()) {
+            assert!(SparqConfig::named(name).is_some(), "grid name {name} not in registry");
+        }
+        // legacy spot-checks: the registry values match the old match-arm table
+        assert_eq!(SparqConfig::named("sysmt"), SparqConfig::named("2opt"));
+        assert_eq!(SparqConfig::named("a8w4").unwrap().w_bits, 4);
+        assert_eq!(SparqConfig::named("a4w4").unwrap().w_bits, 4);
+        assert_eq!(SparqConfig::named("a4w4").unwrap().n_bits, 4);
+    }
+
+    #[test]
+    fn validate_rejects_impossible_configs() {
+        assert!(SparqConfig::new(5, Mode::Full, false, false).validate().is_err());
+        assert!(SparqConfig::new(3, Mode::Opt3, false, false).validate().is_err());
+        assert!(SparqConfig::new(2, Mode::Opt2, false, false).validate().is_err());
+        let bad_w = SparqConfig { w_bits: 1, ..SparqConfig::A8W8 };
+        assert!(bad_w.validate().is_err());
+        assert!(SparqConfig::A8W8.validate().is_ok());
     }
 }

@@ -46,6 +46,31 @@ pub fn relative_to_native(cfg: SparqConfig, shift_group: u32) -> f64 {
     bits_per_activation(cfg, shift_group) / f64::from(cfg.n_bits)
 }
 
+/// Policy-weighted storage bits per activation: the §5.1 metadata model
+/// applied per layer and averaged with each layer's activation volume
+/// as the weight. `plan` is a lowered per-layer config plan (see
+/// [`crate::quant::policy::QuantPolicy::layer_plan`]) and `volumes[i]`
+/// is layer `i`'s per-image im2col activation count
+/// ([`crate::model::Graph::quant_act_volumes`]). A uniform plan
+/// degenerates to [`bits_per_activation`]; an empty plan (no quantized
+/// convs) reports 0.
+pub fn policy_bits_per_activation(
+    plan: &[SparqConfig],
+    volumes: &[usize],
+    shift_group: u32,
+) -> f64 {
+    assert_eq!(plan.len(), volumes.len(), "one activation volume per planned layer");
+    let total: f64 = volumes.iter().map(|&v| v as f64).sum();
+    if total == 0.0 {
+        return 0.0;
+    }
+    plan.iter()
+        .zip(volumes)
+        .map(|(&cfg, &v)| bits_per_activation(cfg, shift_group) * v as f64)
+        .sum::<f64>()
+        / total
+}
+
 /// The §5.1 worked example and a sweep for the report.
 pub fn footprint_rows() -> Vec<(String, f64, f64, f64)> {
     ["5opt_r", "3opt_r", "2opt_r", "6opt_r", "7opt_r"]
@@ -118,5 +143,27 @@ mod tests {
         assert_eq!(rows.len(), 5);
         // 4-bit full (5opt): 4 + 3 + 0.5 = 7.5 bits/act
         assert_eq!(rows[0].1, 7.5);
+    }
+
+    #[test]
+    fn policy_weighted_bits_interpolate_by_volume() {
+        let a8 = SparqConfig::named("a8w8").unwrap();
+        let a4 = SparqConfig::named("a4w8").unwrap();
+        // uniform plan == the scalar model
+        let plan = [a4, a4];
+        assert_eq!(
+            policy_bits_per_activation(&plan, &[100, 300], 1),
+            bits_per_activation(a4, 1)
+        );
+        // mixed plan: exact volume-weighted mean (a8w8=8.0, a4w8=4.0)
+        let mixed = [a8, a4];
+        let got = policy_bits_per_activation(&mixed, &[100, 300], 1);
+        assert!((got - (8.0 * 100.0 + 4.0 * 300.0) / 400.0).abs() < 1e-12, "{got}");
+        // bigger 8-bit layer -> bigger footprint (monotone in volume)
+        let heavier = policy_bits_per_activation(&mixed, &[300, 100], 1);
+        assert!(heavier > got);
+        // degenerate cases
+        assert_eq!(policy_bits_per_activation(&[], &[], 1), 0.0);
+        assert_eq!(policy_bits_per_activation(&mixed, &[0, 0], 1), 0.0);
     }
 }

@@ -9,7 +9,9 @@
 //! exported HLO (rust/tests/cross_validation.rs).
 //!
 //! Module map:
-//! * [`config`]  — the 5-field configuration vector + paper-named presets
+//! * [`config`]  — the 5-field configuration vector + the preset registry
+//! * [`policy`]  — per-layer `QuantPolicy`: default config + ordered
+//!   overrides, lowered to a per-quant-conv plan (the serving surface)
 //! * [`bsparq`]  — bit-sparsity window trimming (§3.1)
 //! * [`vsparq`]  — pairwise budget sharing (§3.2) + fused dot products
 //! * [`lut`]     — 256-entry trim tables; the optimized hot path
@@ -25,8 +27,10 @@ pub mod config;
 pub mod footprint;
 pub mod lut;
 pub mod minmax;
+pub mod policy;
 pub mod shared_shift;
 pub mod vsparq;
 
 pub use config::{Mode, SparqConfig};
 pub use lut::TrimLut;
+pub use policy::{LayerSelector, QuantPolicy, QuantPolicyBuilder};

@@ -1,0 +1,515 @@
+//! Per-layer quantization policies — the configuration surface the
+//! serving stack is built on.
+//!
+//! SPARQ's whole point is choosing representation granularity, and the
+//! PTQ literature (Banner et al. 2019; Nagel et al. 2021) is explicit
+//! that sub-8-bit accuracy hinges on *per-layer* decisions — keep the
+//! sensitive first/last layers at 8 bits, trim the rest. A
+//! [`QuantPolicy`] makes that first-class: one default [`SparqConfig`]
+//! plus an ordered stack of per-layer overrides, selected by layer
+//! **name**, **index**, or position (**first**/**last**/**all**).
+//!
+//! * **Validated** — the builder runs [`SparqConfig::validate`] on the
+//!   default and every override, so an impossible config is a build
+//!   error, not a silently wrong answer.
+//! * **Ordered** — the default seeds every layer, then overrides apply
+//!   in registration order; a later override that matches the same
+//!   layer wins. An override matching *no* layer is a plan-time error
+//!   (it is almost certainly a typo'd layer name).
+//! * **Lowered** — [`QuantPolicy::layer_plan`] resolves the policy
+//!   against a concrete [`Graph`] into one `SparqConfig` per quantized
+//!   conv (in `graph.quant_convs` order) — the form the engine's
+//!   per-layer LUT and weight tables are prepared from
+//!   ([`crate::model::ModelParams::with_policy`]).
+//! * **JSON round-trippable** — [`QuantPolicy::to_json`] /
+//!   [`QuantPolicy::from_json`] carry policies over the wire; the HTTP
+//!   front door's `GET /v1/models` reports every served variant's
+//!   resolved policy in exactly this encoding.
+//!
+//! Presets resolve through the same registry as the experiment grids
+//! ([`SparqConfig::PRESETS`]): every config preset name is also a
+//! uniform policy name, and a few policy-level presets (`"first8"`,
+//! `"last8"`, `"edge8"`) encode the keep-the-edges-at-8-bit folklore.
+
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::JsonValue;
+use crate::model::Graph;
+
+use super::config::{Mode, SparqConfig};
+
+/// Which quantized conv(s) an override applies to. Layers are the
+/// graph's quantized convs in `graph.quant_convs` order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LayerSelector {
+    /// Exact quantized-conv name (e.g. `"layer2_conv1"`).
+    Name(String),
+    /// Index into the graph's `quant_convs` order.
+    Index(usize),
+    /// The first quantized conv.
+    First,
+    /// The last quantized conv.
+    Last,
+    /// Every quantized conv (a bulk override).
+    All,
+}
+
+impl LayerSelector {
+    /// Does this selector pick the layer `name` at position `idx` of
+    /// `n_layers` quantized convs?
+    pub fn matches(&self, name: &str, idx: usize, n_layers: usize) -> bool {
+        match self {
+            Self::Name(n) => n == name,
+            Self::Index(i) => *i == idx,
+            Self::First => idx == 0,
+            Self::Last => idx + 1 == n_layers,
+            Self::All => true,
+        }
+    }
+
+    fn to_json(&self) -> JsonValue {
+        match self {
+            Self::Name(n) => crate::json_obj! { "name" => n.clone() },
+            Self::Index(i) => crate::json_obj! { "index" => *i },
+            Self::First => JsonValue::from("first"),
+            Self::Last => JsonValue::from("last"),
+            Self::All => JsonValue::from("all"),
+        }
+    }
+
+    fn from_json(v: &JsonValue) -> Result<Self> {
+        if let Some(s) = v.as_str() {
+            return Ok(match s {
+                "first" => Self::First,
+                "last" => Self::Last,
+                "all" => Self::All,
+                other => bail!("unknown layer selector `{other}` (want first/last/all)"),
+            });
+        }
+        if let Some(n) = v.get("name") {
+            let name = n.as_str().context("selector `name` must be a string")?;
+            return Ok(Self::Name(name.to_string()));
+        }
+        if let Some(i) = v.get("index") {
+            let idx = i.as_usize().context("selector `index` must be a number")?;
+            return Ok(Self::Index(idx));
+        }
+        bail!("layer selector must be \"first\"/\"last\"/\"all\" or {{\"name\"|\"index\": …}}")
+    }
+}
+
+impl fmt::Display for LayerSelector {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Name(n) => write!(f, "{n}"),
+            Self::Index(i) => write!(f, "#{i}"),
+            Self::First => write!(f, "first"),
+            Self::Last => write!(f, "last"),
+            Self::All => write!(f, "all"),
+        }
+    }
+}
+
+/// JSON encoding of one [`SparqConfig`]: an explicit field object, or
+/// (on input) a registry preset name string.
+pub fn config_to_json(cfg: SparqConfig) -> JsonValue {
+    crate::json_obj! {
+        "n_bits" => cfg.n_bits as usize,
+        "mode" => mode_name(cfg.mode),
+        "round" => cfg.round,
+        "vsparq" => cfg.vsparq,
+        "w_bits" => cfg.w_bits as usize,
+    }
+}
+
+/// Parse a config from JSON: a preset name string (`"a4w8"`) or an
+/// explicit `{n_bits, mode, round, vsparq, w_bits}` object.
+pub fn config_from_json(v: &JsonValue) -> Result<SparqConfig> {
+    if let Some(name) = v.as_str() {
+        return SparqConfig::named(name)
+            .with_context(|| format!("unknown config preset `{name}`"));
+    }
+    let n_bits = v
+        .get("n_bits")
+        .and_then(JsonValue::as_usize)
+        .context("config missing numeric `n_bits`")?;
+    let mode_str =
+        v.get("mode").and_then(JsonValue::as_str).context("config missing `mode`")?;
+    let mode = match mode_str {
+        "full" => Mode::Full,
+        "opt3" => Mode::Opt3,
+        "opt2" => Mode::Opt2,
+        "uniform" => Mode::Uniform,
+        other => bail!("unknown mode `{other}` (want full/opt3/opt2/uniform)"),
+    };
+    let round = v
+        .get("round")
+        .and_then(JsonValue::as_bool)
+        .context("config missing boolean `round`")?;
+    let vsparq = v
+        .get("vsparq")
+        .and_then(JsonValue::as_bool)
+        .context("config missing boolean `vsparq`")?;
+    let w_bits = v
+        .get("w_bits")
+        .and_then(JsonValue::as_usize)
+        .context("config missing numeric `w_bits`")?;
+    let cfg = SparqConfig {
+        n_bits: u8::try_from(n_bits).context("n_bits out of range")?,
+        mode,
+        round,
+        vsparq,
+        w_bits: u8::try_from(w_bits).context("w_bits out of range")?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn mode_name(mode: Mode) -> &'static str {
+    match mode {
+        Mode::Full => "full",
+        Mode::Opt3 => "opt3",
+        Mode::Opt2 => "opt2",
+        Mode::Uniform => "uniform",
+    }
+}
+
+/// A validated per-layer quantization policy: default config + ordered
+/// override stack. See the module docs for semantics.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantPolicy {
+    default: SparqConfig,
+    overrides: Vec<(LayerSelector, SparqConfig)>,
+}
+
+impl QuantPolicy {
+    /// The same configuration for every layer — the pre-policy API's
+    /// behaviour, and the identity element of this whole design.
+    pub fn uniform(cfg: SparqConfig) -> Self {
+        Self { default: cfg, overrides: Vec::new() }
+    }
+
+    /// Start a builder with `default` seeding every layer.
+    pub fn builder(default: SparqConfig) -> QuantPolicyBuilder {
+        QuantPolicyBuilder { default, overrides: Vec::new() }
+    }
+
+    /// Named policies. Every [`SparqConfig::PRESETS`] name is a uniform
+    /// policy; on top, the PTQ-folklore presets keep sensitive edge
+    /// layers at 8 bits while the rest runs uniform 4-bit:
+    ///
+    /// * `"first8"` — first quantized conv at A8W8, rest A4W8+R;
+    /// * `"last8"`  — last quantized conv at A8W8, rest A4W8+R;
+    /// * `"edge8"`  — first *and* last at A8W8, rest A4W8+R.
+    pub fn named(name: &str) -> Option<Self> {
+        if let Some(cfg) = SparqConfig::named(name) {
+            return Some(Self::uniform(cfg));
+        }
+        let a8 = SparqConfig::A8W8;
+        let a4 = SparqConfig::named("a4w8").expect("a4w8 is in the registry");
+        Some(match name {
+            "first8" => Self {
+                default: a4,
+                overrides: vec![(LayerSelector::First, a8)],
+            },
+            "last8" => Self {
+                default: a4,
+                overrides: vec![(LayerSelector::Last, a8)],
+            },
+            "edge8" => Self {
+                default: a4,
+                overrides: vec![(LayerSelector::First, a8), (LayerSelector::Last, a8)],
+            },
+            _ => return None,
+        })
+    }
+
+    /// Policy-level preset names (beyond the config registry's).
+    pub fn policy_preset_names() -> &'static [&'static str] {
+        &["first8", "last8", "edge8"]
+    }
+
+    /// The config layers fall back to when no override matches.
+    pub fn default_cfg(&self) -> SparqConfig {
+        self.default
+    }
+
+    /// The override stack, registration order.
+    pub fn overrides(&self) -> &[(LayerSelector, SparqConfig)] {
+        &self.overrides
+    }
+
+    /// True when no override is registered — every layer runs the
+    /// default config and the engine prepares exactly one LUT.
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.is_empty()
+    }
+
+    /// Resolve one layer: default, then overrides in order (later wins).
+    pub fn resolve(&self, name: &str, idx: usize, n_layers: usize) -> SparqConfig {
+        let mut cfg = self.default;
+        for (sel, c) in &self.overrides {
+            if sel.matches(name, idx, n_layers) {
+                cfg = *c;
+            }
+        }
+        cfg
+    }
+
+    /// Lower the policy against a concrete graph: one config per
+    /// quantized conv, `graph.quant_convs` order. Total coverage is
+    /// guaranteed by construction (the default seeds every layer); an
+    /// override that matches *no* layer is an error — on a real graph
+    /// that is a typo'd name or an out-of-range index.
+    pub fn layer_plan(&self, graph: &Graph) -> Result<Vec<SparqConfig>> {
+        let n = graph.quant_convs.len();
+        let mut plan = vec![self.default; n];
+        for (sel, cfg) in &self.overrides {
+            let mut hit = false;
+            for (idx, name) in graph.quant_convs.iter().enumerate() {
+                if sel.matches(name, idx, n) {
+                    plan[idx] = *cfg;
+                    hit = true;
+                }
+            }
+            // Positional selectors are vacuously fine on a graph with
+            // no quantized convs; name/index misses are always typos.
+            let positional =
+                matches!(sel, LayerSelector::First | LayerSelector::Last | LayerSelector::All);
+            if !hit && !(n == 0 && positional) {
+                bail!(
+                    "policy override `{sel}` matches no quantized conv (graph has {:?})",
+                    graph.quant_convs
+                );
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Serialize to the wire encoding (`default` + ordered `overrides`).
+    pub fn to_json(&self) -> JsonValue {
+        let overrides: Vec<JsonValue> = self
+            .overrides
+            .iter()
+            .map(|(sel, cfg)| {
+                crate::json_obj! { "layer" => sel.to_json(), "config" => config_to_json(*cfg) }
+            })
+            .collect();
+        crate::json_obj! {
+            "default" => config_to_json(self.default),
+            "overrides" => overrides,
+        }
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse the wire encoding; accepts preset-name strings anywhere a
+    /// config is expected. Everything is re-validated on the way in.
+    pub fn from_json(text: &str) -> Result<Self> {
+        Self::from_json_value(&JsonValue::parse(text)?)
+    }
+
+    pub fn from_json_value(v: &JsonValue) -> Result<Self> {
+        let default =
+            config_from_json(v.get("default").context("policy missing `default`")?)?;
+        let mut builder = Self::builder(default);
+        if let Some(list) = v.get("overrides") {
+            let arr = list.as_array().context("`overrides` must be an array")?;
+            for (i, entry) in arr.iter().enumerate() {
+                let sel = LayerSelector::from_json(
+                    entry.get("layer").with_context(|| format!("override {i}: missing `layer`"))?,
+                )?;
+                let cfg = config_from_json(
+                    entry
+                        .get("config")
+                        .with_context(|| format!("override {i}: missing `config`"))?,
+                )?;
+                builder = builder.set(sel, cfg);
+            }
+        }
+        builder.build()
+    }
+}
+
+impl fmt::Display for QuantPolicy {
+    /// `A4W8+R[first=A8W8,last=A8W8]`; uniform policies print as their
+    /// config alone.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.default)?;
+        if !self.overrides.is_empty() {
+            write!(f, "[")?;
+            for (i, (sel, cfg)) in self.overrides.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                write!(f, "{sel}={cfg}")?;
+            }
+            write!(f, "]")?;
+        }
+        Ok(())
+    }
+}
+
+/// Accumulates overrides, validating every config at [`build`] time.
+///
+/// [`build`]: QuantPolicyBuilder::build
+pub struct QuantPolicyBuilder {
+    default: SparqConfig,
+    overrides: Vec<(LayerSelector, SparqConfig)>,
+}
+
+impl QuantPolicyBuilder {
+    /// Append one override. Later calls matching the same layer win.
+    pub fn set(mut self, sel: LayerSelector, cfg: SparqConfig) -> Self {
+        self.overrides.push((sel, cfg));
+        self
+    }
+
+    /// Validate the default and every override config.
+    pub fn build(self) -> Result<QuantPolicy> {
+        self.default
+            .validate()
+            .context("policy default config is invalid")?;
+        for (sel, cfg) in &self.overrides {
+            cfg.validate()
+                .with_context(|| format!("policy override for `{sel}` is invalid"))?;
+        }
+        Ok(QuantPolicy { default: self.default, overrides: self.overrides })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    // The shared linear-chain test graph (n quantized 1x1 convs named
+    // `l0..`) lives in model::demo so these tests and the layer_plan
+    // property tests exercise the same shape.
+    use crate::model::demo::chain_graph as chain;
+
+    #[test]
+    fn uniform_policy_plans_the_default_everywhere() {
+        let cfg = SparqConfig::named("5opt_r").unwrap();
+        let plan = QuantPolicy::uniform(cfg).layer_plan(&chain(4)).unwrap();
+        assert_eq!(plan, vec![cfg; 4]);
+    }
+
+    #[test]
+    fn overrides_apply_in_order_and_later_wins() {
+        let a4 = SparqConfig::named("a4w8").unwrap();
+        let a8 = SparqConfig::A8W8;
+        let opt5 = SparqConfig::named("5opt_r").unwrap();
+        let policy = QuantPolicy::builder(a4)
+            .set(LayerSelector::All, opt5)
+            .set(LayerSelector::Name("l1".into()), a8)
+            .set(LayerSelector::Index(1), opt5) // later entry rewins l1
+            .set(LayerSelector::Last, a8)
+            .build()
+            .unwrap();
+        let plan = policy.layer_plan(&chain(3)).unwrap();
+        assert_eq!(plan, vec![opt5, opt5, a8]);
+        // resolve() agrees with the plan
+        for (i, name) in ["l0", "l1", "l2"].iter().enumerate() {
+            assert_eq!(policy.resolve(name, i, 3), plan[i]);
+        }
+    }
+
+    #[test]
+    fn edge_preset_pins_first_and_last_at_8_bits() {
+        let policy = QuantPolicy::named("edge8").unwrap();
+        let plan = policy.layer_plan(&chain(3)).unwrap();
+        assert_eq!(plan[0], SparqConfig::A8W8);
+        assert_eq!(plan[1], SparqConfig::named("a4w8").unwrap());
+        assert_eq!(plan[2], SparqConfig::A8W8);
+        // a single-layer graph: first == last, both overrides hit it
+        let one = QuantPolicy::named("first8").unwrap().layer_plan(&chain(1)).unwrap();
+        assert_eq!(one, vec![SparqConfig::A8W8]);
+        // every config preset is also a uniform policy preset
+        for name in SparqConfig::preset_names() {
+            let p = QuantPolicy::named(name).unwrap();
+            assert!(p.is_uniform());
+            assert_eq!(p.default_cfg(), SparqConfig::named(name).unwrap());
+        }
+    }
+
+    #[test]
+    fn unmatched_overrides_are_plan_errors() {
+        let a8 = SparqConfig::A8W8;
+        let typo = QuantPolicy::builder(a8)
+            .set(LayerSelector::Name("l9".into()), a8)
+            .build()
+            .unwrap();
+        let err = typo.layer_plan(&chain(2)).unwrap_err().to_string();
+        assert!(err.contains("l9"), "{err}");
+        let oob = QuantPolicy::builder(a8).set(LayerSelector::Index(5), a8).build().unwrap();
+        assert!(oob.layer_plan(&chain(2)).is_err());
+        // positional selectors are vacuous on a quant-conv-free graph
+        let pos = QuantPolicy::builder(a8).set(LayerSelector::All, a8).build().unwrap();
+        assert_eq!(pos.layer_plan(&chain(0)).unwrap(), Vec::<SparqConfig>::new());
+        // …but name selectors still error there
+        assert!(typo.layer_plan(&chain(0)).is_err());
+    }
+
+    #[test]
+    fn builder_validates_configs() {
+        let bad = SparqConfig::new(5, Mode::Full, false, false);
+        assert!(QuantPolicy::builder(bad).build().is_err());
+        let err = QuantPolicy::builder(SparqConfig::A8W8)
+            .set(LayerSelector::First, SparqConfig::new(3, Mode::Opt2, false, false))
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("first"), "{err}");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_policies() {
+        let a8 = SparqConfig::A8W8;
+        let policy = QuantPolicy::builder(SparqConfig::named("a4w8").unwrap())
+            .set(LayerSelector::First, a8)
+            .set(LayerSelector::Name("l1".into()), SparqConfig::named("5opt_r").unwrap())
+            .set(LayerSelector::Index(2), SparqConfig::named("7opt_r").unwrap())
+            .set(LayerSelector::All, SparqConfig::named("3opt").unwrap())
+            .set(LayerSelector::Last, a8)
+            .build()
+            .unwrap();
+        let text = policy.to_json_string();
+        let back = QuantPolicy::from_json(&text).unwrap();
+        assert_eq!(back, policy, "{text}");
+        // preset-name shorthand is accepted on input
+        let short = r#"{"default": "a4w8", "overrides": [{"layer": "first", "config": "a8w8"}]}"#;
+        let p = QuantPolicy::from_json(short).unwrap();
+        assert_eq!(p, QuantPolicy::named("first8").unwrap());
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(QuantPolicy::from_json("{}").is_err(), "missing default");
+        assert!(QuantPolicy::from_json(r#"{"default": "nope"}"#).is_err(), "unknown preset");
+        assert!(
+            QuantPolicy::from_json(
+                r#"{"default": "a8w8", "overrides": [{"layer": "sideways", "config": "a8w8"}]}"#
+            )
+            .is_err(),
+            "unknown selector"
+        );
+        assert!(
+            QuantPolicy::from_json(
+                r#"{"default": {"n_bits": 5, "mode": "full", "round": false,
+                    "vsparq": false, "w_bits": 8}}"#
+            )
+            .is_err(),
+            "invalid config must not parse"
+        );
+    }
+
+    #[test]
+    fn display_is_compact() {
+        assert_eq!(QuantPolicy::named("a8w8").unwrap().to_string(), "A8W8");
+        let s = QuantPolicy::named("edge8").unwrap().to_string();
+        assert_eq!(s, "A4W8+R[first=A8W8,last=A8W8]");
+    }
+}

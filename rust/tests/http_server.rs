@@ -60,9 +60,10 @@ impl Client {
         self.send_raw(req.as_bytes());
     }
 
-    /// Read exactly one response (status, body). Panics on a closed
-    /// connection so tests that expect keep-alive fail loudly.
-    fn read_response(&mut self) -> (u16, String) {
+    /// Read exactly one response (status, full header section, body).
+    /// Panics on a closed connection so tests that expect keep-alive
+    /// fail loudly.
+    fn read_response_full(&mut self) -> (u16, String, String) {
         let head_end = loop {
             if let Some(i) = find_subsequence(&self.buf, b"\r\n\r\n") {
                 break i;
@@ -94,12 +95,28 @@ impl Client {
         }
         let body = String::from_utf8(self.buf[head_end + 4..total].to_vec()).expect("UTF-8 body");
         self.buf.drain(..total);
+        (status, head, body)
+    }
+
+    fn read_response(&mut self) -> (u16, String) {
+        let (status, _head, body) = self.read_response_full();
         (status, body)
     }
 
     fn request(&mut self, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
         self.send(method, path, body);
         self.read_response()
+    }
+
+    /// Like [`Client::request`] but also returns the header section.
+    fn request_full(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> (u16, String, String) {
+        self.send(method, path, body);
+        self.read_response_full()
     }
 
     /// True if the server has closed this connection (EOF).
@@ -469,6 +486,191 @@ fn query_strings_do_not_change_routing() {
         client.request("POST", "/v1/infer/synth?debug=1", Some(&infer_body(&img(5))));
     assert_eq!(status, 200, "query string broke model resolution: {body}");
     assert_eq!(logits_of(&body, "logits"), engine.forward(&img(5), 1).unwrap());
+    server.shutdown();
+}
+
+/// Two policy variants of the demo model over ONE graph+weights
+/// allocation: `"a8w8"` (default) and `"a4w8"`. Returns the router,
+/// reference engines for both variants, and the shared weights arc for
+/// allocation accounting.
+#[allow(clippy::type_complexity)]
+fn variant_router() -> (
+    Arc<InferenceRouter>,
+    Engine,
+    Engine,
+    Arc<sparq::model::Weights>,
+) {
+    use sparq::quant::QuantPolicy;
+    let (graph, weights, scales) = synth_model();
+    let (graph, weights) = (Arc::new(graph), Arc::new(weights));
+    let pa = Arc::new(
+        ModelParams::with_policy(
+            graph.clone(),
+            weights.clone(),
+            QuantPolicy::named("a8w8").unwrap(),
+            &scales,
+            EngineMode::Dense,
+        )
+        .unwrap(),
+    );
+    let pb = Arc::new(
+        ModelParams::with_policy(
+            graph.clone(),
+            weights.clone(),
+            QuantPolicy::named("a4w8").unwrap(),
+            &scales,
+            EngineMode::Dense,
+        )
+        .unwrap(),
+    );
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        ..BatchPolicy::default()
+    };
+    let router = Arc::new(
+        InferenceRouter::builder()
+            .model_variant_with_threads("synth", "a8w8", pa.clone(), 2, policy, 1)
+            .model_variant_with_threads("synth", "a4w8", pb.clone(), 1, policy, 1)
+            .build()
+            .unwrap(),
+    );
+    (router, Engine::from_params(pa), Engine::from_params(pb), weights)
+}
+
+/// Acceptance bar: a router hosting two variants of one model shares
+/// exactly one weights allocation and serves bit-different logits per
+/// variant over real sockets.
+#[test]
+fn variants_share_weights_and_serve_bit_different_logits_over_sockets() {
+    let (router, engine_a8, engine_a4, weights) = variant_router();
+    // One weights allocation: the local arc + the two ModelParams (the
+    // router's engines clone Arc<ModelParams>, never Arc<Weights>).
+    assert!(Arc::ptr_eq(&engine_a8.params().weights, &engine_a4.params().weights));
+    assert_eq!(
+        Arc::strong_count(&weights),
+        3,
+        "two variants + the test handle must be the ONLY weight references"
+    );
+    let server = HttpServer::bind("127.0.0.1:0", router.clone(), HttpConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+    let want_a8 = engine_a8.forward(&img(1), 1).unwrap();
+    let want_a4 = engine_a4.forward(&img(1), 1).unwrap();
+    assert_ne!(want_a8, want_a4, "variants must be numerically distinct");
+
+    // default dispatch: first registered variant (a8w8)
+    let (status, body) = client.request("POST", "/v1/infer/synth", Some(&infer_body(&img(1))));
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(logits_of(&body, "logits"), want_a8);
+    let parsed = JsonValue::parse(&body).unwrap();
+    assert_eq!(parsed.get("variant").and_then(|v| v.as_str()), Some("a8w8"));
+
+    // path-suffix selection
+    let (status, body) =
+        client.request("POST", "/v1/infer/synth@a4w8", Some(&infer_body(&img(1))));
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(logits_of(&body, "logits"), want_a4, "a4w8 variant must serve a4w8 numerics");
+    let parsed = JsonValue::parse(&body).unwrap();
+    assert_eq!(parsed.get("variant").and_then(|v| v.as_str()), Some("a4w8"));
+
+    // JSON-field selection is equivalent
+    let mut with_field = String::from(r#"{"variant": "a4w8", "#);
+    with_field.push_str(infer_body(&img(1)).strip_prefix('{').unwrap());
+    let (status, body) = client.request("POST", "/v1/infer/synth", Some(&with_field));
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(logits_of(&body, "logits"), want_a4);
+
+    // contradictory path + body selection is a 400
+    let (status, body) = client.request("POST", "/v1/infer/synth@a8w8", Some(&with_field));
+    assert_eq!(status, 400, "{body}");
+
+    // unknown variant is a 404 naming the real ones
+    let (status, body) =
+        client.request("POST", "/v1/infer/synth@int3", Some(&infer_body(&img(1))));
+    assert_eq!(status, 404, "{body}");
+    assert!(body.contains("a4w8") && body.contains("a8w8"), "{body}");
+
+    // per-variant metrics carried the traffic split
+    let m = router.metrics("synth").unwrap();
+    assert_eq!(m.variants.len(), 2);
+    assert!(m.variants.iter().any(|v| v.variant == "a4w8" && v.total.requests >= 2));
+    server.shutdown();
+}
+
+/// Satellite regression: known routes hit with the wrong method return
+/// 405 + `Allow` instead of falling through to 404 — at socket level.
+#[test]
+fn wrong_method_on_known_routes_is_405_with_allow_header() {
+    let (router, _engine) = demo_router(1);
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+    for (method, path, allow) in [
+        ("PUT", "/healthz", "GET"),
+        ("POST", "/v1/metrics", "GET"),
+        ("DELETE", "/v1/models", "GET"),
+        ("GET", "/v1/infer/synth", "POST"),
+    ] {
+        let (status, head, body) = client.request_full(method, path, None);
+        assert_eq!(status, 405, "{method} {path}: {body}");
+        assert!(
+            head.contains(&format!("Allow: {allow}")),
+            "{method} {path}: missing Allow header in {head}"
+        );
+    }
+    // unknown routes stay 404, with no Allow header
+    let (status, head, _body) = client.request_full("GET", "/v2/nope", None);
+    assert_eq!(status, 404);
+    assert!(!head.contains("Allow:"), "{head}");
+    // the connection survived all of it (keep-alive through 405s)
+    let (status, _body) = client.request("GET", "/healthz", None);
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+/// `GET /v1/models` reports shapes, shared parameter bytes, and every
+/// variant's resolved per-layer policy.
+#[test]
+fn models_endpoint_reports_resolved_policies() {
+    let (router, _a8, _a4, weights) = variant_router();
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+    let (status, body) = client.request("GET", "/v1/models", None);
+    assert_eq!(status, 200, "{body}");
+    let v = JsonValue::parse(&body).unwrap_or_else(|e| panic!("not JSON: {e}\n{body}"));
+    let synth = v
+        .get("models")
+        .and_then(|m| m.get("synth"))
+        .unwrap_or_else(|| panic!("no models.synth in {body}"));
+    assert_eq!(synth.get("image_len").and_then(|x| x.as_usize()), Some(IMAGE_LEN));
+    assert_eq!(synth.get("classes").and_then(|x| x.as_usize()), Some(10));
+    assert_eq!(
+        synth.get("param_bytes").and_then(|x| x.as_usize()),
+        Some(weights.param_bytes())
+    );
+    assert_eq!(synth.get("default_variant").and_then(|x| x.as_str()), Some("a8w8"));
+    let variants = synth.get("variants").expect("variants object");
+    for name in ["a8w8", "a4w8"] {
+        let var = variants.get(name).unwrap_or_else(|| panic!("no variant {name}: {body}"));
+        // resolved per-layer configs: one entry per quantized conv
+        let layers = var.get("layers").and_then(|l| l.as_array()).expect("layers");
+        assert_eq!(layers.len(), 3, "demo model has 3 quantized convs");
+        assert_eq!(layers[0].get("layer").and_then(|x| x.as_str()), Some("q1"));
+        // the policy wire encoding round-trips through the policy API
+        let policy_json = var.get("policy").expect("policy").to_string();
+        let parsed = sparq::quant::QuantPolicy::from_json(&policy_json)
+            .unwrap_or_else(|e| panic!("policy not round-trippable: {e}\n{policy_json}"));
+        assert_eq!(parsed, sparq::quant::QuantPolicy::named(name).unwrap());
+        assert!(var.get("footprint_bits_per_act").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    }
+    // the 8-bit variant pays more activation bits than the 4-bit one
+    let bits = |n: &str| {
+        variants
+            .get(n)
+            .and_then(|v| v.get("footprint_bits_per_act"))
+            .and_then(|x| x.as_f64())
+            .unwrap()
+    };
+    assert!(bits("a8w8") > bits("a4w8"), "{body}");
     server.shutdown();
 }
 

@@ -620,6 +620,123 @@ fn prop_bounded_batcher_accounts_every_request_and_respects_depth() {
 }
 
 #[test]
+fn prop_policy_json_roundtrip() {
+    // to_json/from_json is the identity for arbitrary override stacks
+    // (the wire encoding the HTTP introspection surface serves).
+    use sparq::quant::{LayerSelector, QuantPolicy};
+    props!(200, |rng| {
+        let mut b = QuantPolicy::builder(rng.config());
+        let n_ovr = rng.below(5) as usize;
+        for _ in 0..n_ovr {
+            let sel = match rng.below(5) {
+                0 => LayerSelector::Name(format!("q{}", rng.below(6))),
+                1 => LayerSelector::Index(rng.below(6) as usize),
+                2 => LayerSelector::First,
+                3 => LayerSelector::Last,
+                _ => LayerSelector::All,
+            };
+            b = b.set(sel, rng.config());
+        }
+        let policy = b.build().map_err(|e| format!("build: {e}"))?;
+        let text = policy.to_json_string();
+        let back = QuantPolicy::from_json(&text).map_err(|e| format!("parse: {e}\n{text}"))?;
+        prop_assert!(back == policy, "roundtrip mismatch:\n{text}");
+    });
+}
+
+#[test]
+fn prop_layer_plan_total_coverage_and_override_order() {
+    // Every layer resolves to exactly one config, and the plan equals
+    // an independent reference resolution (default seeded, overrides
+    // applied in order, later matching override wins). Uses the shared
+    // linear-chain graph from model::demo (quant convs `l0..`).
+    use sparq::model::demo::chain_graph;
+    use sparq::quant::{LayerSelector, QuantPolicy, SparqConfig};
+    props!(120, |rng| {
+        let n = 1 + rng.below(6) as usize;
+        let graph = chain_graph(n);
+        let default = rng.config();
+        let mut b = QuantPolicy::builder(default);
+        let mut ovrs: Vec<(LayerSelector, SparqConfig)> = Vec::new();
+        for _ in 0..rng.below(6) {
+            // selectors constructed to always match an existing layer,
+            // so the plan must succeed
+            let sel = match rng.below(5) {
+                0 => LayerSelector::Name(format!("l{}", rng.below(n as u64))),
+                1 => LayerSelector::Index(rng.below(n as u64) as usize),
+                2 => LayerSelector::First,
+                3 => LayerSelector::Last,
+                _ => LayerSelector::All,
+            };
+            let cfg = rng.config();
+            ovrs.push((sel.clone(), cfg));
+            b = b.set(sel, cfg);
+        }
+        let policy = b.build().map_err(|e| format!("build: {e}"))?;
+        let plan = policy.layer_plan(&graph).map_err(|e| format!("plan: {e}"))?;
+        prop_assert!(plan.len() == n, "plan must cover every quantized conv");
+        for (idx, name) in graph.quant_convs.iter().enumerate() {
+            let mut want = default;
+            for (sel, cfg) in &ovrs {
+                let hit = match sel {
+                    LayerSelector::Name(s) => s == name,
+                    LayerSelector::Index(i) => *i == idx,
+                    LayerSelector::First => idx == 0,
+                    LayerSelector::Last => idx + 1 == n,
+                    LayerSelector::All => true,
+                };
+                if hit {
+                    want = *cfg;
+                }
+            }
+            prop_assert!(
+                plan[idx] == want,
+                "layer {name} (#{idx}): plan {:?} != reference {want:?}",
+                plan[idx]
+            );
+            prop_assert!(
+                policy.resolve(name, idx, n) == plan[idx],
+                "resolve() disagrees with layer_plan at {name}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_per_layer_lut_gemm_equals_uniform_when_configs_agree() {
+    // A policy that assigns every layer the SAME config through any mix
+    // of selectors must be bit-identical to the uniform-config engine —
+    // per-layer LUT selection is semantics-free when configs agree.
+    use sparq::model::demo::synth_model;
+    use sparq::model::{Engine, EngineMode};
+    use sparq::quant::{LayerSelector, QuantPolicy};
+    let (graph, weights, scales) = synth_model();
+    props!(12, |rng| {
+        let cfg = rng.config();
+        let batch = 1 + rng.below(3) as usize;
+        let img: Vec<f32> = (0..batch * 20 * 20 * 3)
+            .map(|_| (rng.below(251) as f32) / 251.0)
+            .collect();
+        let want = Engine::new(&graph, &weights, cfg, &scales, EngineMode::Dense)
+            .map_err(|e| format!("uniform engine: {e}"))?
+            .forward(&img, batch)
+            .map_err(|e| format!("uniform fwd: {e}"))?;
+        // same config through a stack of redundant selectors
+        let policy = QuantPolicy::builder(cfg)
+            .set(LayerSelector::All, cfg)
+            .set(LayerSelector::First, cfg)
+            .set(LayerSelector::Name("q2".into()), cfg)
+            .set(LayerSelector::Last, cfg)
+            .build()
+            .map_err(|e| format!("build: {e}"))?;
+        let engine = Engine::with_policy(&graph, &weights, policy, &scales, EngineMode::Dense)
+            .map_err(|e| format!("policy engine: {e}"))?;
+        let got = engine.forward(&img, batch).map_err(|e| format!("policy fwd: {e}"))?;
+        prop_assert!(got == want, "per-layer-LUT GEMM diverged from uniform for {cfg}");
+    });
+}
+
+#[test]
 fn prop_im2col_patch_values_come_from_input_or_padding() {
     use sparq::tensor::im2col_u8;
     props!(60, |rng| {
