@@ -1,0 +1,282 @@
+//! `ops_top`: a top-style live terminal view over `GET /v1/metrics`.
+//!
+//! ```bash
+//! cargo run --release --example ops_top                            # self-hosted demo
+//! cargo run --release --example ops_top -- --attach 127.0.0.1:8080 # watch a real server
+//! cargo run --release --example ops_top -- --frames 2 --interval-ms 100 --plain  # CI smoke
+//! ```
+//!
+//! Default mode boots the three-variant demo router (`5opt_r` default,
+//! `a8w8`, `first8`, one shared weights allocation) behind the HTTP
+//! front door on an ephemeral loopback port, drives it with a weighted
+//! synthetic load (~70/20/10 across the variants), and then polls its
+//! own `/v1/metrics` endpoint **over a real socket** — exactly the path
+//! an external collector takes, so the dashboard exercises the wire
+//! format, not an in-process shortcut.
+//!
+//! Each frame shows aggregate request rate (delta between polls),
+//! per-variant request shares, per-shard p50/p99 with a sparkline of
+//! the bucketed latency histogram, and the queue-health counters
+//! (depth/peak/shed/expired/rejected) that make overload visible.
+//!
+//! `--frames N` stops after N frames (default 5), `--once` is
+//! `--frames 1`, `--interval-ms M` sets the poll period, and `--plain`
+//! suppresses ANSI screen clearing (also auto-suppressed when stdout is
+//! not a terminal).
+
+use std::io::IsTerminal;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+use sparq::coordinator::{BatchPolicy, HttpConfig, HttpServer, InferenceRouter};
+use sparq::json::JsonValue;
+use sparq::model::demo::synth_model;
+use sparq::model::{EngineMode, ModelParams};
+use sparq::observability::http_get_json;
+use sparq::quant::{QuantPolicy, SparqConfig};
+
+fn main() -> Result<()> {
+    let mut attach: Option<String> = None;
+    let mut frames = 5usize;
+    let mut interval = Duration::from_millis(500);
+    let mut plain = false;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--attach" => {
+                i += 1;
+                attach = Some(args.get(i).context("`--attach` needs host:port")?.clone());
+            }
+            "--frames" => {
+                i += 1;
+                frames = args.get(i).context("`--frames` needs a count")?.parse()?;
+            }
+            "--interval-ms" => {
+                i += 1;
+                let ms: u64 = args.get(i).context("`--interval-ms` needs a number")?.parse()?;
+                interval = Duration::from_millis(ms);
+            }
+            "--once" => frames = 1,
+            "--plain" => plain = true,
+            other => anyhow::bail!("unknown argument `{other}`"),
+        }
+        i += 1;
+    }
+    anyhow::ensure!(frames >= 1, "--frames must be at least 1");
+    let clear = !plain && std::io::stdout().is_terminal();
+
+    // Demo stack (kept alive for the whole run) unless attaching.
+    let demo = if attach.is_none() {
+        Some(demo_stack()?)
+    } else {
+        None
+    };
+    let addr = match &attach {
+        Some(a) => a.clone(),
+        None => demo.as_ref().unwrap().0.addr().to_string(),
+    };
+    println!("polling http://{addr}/v1/metrics ({frames} frame(s), every {interval:?})");
+
+    let mut prev: Option<(Instant, f64)> = None;
+    for frame in 0..frames {
+        if frame > 0 {
+            std::thread::sleep(interval);
+        }
+        let metrics = http_get_json(&addr, "/v1/metrics", Duration::from_secs(5))?;
+        render(&metrics, &addr, frame, &mut prev, clear);
+    }
+    Ok(())
+}
+
+/// Load-generator threads attached to the demo router; stopped and
+/// joined on drop so the example always exits cleanly.
+struct DemoLoad {
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for DemoLoad {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// The three-variant demo router behind the front door on an ephemeral
+/// loopback port, plus a weighted synthetic load: per 10 requests,
+/// 7 hit the default `5opt_r` variant, 2 `a8w8`, 1 `first8`.
+fn demo_stack() -> Result<(HttpServer, DemoLoad)> {
+    let (graph, weights, scales) = synth_model();
+    let (graph, weights) = (Arc::new(graph), Arc::new(weights));
+    let policy = BatchPolicy {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        ..BatchPolicy::default()
+    };
+    let mk = |p: QuantPolicy| -> Result<Arc<ModelParams>> {
+        Ok(Arc::new(ModelParams::with_policy(
+            graph.clone(),
+            weights.clone(),
+            p,
+            &scales,
+            EngineMode::Dense,
+        )?))
+    };
+    let sparq = mk(QuantPolicy::uniform(SparqConfig::named("5opt_r").unwrap()))?;
+    let a8w8 = mk(QuantPolicy::named("a8w8").expect("registry preset"))?;
+    let first8 = mk(QuantPolicy::named("first8").expect("registry preset"))?;
+    let [h, w, c] = graph.input_hwc;
+    let router = Arc::new(
+        InferenceRouter::builder()
+            .model_variant_with_threads("synth", "5opt_r", sparq, 2, policy, 1)
+            .model_variant_with_threads("synth", "a8w8", a8w8, 1, policy, 1)
+            .model_variant_with_threads("synth", "first8", first8, 1, policy, 1)
+            .build()?,
+    );
+    let server = HttpServer::bind("127.0.0.1:0", router.clone(), HttpConfig::default())?;
+    let image: Vec<f32> = (0..h * w * c)
+        .map(|j| {
+            let hash = (j as u64).wrapping_mul(0x9e3779b97f4a7c15);
+            (hash >> 40) as f32 / 16_777_216.0
+        })
+        .collect();
+    let stop = Arc::new(AtomicBool::new(false));
+    let threads = (0..3)
+        .map(|t| {
+            let r = router.clone();
+            let im = image.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut i = t * 3; // offset so the threads interleave variants
+                while !stop.load(Ordering::Relaxed) {
+                    let res = match i % 10 {
+                        0..=6 => r.infer("synth", im.clone()),
+                        7 | 8 => r.infer_variant("synth", "a8w8", im.clone()),
+                        _ => r.infer_variant("synth", "first8", im.clone()),
+                    };
+                    if res.is_err() {
+                        break; // router shut down — stop generating
+                    }
+                    i += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        })
+        .collect();
+    Ok((server, DemoLoad { stop, threads }))
+}
+
+fn num(v: Option<&JsonValue>) -> f64 {
+    v.and_then(JsonValue::as_f64).unwrap_or(0.0)
+}
+
+/// ASCII sparkline over the histogram's (elided) bucket counts — shape
+/// of the latency distribution at a glance.
+fn sparkline(hist: Option<&JsonValue>) -> String {
+    let Some(buckets) = hist.and_then(|hh| hh.get("buckets")).and_then(JsonValue::as_array)
+    else {
+        return String::new();
+    };
+    let counts: Vec<f64> = buckets.iter().map(|b| num(b.get("count"))).collect();
+    let max = counts.iter().cloned().fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        return String::new();
+    }
+    const GLYPHS: [char; 8] = ['.', ':', '-', '=', '+', 'x', '*', '#'];
+    counts
+        .iter()
+        .map(|&cnt| GLYPHS[((cnt / max) * 7.0).round() as usize])
+        .collect()
+}
+
+fn share_bar(frac: f64, width: usize) -> String {
+    let filled = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
+    format!("{}{}", "#".repeat(filled), ".".repeat(width - filled))
+}
+
+fn render(
+    metrics: &JsonValue,
+    addr: &str,
+    frame: usize,
+    prev: &mut Option<(Instant, f64)>,
+    clear: bool,
+) {
+    if clear {
+        print!("\x1b[2J\x1b[H");
+    }
+    let now = Instant::now();
+    let agg = metrics.get("aggregate");
+    let requests = num(agg.and_then(|a| a.get("requests")));
+    let rate = match *prev {
+        Some((t0, r0)) => {
+            let dt = now.duration_since(t0).as_secs_f64();
+            if dt > 0.0 {
+                (requests - r0).max(0.0) / dt
+            } else {
+                0.0
+            }
+        }
+        None => 0.0,
+    };
+    *prev = Some((now, requests));
+    println!("ops_top — http://{addr}/v1/metrics — frame {frame}");
+    println!(
+        "aggregate: {requests:.0} reqs  {rate:>8.1} req/s   batches {:.0}  shed {:.0}  \
+         rejected {:.0}  expired {:.0}",
+        num(agg.and_then(|a| a.get("batches"))),
+        num(agg.and_then(|a| a.get("shed"))),
+        num(agg.and_then(|a| a.get("rejected"))),
+        num(agg.and_then(|a| a.get("expired"))),
+    );
+    let Some(models) = metrics.get("models").and_then(JsonValue::as_object) else {
+        println!("(no models reported)");
+        return;
+    };
+    for (name, m) in models {
+        let total = m.get("total");
+        let model_reqs = num(total.and_then(|t| t.get("requests"))).max(1.0);
+        println!(
+            "\nmodel {name}: {} replica(s), {} param bytes, queue depth {:.0} (peak {:.0})",
+            num(m.get("replicas")),
+            num(m.get("param_bytes")),
+            num(total.and_then(|t| t.get("queue_depth"))),
+            num(total.and_then(|t| t.get("peak_queue_depth"))),
+        );
+        if let Some(variants) = m.get("variants").and_then(JsonValue::as_array) {
+            for v in variants {
+                let vname = v.get("variant").and_then(JsonValue::as_str).unwrap_or("?");
+                let vreqs = num(v.get("total").and_then(|t| t.get("requests")));
+                println!(
+                    "  {vname:<10} [{}] {vreqs:>8.0} reqs  {:.0} replica(s)  \
+                     {:.2} bits/act",
+                    share_bar(vreqs / model_reqs, 20),
+                    num(v.get("replicas")),
+                    num(v.get("footprint_bits_per_act")),
+                );
+            }
+        }
+        if let Some(shards) = m.get("shards").and_then(JsonValue::as_array) {
+            for s in shards {
+                let b = s.get("batcher");
+                println!(
+                    "    shard {:>2}  p50 {:>7.0} us  p99 {:>7.0} us  {:>8.0} reqs  \
+                     peak {:>3.0}  shed {:.0}  rej {:.0}  exp {:.0}  {}",
+                    num(s.get("shard")),
+                    num(s.get("p50_latency_us")),
+                    num(s.get("p99_latency_us")),
+                    num(b.and_then(|x| x.get("requests"))),
+                    num(b.and_then(|x| x.get("peak_queue_depth"))),
+                    num(b.and_then(|x| x.get("shed"))),
+                    num(b.and_then(|x| x.get("rejected"))),
+                    num(b.and_then(|x| x.get("expired"))),
+                    sparkline(s.get("hist")),
+                );
+            }
+        }
+    }
+}

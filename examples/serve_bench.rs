@@ -1,11 +1,13 @@
-//! Serving benchmark: the dynamically batched SPARQ inference service
-//! under concurrent client load — latency/throughput for the paper's
-//! "increase execution performance" motivation.
+//! Serving benchmark + the repo's continuous-perf entry point.
 //!
 //! ```bash
 //! cargo run --release --example serve_bench [artifacts-dir] [clients] [requests-per-client]
 //! cargo run --release --example serve_bench -- --http [clients] [requests-per-client]
-//! cargo run --release --example serve_bench -- --http-smoke
+//! cargo run --release --example serve_bench -- --http-smoke [--poll-backend]
+//! cargo run --release --example serve_bench -- --bench-json BENCH_sparq.json [--tiny]
+//! cargo run --release --example serve_bench -- --validate-report BENCH_sparq.json
+//! cargo run --release --example serve_bench -- --check-budgets \
+//!     [--report BENCH_sparq.json] [--baseline BENCH_BASELINE.json]
 //! ```
 //!
 //! With exported artifacts + a real PJRT backend the default mode
@@ -19,11 +21,21 @@
 //! (`5opt_r` default, `a8w8`, `first8`) sharing one weights allocation
 //! — through the HTTP/1.1 front door on an ephemeral loopback port and
 //! benchmarks it with keep-alive `std::net::TcpStream` clients;
-//! `--http-smoke` drives the same stack end-to-end: a default-variant
-//! request bit-identical to `Engine::forward`, `GET /v1/models` policy
-//! introspection, and a non-default-variant request whose logits must
-//! differ from the uniform-A8W8 variant's. Exits non-zero on any
-//! mismatch (the CI smoke job).
+//! `--http-smoke` drives the same stack end-to-end and exits non-zero
+//! on any mismatch (the CI smoke job). `--poll-backend` forces
+//! minipoll's portable `poll(2)` event-loop backend for either.
+//!
+//! `--bench-json <path>` runs the machine-readable perf suite — kernel
+//! (naive / blocked 1-thread / blocked parallel), engine forward,
+//! per-layer policy variants, sharded router, HTTP edge — and writes a
+//! schema-validated `sparq-bench/1` report (`sparq::observability`).
+//! `--tiny` shrinks every shape for CI smoke runs. `--check-budgets`
+//! compares a report against `BENCH_BASELINE.json` and
+//! `--validate-report` checks schema only.
+//!
+//! Exit codes are distinct so CI can tell failure classes apart:
+//! `0` success, `1` benchmark/infrastructure failure, `2` budget
+//! regression, `3` schema-invalid report.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
@@ -33,35 +45,130 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 use sparq::coordinator::{
-    calibrate, BatchPolicy, HttpConfig, HttpServer, InferenceRouter, InferenceServer,
+    calibrate, BatchPolicy, HttpConfig, HttpServer, InferenceRouter, InferenceServer, LatencyHist,
 };
 use sparq::data::Dataset;
 use sparq::json::JsonValue;
 use sparq::json_obj;
 use sparq::model::demo::synth_model;
-use sparq::model::{Engine, EngineMode, Graph, ModelParams};
+use sparq::model::{threadpool, Engine, EngineMode, Graph, ModelParams, QuantGemm, Scratch};
+use sparq::observability::{
+    check, time_iters, BenchReport, BenchSection, BudgetFile, QueueStats, Timing, SCHEMA_VERSION,
+};
+use sparq::quant::footprint::report_bits;
 use sparq::quant::{QuantPolicy, SparqConfig};
 use sparq::runtime::{Manifest, PjrtRuntime};
 
-fn main() -> Result<()> {
-    let mut http_mode = false;
-    let mut smoke = false;
-    let mut positional: Vec<String> = Vec::new();
-    for arg in std::env::args().skip(1) {
-        match arg.as_str() {
-            "--http" => http_mode = true,
-            "--http-smoke" => smoke = true,
-            other => positional.push(other.to_string()),
+/// Everything worked.
+const EXIT_OK: i32 = 0;
+/// The benchmark (or its serving infrastructure) itself failed.
+const EXIT_BENCH_FAILED: i32 = 1;
+/// The run completed but breached the perf budget baseline.
+const EXIT_BUDGET_REGRESSION: i32 = 2;
+/// A report file failed `sparq-bench/1` schema validation.
+const EXIT_INVALID_REPORT: i32 = 3;
+
+struct Cli {
+    http: bool,
+    smoke: bool,
+    poll_backend: bool,
+    tiny: bool,
+    check_budgets: bool,
+    bench_json: Option<PathBuf>,
+    validate_report: Option<PathBuf>,
+    report: PathBuf,
+    baseline: PathBuf,
+    positional: Vec<String>,
+}
+
+fn parse_cli() -> Result<Cli> {
+    fn path_after(args: &[String], i: &mut usize, flag: &str) -> Result<PathBuf> {
+        *i += 1;
+        args.get(*i)
+            .map(PathBuf::from)
+            .with_context(|| format!("`{flag}` needs a path argument"))
+    }
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cli = Cli {
+        http: false,
+        smoke: false,
+        poll_backend: false,
+        tiny: false,
+        check_budgets: false,
+        bench_json: None,
+        validate_report: None,
+        report: PathBuf::from("BENCH_sparq.json"),
+        baseline: PathBuf::from("BENCH_BASELINE.json"),
+        positional: Vec::new(),
+    };
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--http" => cli.http = true,
+            "--http-smoke" => cli.smoke = true,
+            "--poll-backend" => cli.poll_backend = true,
+            "--tiny" => cli.tiny = true,
+            "--check-budgets" => cli.check_budgets = true,
+            "--bench-json" => cli.bench_json = Some(path_after(&args, &mut i, "--bench-json")?),
+            "--validate-report" => {
+                cli.validate_report = Some(path_after(&args, &mut i, "--validate-report")?)
+            }
+            "--report" => cli.report = path_after(&args, &mut i, "--report")?,
+            "--baseline" => cli.baseline = path_after(&args, &mut i, "--baseline")?,
+            flag if flag.starts_with("--") => anyhow::bail!("unknown flag `{flag}`"),
+            other => cli.positional.push(other.to_string()),
+        }
+        i += 1;
+    }
+    Ok(cli)
+}
+
+fn main() {
+    std::process::exit(run());
+}
+
+fn run() -> i32 {
+    let cli = match parse_cli() {
+        Ok(cli) => cli,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            return EXIT_BENCH_FAILED;
+        }
+    };
+    // Artifact-level commands first: they exit on their own codes and
+    // never start a server.
+    if let Some(path) = &cli.validate_report {
+        return validate_report(path);
+    }
+    if cli.check_budgets {
+        return check_budgets(&cli.report, &cli.baseline);
+    }
+    let res = if let Some(path) = &cli.bench_json {
+        bench_json(path, cli.tiny, cli.poll_backend)
+    } else if cli.smoke {
+        http_smoke(cli.poll_backend)
+    } else if cli.http {
+        let parsed = || -> Result<(usize, usize)> {
+            let clients = cli.positional.first().map(|s| s.parse()).transpose()?.unwrap_or(16);
+            let per = cli.positional.get(1).map(|s| s.parse()).transpose()?.unwrap_or(32);
+            Ok((clients, per))
+        };
+        parsed().and_then(|(clients, per)| http_bench(clients, per, cli.poll_backend))
+    } else {
+        default_mode(&cli.positional)
+    };
+    match res {
+        Ok(()) => EXIT_OK,
+        Err(e) => {
+            eprintln!("benchmark failed: {e:#}");
+            EXIT_BENCH_FAILED
         }
     }
-    if smoke {
-        return http_smoke();
-    }
-    if http_mode {
-        let clients: usize = positional.first().map(|s| s.parse()).transpose()?.unwrap_or(16);
-        let per_client: usize = positional.get(1).map(|s| s.parse()).transpose()?.unwrap_or(32);
-        return http_bench(clients, per_client);
-    }
+}
+
+/// The original default: PJRT serving over exported artifacts when
+/// available, the native sharded-router benchmark otherwise.
+fn default_mode(positional: &[String]) -> Result<()> {
     let dir = PathBuf::from(positional.first().map(String::as_str).unwrap_or("artifacts"));
     let clients: usize = positional.get(1).map(|s| s.parse()).transpose()?.unwrap_or(16);
     let per_client: usize = positional.get(2).map(|s| s.parse()).transpose()?.unwrap_or(32);
@@ -84,6 +191,346 @@ fn main() -> Result<()> {
             native_router_bench(clients, per_client)
         }
     }
+}
+
+/// `--validate-report`: schema check only; exit 0 or 3.
+fn validate_report(path: &Path) -> i32 {
+    match BenchReport::load(path) {
+        Ok(r) => {
+            println!(
+                "valid {SCHEMA_VERSION} report: {} section(s), host {} core(s), sha {}",
+                r.sections.len(),
+                r.host.cores,
+                r.host.git_sha
+            );
+            EXIT_OK
+        }
+        Err(e) => {
+            eprintln!("invalid bench report: {e:#}");
+            EXIT_INVALID_REPORT
+        }
+    }
+}
+
+/// `--check-budgets`: gate a report on the committed baseline. An
+/// unreadable/invalid report is a schema failure (exit 3), a broken
+/// baseline file is an infrastructure failure (exit 1), and any budget
+/// breach is the regression exit (2) — CI tells these apart.
+fn check_budgets(report_path: &Path, baseline_path: &Path) -> i32 {
+    let report = match BenchReport::load(report_path) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("invalid bench report: {e:#}");
+            return EXIT_INVALID_REPORT;
+        }
+    };
+    let budgets = match BudgetFile::load(baseline_path) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("cannot load budget baseline: {e:#}");
+            return EXIT_BENCH_FAILED;
+        }
+    };
+    let violations = check(&report, &budgets);
+    if violations.is_empty() {
+        println!(
+            "budgets OK: {} section(s) of {} within {}'s tolerances",
+            report.sections.len(),
+            report_path.display(),
+            baseline_path.display()
+        );
+        return EXIT_OK;
+    }
+    eprintln!("budget regression: {} violation(s)", violations.len());
+    for v in &violations {
+        eprintln!("  {v}");
+    }
+    EXIT_BUDGET_REGRESSION
+}
+
+/// Deterministic activation operands with ~`sparsity_pct`% zeros (the
+/// regime SPARQ exploits) — same generator the benches use.
+fn synth_acts(n: usize, sparsity_pct: u64) -> Vec<u8> {
+    (0..n)
+        .map(|i| {
+            let h = (i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33;
+            if h % 100 < sparsity_pct {
+                0
+            } else {
+                (h % 256) as u8
+            }
+        })
+        .collect()
+}
+
+fn push_kernel(report: &mut BenchReport, name: &str, t: &Timing, macs: f64, bits: f64) {
+    let gmac = t.throughput(macs) / 1e9;
+    println!(
+        "  {name:<18} {gmac:>9.2} GMAC/s   p50 {:>9.1} us   p99 {:>9.1} us",
+        t.p50_us, t.p99_us
+    );
+    report.push(BenchSection {
+        gmac_per_s: gmac,
+        p50_us: t.p50_us,
+        p99_us: t.p99_us,
+        bits_per_act: bits,
+        ..BenchSection::new(name)
+    });
+}
+
+/// `--bench-json`: the continuous-perf suite. Every section lands in
+/// one `sparq-bench/1` report that is self-validated before it is
+/// written, so the emitter can never produce a file `--check-budgets`
+/// would then reject.
+fn bench_json(path: &Path, tiny: bool, poll_backend: bool) -> Result<()> {
+    let cfg = SparqConfig::named("5opt_r").unwrap();
+    let nt = threadpool::max_threads();
+    let max_replicas = nt.max(2);
+    let mut report = BenchReport::new();
+    println!(
+        "{SCHEMA_VERSION} suite -> {} ({} shapes, {nt} thread(s), sha {})",
+        path.display(),
+        if tiny { "tiny" } else { "full" },
+        report.host.git_sha
+    );
+
+    // --- kernel sections: the quantized GEMM, seed vs blocked ---
+    let (m, k, n) = if tiny { (64, 576, 32) } else { (400, 1152, 64) };
+    let (warm, iters) = if tiny { (2, 8) } else { (3, 20) };
+    let a = synth_acts(m * k, 40);
+    let w = sparq::model::demo::synth_weights(k * n);
+    let gemm = QuantGemm::new(cfg);
+    let wt = gemm.prepare_weights(&w, k, n);
+    let mut rows = a.clone();
+    let mut out = vec![0i32; m * n];
+    let mut pack = Vec::new();
+    let macs = (m * k * n) as f64;
+    let bits = report_bits(cfg);
+
+    let t = time_iters(warm, iters, || {
+        rows.copy_from_slice(&a);
+        gemm.gemm_naive(&mut rows, m, k, &wt, n, &mut out);
+        std::hint::black_box(&out);
+    });
+    let reference = out.clone();
+    push_kernel(&mut report, "kernel_naive", &t, macs, bits);
+
+    let t = time_iters(warm, iters, || {
+        rows.copy_from_slice(&a);
+        gemm.gemm_with(&mut rows, m, k, &wt, n, &mut out, &mut pack, 1);
+        std::hint::black_box(&out);
+    });
+    anyhow::ensure!(out == reference, "blocked serial GEMM diverged from naive");
+    push_kernel(&mut report, "kernel_blocked_1t", &t, macs, bits);
+
+    let t = time_iters(warm, iters, || {
+        rows.copy_from_slice(&a);
+        gemm.gemm_with(&mut rows, m, k, &wt, n, &mut out, &mut pack, nt);
+        std::hint::black_box(&out);
+    });
+    anyhow::ensure!(out == reference, "blocked parallel GEMM diverged from naive");
+    push_kernel(&mut report, "kernel_blocked_mt", &t, macs, bits);
+
+    // --- engine sections: end-to-end native forward, 1 vs N threads ---
+    let (graph, wts, scales) = synth_model();
+    let [h, wd, c] = graph.input_hwc;
+    let batch = if tiny { 8 } else { 32 };
+    let e_iters = if tiny { 8 } else { 15 };
+    let img: Vec<f32> = (0..batch * h * wd * c)
+        .map(|i| ((i as u64).wrapping_mul(0x9e3779b97f4a7c15) >> 33) as f32 % 251.0 / 251.0)
+        .collect();
+    let mut engine = Engine::new(&graph, &wts, cfg, &scales, EngineMode::Dense)?;
+    let mut scratch = Scratch::default();
+    for (name, threads) in [("engine_fwd_1t", 1), ("engine_fwd_mt", nt)] {
+        engine.set_threads(threads);
+        let t = time_iters(2, e_iters, || {
+            std::hint::black_box(engine.forward_scratch(&img, batch, &mut scratch).unwrap());
+        });
+        let img_s = t.throughput(batch as f64);
+        println!(
+            "  {name:<18} {img_s:>9.1} img/s    p50 {:>9.1} us   p99 {:>9.1} us",
+            t.p50_us, t.p99_us
+        );
+        report.push(BenchSection {
+            img_per_s: img_s,
+            p50_us: t.p50_us,
+            p99_us: t.p99_us,
+            bits_per_act: bits,
+            ..BenchSection::new(name)
+        });
+    }
+
+    // --- policy sections: per-layer quantization variants, with the
+    // §5.1 footprint each one pays per activation ---
+    for (name, pname) in
+        [("policy_a8w8", "a8w8"), ("policy_a4w8", "a4w8"), ("policy_edge8", "edge8")]
+    {
+        let policy = QuantPolicy::named(pname).expect("registry preset");
+        let mut e = Engine::with_policy(&graph, &wts, policy, &scales, EngineMode::Dense)?;
+        e.set_threads(nt);
+        let pbits = e.params().footprint_bits(1);
+        let mut sc = Scratch::default();
+        let t = time_iters(2, e_iters, || {
+            std::hint::black_box(e.forward_scratch(&img, batch, &mut sc).unwrap());
+        });
+        let img_s = t.throughput(batch as f64);
+        println!("  {name:<18} {img_s:>9.1} img/s    {pbits:.2} bits/act");
+        report.push(BenchSection {
+            img_per_s: img_s,
+            p50_us: t.p50_us,
+            p99_us: t.p99_us,
+            bits_per_act: pbits,
+            ..BenchSection::new(name)
+        });
+    }
+
+    // --- router sections: 1 vs N single-thread replica shards over one
+    // shared Arc'd parameter copy; latency from the shards' own merged
+    // histograms, queue health from the aggregate snapshot ---
+    let params = Arc::new(ModelParams::new(
+        Arc::new(graph.clone()),
+        Arc::new(wts.clone()),
+        cfg,
+        &scales,
+        EngineMode::Dense,
+    )?);
+    let single = img[..h * wd * c].to_vec();
+    let (clients, per) = if tiny {
+        (4, 12)
+    } else {
+        (max_replicas * 2, 48)
+    };
+    for (name, nrep) in [("router_1shard", 1), ("router_mshard", max_replicas)] {
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_with_threads(
+                    "synth",
+                    params.clone(),
+                    nrep,
+                    BatchPolicy {
+                        max_batch: 8,
+                        max_wait: Duration::from_micros(500),
+                        ..BatchPolicy::default()
+                    },
+                    1,
+                )
+                .build()?,
+        );
+        let _ = router.infer("synth", single.clone())?; // warmup
+        let t0 = Instant::now();
+        let mut client_err = None;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..clients)
+                .map(|_| {
+                    let r = router.clone();
+                    let im = single.clone();
+                    s.spawn(move || -> Result<()> {
+                        for _ in 0..per {
+                            r.infer("synth", im.clone())?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            for hd in handles {
+                if let Err(e) = hd.join().expect("router client thread panicked") {
+                    client_err = Some(e);
+                }
+            }
+        });
+        if let Some(e) = client_err {
+            return Err(e.context(format!("{name} client failed")));
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let metrics = router.metrics("synth")?;
+        let mut hist = LatencyHist::default();
+        for shard in &metrics.shards {
+            hist.merge(&shard.hist);
+        }
+        let img_s = (clients * per) as f64 / wall;
+        println!(
+            "  {name:<18} {img_s:>9.1} img/s    p50 {:>9} us   p99 {:>9} us   peak queue {}",
+            hist.quantile_us(0.50),
+            hist.quantile_us(0.99),
+            metrics.total.peak_queue_depth
+        );
+        report.push(BenchSection {
+            img_per_s: img_s,
+            p50_us: hist.quantile_us(0.50) as f64,
+            p99_us: hist.quantile_us(0.99) as f64,
+            queue: QueueStats::from_snapshot(&metrics.total),
+            bits_per_act: bits,
+            ..BenchSection::new(name)
+        });
+    }
+
+    // --- HTTP edge: the same stack behind the front door; latency is
+    // measured client-side (it includes the network edge) ---
+    {
+        let (server, router, _engine, image_len) = demo_http_stack(max_replicas, poll_backend)?;
+        let addr = server.addr();
+        let image = http_image(image_len);
+        let body = json_obj! {
+            "image" => image.iter().map(|&v| f64::from(v)).collect::<Vec<f64>>()
+        }
+        .to_string();
+        let raw = Arc::new(infer_request("synth", &body));
+        let (hclients, hper) = if tiny { (2, 8) } else { (max_replicas * 2, 32) };
+        let (status, resp) = MiniClient::connect(addr)?.request(&raw)?;
+        anyhow::ensure!(status == 200, "http warmup request failed: {status} {resp}");
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..hclients)
+            .map(|_| {
+                let raw = raw.clone();
+                std::thread::spawn(move || -> Result<LatencyHist> {
+                    let mut client = MiniClient::connect(addr)?;
+                    let mut hist = LatencyHist::default();
+                    for _ in 0..hper {
+                        let q0 = Instant::now();
+                        let (status, resp) = client.request(&raw)?;
+                        anyhow::ensure!(status == 200, "request failed: {status} {resp}");
+                        hist.record(q0.elapsed());
+                    }
+                    Ok(hist)
+                })
+            })
+            .collect();
+        let mut hist = LatencyHist::default();
+        for hd in handles {
+            let client_hist = hd.join().expect("http client thread panicked")?;
+            hist.merge(&client_hist);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let metrics = router.metrics("synth")?;
+        let img_s = (hclients * hper) as f64 / wall;
+        println!(
+            "  {:<18} {img_s:>9.1} req/s    p50 {:>9} us   p99 {:>9} us{}",
+            "http_edge",
+            hist.quantile_us(0.50),
+            hist.quantile_us(0.99),
+            if poll_backend {
+                "   (poll backend)"
+            } else {
+                ""
+            }
+        );
+        report.push(BenchSection {
+            img_per_s: img_s,
+            p50_us: hist.quantile_us(0.50) as f64,
+            p99_us: hist.quantile_us(0.99) as f64,
+            queue: QueueStats::from_snapshot(&metrics.total),
+            bits_per_act: bits,
+            ..BenchSection::new("http_edge")
+        });
+    }
+
+    // Self-validate before writing: an emitter that drifts from its own
+    // schema must fail here, not later in --check-budgets.
+    BenchReport::parse(&report.to_json().to_string())
+        .context("emitter produced a schema-invalid report (bug)")?;
+    report.save(path)?;
+    println!("wrote {} section(s) to {}", report.sections.len(), path.display());
+    Ok(())
 }
 
 /// The original artifact-backed path: one PJRT-executed model behind
@@ -324,14 +771,18 @@ impl MiniClient {
 
 /// Demo router + front door on an ephemeral loopback port; returns the
 /// server (keep it alive!), router, reference engine (for the default
-/// `5opt_r` variant) and input width.
+/// `5opt_r` variant) and input width. `poll_backend` forces minipoll's
+/// portable `poll(2)` event loop (the CI matrix's third leg).
 ///
 /// Three policy variants share ONE graph+weights allocation:
 /// `"5opt_r"` (default, the paper's headline config), `"a8w8"`
 /// (uniform 8-bit reference) and `"first8"` (first quantized conv at 8
 /// bits, rest uniform 4-bit) — the multi-operating-point serving shape
 /// the policy API exists for.
-fn demo_http_stack(replicas: usize) -> Result<(HttpServer, Arc<InferenceRouter>, Engine, usize)> {
+fn demo_http_stack(
+    replicas: usize,
+    poll_backend: bool,
+) -> Result<(HttpServer, Arc<InferenceRouter>, Engine, usize)> {
     let (graph, weights, scales) = synth_model();
     let (graph, weights) = (Arc::new(graph), Arc::new(weights));
     let policy = BatchPolicy {
@@ -360,7 +811,8 @@ fn demo_http_stack(replicas: usize) -> Result<(HttpServer, Arc<InferenceRouter>,
             .model_variant_with_threads("synth", "first8", first8, 1, policy, 1)
             .build()?,
     );
-    let server = HttpServer::bind("127.0.0.1:0", router.clone(), HttpConfig::default())?;
+    let config = HttpConfig { use_poll_fallback: poll_backend, ..HttpConfig::default() };
+    let server = HttpServer::bind("127.0.0.1:0", router.clone(), config)?;
     Ok((server, router, engine, h * w * c))
 }
 
@@ -395,10 +847,10 @@ fn logits_from(resp: &str) -> Result<Vec<f32>> {
 }
 
 /// `--http`: benchmark the front door with keep-alive TCP clients.
-fn http_bench(clients: usize, per_client: usize) -> Result<()> {
+fn http_bench(clients: usize, per_client: usize, poll_backend: bool) -> Result<()> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let replicas = cores.max(2);
-    let (server, router, engine, image_len) = demo_http_stack(replicas)?;
+    let (server, router, engine, image_len) = demo_http_stack(replicas, poll_backend)?;
     let addr = server.addr();
     let image = http_image(image_len);
     let want = engine.forward(&image, 1)?;
@@ -460,9 +912,11 @@ fn http_bench(clients: usize, per_client: usize) -> Result<()> {
 /// one default-variant request bit-identical to `Engine::forward`,
 /// `GET /v1/models` introspection naming every variant, and an infer
 /// against a non-default variant whose logits differ from the uniform
-/// A8W8 variant's. Non-zero exit on any mismatch.
-fn http_smoke() -> Result<()> {
-    let (server, _router, engine, image_len) = demo_http_stack(2)?;
+/// A8W8 variant's. Non-zero exit on any mismatch. With
+/// `--poll-backend` the same assertions run over minipoll's `poll(2)`
+/// event loop instead of the platform-native one.
+fn http_smoke(poll_backend: bool) -> Result<()> {
+    let (server, _router, engine, image_len) = demo_http_stack(2, poll_backend)?;
     let addr = server.addr();
     let image = http_image(image_len);
     let body = json_obj! {
@@ -520,13 +974,41 @@ fn http_smoke() -> Result<()> {
         "first8 variant served logits identical to uniform A8W8 — variants are not \
          actually per-layer distinct"
     );
+    // The live metrics view the ops dashboard polls: per-shard bucketed
+    // histograms must be present for the default variant's shards.
+    let (status, metrics) =
+        client.request(b"GET /v1/metrics HTTP/1.1\r\nHost: smoke\r\n\r\n")?;
+    anyhow::ensure!(status == 200, "/v1/metrics failed: {status} {metrics}");
+    let mv = JsonValue::parse(&metrics).context("/v1/metrics body is not JSON")?;
+    let shards = mv
+        .get("models")
+        .and_then(|m| m.get("synth"))
+        .and_then(|m| m.get("shards"))
+        .and_then(JsonValue::as_array)
+        .map(<[JsonValue]>::to_vec)
+        .context("/v1/metrics lacks per-shard entries for synth")?;
+    anyhow::ensure!(!shards.is_empty(), "no shards reported in {metrics}");
+    for s in &shards {
+        anyhow::ensure!(
+            s.get("hist").and_then(|hh| hh.get("buckets")).is_some()
+                && s.get("p50_latency_us").is_some(),
+            "shard entry lacks bucketed histogram: {metrics}"
+        );
+    }
     // Same keep-alive connection: healthz must answer too.
     let (status, health) = client.request(b"GET /healthz HTTP/1.1\r\nHost: smoke\r\n\r\n")?;
     anyhow::ensure!(status == 200 && health.contains("ok"), "healthz failed: {status} {health}");
     println!(
-        "HTTP smoke OK: 200 with {} logits bit-identical to Engine::forward; \
-         /v1/models lists 3 variants; first8 != a8w8 logits; healthz {health}",
-        logits.len()
+        "HTTP smoke OK ({}): 200 with {} logits bit-identical to Engine::forward; \
+         /v1/models lists 3 variants; first8 != a8w8 logits; {} shard histogram(s); \
+         healthz {health}",
+        if poll_backend {
+            "poll backend"
+        } else {
+            "native backend"
+        },
+        logits.len(),
+        shards.len()
     );
     Ok(())
 }

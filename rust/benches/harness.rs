@@ -11,6 +11,8 @@ pub struct BenchResult {
     pub min_us: f64,
     pub median_us: f64,
     pub mean_us: f64,
+    /// Nearest-rank 99th percentile (== max for small iteration counts).
+    pub p99_us: f64,
 }
 
 #[allow(dead_code)]
@@ -26,16 +28,19 @@ pub fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> BenchResult {
         samples.push(t0.elapsed().as_secs_f64() * 1e6);
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99_idx = ((samples.len() as f64 * 0.99).ceil() as usize).clamp(1, samples.len()) - 1;
     let r = BenchResult {
         name: name.to_string(),
         iters,
         min_us: samples[0],
         median_us: samples[samples.len() / 2],
         mean_us: samples.iter().sum::<f64>() / samples.len() as f64,
+        p99_us: samples[p99_idx],
     };
     println!(
-        "{:<44} {:>5} iters   min {:>10.1} us   median {:>10.1} us   mean {:>10.1} us",
-        r.name, r.iters, r.min_us, r.median_us, r.mean_us
+        "{:<44} {:>5} iters   min {:>10.1} us   median {:>10.1} us   mean {:>10.1} us   \
+         p99 {:>10.1} us",
+        r.name, r.iters, r.min_us, r.median_us, r.mean_us, r.p99_us
     );
     r
 }

@@ -21,7 +21,10 @@
 //! 7. PJRT end-to-end batch latency (skipped when artifacts/xla absent).
 //!
 //! Run with `cargo bench --bench hotpath`; set `SPARQ_THREADS` to pin
-//! the parallel sections.
+//! the parallel sections. Set `SPARQ_BENCH_JSON=<path>` to also write
+//! the measured sections as a `sparq-bench/1` report
+//! (`sparq::observability`) — the same schema `serve_bench
+//! --bench-json` emits and `--check-budgets` gates CI on.
 
 include!("harness.rs");
 
@@ -31,17 +34,29 @@ use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
-use sparq::coordinator::{BatchPolicy, HttpConfig, HttpServer, InferenceRouter};
+use sparq::coordinator::{BatchPolicy, HttpConfig, HttpServer, InferenceRouter, LatencyHist};
 use sparq::json_obj;
 use sparq::model::demo::synth_model;
 use sparq::model::threadpool;
 use sparq::model::{Engine, EngineMode, ModelParams, QuantGemm, Scratch};
+use sparq::observability::{BenchReport, BenchSection, QueueStats};
+use sparq::quant::footprint::report_bits;
 use sparq::quant::vsparq::sparq_dot;
 use sparq::quant::{SparqConfig, TrimLut};
 use sparq::runtime::{ArtifactKind, Manifest, PjrtRuntime, TensorArg};
 
+/// Append a section when `SPARQ_BENCH_JSON` asked for a report.
+fn emit(report: &mut Option<(PathBuf, BenchReport)>, sec: BenchSection) {
+    if let Some((_, r)) = report.as_mut() {
+        r.push(sec);
+    }
+}
+
 fn main() {
     let cfg = SparqConfig::named("5opt_r").unwrap();
+    let mut report: Option<(PathBuf, BenchReport)> =
+        std::env::var("SPARQ_BENCH_JSON").ok().map(|p| (PathBuf::from(p), BenchReport::new()));
+    let bits = report_bits(cfg);
     let k = 1152usize; // largest zoo reduction (64ch * 3x3 * 2)
     let acts = synth_acts(k, 40);
     let weights = synth_weights(k);
@@ -75,6 +90,16 @@ fn main() {
     });
     println!("    -> {:.2} GMAC/s", gmacs(&r_naive));
     let reference = out.clone();
+    emit(
+        &mut report,
+        BenchSection {
+            gmac_per_s: gmacs(&r_naive),
+            p50_us: r_naive.median_us,
+            p99_us: r_naive.p99_us,
+            bits_per_act: bits,
+            ..BenchSection::new("kernel_naive")
+        },
+    );
 
     let r_serial = bench("GEMM 400x1152x64 blocked 1 thread", 20, || {
         scratch_rows.copy_from_slice(&a);
@@ -83,6 +108,16 @@ fn main() {
     });
     println!("    -> {:.2} GMAC/s", gmacs(&r_serial));
     assert_eq!(out, reference, "blocked serial GEMM diverged from naive");
+    emit(
+        &mut report,
+        BenchSection {
+            gmac_per_s: gmacs(&r_serial),
+            p50_us: r_serial.median_us,
+            p99_us: r_serial.p99_us,
+            bits_per_act: bits,
+            ..BenchSection::new("kernel_blocked_1t")
+        },
+    );
 
     let nt = threadpool::max_threads();
     let r_par = bench("GEMM 400x1152x64 blocked parallel", 20, || {
@@ -92,6 +127,16 @@ fn main() {
     });
     println!("    -> {:.2} GMAC/s ({nt} threads)", gmacs(&r_par));
     assert_eq!(out, reference, "blocked parallel GEMM diverged from naive");
+    emit(
+        &mut report,
+        BenchSection {
+            gmac_per_s: gmacs(&r_par),
+            p50_us: r_par.median_us,
+            p99_us: r_par.p99_us,
+            bits_per_act: bits,
+            ..BenchSection::new("kernel_blocked_mt")
+        },
+    );
     println!(
         "    => GEMM speedup vs seed: {:.2}x serial, {:.2}x parallel",
         r_naive.median_us / r_serial.median_us,
@@ -112,6 +157,16 @@ fn main() {
         std::hint::black_box(engine.forward_scratch(&img, batch, &mut scratch).unwrap());
     });
     println!("    -> {:.1} img/s", batch as f64 / (r_e2e_1.median_us * 1e-6));
+    emit(
+        &mut report,
+        BenchSection {
+            img_per_s: batch as f64 / (r_e2e_1.median_us * 1e-6),
+            p50_us: r_e2e_1.median_us,
+            p99_us: r_e2e_1.p99_us,
+            bits_per_act: bits,
+            ..BenchSection::new("engine_fwd_1t")
+        },
+    );
 
     engine.set_threads(nt);
     let r_e2e_n = bench("native fwd batch-32 parallel", 15, || {
@@ -122,6 +177,16 @@ fn main() {
         "    => end-to-end forward speedup 1 -> {nt} threads: {:.2}x",
         r_e2e_1.median_us / r_e2e_n.median_us
     );
+    emit(
+        &mut report,
+        BenchSection {
+            img_per_s: batch as f64 / (r_e2e_n.median_us * 1e-6),
+            p50_us: r_e2e_n.median_us,
+            p99_us: r_e2e_n.p99_us,
+            bits_per_act: bits,
+            ..BenchSection::new("engine_fwd_mt")
+        },
+    );
 
     // 4. per-layer policies end-to-end: same engine/scratch shape as
     // section 3, but the policy decides each layer's LUT/weight table.
@@ -131,23 +196,33 @@ fn main() {
     {
         use sparq::quant::QuantPolicy;
         let policies = [
-            ("uniform a8w8", QuantPolicy::named("a8w8").unwrap()),
-            ("uniform a4w8", QuantPolicy::named("a4w8").unwrap()),
-            ("edge8 first/last@8", QuantPolicy::named("edge8").unwrap()),
+            ("policy_a8w8", "uniform a8w8", QuantPolicy::named("a8w8").unwrap()),
+            ("policy_a4w8", "uniform a4w8", QuantPolicy::named("a4w8").unwrap()),
+            ("policy_edge8", "edge8 first/last@8", QuantPolicy::named("edge8").unwrap()),
         ];
-        for (label, policy) in policies {
+        for (section, label, policy) in policies {
             let mut e =
                 Engine::with_policy(&graph, &wts, policy, &scales, EngineMode::Dense).unwrap();
             e.set_threads(nt);
-            let bits = e.params().footprint_bits(1);
+            let pbits = e.params().footprint_bits(1);
             let luts = e.params().distinct_configs();
             let mut sc = Scratch::default();
             let r = bench(&format!("policy fwd batch-32 {label}"), 15, || {
                 std::hint::black_box(e.forward_scratch(&img, batch, &mut sc).unwrap());
             });
             println!(
-                "    -> {:.1} img/s, {bits:.2} bits/act, {luts} LUT(s)",
+                "    -> {:.1} img/s, {pbits:.2} bits/act, {luts} LUT(s)",
                 batch as f64 / (r.median_us * 1e-6)
+            );
+            emit(
+                &mut report,
+                BenchSection {
+                    img_per_s: batch as f64 / (r.median_us * 1e-6),
+                    p50_us: r.median_us,
+                    p99_us: r.p99_us,
+                    bits_per_act: pbits,
+                    ..BenchSection::new(section)
+                },
             );
         }
     }
@@ -218,6 +293,29 @@ fn main() {
                 baseline_us / us
             );
         }
+        if report.is_some() {
+            let section = if replicas == 1 {
+                "router_1shard"
+            } else {
+                "router_mshard"
+            };
+            let m = router.metrics("bench").unwrap();
+            let mut hist = LatencyHist::default();
+            for sh in &m.shards {
+                hist.merge(&sh.hist);
+            }
+            emit(
+                &mut report,
+                BenchSection {
+                    img_per_s: total / (us * 1e-6),
+                    p50_us: hist.quantile_us(0.50) as f64,
+                    p99_us: hist.quantile_us(0.99) as f64,
+                    queue: QueueStats::from_snapshot(&m.total),
+                    bits_per_act: bits,
+                    ..BenchSection::new(section)
+                },
+            );
+        }
     }
 
     // 6. HTTP front door: the same sharded router behind the single
@@ -240,7 +338,8 @@ fn main() {
                 .build()
                 .unwrap(),
         );
-        let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+        let server =
+            HttpServer::bind("127.0.0.1:0", router.clone(), HttpConfig::default()).unwrap();
         let addr = server.addr();
         let body = json_obj! {
             "image" => single.iter().map(|&v| f64::from(v)).collect::<Vec<f64>>()
@@ -316,6 +415,18 @@ fn main() {
              {:.2}x wall time",
             us / router_n_us.max(1.0)
         );
+        if report.is_some() {
+            let m = router.metrics("bench").unwrap();
+            emit(
+                &mut report,
+                BenchSection {
+                    img_per_s: total / (us * 1e-6),
+                    queue: QueueStats::from_snapshot(&m.total),
+                    bits_per_act: bits,
+                    ..BenchSection::new("http_edge")
+                },
+            );
+        }
     }
 
     // 7. PJRT end-to-end batch (compile once, then per-batch latency)
@@ -323,6 +434,11 @@ fn main() {
     match Manifest::load(&dir) {
         Ok(manifest) => pjrt_section(&manifest, cfg),
         Err(_) => eprintln!("artifacts missing; PJRT section skipped"),
+    }
+
+    if let Some((path, rep)) = report {
+        rep.save(&path).expect("writing bench report");
+        println!("bench report: wrote {} section(s) to {}", rep.sections.len(), path.display());
     }
 }
 

@@ -215,6 +215,22 @@ impl BatcherStats {
 }
 
 impl BatcherSnapshot {
+    /// The wire form served under `GET /v1/metrics` (every counter,
+    /// stable key order) and embedded in bench-report queue sections.
+    pub fn to_json(&self) -> crate::json::JsonValue {
+        crate::json_obj! {
+            "batches" => self.batches as usize,
+            "requests" => self.requests as usize,
+            "full_batches" => self.full_batches as usize,
+            "exec_errors" => self.exec_errors as usize,
+            "queue_depth" => self.queue_depth as usize,
+            "peak_queue_depth" => self.peak_queue_depth as usize,
+            "shed" => self.shed as usize,
+            "rejected" => self.rejected as usize,
+            "expired" => self.expired as usize,
+        }
+    }
+
     /// Accumulate another shard's snapshot into this one (the router's
     /// aggregate view). Counters and the live depth gauge sum;
     /// `peak_queue_depth` takes the per-shard maximum.

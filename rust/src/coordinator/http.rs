@@ -56,7 +56,7 @@ use minipoll::{Event, Interest, Poller};
 use crate::json::JsonValue;
 use crate::json_obj;
 
-use super::batcher::{BatchError, BatcherSnapshot, PendingReply, Reply};
+use super::batcher::{BatchError, PendingReply, Reply};
 use super::router::InferenceRouter;
 
 /// Front-door limits. Defaults are sized for the native demo models;
@@ -678,27 +678,17 @@ fn health_json(router: &InferenceRouter) -> JsonValue {
     json_obj! { "status" => "ok", "models" => models }
 }
 
-fn snapshot_json(s: &BatcherSnapshot) -> JsonValue {
-    json_obj! {
-        "batches" => s.batches as usize,
-        "requests" => s.requests as usize,
-        "full_batches" => s.full_batches as usize,
-        "exec_errors" => s.exec_errors as usize,
-        "queue_depth" => s.queue_depth as usize,
-        "peak_queue_depth" => s.peak_queue_depth as usize,
-        "shed" => s.shed as usize,
-        "rejected" => s.rejected as usize,
-        "expired" => s.expired as usize,
-    }
-}
-
 fn shard_json(s: &super::router::ShardMetrics) -> JsonValue {
     json_obj! {
         "shard" => s.shard,
         "completed" => s.completed as usize,
         "mean_latency_us" => s.mean_latency_us,
+        "p50_latency_us" => s.p50_latency_us as usize,
         "p99_latency_us" => s.p99_latency_us as usize,
-        "batcher" => snapshot_json(&s.batcher),
+        // full bucketed distribution, not just the two quantiles —
+        // the ops dashboard's sparkline reads this
+        "hist" => s.hist.to_json(),
+        "batcher" => s.batcher.to_json(),
     }
 }
 
@@ -717,7 +707,7 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
                     "policy" => v.policy.clone(),
                     "footprint_bits_per_act" => v.footprint_bits,
                     "shards" => v.shards.iter().map(shard_json).collect::<Vec<JsonValue>>(),
-                    "total" => snapshot_json(&v.total),
+                    "total" => v.total.to_json(),
                 }
             })
             .collect();
@@ -728,13 +718,13 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
                 "param_bytes" => m.param_bytes,
                 "variants" => variants,
                 "shards" => shards,
-                "total" => snapshot_json(&m.total),
+                "total" => m.total.to_json(),
             },
         );
     }
     let mut top = std::collections::BTreeMap::new();
     top.insert("models".to_string(), JsonValue::Object(models));
-    top.insert("aggregate".to_string(), snapshot_json(&router.aggregate()));
+    top.insert("aggregate".to_string(), router.aggregate().to_json());
     JsonValue::Object(top)
 }
 

@@ -146,7 +146,12 @@ pub struct ShardMetrics {
     /// Successful requests completed through this shard.
     pub completed: u64,
     pub mean_latency_us: f64,
+    pub p50_latency_us: u64,
     pub p99_latency_us: u64,
+    /// Full bucketed e2e latency histogram (the quantiles above are
+    /// derived from it); serialized over `GET /v1/metrics` so external
+    /// collectors see distribution shape, not just two points.
+    pub hist: LatencyHist,
     pub batcher: BatcherSnapshot,
 }
 
@@ -627,7 +632,9 @@ impl InferenceRouter {
                     shard: shard_idx,
                     completed: e2e.count(),
                     mean_latency_us: e2e.mean_us(),
+                    p50_latency_us: e2e.quantile_us(0.50),
                     p99_latency_us: e2e.quantile_us(0.99),
+                    hist: e2e.clone(),
                     batcher: snap,
                 };
                 shard_idx += 1;

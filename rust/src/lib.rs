@@ -10,8 +10,9 @@
 //! * **L3** — this crate: bit-exact SPARQ numerics ([`quant`]), cycle- and
 //!   area-level hardware models ([`hw`]), a PJRT runtime ([`runtime`]),
 //!   the calibration/eval/serving coordinator ([`coordinator`]), a native
-//!   integer inference engine ([`model`]) and the paper's experiment
-//!   reproductions ([`experiments`]).
+//!   integer inference engine ([`model`]), the perf-harness /
+//!   observability subsystem ([`observability`]) and the paper's
+//!   experiment reproductions ([`experiments`]).
 //!
 //! See DESIGN.md for the system inventory and the per-table experiment
 //! index, and EXPERIMENTS.md for measured results.
@@ -23,6 +24,7 @@ pub mod hw;
 pub mod json;
 pub mod model;
 pub mod npz;
+pub mod observability;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;

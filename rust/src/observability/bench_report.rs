@@ -1,0 +1,500 @@
+//! Versioned, serde-free schema for `BENCH_*.json` perf artifacts.
+//!
+//! SPARQ's claims are speed-vs-accuracy numbers; this module turns the
+//! speed half into machine-checkable files instead of prose. A
+//! [`BenchReport`] is one benchmark run: a host fingerprint (so numbers
+//! from different machines are never compared blindly) plus one
+//! [`BenchSection`] per measured surface — kernel, engine, router,
+//! HTTP edge, policy variant. `benches/hotpath.rs` and
+//! `examples/serve_bench.rs --bench-json` both emit this format, and
+//! [`crate::observability::budget`] gates CI on it.
+//!
+//! Serialization goes through the in-repo [`crate::json`] parser in
+//! both directions, and [`BenchReport::from_json`] is *strict*: an
+//! unknown version, a duplicate or empty section name, or a missing /
+//! non-finite / negative metric is an error, not a default — a perf
+//! artifact that silently lost fields is worse than no artifact.
+//!
+//! Metric semantics: `0.0` means **not measured** for that section
+//! (e.g. a kernel section has no queue, an HTTP section no GMAC/s).
+//! Budgets treat 0-valued baseline metrics as unconstrained for the
+//! same reason.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::BatcherSnapshot;
+use crate::json::JsonValue;
+use crate::json_obj;
+
+/// Schema identifier embedded in every report; bump on breaking change.
+pub const SCHEMA_VERSION: &str = "sparq-bench/1";
+
+/// Queue-health counters for sections that run through a batcher
+/// (router / HTTP sections); all-zero for compute-only sections.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// High-water mark of the bounded queue during the section.
+    pub depth_peak: u64,
+    /// Requests shed (oldest dropped under `ShedOldest` overload).
+    pub shed: u64,
+    /// Requests expired past their queue-wait deadline.
+    pub expired: u64,
+    /// Requests rejected at submit (`RejectNewest` overload).
+    pub rejected: u64,
+}
+
+impl QueueStats {
+    /// Lift the batcher's live counters into report form.
+    pub fn from_snapshot(s: &BatcherSnapshot) -> Self {
+        Self {
+            depth_peak: s.peak_queue_depth,
+            shed: s.shed,
+            expired: s.expired,
+            rejected: s.rejected,
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        json_obj! {
+            "depth_peak" => self.depth_peak as usize,
+            "shed" => self.shed as usize,
+            "expired" => self.expired as usize,
+            "rejected" => self.rejected as usize,
+        }
+    }
+
+    pub fn from_json(v: &JsonValue, ctx: &str) -> Result<Self> {
+        Ok(Self {
+            depth_peak: req_metric(v, "depth_peak", ctx)? as u64,
+            shed: req_metric(v, "shed", ctx)? as u64,
+            expired: req_metric(v, "expired", ctx)? as u64,
+            rejected: req_metric(v, "rejected", ctx)? as u64,
+        })
+    }
+}
+
+/// One measured surface of the system. Fields that a section does not
+/// measure stay `0.0` / zeroed (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchSection {
+    /// Unique section name, e.g. `kernel_blocked_mt`, `http_edge`.
+    pub name: String,
+    /// Images (or requests, for serving sections) per second.
+    pub img_per_s: f64,
+    /// Effective GEMM throughput, giga-MACs per second.
+    pub gmac_per_s: f64,
+    /// Median latency per unit of work, microseconds.
+    pub p50_us: f64,
+    /// 99th-percentile latency, microseconds.
+    pub p99_us: f64,
+    /// Batcher queue health over the section (serving sections only).
+    pub queue: QueueStats,
+    /// Storage bits per activation under the section's quantization
+    /// config (paper §5.1 model, [`crate::quant::footprint`]).
+    pub bits_per_act: f64,
+}
+
+impl BenchSection {
+    /// A section with every metric unmeasured; fill in what applies.
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            img_per_s: 0.0,
+            gmac_per_s: 0.0,
+            p50_us: 0.0,
+            p99_us: 0.0,
+            queue: QueueStats::default(),
+            bits_per_act: 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        json_obj! {
+            "name" => self.name.as_str(),
+            "img_per_s" => self.img_per_s,
+            "gmac_per_s" => self.gmac_per_s,
+            "p50_us" => self.p50_us,
+            "p99_us" => self.p99_us,
+            "queue" => self.queue.to_json(),
+            "bits_per_act" => self.bits_per_act,
+        }
+    }
+
+    pub fn from_json(v: &JsonValue) -> Result<Self> {
+        let name = v
+            .get("name")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| anyhow!("section missing string `name`"))?;
+        if name.is_empty() {
+            bail!("section name must be non-empty");
+        }
+        let ctx = &format!("section `{name}`");
+        let queue = v
+            .get("queue")
+            .ok_or_else(|| anyhow!("{ctx}: missing `queue` object"))?;
+        Ok(Self {
+            name: name.to_string(),
+            img_per_s: req_metric(v, "img_per_s", ctx)?,
+            gmac_per_s: req_metric(v, "gmac_per_s", ctx)?,
+            p50_us: req_metric(v, "p50_us", ctx)?,
+            p99_us: req_metric(v, "p99_us", ctx)?,
+            queue: QueueStats::from_json(queue, ctx)?,
+            bits_per_act: req_metric(v, "bits_per_act", ctx)?,
+        })
+    }
+}
+
+/// Where the numbers came from. Budgets are only meaningful per host;
+/// the fingerprint is what makes cross-machine comparison an explicit
+/// decision instead of an accident.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HostFingerprint {
+    /// `available_parallelism` on the measuring host.
+    pub cores: usize,
+    /// Raw `SPARQ_THREADS` value at measure time ("" = unset).
+    pub sparq_threads: String,
+    /// Commit the build came from; "unknown" outside a checkout.
+    pub git_sha: String,
+}
+
+impl HostFingerprint {
+    /// Fingerprint the current process: core count, thread override,
+    /// and the git commit (CI's `GITHUB_SHA` wins; otherwise the
+    /// nearest enclosing `.git` is read directly — no `git` subprocess
+    /// so benches stay exec-free).
+    pub fn detect() -> Self {
+        Self {
+            cores: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            sparq_threads: std::env::var("SPARQ_THREADS").unwrap_or_default(),
+            git_sha: detect_git_sha(),
+        }
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        json_obj! {
+            "cores" => self.cores,
+            "sparq_threads" => self.sparq_threads.as_str(),
+            "git_sha" => self.git_sha.as_str(),
+        }
+    }
+
+    pub fn from_json(v: &JsonValue) -> Result<Self> {
+        let req_str = |key: &str| {
+            v.get(key)
+                .and_then(JsonValue::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("host fingerprint missing string `{key}`"))
+        };
+        let cores = v
+            .get("cores")
+            .and_then(JsonValue::as_usize)
+            .ok_or_else(|| anyhow!("host fingerprint missing numeric `cores`"))?;
+        Ok(Self { cores, sparq_threads: req_str("sparq_threads")?, git_sha: req_str("git_sha")? })
+    }
+}
+
+fn detect_git_sha() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        if !sha.is_empty() {
+            return sha;
+        }
+    }
+    let mut dir = std::env::current_dir().ok();
+    while let Some(d) = dir {
+        if let Ok(head) = std::fs::read_to_string(d.join(".git/HEAD")) {
+            let head = head.trim();
+            let Some(refname) = head.strip_prefix("ref: ") else {
+                return head.to_string(); // detached HEAD: the sha itself
+            };
+            if let Ok(sha) = std::fs::read_to_string(d.join(".git").join(refname)) {
+                return sha.trim().to_string();
+            }
+            if let Ok(packed) = std::fs::read_to_string(d.join(".git/packed-refs")) {
+                for line in packed.lines() {
+                    let mut it = line.split_whitespace();
+                    if let (Some(sha), Some(name)) = (it.next(), it.next()) {
+                        if name == refname {
+                            return sha.to_string();
+                        }
+                    }
+                }
+            }
+            return "unknown".to_string();
+        }
+        dir = d.parent().map(Path::to_path_buf);
+    }
+    "unknown".to_string()
+}
+
+/// One benchmark run: fingerprint + sections, in emission order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    pub host: HostFingerprint,
+    pub sections: Vec<BenchSection>,
+}
+
+impl BenchReport {
+    /// An empty report fingerprinting the current host.
+    pub fn new() -> Self {
+        Self { host: HostFingerprint::detect(), sections: Vec::new() }
+    }
+
+    /// Append a section; duplicate names are a caller bug and panic
+    /// here rather than surviving to a confusing budget-check error.
+    pub fn push(&mut self, section: BenchSection) {
+        assert!(
+            self.section(&section.name).is_none(),
+            "duplicate bench section `{}`",
+            section.name
+        );
+        self.sections.push(section);
+    }
+
+    pub fn section(&self, name: &str) -> Option<&BenchSection> {
+        self.sections.iter().find(|s| s.name == name)
+    }
+
+    pub fn to_json(&self) -> JsonValue {
+        json_obj! {
+            "version" => SCHEMA_VERSION,
+            "host" => self.host.to_json(),
+            "sections" => self.sections.iter().map(BenchSection::to_json).collect::<Vec<_>>(),
+        }
+    }
+
+    /// Strict schema validation — see module docs for what's rejected.
+    pub fn from_json(v: &JsonValue) -> Result<Self> {
+        let version = v
+            .get("version")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| anyhow!("report missing string `version`"))?;
+        if version != SCHEMA_VERSION {
+            bail!("unsupported report version `{version}` (want `{SCHEMA_VERSION}`)");
+        }
+        let host = HostFingerprint::from_json(
+            v.get("host").ok_or_else(|| anyhow!("report missing `host` object"))?,
+        )?;
+        let raw = v
+            .get("sections")
+            .and_then(JsonValue::as_array)
+            .ok_or_else(|| anyhow!("report missing `sections` array"))?;
+        let mut sections = Vec::with_capacity(raw.len());
+        let mut seen = std::collections::BTreeSet::new();
+        for s in raw {
+            let s = BenchSection::from_json(s)?;
+            if !seen.insert(s.name.clone()) {
+                bail!("duplicate section name `{}`", s.name);
+            }
+            sections.push(s);
+        }
+        Ok(Self { host, sections })
+    }
+
+    /// Parse + validate report text (the `--validate-report` seam).
+    pub fn parse(text: &str) -> Result<Self> {
+        Self::from_json(&JsonValue::parse(text).context("report is not valid JSON")?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string() + "\n")
+            .with_context(|| format!("writing bench report to {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report from {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("invalid bench report {}", path.display()))
+    }
+}
+
+impl Default for BenchReport {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Required metric field: present, numeric, finite, non-negative.
+fn req_metric(v: &JsonValue, key: &str, ctx: &str) -> Result<f64> {
+    let f = v
+        .get(key)
+        .and_then(JsonValue::as_f64)
+        .ok_or_else(|| anyhow!("{ctx}: missing numeric `{key}`"))?;
+    if !f.is_finite() || f < 0.0 {
+        bail!("{ctx}: `{key}` must be finite and >= 0, got {f}");
+    }
+    Ok(f)
+}
+
+/// Wall-clock summary of repeated timed iterations, microseconds.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Timing {
+    pub iters: usize,
+    pub min_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+}
+
+impl Timing {
+    /// Units-of-work per second at the *median* iteration time — the
+    /// robust throughput estimate the report sections carry.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        if self.p50_us <= 0.0 {
+            return 0.0;
+        }
+        units_per_iter / (self.p50_us * 1e-6)
+    }
+}
+
+/// Time `iters` runs of `f` after `warmup` untimed runs; nearest-rank
+/// percentiles over the per-iteration wall times.
+pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    assert!(iters >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples_us = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    samples_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = |q: f64| {
+        let idx = ((iters as f64 * q).ceil() as usize).clamp(1, iters) - 1;
+        samples_us[idx]
+    };
+    Timing {
+        iters,
+        min_us: samples_us[0],
+        p50_us: rank(0.50),
+        p99_us: rank(0.99),
+        mean_us: samples_us.iter().sum::<f64>() / iters as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn full_report() -> BenchReport {
+        // Distinct non-zero values in every single field so the
+        // round-trip test catches any dropped or swapped field.
+        let mut r = BenchReport {
+            host: HostFingerprint {
+                cores: 12,
+                sparq_threads: "4".to_string(),
+                git_sha: "abc123def".to_string(),
+            },
+            sections: Vec::new(),
+        };
+        r.push(BenchSection {
+            name: "kernel_blocked_mt".to_string(),
+            img_per_s: 123.5,
+            gmac_per_s: 45.25,
+            p50_us: 810.5,
+            p99_us: 990.75,
+            queue: QueueStats { depth_peak: 7, shed: 3, expired: 2, rejected: 1 },
+            bits_per_act: 7.5,
+        });
+        r.push(BenchSection::new("engine_fwd_1t"));
+        r
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_field() {
+        let r = full_report();
+        let text = r.to_json().to_string();
+        let back = BenchReport::parse(&text).expect("round trip parse");
+        assert_eq!(back, r);
+        // and serialization is stable across a second trip
+        assert_eq!(back.to_json().to_string(), text);
+    }
+
+    #[test]
+    fn save_load_round_trip() {
+        let r = full_report();
+        let path = std::env::temp_dir().join("sparq_bench_report_test.json");
+        r.save(&path).unwrap();
+        let back = BenchReport::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn validation_rejects_bad_reports() {
+        let good = full_report().to_json().to_string();
+        // wrong version
+        let bad = good.replace(SCHEMA_VERSION, "sparq-bench/999");
+        assert!(BenchReport::parse(&bad).unwrap_err().to_string().contains("version"));
+        // missing metric field
+        let bad = good.replace("\"gmac_per_s\":45.25,", "");
+        assert!(BenchReport::parse(&bad).unwrap_err().to_string().contains("gmac_per_s"));
+        // negative metric
+        let bad = good.replace("\"img_per_s\":123.5", "\"img_per_s\":-1");
+        assert!(BenchReport::parse(&bad).unwrap_err().to_string().contains("img_per_s"));
+        // duplicate section names
+        let bad = good.replace("engine_fwd_1t", "kernel_blocked_mt");
+        assert!(BenchReport::parse(&bad).unwrap_err().to_string().contains("duplicate"));
+        // empty section name
+        let bad = good.replace("engine_fwd_1t", "");
+        assert!(BenchReport::parse(&bad).is_err());
+        // not JSON at all
+        assert!(BenchReport::parse("not json").is_err());
+    }
+
+    #[test]
+    fn push_panics_on_duplicate_section() {
+        let mut r = full_report();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            r.push(BenchSection::new("engine_fwd_1t"));
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn detect_fingerprints_this_checkout() {
+        let h = HostFingerprint::detect();
+        assert!(h.cores >= 1);
+        // Tests run from inside the repo: either CI's GITHUB_SHA or a
+        // real 40-hex sha from .git must be found.
+        assert_ne!(h.git_sha, "unknown", "tests run inside a git checkout");
+        assert!(h.git_sha.len() >= 7, "{}", h.git_sha);
+    }
+
+    #[test]
+    fn queue_stats_lift_from_snapshot() {
+        let s = BatcherSnapshot {
+            peak_queue_depth: 9,
+            shed: 4,
+            expired: 2,
+            rejected: 1,
+            ..BatcherSnapshot::default()
+        };
+        let q = QueueStats::from_snapshot(&s);
+        assert_eq!(q, QueueStats { depth_peak: 9, shed: 4, expired: 2, rejected: 1 });
+    }
+
+    #[test]
+    fn time_iters_percentiles_are_ordered() {
+        let t = time_iters(2, 25, || {
+            std::hint::black_box((0..2000u64).sum::<u64>());
+        });
+        assert_eq!(t.iters, 25);
+        assert!(t.min_us <= t.p50_us);
+        assert!(t.p50_us <= t.p99_us);
+        assert!(t.min_us <= t.mean_us);
+        assert!(t.mean_us > 0.0);
+        assert!(t.throughput(32.0) > 0.0);
+        // single iteration: every statistic is that one sample
+        let one = time_iters(0, 1, || {
+            std::hint::black_box((0..2000u64).sum::<u64>());
+        });
+        assert_eq!(one.min_us, one.p50_us);
+        assert_eq!(one.p50_us, one.p99_us);
+        assert_eq!(one.p99_us, one.mean_us);
+    }
+}

@@ -1,0 +1,306 @@
+//! Falsifiable perf budgets over [`BenchReport`]s.
+//!
+//! A budget file (`BENCH_BASELINE.json`) pins, per section, the
+//! throughput floors and latency ceilings a run must stay inside, with
+//! one relative `tolerance` knob per section. CI runs
+//! `serve_bench --check-budgets` against the committed baseline and
+//! fails the build on any [`Violation`] — perf regressions become red
+//! X's instead of silent drift across PRs.
+//!
+//! Semantics, chosen so a budget can never pass vacuously by accident:
+//!
+//! * throughput metrics (`img_per_s`, `gmac_per_s`) are **floors**:
+//!   `measured >= baseline * (1 - tolerance)`;
+//! * latency metrics (`p50_us`, `p99_us`) are **ceilings**:
+//!   `measured <= baseline * (1 + tolerance)`;
+//! * a baseline metric of `0` means *unconstrained* (mirrors the
+//!   report's "0 = not measured" convention);
+//! * a budget naming a section the report does not contain is itself a
+//!   violation — deleting a bench section cannot green the build.
+
+use std::fmt;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::bench_report::BenchReport;
+use crate::json::JsonValue;
+
+/// Budget-file schema identifier; shares the report's major version.
+pub const BUDGET_VERSION: &str = "sparq-budget/1";
+
+/// Constraints for one report section. Zero-valued metrics are
+/// unconstrained; `tolerance` is the relative slack applied to every
+/// constrained metric in this section.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SectionBudget {
+    /// Name of the [`super::bench_report::BenchSection`] this gates.
+    pub section: String,
+    /// Relative slack in `[0, 1)`: 0.10 = allow 10% regression.
+    pub tolerance: f64,
+    /// Throughput floor before tolerance, images (requests) per second.
+    pub img_per_s: f64,
+    /// Throughput floor before tolerance, giga-MACs per second.
+    pub gmac_per_s: f64,
+    /// Latency ceiling before tolerance, microseconds.
+    pub p50_us: f64,
+    /// Latency ceiling before tolerance, microseconds.
+    pub p99_us: f64,
+}
+
+impl SectionBudget {
+    fn from_json(v: &JsonValue) -> Result<Self> {
+        let section = v
+            .get("section")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| anyhow!("budget entry missing string `section`"))?
+            .to_string();
+        if section.is_empty() {
+            bail!("budget section name must be non-empty");
+        }
+        let num = |key: &str| -> Result<f64> {
+            let f = v
+                .get(key)
+                .and_then(JsonValue::as_f64)
+                .ok_or_else(|| anyhow!("budget `{section}`: missing numeric `{key}`"))?;
+            if !f.is_finite() || f < 0.0 {
+                bail!("budget `{section}`: `{key}` must be finite and >= 0, got {f}");
+            }
+            Ok(f)
+        };
+        let tolerance = num("tolerance")?;
+        if tolerance >= 1.0 {
+            bail!("budget `{section}`: tolerance {tolerance} must be < 1 (it is relative slack)");
+        }
+        Ok(Self {
+            section,
+            tolerance,
+            img_per_s: num("img_per_s")?,
+            gmac_per_s: num("gmac_per_s")?,
+            p50_us: num("p50_us")?,
+            p99_us: num("p99_us")?,
+        })
+    }
+}
+
+/// Parsed `BENCH_BASELINE.json`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BudgetFile {
+    pub budgets: Vec<SectionBudget>,
+}
+
+impl BudgetFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = JsonValue::parse(text).context("budget file is not valid JSON")?;
+        let version = v
+            .get("version")
+            .and_then(JsonValue::as_str)
+            .ok_or_else(|| anyhow!("budget file missing string `version`"))?;
+        if version != BUDGET_VERSION {
+            bail!("unsupported budget version `{version}` (want `{BUDGET_VERSION}`)");
+        }
+        let raw = v
+            .get("budgets")
+            .and_then(JsonValue::as_array)
+            .ok_or_else(|| anyhow!("budget file missing `budgets` array"))?;
+        let mut budgets = Vec::with_capacity(raw.len());
+        let mut seen = std::collections::BTreeSet::new();
+        for b in raw {
+            let b = SectionBudget::from_json(b)?;
+            if !seen.insert(b.section.clone()) {
+                bail!("duplicate budget for section `{}`", b.section);
+            }
+            budgets.push(b);
+        }
+        Ok(Self { budgets })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading budget file from {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("invalid budget file {}", path.display()))
+    }
+}
+
+/// One budget breach, with the numbers needed to act on it from a CI
+/// log alone: the section, the metric, the bound after tolerance, and
+/// what the run actually measured.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Violation {
+    pub section: String,
+    pub metric: String,
+    /// The bound after applying tolerance (floor or ceiling per metric).
+    pub bound: f64,
+    /// The measured value (NaN when the section was missing entirely).
+    pub got: f64,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.got.is_nan() {
+            write!(f, "section `{}`: required by budget but missing from the report", self.section)
+        } else {
+            write!(
+                f,
+                "section `{}`: {} = {:.3} breaches the budget bound {:.3}",
+                self.section, self.metric, self.got, self.bound
+            )
+        }
+    }
+}
+
+/// Check a report against budgets; an empty result is a pass.
+pub fn check(report: &BenchReport, budgets: &BudgetFile) -> Vec<Violation> {
+    let mut violations = Vec::new();
+    for b in &budgets.budgets {
+        let Some(s) = report.section(&b.section) else {
+            violations.push(Violation {
+                section: b.section.clone(),
+                metric: "section".to_string(),
+                bound: 0.0,
+                got: f64::NAN,
+            });
+            continue;
+        };
+        let mut floor = |metric: &str, baseline: f64, got: f64| {
+            let bound = baseline * (1.0 - b.tolerance);
+            if baseline > 0.0 && got < bound {
+                violations.push(Violation {
+                    section: b.section.clone(),
+                    metric: metric.to_string(),
+                    bound,
+                    got,
+                });
+            }
+        };
+        floor("img_per_s", b.img_per_s, s.img_per_s);
+        floor("gmac_per_s", b.gmac_per_s, s.gmac_per_s);
+        let mut ceiling = |metric: &str, baseline: f64, got: f64| {
+            let bound = baseline * (1.0 + b.tolerance);
+            if baseline > 0.0 && got > bound {
+                violations.push(Violation {
+                    section: b.section.clone(),
+                    metric: metric.to_string(),
+                    bound,
+                    got,
+                });
+            }
+        };
+        ceiling("p50_us", b.p50_us, s.p50_us);
+        ceiling("p99_us", b.p99_us, s.p99_us);
+    }
+    violations
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::observability::bench_report::{BenchSection, HostFingerprint};
+
+    fn report_with(name: &str, img: f64, p99: f64) -> BenchReport {
+        let mut r = BenchReport {
+            host: HostFingerprint {
+                cores: 4,
+                sparq_threads: String::new(),
+                git_sha: "test".to_string(),
+            },
+            sections: Vec::new(),
+        };
+        let mut s = BenchSection::new(name);
+        s.img_per_s = img;
+        s.p99_us = p99;
+        r.push(s);
+        r
+    }
+
+    fn budget_text(section: &str, tol: f64, img: f64, p99: f64) -> String {
+        format!(
+            r#"{{"version":"{BUDGET_VERSION}","budgets":[
+                {{"section":"{section}","tolerance":{tol},
+                  "img_per_s":{img},"gmac_per_s":0,"p50_us":0,"p99_us":{p99}}}]}}"#
+        )
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let budgets = BudgetFile::parse(&budget_text("engine", 0.10, 1000.0, 500.0)).unwrap();
+        // 5% slower throughput and 5% higher tail: inside the 10% band.
+        let v = check(&report_with("engine", 950.0, 525.0), &budgets);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn throughput_floor_violation_names_section_and_metric() {
+        let budgets = BudgetFile::parse(&budget_text("engine", 0.10, 1000.0, 0.0)).unwrap();
+        let v = check(&report_with("engine", 800.0, 9999.0), &budgets);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].section, "engine");
+        assert_eq!(v[0].metric, "img_per_s");
+        assert!((v[0].bound - 900.0).abs() < 1e-9);
+        let msg = v[0].to_string();
+        assert!(msg.contains("engine") && msg.contains("img_per_s"), "{msg}");
+    }
+
+    #[test]
+    fn latency_ceiling_violation_fires_upward() {
+        let budgets = BudgetFile::parse(&budget_text("engine", 0.10, 0.0, 500.0)).unwrap();
+        // Low latency is fine...
+        assert!(check(&report_with("engine", 0.0, 100.0), &budgets).is_empty());
+        // ...high latency breaches the ceiling.
+        let v = check(&report_with("engine", 0.0, 600.0), &budgets);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].metric, "p99_us");
+        assert!((v[0].bound - 550.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_baseline_metric_is_unconstrained() {
+        let budgets = BudgetFile::parse(&budget_text("engine", 0.0, 0.0, 0.0)).unwrap();
+        // Report measured nothing at all — still a pass: every metric
+        // in this budget is 0 = unconstrained.
+        assert!(check(&report_with("engine", 0.0, 0.0), &budgets).is_empty());
+    }
+
+    #[test]
+    fn missing_section_is_a_violation_not_a_pass() {
+        let budgets = BudgetFile::parse(&budget_text("kernel", 0.5, 1.0, 0.0)).unwrap();
+        let v = check(&report_with("engine", 1e9, 0.0), &budgets);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].got.is_nan());
+        assert!(v[0].to_string().contains("missing from the report"));
+    }
+
+    #[test]
+    fn budget_file_validation() {
+        // wrong version
+        let bad = budget_text("e", 0.1, 1.0, 1.0).replace(BUDGET_VERSION, "nope/9");
+        assert!(BudgetFile::parse(&bad).unwrap_err().to_string().contains("version"));
+        // tolerance >= 1 rejected
+        let bad = budget_text("e", 1.5, 1.0, 1.0);
+        assert!(BudgetFile::parse(&bad).unwrap_err().to_string().contains("tolerance"));
+        // duplicate sections rejected
+        let dup = format!(
+            r#"{{"version":"{BUDGET_VERSION}","budgets":[
+                {{"section":"e","tolerance":0.1,"img_per_s":0,"gmac_per_s":0,"p50_us":0,"p99_us":0}},
+                {{"section":"e","tolerance":0.1,"img_per_s":0,"gmac_per_s":0,"p50_us":0,"p99_us":0}}]}}"#
+        );
+        assert!(BudgetFile::parse(&dup).unwrap_err().to_string().contains("duplicate"));
+        // missing metric key rejected
+        let bad = budget_text("e", 0.1, 1.0, 1.0).replace("\"gmac_per_s\":0,", "");
+        assert!(BudgetFile::parse(&bad).unwrap_err().to_string().contains("gmac_per_s"));
+    }
+
+    #[test]
+    fn multiple_violations_all_reported() {
+        let text = format!(
+            r#"{{"version":"{BUDGET_VERSION}","budgets":[
+                {{"section":"a","tolerance":0.0,"img_per_s":100,"gmac_per_s":0,"p50_us":10,"p99_us":10}},
+                {{"section":"b","tolerance":0.0,"img_per_s":100,"gmac_per_s":0,"p50_us":0,"p99_us":0}}]}}"#
+        );
+        let budgets = BudgetFile::parse(&text).unwrap();
+        let mut r = report_with("a", 50.0, 20.0); // img floor + p99 ceiling breached
+        r.sections[0].p50_us = 20.0; // p50 ceiling breached too
+        let v = check(&r, &budgets); // section b missing entirely
+        assert_eq!(v.len(), 4, "{v:?}");
+    }
+}

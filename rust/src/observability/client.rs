@@ -1,0 +1,132 @@
+//! Minimal blocking HTTP/1.1 GET client for JSON endpoints.
+//!
+//! This is the collector side of the ops story: `examples/ops_top.rs`
+//! polls `GET /v1/metrics` over a real socket with this client, and
+//! the bench harness uses it to scrape the front door it just stood
+//! up. It deliberately speaks only the subset the in-repo
+//! [`crate::coordinator::http`] server emits — `Content-Length`-framed
+//! responses over a fresh connection — so it stays a page of code with
+//! zero dependencies, but it is a real network client: everything goes
+//! through the OS socket layer, not an in-process shortcut.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::JsonValue;
+
+/// Upper bound on accepted response bodies; a metrics payload is a few
+/// KB, so anything near this limit is a protocol error, not data.
+const MAX_BODY: usize = 4 << 20;
+
+/// `GET http://{addr}{path}`, expect a 200 with a JSON body, parse it.
+/// `timeout` bounds connect and each socket read/write individually.
+pub fn http_get_json(addr: &str, path: &str, timeout: Duration) -> Result<JsonValue> {
+    let (status, body) = http_get(addr, path, timeout)?;
+    if status != 200 {
+        bail!("GET {path} on {addr}: HTTP {status} — {body}");
+    }
+    JsonValue::parse(&body).with_context(|| format!("GET {path} on {addr}: body is not JSON"))
+}
+
+/// `GET http://{addr}{path}` returning `(status, body)` uninterpreted.
+pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, String)> {
+    use std::net::ToSocketAddrs;
+    let sock = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .with_context(|| format!("{addr} resolved to no address"))?;
+    let mut stream = TcpStream::connect_timeout(&sock, timeout)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    stream.write_all(req.as_bytes()).context("writing request")?;
+
+    let mut raw = Vec::new();
+    let mut chunk = [0u8; 8192];
+    loop {
+        // Connection: close framing with a Content-Length cross-check
+        // below; stop early if a response ever exceeds the body cap.
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => {
+                raw.extend_from_slice(&chunk[..n]);
+                if raw.len() > MAX_BODY {
+                    bail!("response from {addr} exceeds {MAX_BODY} bytes");
+                }
+            }
+            Err(e) => return Err(e).context("reading response"),
+        }
+    }
+    parse_response(&raw, addr)
+}
+
+fn parse_response(raw: &[u8], addr: &str) -> Result<(u16, String)> {
+    let text = std::str::from_utf8(raw).context("response is not UTF-8")?;
+    let (head, body) = text
+        .split_once("\r\n\r\n")
+        .with_context(|| format!("no header/body separator in response from {addr}"))?;
+    let status_line = head.lines().next().unwrap_or_default();
+    let status: u16 = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line `{status_line}` from {addr}"))?;
+    // Trust Content-Length over connection teardown when present: a
+    // truncated read should be an error, not a mangled JSON parse.
+    let content_length = head
+        .lines()
+        .skip(1)
+        .filter_map(|l| l.split_once(':'))
+        .find(|(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+        .and_then(|(_, v)| v.trim().parse::<usize>().ok());
+    let body = match content_length {
+        Some(len) if body.len() < len => {
+            bail!("truncated response from {addr}: got {} of {len} body bytes", body.len())
+        }
+        Some(len) => &body[..len],
+        None => body,
+    };
+    Ok((status, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_framed_response() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Type: application/json\r\nContent-Length: 13\r\n\r\n{\"depth\": 42}";
+        let (status, body) = parse_response(raw, "test").unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(JsonValue::parse(&body).unwrap().get("depth").unwrap().as_usize(), Some(42));
+    }
+
+    #[test]
+    fn content_length_truncates_trailing_bytes() {
+        let raw = b"HTTP/1.1 404 Not Found\r\ncontent-length: 2\r\n\r\n{}extra";
+        let (status, body) = parse_response(raw, "test").unwrap();
+        assert_eq!(status, 404);
+        assert_eq!(body, "{}");
+    }
+
+    #[test]
+    fn short_body_is_a_truncation_error() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Length: 99\r\n\r\n{}";
+        let err = parse_response(raw, "test").unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        assert!(parse_response(b"not http at all", "test").is_err());
+        assert!(parse_response(b"HTTP/1.1 banana\r\n\r\n", "test").is_err());
+    }
+
+    // The live-socket path is covered end-to-end in coordinator::http's
+    // tests and by `serve_bench --http-smoke` in CI.
+}

@@ -1,0 +1,240 @@
+//! Fixed-bucket latency histogram — the one latency data structure the
+//! whole serving stack records into.
+//!
+//! Buckets are powers of two in microseconds: bucket `i` counts
+//! durations in `(2^(i-1), 2^i]` µs (everything at or below 1 µs lands
+//! in bucket 1; the last bucket is a catch-all for everything above
+//! `2^22` µs ≈ 4.2 s). 24 buckets cover sub-microsecond kernel
+//! iterations through multi-second stalls in 192 bytes with no
+//! allocation on the record path, which is why every shard can afford
+//! one per replica.
+//!
+//! The histogram started life inside `coordinator::server`; it moved
+//! here when the perf harness made latency a first-class reported
+//! artifact — the same type now backs [`ServerMetrics`]
+//! (`crate::coordinator::ServerMetrics`), the per-shard router metrics,
+//! the `GET /v1/metrics` bucketed JSON and the `BENCH_*.json` sections
+//! (see [`crate::observability::bench_report`]).
+
+use std::time::Duration;
+
+use crate::json::JsonValue;
+use crate::json_obj;
+
+/// Number of power-of-two buckets (see module docs for the layout).
+pub const HIST_BUCKETS: usize = 24;
+
+/// Latency histogram with fixed microsecond buckets (powers of two).
+#[derive(Default, Debug, Clone, PartialEq, Eq)]
+pub struct LatencyHist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl LatencyHist {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as u64).min(HIST_BUCKETS as u64 - 1) as usize;
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.sum_us as f64 / self.count.max(1) as f64
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The raw bucket counts; bucket `i`'s upper bound is `2^i` µs.
+    pub fn buckets(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Approximate quantile: the upper bound of the bucket holding the
+    /// nearest-rank sample, clamped to the observed maximum so it never
+    /// reports a latency larger than anything actually recorded.
+    ///
+    /// Edge cases are exact, not approximate: an empty histogram
+    /// returns 0; with one sample every quantile is that sample; with
+    /// all-equal samples every quantile is the common value (clamping
+    /// collapses the bucket bound onto the true max).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((self.count as f64) * q.clamp(0.0, 1.0)).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if c > 0 && seen >= target {
+                return (1u64 << i).min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    /// Accumulate another histogram into this one (the router's merged
+    /// aggregate view; bench sections merging per-shard recordings).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.buckets.iter_mut().zip(other.buckets.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Bucketed JSON for `GET /v1/metrics`: summary quantiles plus one
+    /// `{le_us, count}` entry per *non-empty* bucket (empty buckets are
+    /// elided so an idle shard serializes to a handful of bytes).
+    pub fn to_json(&self) -> JsonValue {
+        let buckets: Vec<JsonValue> = self
+            .buckets
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| json_obj! { "le_us" => (1u64 << i) as usize, "count" => c as usize })
+            .collect();
+        json_obj! {
+            "count" => self.count as usize,
+            "mean_us" => self.mean_us(),
+            "p50_us" => self.quantile_us(0.50) as usize,
+            "p99_us" => self.quantile_us(0.99) as usize,
+            "max_us" => self.max_us as usize,
+            "buckets" => buckets,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHist::default();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.99));
+        assert!(h.mean_us() > 0.0);
+        assert_eq!(h.max_us(), 100_000);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero_not_garbage() {
+        let h = LatencyHist::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_us(0.0), 0);
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.quantile_us(1.0), 0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_every_quantile_is_that_sample() {
+        // 100_000 µs sits in the (65536, 131072] bucket whose raw upper
+        // bound (131072) exceeds the sample — the max clamp must bring
+        // every quantile back to the exact recorded value.
+        let mut h = LatencyHist::default();
+        h.record(Duration::from_micros(100_000));
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_us(q), 100_000, "q={q}");
+        }
+        assert_eq!(h.mean_us(), 100_000.0);
+    }
+
+    #[test]
+    fn two_samples_split_their_quantiles() {
+        let mut h = LatencyHist::default();
+        h.record(Duration::from_micros(3)); // bucket (2, 4]
+        h.record(Duration::from_micros(900)); // bucket (512, 1024]
+        // p50 = nearest rank 1 = the small sample's bucket bound (4);
+        // p99 = rank 2 = the large sample, clamped to the true max.
+        assert_eq!(h.quantile_us(0.5), 4);
+        assert_eq!(h.quantile_us(0.99), 900);
+        assert_eq!(h.max_us(), 900);
+    }
+
+    #[test]
+    fn all_equal_samples_collapse_to_the_common_value() {
+        let mut h = LatencyHist::default();
+        for _ in 0..1000 {
+            h.record(Duration::from_micros(777));
+        }
+        for q in [0.01, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(h.quantile_us(q), 777, "q={q}");
+        }
+        assert_eq!(h.mean_us(), 777.0);
+    }
+
+    #[test]
+    fn zero_duration_lands_in_the_first_real_bucket() {
+        let mut h = LatencyHist::default();
+        h.record(Duration::from_micros(0));
+        assert_eq!(h.count(), 1);
+        // bucket index 1 (us clamped to 1), bound 2, clamped to max 0.
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.buckets()[1], 1);
+    }
+
+    #[test]
+    fn merge_sums_counts_and_takes_max() {
+        let mut a = LatencyHist::default();
+        let mut b = LatencyHist::default();
+        for us in [10u64, 20, 30] {
+            a.record(Duration::from_micros(us));
+        }
+        for us in [1000u64, 2000] {
+            b.record(Duration::from_micros(us));
+        }
+        let mut both = LatencyHist::default();
+        for us in [10u64, 20, 30, 1000, 2000] {
+            both.record(Duration::from_micros(us));
+        }
+        a.merge(&b);
+        assert_eq!(a, both, "merge must equal recording everything into one histogram");
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.max_us(), 2000);
+    }
+
+    #[test]
+    fn json_view_elides_empty_buckets_and_carries_quantiles() {
+        let mut h = LatencyHist::default();
+        for us in [100u64, 100, 3000] {
+            h.record(Duration::from_micros(us));
+        }
+        let v = h.to_json();
+        assert_eq!(v.get("count").and_then(|c| c.as_usize()), Some(3));
+        assert_eq!(v.get("max_us").and_then(|c| c.as_usize()), Some(3000));
+        assert_eq!(
+            v.get("p50_us").and_then(|c| c.as_usize()),
+            Some(h.quantile_us(0.5) as usize)
+        );
+        let buckets = v.get("buckets").and_then(|b| b.as_array()).unwrap();
+        assert_eq!(buckets.len(), 2, "only non-empty buckets serialize: {v:?}");
+        let counts: u64 = buckets
+            .iter()
+            .map(|b| b.get("count").and_then(|c| c.as_usize()).unwrap() as u64)
+            .sum();
+        assert_eq!(counts, 3);
+        // every le_us is a power of two
+        for b in buckets {
+            let le = b.get("le_us").and_then(|c| c.as_usize()).unwrap();
+            assert!(le.is_power_of_two(), "{le}");
+        }
+    }
+}

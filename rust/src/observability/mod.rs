@@ -1,0 +1,32 @@
+//! Observability + continuous-perf subsystem (ROADMAP "perf harness").
+//!
+//! SPARQ's results are speed-vs-accuracy trade-offs, so performance
+//! numbers are artifacts here, not log lines. This module owns the
+//! pieces that make them first-class and regression-gated:
+//!
+//! * [`histogram`]    — the fixed-bucket [`LatencyHist`] every layer of
+//!   the serving stack records into, now also serialized (bucketed)
+//!   over `GET /v1/metrics`.
+//! * [`bench_report`] — the versioned `BENCH_*.json` schema
+//!   ([`BenchReport`]) emitted by `benches/hotpath.rs` and
+//!   `serve_bench --bench-json`, with strict parse-side validation.
+//! * [`budget`]       — falsifiable per-section budgets
+//!   (`BENCH_BASELINE.json`); `serve_bench --check-budgets` turns any
+//!   [`budget::Violation`] into a non-zero CI exit.
+//! * [`client`]       — the blocking HTTP JSON poller behind
+//!   `examples/ops_top.rs`'s live dashboard.
+//!
+//! See README's "Continuous perf harness" section for the operator
+//! workflow (recording baselines, overriding budgets per host).
+
+pub mod bench_report;
+pub mod budget;
+pub mod client;
+pub mod histogram;
+
+pub use bench_report::{
+    time_iters, BenchReport, BenchSection, HostFingerprint, QueueStats, Timing, SCHEMA_VERSION,
+};
+pub use budget::{check, BudgetFile, SectionBudget, Violation, BUDGET_VERSION};
+pub use client::{http_get, http_get_json};
+pub use histogram::{LatencyHist, HIST_BUCKETS};

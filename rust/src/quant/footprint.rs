@@ -71,6 +71,14 @@ pub fn policy_bits_per_activation(
         / total
 }
 
+/// The `bits_per_act` a bench-report section carries for a single-config
+/// run: the paper's baseline accounting (per-activation ShiftCtrl,
+/// `shift_group = 1`). One name for one convention, so every
+/// `BENCH_*.json` emitter agrees on what the column means.
+pub fn report_bits(cfg: SparqConfig) -> f64 {
+    bits_per_activation(cfg, 1)
+}
+
 /// The §5.1 worked example and a sweep for the report.
 pub fn footprint_rows() -> Vec<(String, f64, f64, f64)> {
     ["5opt_r", "3opt_r", "2opt_r", "6opt_r", "7opt_r"]
@@ -135,6 +143,16 @@ mod tests {
         }
         // asymptote: data + mux only
         assert!(bits_per_activation(cfg, 1 << 20) - 4.5 < 1e-4);
+    }
+
+    #[test]
+    fn report_bits_is_the_shift_group_1_baseline() {
+        for name in ["5opt_r", "3opt_r", "a8w8", "a4w8"] {
+            let cfg = SparqConfig::named(name).unwrap();
+            assert_eq!(report_bits(cfg), bits_per_activation(cfg, 1), "{name}");
+        }
+        assert_eq!(report_bits(SparqConfig::named("5opt_r").unwrap()), 7.5);
+        assert_eq!(report_bits(SparqConfig::named("a8w8").unwrap()), 8.0);
     }
 
     #[test]
