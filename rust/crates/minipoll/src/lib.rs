@@ -119,6 +119,8 @@ mod epoll {
 
     impl Epoll {
         pub(crate) fn new() -> io::Result<Self> {
+            // SAFETY: epoll_create1 takes no pointers; the flag is a
+            // valid kernel constant and the return value is checked.
             let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
             if epfd < 0 {
                 return Err(io::Error::last_os_error());
@@ -131,6 +133,10 @@ mod epoll {
             // kernels but pre-2.6.9 ones reject a null pointer, so a
             // real struct is always passed.
             let mut ev = EpollEvent { events: mask(interest), data: token };
+            // SAFETY: `ev` is a live, properly-initialized #[repr(C,
+            // packed)] EpollEvent for the duration of the call; the
+            // kernel only reads it. epfd/fd validity is the kernel's to
+            // check (bad fds surface as EBADF, handled below).
             if unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) } < 0 {
                 return Err(io::Error::last_os_error());
             }
@@ -151,6 +157,10 @@ mod epoll {
 
         pub(crate) fn wait(&mut self, out: &mut Vec<Event>, timeout_ms: i32) -> io::Result<()> {
             loop {
+                // SAFETY: `buf` is an initialized Vec whose length is
+                // passed as maxevents, so the kernel writes at most
+                // `buf.len()` EpollEvent structs into owned memory; the
+                // borrow of `self.buf` outlives the call.
                 let n = unsafe {
                     epoll_wait(self.epfd, self.buf.as_mut_ptr(), self.buf.len() as i32, timeout_ms)
                 };
@@ -177,6 +187,9 @@ mod epoll {
 
     impl Drop for Epoll {
         fn drop(&mut self) {
+            // SAFETY: epfd was returned by epoll_create1 and is owned
+            // exclusively by this struct — nothing else closes it, so
+            // this cannot double-close or free another thread's fd.
             unsafe {
                 close(self.epfd);
             }
@@ -297,8 +310,13 @@ mod poll_backend {
                 self.fds.push(PollFd { fd: e.fd, events: mask(e.interest), revents: 0 });
             }
             loop {
-                let n =
-                    unsafe { poll(self.fds.as_mut_ptr(), self.fds.len() as Nfds, timeout_ms) };
+                // SAFETY: `fds` was rebuilt above as a Vec of
+                // #[repr(C)] PollFd, so the pointer/length pair passed
+                // to poll(2) describes exactly the owned, initialized
+                // array the kernel reads and writes revents into.
+                let n = unsafe {
+                    poll(self.fds.as_mut_ptr(), self.fds.len() as Nfds, timeout_ms)
+                };
                 if n < 0 {
                     let e = io::Error::last_os_error();
                     if e.kind() == io::ErrorKind::Interrupted {

@@ -1,0 +1,259 @@
+//! Embedded positive/negative fixtures for every `sparq_lint` rule,
+//! and the self-test that runs them (`sparq_lint --self-test`, also a
+//! unit test). Each positive fixture must produce *exactly* the
+//! expected `(rule, line)` multiset; each negative must be clean —
+//! so both the detector and its suppression/test-stripping logic are
+//! exercised on every run.
+//!
+//! Fixture sources live in raw string literals: the lexer collapses
+//! them to single `Str` tokens when the analyzer scans this file
+//! itself, so the violating snippets can never self-trigger.
+
+use super::rules::analyze_source;
+
+pub struct Fixture {
+    pub name: &'static str,
+    /// Synthetic repo-relative path — chosen to land in (or out of)
+    /// each rule's scope.
+    pub path: &'static str,
+    pub src: &'static str,
+    /// Exact multiset of expected findings.
+    pub expect: &'static [(&'static str, usize)],
+}
+
+pub const FIXTURES: &[Fixture] = &[
+    Fixture {
+        name: "no-panic-path/positive",
+        path: "rust/src/coordinator/fixture.rs",
+        src: r#"
+fn handle(v: Option<u32>) -> u32 {
+    let a = v.unwrap();
+    let b = v.expect("present");
+    if a + b > 9 {
+        panic!("boom");
+    }
+    unreachable!()
+}
+"#,
+        expect: &[
+            ("no-panic-path", 2),
+            ("no-panic-path", 3),
+            ("no-panic-path", 5),
+            ("no-panic-path", 7),
+        ],
+    },
+    Fixture {
+        name: "no-panic-path/negative",
+        path: "rust/src/coordinator/fixture.rs",
+        src: r#"
+fn handle(v: Option<u32>) -> u32 {
+    let a = v.unwrap_or(0);
+    let b = v.unwrap_or_else(|| 1);
+    // sparq-lint: allow(no-panic-path): fixture-justified invariant; v checked upstream
+    let c = v.expect("justified by the allow above");
+    a + b + c
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn panics_are_fine_in_tests() {
+        assert_eq!(super::handle(Some(1)).checked_add(1).unwrap(), 3);
+    }
+}
+"#,
+        expect: &[],
+    },
+    Fixture {
+        name: "no-panic-path/out-of-scope",
+        path: "rust/src/quant/fixture.rs",
+        src: r#"
+fn numeric(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+"#,
+        expect: &[],
+    },
+    Fixture {
+        name: "safety-comment/positive",
+        path: "rust/src/runtime/fixture.rs",
+        src: r#"
+fn read(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+unsafe fn raw(p: *const u8) -> u8 {
+    *p
+}
+"#,
+        expect: &[("safety-comment", 2), ("safety-comment", 4)],
+    },
+    Fixture {
+        name: "safety-comment/negative",
+        path: "rust/src/runtime/fixture.rs",
+        src: r#"
+fn read(p: *const u8) -> u8 {
+    // SAFETY: caller contract - p is valid for a one-byte read.
+    unsafe { *p }
+}
+// SAFETY: documented contract: callers pass pointers into live buffers.
+unsafe fn raw(p: *const u8) -> u8 {
+    *p
+}
+fn multiline(p: *const u8) -> u8 {
+    // SAFETY: a multi-line justification counts too - this contiguous
+    // run of comment lines ends directly above the unsafe block.
+    unsafe { *p }
+}
+"#,
+        expect: &[],
+    },
+    Fixture {
+        name: "narrowing-cast/positive",
+        path: "rust/src/quant/fixture.rs",
+        src: r#"
+pub fn pack(x: i32, y: u32) -> (u8, i32) {
+    (x as u8, y as i32)
+}
+"#,
+        expect: &[("narrowing-cast", 2), ("narrowing-cast", 2)],
+    },
+    Fixture {
+        name: "narrowing-cast/negative",
+        path: "rust/src/quant/fixture.rs",
+        src: r#"
+pub fn widen(x: u8) -> i64 {
+    let w = i64::from(x);
+    w as i64
+}
+pub fn clamp_pack(x: i32) -> u8 {
+    // sparq-lint: allow(narrowing-cast): clamped to [0, 255] on the line below
+    (x.clamp(0, 255)) as u8
+}
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn casts_are_fine_in_tests() {
+        assert_eq!(300i32 as u8, 44);
+    }
+}
+"#,
+        expect: &[],
+    },
+    Fixture {
+        name: "lock-across-blocking/positive",
+        path: "rust/src/model/fixture.rs",
+        src: r#"
+use std::sync::{Condvar, Mutex};
+fn send_under_lock(m: &Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {
+    let g = m.lock().unwrap();
+    let _ = tx.send(*g);
+}
+fn wait_other(a: &Mutex<u32>, b: &Mutex<u32>, cv: &Condvar) {
+    let _ga = a.lock().unwrap();
+    let gb = b.lock().unwrap();
+    let _gc = cv.wait(gb);
+}
+"#,
+        expect: &[("lock-across-blocking", 4), ("lock-across-blocking", 9)],
+    },
+    Fixture {
+        name: "lock-across-blocking/negative",
+        path: "rust/src/model/fixture.rs",
+        src: r#"
+use std::sync::{Condvar, Mutex};
+fn scoped(m: &Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {
+    let v = { let g = m.lock().unwrap(); *g };
+    let _ = tx.send(v);
+}
+fn dropped(m: &Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {
+    let g = m.lock().unwrap();
+    drop(g);
+    let _ = tx.send(1);
+}
+fn condvar_own_mutex(m: &Mutex<u32>, cv: &Condvar) {
+    let mut g = m.lock().unwrap();
+    while *g == 0 {
+        g = cv.wait(g).unwrap();
+    }
+}
+fn consumed_not_bound(m: &Mutex<u32>, tx: &std::sync::mpsc::Sender<u32>) {
+    let depth = m.lock().unwrap().wrapping_add(0);
+    let _ = tx.send(depth);
+}
+"#,
+        expect: &[],
+    },
+    Fixture {
+        name: "no-exit/positive",
+        path: "rust/src/quant/fixture.rs",
+        src: r#"
+fn die(code: i32) -> ! {
+    std::process::exit(code)
+}
+"#,
+        expect: &[("no-exit", 2)],
+    },
+    Fixture {
+        name: "no-exit/negative-allowed-file",
+        path: "rust/src/main.rs",
+        src: r#"
+fn die(code: i32) -> ! {
+    std::process::exit(code)
+}
+"#,
+        expect: &[],
+    },
+    Fixture {
+        name: "allow-syntax/positive",
+        path: "rust/src/quant/fixture.rs",
+        src: r#"
+fn noop() {}
+// sparq-lint: allow(not-a-rule): someone guessed a rule name
+// sparq-lint: allow(no-exit) forgot the justification separator
+// sparq-lint: allow(no-exit):
+"#,
+        expect: &[("allow-syntax", 2), ("allow-syntax", 3), ("allow-syntax", 4)],
+    },
+    Fixture {
+        name: "allow-syntax/negative",
+        path: "rust/src/quant/fixture.rs",
+        src: r#"
+// sparq-lint: allow(no-exit): well-formed syntax demo; nothing to suppress nearby
+fn noop() {}
+"#,
+        expect: &[],
+    },
+];
+
+/// Run every fixture; returns a description of the first mismatch.
+pub fn self_test() -> Result<(), String> {
+    for f in FIXTURES {
+        // Fixture sources open with a newline right after the raw
+        // string delimiter; strip it so content starts on line 1.
+        let src = f.src.strip_prefix('\n').unwrap_or(f.src);
+        let mut got: Vec<(String, usize)> = analyze_source(f.path, src)
+            .into_iter()
+            .map(|v| (v.rule.to_string(), v.line))
+            .collect();
+        got.sort();
+        let mut want: Vec<(String, usize)> =
+            f.expect.iter().map(|(r, l)| (r.to_string(), *l)).collect();
+        want.sort();
+        if got != want {
+            return Err(format!(
+                "fixture {}: expected {:?}, got {:?}",
+                f.name, want, got
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn all_fixtures_pass() {
+        if let Err(e) = super::self_test() {
+            panic!("{e}");
+        }
+    }
+}

@@ -1,0 +1,372 @@
+//! A minimal Rust lexer for [`sparq_lint`](crate::analysis) — just
+//! enough fidelity to reason about identifiers, punctuation and
+//! comments while *skipping* string/char literals, so rule patterns
+//! never fire on text inside a literal.
+//!
+//! Zero dependencies (no syn / proc-macro — neither exists in the
+//! offline image). Handles nested block comments, raw strings
+//! (`r"..."`, `r#"..."#` with any hash count), byte strings, raw
+//! identifiers (`r#type`), numeric literals with suffixes, and the
+//! char-literal / lifetime ambiguity after `'`.
+//!
+//! The lexer is intentionally lossy where the rules don't care: all
+//! literals collapse to [`TokKind::Str`] / [`TokKind::Number`], and
+//! whitespace is dropped entirely. What it must get exactly right is
+//! *where literals and comments end* — a `.unwrap()` inside a string
+//! is data, not code.
+
+/// One lexed token. Line numbers are 1-based.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TokKind {
+    Ident(String),
+    /// A lifetime such as `'a` (label or lifetime — same shape).
+    Lifetime,
+    /// Any numeric literal, suffix included.
+    Number,
+    /// Any string / raw string / byte string / char literal.
+    Str,
+    /// `// ...` including the slashes.
+    LineComment(String),
+    /// `/* ... */` including delimiters; may span lines.
+    BlockComment(String),
+    /// Any other single character.
+    Punct(char),
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    /// Line of the token's first character.
+    pub line: usize,
+    /// Line of the token's last character (differs from `line` only
+    /// for multi-line block comments and strings).
+    pub end_line: usize,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize Rust source. Never fails: unterminated literals and
+/// comments run to end-of-input (the compiler will reject such a file
+/// anyway; the lexer's job is just to not misclassify what follows).
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer { c: src.chars().collect(), i: 0, line: 1, toks: Vec::new() }.run()
+}
+
+struct Lexer {
+    c: Vec<char>,
+    i: usize,
+    line: usize,
+    toks: Vec<Tok>,
+}
+
+impl Lexer {
+    fn run(mut self) -> Vec<Tok> {
+        while self.i < self.c.len() {
+            let start_line = self.line;
+            let ch = self.c[self.i];
+            if ch == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if ch.is_whitespace() {
+                self.i += 1;
+            } else if ch == '/' && self.peek(1) == Some('/') {
+                self.line_comment(start_line);
+            } else if ch == '/' && self.peek(1) == Some('*') {
+                self.block_comment(start_line);
+            } else if ch == '"' {
+                self.dq_string(start_line);
+            } else if ch == '\'' {
+                self.char_or_lifetime(start_line);
+            } else if is_ident_start(ch) {
+                self.ident_or_literal_prefix(start_line);
+            } else if ch.is_ascii_digit() {
+                self.number(start_line);
+            } else {
+                self.i += 1;
+                self.push(TokKind::Punct(ch), start_line);
+            }
+        }
+        self.toks
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.c.get(self.i + ahead).copied()
+    }
+
+    fn push(&mut self, kind: TokKind, start_line: usize) {
+        self.toks.push(Tok { kind, line: start_line, end_line: self.line });
+    }
+
+    fn line_comment(&mut self, start_line: usize) {
+        let start = self.i;
+        while self.i < self.c.len() && self.c[self.i] != '\n' {
+            self.i += 1;
+        }
+        let text: String = self.c[start..self.i].iter().collect();
+        self.push(TokKind::LineComment(text), start_line);
+    }
+
+    fn block_comment(&mut self, start_line: usize) {
+        let start = self.i;
+        self.i += 2;
+        let mut depth = 1usize;
+        while self.i < self.c.len() && depth > 0 {
+            match (self.c[self.i], self.peek(1)) {
+                ('\n', _) => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                ('/', Some('*')) => {
+                    depth += 1;
+                    self.i += 2;
+                }
+                ('*', Some('/')) => {
+                    depth -= 1;
+                    self.i += 2;
+                }
+                _ => self.i += 1,
+            }
+        }
+        let text: String = self.c[start..self.i].iter().collect();
+        self.push(TokKind::BlockComment(text), start_line);
+    }
+
+    /// Ordinary `"..."` (or the tail of `b"..."`): backslash escapes,
+    /// may span lines.
+    fn dq_string(&mut self, start_line: usize) {
+        self.i += 1; // opening quote
+        while self.i < self.c.len() {
+            match self.c[self.i] {
+                '\\' => self.i += 2,
+                '"' => {
+                    self.i += 1;
+                    break;
+                }
+                '\n' => {
+                    self.line += 1;
+                    self.i += 1;
+                }
+                _ => self.i += 1,
+            }
+        }
+        self.push(TokKind::Str, start_line);
+    }
+
+    /// `r"..."` / `r#"..."#` tail: `hashes` is the number of `#` after
+    /// the `r`. No escapes; closes on `"` followed by `hashes` `#`s.
+    fn raw_string(&mut self, hashes: usize, start_line: usize) {
+        self.i += 1; // opening quote
+        while self.i < self.c.len() {
+            if self.c[self.i] == '\n' {
+                self.line += 1;
+                self.i += 1;
+            } else if self.c[self.i] == '"'
+                && (1..=hashes).all(|k| self.peek(k) == Some('#'))
+            {
+                self.i += 1 + hashes;
+                break;
+            } else {
+                self.i += 1;
+            }
+        }
+        self.push(TokKind::Str, start_line);
+    }
+
+    /// Disambiguate `'a'` (char) from `'a` (lifetime): a backslash or a
+    /// non-identifier character after `'` is always a char literal; an
+    /// identifier char is a char literal only if a closing `'` follows
+    /// immediately after it.
+    fn char_or_lifetime(&mut self, start_line: usize) {
+        match self.peek(1) {
+            Some('\\') => {
+                // Escaped char literal: skip `'\` and the escape
+                // introducer, then run to the closing quote.
+                self.i += 3;
+                while self.i < self.c.len() && self.c[self.i] != '\'' {
+                    self.i += 1;
+                }
+                self.i += 1;
+                self.push(TokKind::Str, start_line);
+            }
+            Some(c2) if is_ident_start(c2) || c2.is_ascii_digit() => {
+                if self.peek(2) == Some('\'') {
+                    self.i += 3; // 'x'
+                    self.push(TokKind::Str, start_line);
+                } else {
+                    self.i += 2;
+                    while self.i < self.c.len() && is_ident_cont(self.c[self.i]) {
+                        self.i += 1;
+                    }
+                    self.push(TokKind::Lifetime, start_line);
+                }
+            }
+            Some(_) => {
+                // Punctuation/space char literal such as `'.'` or `' '`.
+                self.i += 2;
+                while self.i < self.c.len() && self.c[self.i] != '\'' {
+                    self.i += 1;
+                }
+                self.i += 1;
+                self.push(TokKind::Str, start_line);
+            }
+            None => {
+                self.i += 1;
+                self.push(TokKind::Punct('\''), start_line);
+            }
+        }
+    }
+
+    /// An identifier — or, if the identifier is `r`/`b`/`br`/`rb` and a
+    /// literal opener follows, the prefix of a raw/byte string, byte
+    /// char, or raw identifier.
+    fn ident_or_literal_prefix(&mut self, start_line: usize) {
+        let start = self.i;
+        while self.i < self.c.len() && is_ident_cont(self.c[self.i]) {
+            self.i += 1;
+        }
+        let name: String = self.c[start..self.i].iter().collect();
+        let next = self.peek(0);
+        match (name.as_str(), next) {
+            ("r" | "br" | "rb", Some('"')) => self.raw_string(0, start_line),
+            ("r" | "br" | "rb", Some('#')) => {
+                let mut hashes = 0usize;
+                while self.peek(hashes) == Some('#') {
+                    hashes += 1;
+                }
+                if self.peek(hashes) == Some('"') {
+                    self.i += hashes;
+                    self.raw_string(hashes, start_line);
+                } else if name == "r" && hashes == 1 {
+                    // Raw identifier `r#type`: emit the bare name so
+                    // rules see it as an ordinary ident.
+                    self.i += 1;
+                    let id_start = self.i;
+                    while self.i < self.c.len() && is_ident_cont(self.c[self.i]) {
+                        self.i += 1;
+                    }
+                    let id: String = self.c[id_start..self.i].iter().collect();
+                    self.push(TokKind::Ident(id), start_line);
+                } else {
+                    self.push(TokKind::Ident(name), start_line);
+                }
+            }
+            ("b", Some('"')) => self.dq_string(start_line),
+            ("b", Some('\'')) => {
+                // Byte char literal `b'x'` / `b'\n'` — never a lifetime.
+                self.i += 1;
+                if self.peek(0) == Some('\\') {
+                    self.i += 2;
+                }
+                while self.i < self.c.len() && self.c[self.i] != '\'' {
+                    self.i += 1;
+                }
+                self.i += 1;
+                self.push(TokKind::Str, start_line);
+            }
+            _ => self.push(TokKind::Ident(name), start_line),
+        }
+    }
+
+    fn number(&mut self, start_line: usize) {
+        // Digits, suffixes and exponents all collapse into one token;
+        // a `.` joins only when a digit follows, so tuple field access
+        // (`pair.0.send`) and ranges (`0..n`) stay separate tokens.
+        self.i += 1;
+        loop {
+            while self.i < self.c.len() && is_ident_cont(self.c[self.i]) {
+                self.i += 1;
+            }
+            if self.peek(0) == Some('.')
+                && self.peek(1).is_some_and(|c| c.is_ascii_digit())
+            {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        self.push(TokKind::Number, start_line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokKind> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn idents_and_punct() {
+        assert_eq!(
+            kinds("let x = y;"),
+            vec![
+                TokKind::Ident("let".into()),
+                TokKind::Ident("x".into()),
+                TokKind::Punct('='),
+                TokKind::Ident("y".into()),
+                TokKind::Punct(';'),
+            ]
+        );
+    }
+
+    #[test]
+    fn strings_swallow_code_shaped_text() {
+        let toks = kinds(r#"let s = "a.unwrap() /* x */ // y";"#);
+        assert!(toks.contains(&TokKind::Str));
+        assert!(!toks.iter().any(|t| matches!(t, TokKind::Ident(s) if s == "unwrap")));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let src = "let s = r#\"contains \"quotes\" and unwrap()\"#; done";
+        let toks = kinds(src);
+        assert!(toks.iter().any(|t| matches!(t, TokKind::Ident(s) if s == "done")));
+        assert!(!toks.iter().any(|t| matches!(t, TokKind::Ident(s) if s == "unwrap")));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let toks = kinds("a /* outer /* inner */ still */ b");
+        assert_eq!(toks.len(), 3);
+        assert!(matches!(&toks[1], TokKind::BlockComment(t) if t.contains("inner")));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let toks = kinds("&'a str; 'x'; '\\n'; b'\\0'");
+        assert_eq!(
+            toks.iter().filter(|t| matches!(t, TokKind::Lifetime)).count(),
+            1
+        );
+        assert_eq!(toks.iter().filter(|t| matches!(t, TokKind::Str)).count(), 3);
+    }
+
+    #[test]
+    fn tuple_field_access_keeps_dot() {
+        let toks = kinds("self.0.lock()");
+        assert!(toks.contains(&TokKind::Punct('.')));
+        assert!(toks.iter().any(|t| matches!(t, TokKind::Ident(s) if s == "lock")));
+    }
+
+    #[test]
+    fn line_numbers_track_multiline_tokens() {
+        let toks = lex("a\n/* two\nlines */\nb");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2);
+        assert_eq!(toks[1].end_line, 3);
+        assert_eq!(toks[2].line, 4);
+    }
+
+    #[test]
+    fn raw_ident() {
+        let toks = kinds("r#unsafe");
+        assert_eq!(toks, vec![TokKind::Ident("unsafe".into())]);
+    }
+}

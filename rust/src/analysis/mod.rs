@@ -1,0 +1,123 @@
+//! `sparq-lint` — an offline, zero-dependency static analyzer for this
+//! repository's project invariants.
+//!
+//! The serving stack is a real concurrent system (bounded batcher
+//! queues, an epoll event loop over vendored `unsafe` libc calls,
+//! per-shard workers) and the quantization hot paths carry the paper's
+//! bit-exactness claims — the two bug classes nothing mechanically
+//! guarded against were a request-path panic and a silently-truncating
+//! cast. This module turns those invariants into named, individually
+//! allow-listable rules (see [`rules::RULES`]) enforced by the
+//! `sparq_lint` binary and CI.
+//!
+//! Layered like the rest of the crate:
+//!
+//! * [`lexer`] — a minimal Rust tokenizer (comments, strings,
+//!   attributes handled correctly; no syn/proc-macro),
+//! * [`rules`] — the rule engine over the token stream, with
+//!   `#[cfg(test)]` region stripping and the allow-list,
+//! * [`report`] — human + `sparq-lint/1` JSON rendering,
+//! * [`fixtures`] — embedded positive/negative snippets self-testing
+//!   every rule (`sparq_lint --self-test`).
+//!
+//! See README "Static analysis & sanitizers" for the rule catalog and
+//! the allow syntax.
+
+pub mod fixtures;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use rules::Violation;
+
+/// Directories scanned (relative to the repo root). `rust/crates`
+/// covers the vendored `anyhow`/`minipoll`/`xla` sources.
+const SCAN_ROOTS: &[&str] =
+    &["rust/src", "rust/crates", "rust/tests", "rust/benches", "examples"];
+
+pub struct LintOutcome {
+    pub violations: Vec<Violation>,
+    pub files_scanned: usize,
+}
+
+/// Lint the repository at `root`. With `only` non-empty, restrict to
+/// files whose repo-relative path contains any of the given needles
+/// (e.g. `coordinator/` or a full path).
+pub fn run(root: &Path, only: &[String]) -> Result<LintOutcome> {
+    let mut files = Vec::new();
+    for dir in SCAN_ROOTS {
+        let abs = root.join(dir);
+        if abs.is_dir() {
+            collect_rs(&abs, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut violations = Vec::new();
+    let mut files_scanned = 0usize;
+    for abs in &files {
+        let rel = rel_path(root, abs);
+        if !only.is_empty() && !only.iter().any(|n| rel.contains(n.as_str())) {
+            continue;
+        }
+        let src = fs::read_to_string(abs)
+            .with_context(|| format!("reading {}", abs.display()))?;
+        violations.extend(rules::analyze_source(&rel, &src));
+        files_scanned += 1;
+    }
+    violations.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(LintOutcome { violations, files_scanned })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let entries =
+        fs::read_dir(dir).with_context(|| format!("listing {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            // `target/` holds build products, not sources.
+            if name != "target" && !name.starts_with('.') {
+                collect_rs(&path, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Repo-root-relative path with `/` separators (rule scoping matches
+/// on this form on every platform).
+fn rel_path(root: &Path, abs: &Path) -> String {
+    let rel = abs.strip_prefix(root).unwrap_or(abs);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The committed tree must lint clean — this is the same invariant
+    /// CI enforces via the binary, kept here so plain `cargo test`
+    /// catches a regression without the extra binary run.
+    #[test]
+    fn committed_tree_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+        let outcome = run(&root, &[]).expect("walk repo");
+        assert!(outcome.files_scanned > 50, "walker found the sources");
+        let listing = report::human(&outcome.violations, outcome.files_scanned);
+        assert!(outcome.violations.is_empty(), "tree has lint violations:\n{listing}");
+    }
+}

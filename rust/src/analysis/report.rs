@@ -1,0 +1,111 @@
+//! Report rendering for `sparq_lint`: a human `path:line: [rule]`
+//! listing and the machine-readable `sparq-lint/1` JSON document
+//! (serialized through the repo's own [`crate::json`] — the analyzer
+//! stays zero-dependency).
+
+use std::collections::BTreeMap;
+
+use crate::json::JsonValue;
+
+use super::rules::{Violation, RULES};
+
+/// Human-readable report: one `path:line: [rule] message` per
+/// violation, followed by a summary line.
+pub fn human(violations: &[Violation], files_scanned: usize) -> String {
+    let mut out = String::new();
+    for v in violations {
+        out.push_str(&format!("{}:{}: [{}] {}\n", v.path, v.line, v.rule, v.message));
+    }
+    if violations.is_empty() {
+        out.push_str(&format!("sparq-lint: clean ({files_scanned} files scanned)\n"));
+    } else {
+        out.push_str(&format!(
+            "sparq-lint: {} violation(s) in {} file(s) ({} files scanned)\n",
+            violations.len(),
+            distinct_paths(violations),
+            files_scanned,
+        ));
+    }
+    out
+}
+
+fn distinct_paths(violations: &[Violation]) -> usize {
+    let mut paths: Vec<&str> = violations.iter().map(|v| v.path.as_str()).collect();
+    paths.sort_unstable();
+    paths.dedup();
+    paths.len()
+}
+
+/// The `sparq-lint/1` JSON document:
+///
+/// ```json
+/// {
+///   "schema": "sparq-lint/1",
+///   "files_scanned": 71,
+///   "violations": [
+///     {"rule": "...", "path": "...", "line": 12, "message": "..."}
+///   ],
+///   "rules": [{"name": "...", "summary": "..."}]
+/// }
+/// ```
+pub fn to_json(violations: &[Violation], files_scanned: usize) -> JsonValue {
+    let vs: Vec<JsonValue> = violations
+        .iter()
+        .map(|v| {
+            let mut o = BTreeMap::new();
+            o.insert("rule".to_string(), JsonValue::String(v.rule.to_string()));
+            o.insert("path".to_string(), JsonValue::String(v.path.clone()));
+            o.insert("line".to_string(), JsonValue::Number(v.line as f64));
+            o.insert("message".to_string(), JsonValue::String(v.message.clone()));
+            JsonValue::Object(o)
+        })
+        .collect();
+    let rules: Vec<JsonValue> = RULES
+        .iter()
+        .map(|r| {
+            let mut o = BTreeMap::new();
+            o.insert("name".to_string(), JsonValue::String(r.name.to_string()));
+            o.insert("summary".to_string(), JsonValue::String(r.summary.to_string()));
+            JsonValue::Object(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), JsonValue::String("sparq-lint/1".to_string()));
+    doc.insert("files_scanned".to_string(), JsonValue::Number(files_scanned as f64));
+    doc.insert("violations".to_string(), JsonValue::Array(vs));
+    doc.insert("rules".to_string(), JsonValue::Array(rules));
+    JsonValue::Object(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<Violation> {
+        vec![Violation {
+            rule: "no-exit",
+            path: "rust/src/coordinator/server.rs".to_string(),
+            line: 42,
+            message: "exit called".to_string(),
+        }]
+    }
+
+    #[test]
+    fn human_lists_path_line_rule() {
+        let s = human(&sample(), 3);
+        assert!(s.contains("rust/src/coordinator/server.rs:42: [no-exit] exit called"));
+        assert!(s.contains("1 violation(s)"));
+    }
+
+    #[test]
+    fn json_round_trips_through_repo_parser() {
+        let doc = to_json(&sample(), 3).to_string();
+        let parsed = JsonValue::parse(&doc).expect("self-emitted JSON parses");
+        assert_eq!(parsed.get("schema").and_then(|v| v.as_str()), Some("sparq-lint/1"));
+        assert_eq!(parsed.get("files_scanned").and_then(|v| v.as_usize()), Some(3));
+        let vs = parsed.get("violations").and_then(|v| v.as_array()).expect("array");
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].get("line").and_then(|v| v.as_usize()), Some(42));
+        assert!(parsed.get("rules").and_then(|v| v.as_array()).is_some());
+    }
+}

@@ -1,0 +1,838 @@
+//! The `sparq_lint` rule engine: project invariants as named,
+//! individually allow-listable rules over the token stream produced by
+//! [`super::lexer`].
+//!
+//! Every rule is *syntactic* — this is a zero-dependency analyzer with
+//! no type information — so each rule documents the exact token pattern
+//! it matches and the known blind spots. The escape hatch is uniform:
+//!
+//! ```text
+//! // sparq-lint: allow(rule-name): justification for this exact site
+//! ```
+//!
+//! on the flagged line or the line directly above. The justification is
+//! mandatory; a marker that does not parse, names an unknown rule, or
+//! omits the justification is itself a violation (`allow-syntax`), so
+//! suppressions stay auditable.
+
+use std::collections::{HashMap, HashSet};
+
+use super::lexer::{lex, Tok, TokKind};
+
+/// A single rule finding, anchored to a repo-root-relative path.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub path: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Rule metadata for `--list-rules` and the JSON report.
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: "no-panic-path",
+        summary: "no .unwrap()/.expect()/panic!-family/unchecked access in non-test \
+                  code under coordinator/, observability/, crates/minipoll (a request \
+                  maps to a typed error or an HTTP status, never a worker abort)",
+    },
+    RuleInfo {
+        name: "safety-comment",
+        summary: "every `unsafe` requires a `// SAFETY:` comment on the same line or \
+                  in the comment block directly above, stating the upheld invariant",
+    },
+    RuleInfo {
+        name: "narrowing-cast",
+        summary: "no bare `as` casts to i8/u8/i16/u16/i32/u32/isize in quant/, \
+                  model/gemm.rs, tensor/ — use From/TryFrom for provable widenings, \
+                  or annotate why the value fits",
+    },
+    RuleInfo {
+        name: "lock-across-blocking",
+        summary: "a Mutex/RwLock guard binding must not be live across .join(), \
+                  channel send/recv, stream I/O, or Condvar::wait on a different mutex",
+    },
+    RuleInfo {
+        name: "no-exit",
+        summary: "std::process::exit only in rust/src/main.rs and examples/serve_bench.rs; \
+                  library and worker code returns errors instead",
+    },
+    RuleInfo {
+        name: "allow-syntax",
+        summary: "a `sparq-lint:` marker must be exactly \
+                  `allow(<known-rule>): <justification>`; this rule cannot be allowed",
+    },
+];
+
+/// Paths (repo-root-relative, `/`-separated) where `no-panic-path`
+/// applies: the request-serving layers where a panic aborts a worker.
+const PANIC_SCOPE: &[&str] =
+    &["rust/src/coordinator/", "rust/src/observability/", "rust/crates/minipoll/"];
+
+/// Paths where `narrowing-cast` applies: the numeric hot paths whose
+/// correctness the paper's bit-exactness claims rest on.
+const CAST_SCOPE: &[&str] =
+    &["rust/src/quant/", "rust/src/model/gemm.rs", "rust/src/tensor/"];
+
+/// Files allowed to call `std::process::exit`.
+const EXIT_ALLOWED: &[&str] = &["rust/src/main.rs", "examples/serve_bench.rs"];
+
+/// Methods whose call panics (or is UB) on the unhappy path.
+const PANIC_METHODS: &[&str] =
+    &["unwrap", "expect", "unwrap_unchecked", "get_unchecked", "get_unchecked_mut"];
+
+/// Macros that abort the current thread.
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Cast targets that can lose width or sign coming from this repo's
+/// wider working types (usize indices, i64/f32 accumulators, u32
+/// intermediates). u64/i64/usize/floats are excluded: on the 64-bit
+/// targets we build for, casts *to* them from the repo's types widen.
+const NARROW_TARGETS: &[&str] = &["i8", "u8", "i16", "u16", "i32", "u32", "isize"];
+
+/// Method names that block the calling thread (exact-ident match on a
+/// `.name(` call site).
+const BLOCKING_METHODS: &[&str] = &[
+    "join",
+    "recv",
+    "recv_timeout",
+    "send",
+    "send_timeout",
+    "write_all",
+    "read_exact",
+    "flush",
+    "accept",
+    "connect",
+];
+
+/// Condvar waits: blocking, but *exempt* when the first argument is a
+/// live guard (waiting on the guard's own mutex is the Condvar
+/// protocol, not a lock-ordering hazard).
+const CONDVAR_WAITS: &[&str] = &["wait", "wait_timeout", "wait_while"];
+
+/// Adapter methods that pass a `LockResult` guard through unchanged.
+const GUARD_ADAPTERS: &[&str] = &["unwrap", "expect", "unwrap_or_else"];
+
+/// Analyze one file's source. `path` must be repo-root-relative with
+/// `/` separators — rule scoping matches on it textually.
+pub fn analyze_source(path: &str, src: &str) -> Vec<Violation> {
+    let toks = lex(src);
+    let in_test = mark_test_regions(&toks);
+    let (allows, mut out) = parse_allows(path, &toks);
+
+    no_panic_path(path, &toks, &in_test, &allows, &mut out);
+    safety_comment(path, &toks, &allows, &mut out);
+    narrowing_cast(path, &toks, &in_test, &allows, &mut out);
+    lock_across_blocking(path, &toks, &in_test, &allows, &mut out);
+    no_exit(path, &toks, &allows, &mut out);
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+// ---------------------------------------------------------------------
+// Test-region stripping
+// ---------------------------------------------------------------------
+
+/// Mark every token inside a `#[test]` / `#[cfg(test)]`-gated item so
+/// production-path rules can skip test code. An attribute is test-y iff
+/// its first path ident is `test`, or it is a `cfg(...)` that mentions
+/// `test` without `not` (`#[cfg(not(test))]` gates *production* code).
+/// The gated item runs from the attribute through the matching `}` of
+/// its first top-level brace (or through `;` for braceless items).
+fn mark_test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut in_test = vec![false; toks.len()];
+    let mut i = 0;
+    while i < toks.len() {
+        let Some((attr_idents, close)) = parse_attr(toks, i) else {
+            i += 1;
+            continue;
+        };
+        let testy = match attr_idents.first().map(String::as_str) {
+            Some("test") => true,
+            Some("cfg") => {
+                attr_idents.iter().any(|s| s == "test")
+                    && !attr_idents.iter().any(|s| s == "not")
+            }
+            _ => false,
+        };
+        if !testy {
+            i = close + 1;
+            continue;
+        }
+        // Skip trailing attributes and comments between the test
+        // attribute and the item it gates.
+        let mut k = close + 1;
+        while k < toks.len() {
+            match &toks[k].kind {
+                TokKind::LineComment(_) | TokKind::BlockComment(_) => k += 1,
+                TokKind::Punct('#') => match parse_attr(toks, k) {
+                    Some((_, c)) => k = c + 1,
+                    None => break,
+                },
+                _ => break,
+            }
+        }
+        // Find the item body: the first `{` at bracket depth 0, unless
+        // a `;` ends the item first (e.g. `#[cfg(test)] use x;`).
+        let mut depth = 0i32;
+        let mut m = k;
+        let mut end = None;
+        while m < toks.len() {
+            match toks[m].kind {
+                TokKind::Punct('(') | TokKind::Punct('[') => depth += 1,
+                TokKind::Punct(')') | TokKind::Punct(']') => depth -= 1,
+                TokKind::Punct(';') if depth == 0 => {
+                    end = Some(m);
+                    break;
+                }
+                TokKind::Punct('{') if depth == 0 => {
+                    end = Some(match_brace(toks, m));
+                    break;
+                }
+                _ => {}
+            }
+            m += 1;
+        }
+        let end = end.unwrap_or(toks.len() - 1);
+        for flag in in_test.iter_mut().take(end + 1).skip(i) {
+            *flag = true;
+        }
+        i = end + 1;
+    }
+    in_test
+}
+
+/// If `toks[i]` opens an outer attribute `#[...]`, return its path/arg
+/// idents in order and the index of the closing `]`. Inner attributes
+/// (`#![...]`) are parsed too (callers treat them as never-testy since
+/// their first ident check still applies to e.g. `#![allow(...)]`).
+fn parse_attr(toks: &[Tok], i: usize) -> Option<(Vec<String>, usize)> {
+    if !matches!(toks[i].kind, TokKind::Punct('#')) {
+        return None;
+    }
+    let mut j = i + 1;
+    if matches!(toks.get(j).map(|t| &t.kind), Some(TokKind::Punct('!'))) {
+        j += 1;
+    }
+    if !matches!(toks.get(j).map(|t| &t.kind), Some(TokKind::Punct('['))) {
+        return None;
+    }
+    let mut depth = 0i32;
+    let mut idents = Vec::new();
+    for (k, t) in toks.iter().enumerate().skip(j) {
+        match &t.kind {
+            TokKind::Punct('[') => depth += 1,
+            TokKind::Punct(']') => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some((idents, k));
+                }
+            }
+            TokKind::Ident(s) => idents.push(s.clone()),
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Index of the `}` matching the `{` at `open` (or the last token if
+/// unbalanced — the compiler rejects such a file anyway).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0i32;
+    for (k, t) in toks.iter().enumerate().skip(open) {
+        match t.kind {
+            TokKind::Punct('{') => depth += 1,
+            TokKind::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return k;
+                }
+            }
+            _ => {}
+        }
+    }
+    toks.len() - 1
+}
+
+// ---------------------------------------------------------------------
+// Allow-list parsing
+// ---------------------------------------------------------------------
+
+struct Allows {
+    /// line -> rules allowed on that line.
+    by_line: HashMap<usize, HashSet<&'static str>>,
+}
+
+impl Allows {
+    fn permits(&self, line: usize, rule: &str) -> bool {
+        self.by_line.get(&line).is_some_and(|s| s.contains(rule))
+    }
+}
+
+const MARKER: &str = "sparq-lint";
+
+/// Doc comments (`///`, `//!`, `/**`, `/*!`) are documentation, not
+/// suppression sites — a doc example may quote the marker syntax
+/// without being parsed as an allow.
+fn is_doc_comment(text: &str) -> bool {
+    text.starts_with("///")
+        || text.starts_with("//!")
+        || (text.starts_with("/**") && !text.starts_with("/**/"))
+        || text.starts_with("/*!")
+}
+
+/// Collect `sparq-lint: allow(rule): justification` markers from
+/// non-doc comments. A well-formed allow suppresses `rule` on the
+/// comment's last line and the line below it; a malformed one is an
+/// `allow-syntax` violation.
+fn parse_allows(path: &str, toks: &[Tok]) -> (Allows, Vec<Violation>) {
+    let mut by_line: HashMap<usize, HashSet<&'static str>> = HashMap::new();
+    let mut bad = Vec::new();
+    for t in toks {
+        let (text, end_line) = match &t.kind {
+            TokKind::LineComment(s) => (s.as_str(), t.end_line),
+            TokKind::BlockComment(s) => (s.as_str(), t.end_line),
+            _ => continue,
+        };
+        if is_doc_comment(text) {
+            continue;
+        }
+        let Some(pos) = text.find(MARKER) else { continue };
+        match parse_allow_marker(&text[pos + MARKER.len()..]) {
+            Ok(rule) => {
+                by_line.entry(end_line).or_default().insert(rule);
+                by_line.entry(end_line + 1).or_default().insert(rule);
+            }
+            Err(why) => bad.push(Violation {
+                rule: "allow-syntax",
+                path: path.to_string(),
+                line: t.line,
+                message: format!(
+                    "malformed sparq-lint marker ({why}); expected \
+                     `sparq-lint: allow(<rule>): <justification>`"
+                ),
+            }),
+        }
+    }
+    (Allows { by_line }, bad)
+}
+
+/// Parse the text after the `sparq-lint` marker; returns the canonical
+/// rule name on success.
+fn parse_allow_marker(rest: &str) -> Result<&'static str, String> {
+    let rest = rest
+        .trim_start()
+        .strip_prefix(':')
+        .ok_or("expected ':' after 'sparq-lint'")?;
+    let rest = rest
+        .trim_start()
+        .strip_prefix("allow")
+        .ok_or("expected 'allow'")?;
+    let rest = rest.trim_start().strip_prefix('(').ok_or("expected '('")?;
+    let close = rest.find(')').ok_or("unclosed '('")?;
+    let name = rest[..close].trim();
+    let rule = RULES
+        .iter()
+        .map(|r| r.name)
+        .find(|r| *r == name)
+        .ok_or_else(|| format!("unknown rule '{name}'"))?;
+    if rule == "allow-syntax" {
+        return Err("'allow-syntax' cannot itself be allowed".to_string());
+    }
+    let just = rest[close + 1..]
+        .trim_start()
+        .strip_prefix(':')
+        .ok_or("missing ': justification' after allow(...)")?;
+    if just.trim().trim_end_matches("*/").trim().is_empty() {
+        return Err("justification must be non-empty".to_string());
+    }
+    Ok(rule)
+}
+
+// ---------------------------------------------------------------------
+// Shared token helpers
+// ---------------------------------------------------------------------
+
+fn is_comment(t: &Tok) -> bool {
+    matches!(t.kind, TokKind::LineComment(_) | TokKind::BlockComment(_))
+}
+
+fn next_code(toks: &[Tok], i: usize) -> Option<&Tok> {
+    toks[i + 1..].iter().find(|t| !is_comment(t))
+}
+
+fn prev_code(toks: &[Tok], i: usize) -> Option<&Tok> {
+    toks[..i].iter().rev().find(|t| !is_comment(t))
+}
+
+fn is_punct(t: Option<&Tok>, c: char) -> bool {
+    matches!(t.map(|t| &t.kind), Some(TokKind::Punct(p)) if *p == c)
+}
+
+fn in_scope(path: &str, scope: &[&str]) -> bool {
+    scope.iter().any(|p| path == *p || path.starts_with(p))
+}
+
+fn emit(
+    out: &mut Vec<Violation>,
+    allows: &Allows,
+    rule: &'static str,
+    path: &str,
+    line: usize,
+    message: String,
+) {
+    if !allows.permits(line, rule) {
+        out.push(Violation { rule, path: path.to_string(), line, message });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: no-panic-path
+// ---------------------------------------------------------------------
+
+/// Token patterns: `.name(` for the panicking methods, `name!` for the
+/// panicking macros. Exact-ident match, so `unwrap_or`,
+/// `unwrap_or_else`, `unwrap_or_default` never fire. `assert!` family
+/// is deliberately not flagged (invariant checks are wanted), and bare
+/// slice indexing is out of scope at token level — `clippy::
+/// indexing_slicing` covers it with types.
+fn no_panic_path(
+    path: &str,
+    toks: &[Tok],
+    in_test: &[bool],
+    allows: &Allows,
+    out: &mut Vec<Violation>,
+) {
+    if !in_scope(path, PANIC_SCOPE) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        let TokKind::Ident(name) = &t.kind else { continue };
+        if PANIC_METHODS.contains(&name.as_str())
+            && is_punct(prev_code(toks, i), '.')
+            && is_punct(next_code(toks, i), '(')
+        {
+            emit(
+                out,
+                allows,
+                "no-panic-path",
+                path,
+                t.line,
+                format!(
+                    ".{name}() can abort a serving worker; return a typed \
+                     error or map to an HTTP status instead"
+                ),
+            );
+        }
+        if PANIC_MACROS.contains(&name.as_str()) && is_punct(next_code(toks, i), '!')
+        {
+            emit(
+                out,
+                allows,
+                "no-panic-path",
+                path,
+                t.line,
+                format!("{name}! aborts the serving thread; return a typed error"),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: safety-comment
+// ---------------------------------------------------------------------
+
+/// Every `unsafe` token (block, fn, impl — all of them) must have a
+/// comment containing `SAFETY:` on the same line or in the contiguous
+/// comment block ending on the line above (multi-line justifications
+/// count, as in clippy's `undocumented_unsafe_blocks`). Applies to
+/// test code too: a wrong invariant in a test is still UB.
+fn safety_comment(path: &str, toks: &[Tok], allows: &Allows, out: &mut Vec<Violation>) {
+    // Coverage set: every line of a contiguous comment run that
+    // mentions SAFETY: anywhere in the run.
+    let mut safety_lines: HashSet<usize> = HashSet::new();
+    let mut i = 0;
+    while i < toks.len() {
+        let (TokKind::LineComment(text) | TokKind::BlockComment(text)) = &toks[i].kind else {
+            i += 1;
+            continue;
+        };
+        let run_start = toks[i].line;
+        let mut run_end = toks[i].end_line;
+        let mut has_safety = text.contains("SAFETY:");
+        let mut j = i + 1;
+        while j < toks.len() {
+            match &toks[j].kind {
+                TokKind::LineComment(s) | TokKind::BlockComment(s)
+                    if toks[j].line <= run_end + 1 =>
+                {
+                    has_safety |= s.contains("SAFETY:");
+                    run_end = run_end.max(toks[j].end_line);
+                    j += 1;
+                }
+                _ => break,
+            }
+        }
+        if has_safety {
+            safety_lines.extend(run_start..=run_end);
+        }
+        i = j;
+    }
+    for t in toks {
+        let TokKind::Ident(name) = &t.kind else { continue };
+        if name != "unsafe" {
+            continue;
+        }
+        let covered = safety_lines.contains(&t.line)
+            || (t.line > 1 && safety_lines.contains(&(t.line - 1)));
+        if !covered {
+            emit(
+                out,
+                allows,
+                "safety-comment",
+                path,
+                t.line,
+                "`unsafe` without an immediately-preceding `// SAFETY:` comment \
+                 stating the invariant that makes it sound"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: narrowing-cast
+// ---------------------------------------------------------------------
+
+/// Token pattern: `as` followed by a narrow/signed integer type name.
+/// Without types we cannot prove a cast narrows, so the rule is
+/// deliberately strict inside the numeric scope: every such cast either
+/// becomes `From`/`TryFrom` (provable) or carries an annotation
+/// explaining why the value fits.
+fn narrowing_cast(
+    path: &str,
+    toks: &[Tok],
+    in_test: &[bool],
+    allows: &Allows,
+    out: &mut Vec<Violation>,
+) {
+    if !in_scope(path, CAST_SCOPE) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        let TokKind::Ident(name) = &t.kind else { continue };
+        if name != "as" {
+            continue;
+        }
+        let Some(next) = next_code(toks, i) else { continue };
+        let TokKind::Ident(target) = &next.kind else { continue };
+        if NARROW_TARGETS.contains(&target.as_str()) {
+            emit(
+                out,
+                allows,
+                "narrowing-cast",
+                path,
+                t.line,
+                format!(
+                    "`as {target}` can silently truncate or change sign; use \
+                     From/TryFrom, or annotate why the value fits"
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: lock-across-blocking
+// ---------------------------------------------------------------------
+
+/// Tracks `let`-bindings whose initializer is a `.lock()` / `.read()` /
+/// `.write()` call (empty argument list) passed through only
+/// `LockResult` adapters (`unwrap`, `expect`, `unwrap_or_else`, `?`) —
+/// i.e. a named guard. A chain that keeps going (`.lock().unwrap()
+/// .field.clone()`) consumes the guard within the statement and is not
+/// tracked. While any guard is live (its block still open, no
+/// `drop(name)` seen), a call to a blocking method is a violation;
+/// `Condvar::wait*(guard, ..)` is exempt when the first argument is a
+/// live guard, because waiting on the guard's own mutex is the Condvar
+/// protocol.
+fn lock_across_blocking(
+    path: &str,
+    toks: &[Tok],
+    in_test: &[bool],
+    allows: &Allows,
+    out: &mut Vec<Violation>,
+) {
+    // (name, brace depth at binding, line bound)
+    let mut guards: Vec<(String, i32, usize)> = Vec::new();
+    let mut depth = 0i32;
+    let code: Vec<usize> = (0..toks.len())
+        .filter(|&i| !is_comment(&toks[i]) && !in_test[i])
+        .collect();
+    let mut k = 0usize;
+    while k < code.len() {
+        let i = code[k];
+        match &toks[i].kind {
+            TokKind::Punct('{') => depth += 1,
+            TokKind::Punct('}') => {
+                depth -= 1;
+                guards.retain(|g| g.1 <= depth);
+            }
+            TokKind::Ident(s) if s == "let" => {
+                if let Some((names, end_k)) = guard_let(toks, &code, k) {
+                    for name in names {
+                        guards.retain(|g| g.0 != name);
+                        guards.push((name, depth, toks[i].line));
+                    }
+                    k = end_k;
+                    continue;
+                }
+            }
+            TokKind::Ident(s) if s == "drop" => {
+                // drop(name)
+                if let Some(name) = call_single_ident_arg(toks, &code, k) {
+                    guards.retain(|g| g.0 != name);
+                }
+            }
+            TokKind::Ident(m) if is_punct(prev_code(toks, i), '.') => {
+                if guards.is_empty() || !is_punct(next_code(toks, i), '(') {
+                    k += 1;
+                    continue;
+                }
+                let name = m.as_str();
+                if BLOCKING_METHODS.contains(&name) {
+                    let (g, gline) = match guards.last() {
+                        Some(g) => (g.0.clone(), g.2),
+                        None => (String::new(), 0),
+                    };
+                    emit(
+                        out,
+                        allows,
+                        "lock-across-blocking",
+                        path,
+                        toks[i].line,
+                        format!(
+                            ".{name}() blocks while lock guard `{g}` (bound at \
+                             line {gline}) is still live; drop or scope the \
+                             guard before blocking"
+                        ),
+                    );
+                } else if CONDVAR_WAITS.contains(&name) {
+                    // Waiting on the guard you hand to `wait` is the
+                    // Condvar protocol; any *other* live guard is held
+                    // across the wait — that's the deadlock.
+                    let arg = call_first_ident_arg(toks, &code, k);
+                    let offending =
+                        guards.iter().find(|g| arg.as_deref() != Some(g.0.as_str()));
+                    if let Some(g) = offending {
+                        let (g, gline) = (g.0.clone(), g.2);
+                        emit(
+                            out,
+                            allows,
+                            "lock-across-blocking",
+                            path,
+                            toks[i].line,
+                            format!(
+                                ".{name}() waits on a Condvar while guard `{g}` \
+                                 (bound at line {gline}) on a different mutex is \
+                                 held — lock-ordering deadlock risk"
+                            ),
+                        );
+                    }
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+}
+
+/// If the `let` at `code[k_let]` binds a lock guard, return the bound
+/// lowercase pattern names and the code-index just past the `;`.
+fn guard_let(toks: &[Tok], code: &[usize], k_let: usize) -> Option<(Vec<String>, usize)> {
+    // -- pattern: collect names until `=` at nesting 0; a `:` at
+    // nesting 0 ends name collection (type ascription), `;` or `{`
+    // aborts (no initializer / `let ... else`-less weirdness).
+    let mut names = Vec::new();
+    let mut nest = 0i32;
+    let mut k = k_let + 1;
+    let mut collecting = true;
+    loop {
+        let t = &toks[*code.get(k)?];
+        match &t.kind {
+            TokKind::Punct('(') | TokKind::Punct('[') | TokKind::Punct('<') => nest += 1,
+            TokKind::Punct(')') | TokKind::Punct(']') | TokKind::Punct('>') => nest -= 1,
+            TokKind::Punct(':') if nest == 0 => collecting = false,
+            TokKind::Punct('=') if nest <= 0 => break,
+            TokKind::Punct(';') | TokKind::Punct('{') => return None,
+            TokKind::Ident(s) if collecting => {
+                let lower_start =
+                    s.chars().next().is_some_and(|c| c.is_lowercase() || c == '_');
+                if lower_start && s != "mut" && s != "ref" {
+                    names.push(s.clone());
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    }
+    if names.is_empty() {
+        return None;
+    }
+    // -- initializer: scan to the terminating `;` at nesting 0,
+    // remembering whether we saw a guard-creator call whose trailing
+    // chain is only adapters.
+    let mut nest = 0i32;
+    let mut creator_terminal = false;
+    k += 1; // past '='
+    let end_k = loop {
+        let t = &toks[*code.get(k)?];
+        match &t.kind {
+            TokKind::Punct('(') | TokKind::Punct('[') | TokKind::Punct('{') => nest += 1,
+            TokKind::Punct(')') | TokKind::Punct(']') | TokKind::Punct('}') => nest -= 1,
+            TokKind::Punct(';') if nest == 0 => break k,
+            TokKind::Ident(m)
+                if nest == 0
+                    && matches!(m.as_str(), "lock" | "read" | "write")
+                    && is_punct(prev_code(toks, code[k]), '.') =>
+            {
+                // `.lock()` with an empty argument list?
+                let open = code.get(k + 1)?;
+                let close = code.get(k + 2)?;
+                if matches!(toks[*open].kind, TokKind::Punct('('))
+                    && matches!(toks[*close].kind, TokKind::Punct(')'))
+                {
+                    creator_terminal = adapters_until_semi(toks, code, k + 3);
+                }
+            }
+            _ => {}
+        }
+        k += 1;
+    };
+    if creator_terminal {
+        Some((names, end_k + 1))
+    } else {
+        None
+    }
+}
+
+/// From `code[k]` (just after a creator's `()`), is the rest of the
+/// statement only `?` and adapter calls until the terminating `;`?
+fn adapters_until_semi(toks: &[Tok], code: &[usize], mut k: usize) -> bool {
+    loop {
+        let Some(&i) = code.get(k) else { return false };
+        match &toks[i].kind {
+            TokKind::Punct(';') => return true,
+            TokKind::Punct('?') => k += 1,
+            TokKind::Punct('.') => {
+                let Some(&mi) = code.get(k + 1) else { return false };
+                let TokKind::Ident(m) = &toks[mi].kind else { return false };
+                if !GUARD_ADAPTERS.contains(&m.as_str()) {
+                    return false;
+                }
+                let Some(&oi) = code.get(k + 2) else { return false };
+                if !matches!(toks[oi].kind, TokKind::Punct('(')) {
+                    return false;
+                }
+                // skip the balanced argument list
+                let mut nest = 0i32;
+                let mut j = k + 2;
+                loop {
+                    let Some(&pi) = code.get(j) else { return false };
+                    match toks[pi].kind {
+                        TokKind::Punct('(') | TokKind::Punct('[') | TokKind::Punct('{') => {
+                            nest += 1
+                        }
+                        TokKind::Punct(')') | TokKind::Punct(']') | TokKind::Punct('}') => {
+                            nest -= 1;
+                            if nest == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    j += 1;
+                }
+                k = j + 1;
+            }
+            _ => return false,
+        }
+    }
+}
+
+/// For an ident at `code[k]` followed by `( ident )`, return that
+/// single ident argument (used for `drop(name)`).
+fn call_single_ident_arg(toks: &[Tok], code: &[usize], k: usize) -> Option<String> {
+    let open = &toks[*code.get(k + 1)?].kind;
+    let arg = &toks[*code.get(k + 2)?].kind;
+    let close = &toks[*code.get(k + 3)?].kind;
+    match (open, arg, close) {
+        (TokKind::Punct('('), TokKind::Ident(a), TokKind::Punct(')')) => Some(a.clone()),
+        _ => None,
+    }
+}
+
+/// For a method ident at `code[k]` followed by `(`, return the first
+/// argument token if it is a bare ident (used for Condvar waits).
+fn call_first_ident_arg(toks: &[Tok], code: &[usize], k: usize) -> Option<String> {
+    let open = &toks[*code.get(k + 1)?].kind;
+    if !matches!(open, TokKind::Punct('(')) {
+        return None;
+    }
+    match &toks[*code.get(k + 2)?].kind {
+        TokKind::Ident(a) => Some(a.clone()),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Rule: no-exit
+// ---------------------------------------------------------------------
+
+/// Token pattern: `process :: exit`. Exact-path match — an aliased
+/// `use std::process::exit as quit` would evade it, which is why the
+/// rule description asks for the full path at call sites.
+fn no_exit(path: &str, toks: &[Tok], allows: &Allows, out: &mut Vec<Violation>) {
+    if EXIT_ALLOWED.contains(&path) {
+        return;
+    }
+    for (i, t) in toks.iter().enumerate() {
+        let TokKind::Ident(name) = &t.kind else { continue };
+        if name != "process" {
+            continue;
+        }
+        let rest: Vec<&Tok> = toks[i + 1..]
+            .iter()
+            .filter(|t| !is_comment(t))
+            .take(3)
+            .collect();
+        if rest.len() == 3
+            && matches!(rest[0].kind, TokKind::Punct(':'))
+            && matches!(rest[1].kind, TokKind::Punct(':'))
+            && matches!(&rest[2].kind, TokKind::Ident(s) if s == "exit")
+        {
+            emit(
+                out,
+                allows,
+                "no-exit",
+                path,
+                t.line,
+                "std::process::exit skips destructors and kills every thread; \
+                 only the CLI entry points may call it"
+                    .to_string(),
+            );
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! `sparq_lint` — offline static analyzer for this repo's project
+//! invariants (see `sparq::analysis` and README "Static analysis &
+//! sanitizers").
+//!
+//! ```text
+//! sparq_lint [--json] [--self-test] [--list-rules] [needle ...]
+//! ```
+//!
+//! * no flags: lint the workspace, print a human report;
+//! * `--json`: print the `sparq-lint/1` JSON document instead;
+//! * `--self-test`: run every rule against its embedded
+//!   positive/negative fixtures and exit;
+//! * `--list-rules`: print the rule catalog;
+//! * positional needles restrict the scan to matching paths.
+//!
+//! Exit codes: 0 clean, 1 violations found (or self-test failure),
+//! 2 internal error (unreadable tree, bad flag).
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use sparq::analysis::{self, fixtures, report, rules};
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(code) => code,
+        Err(err) => {
+            eprintln!("sparq_lint: internal error: {err:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn real_main() -> anyhow::Result<ExitCode> {
+    let mut json = false;
+    let mut self_test = false;
+    let mut list_rules = false;
+    let mut needles: Vec<String> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--json" => json = true,
+            "--self-test" => self_test = true,
+            "--list-rules" => list_rules = true,
+            "--help" | "-h" => {
+                println!(
+                    "usage: sparq_lint [--json] [--self-test] [--list-rules] [needle ...]"
+                );
+                return Ok(ExitCode::SUCCESS);
+            }
+            flag if flag.starts_with('-') => {
+                anyhow::bail!("unknown flag {flag}; see --help");
+            }
+            needle => needles.push(needle.to_string()),
+        }
+    }
+
+    if list_rules {
+        for r in rules::RULES {
+            println!("{:<22} {}", r.name, normalize_ws(r.summary));
+        }
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    if self_test {
+        return Ok(match fixtures::self_test() {
+            Ok(()) => {
+                println!(
+                    "sparq-lint self-test: {} fixtures passed",
+                    fixtures::FIXTURES.len()
+                );
+                ExitCode::SUCCESS
+            }
+            Err(why) => {
+                eprintln!("sparq-lint self-test FAILED: {why}");
+                ExitCode::from(1)
+            }
+        });
+    }
+
+    let root = find_root()?;
+    let outcome = analysis::run(&root, &needles)?;
+    if json {
+        let doc = report::to_json(&outcome.violations, outcome.files_scanned);
+        println!("{}", doc.to_string());
+    } else {
+        print!("{}", report::human(&outcome.violations, outcome.files_scanned));
+    }
+    Ok(if outcome.violations.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    })
+}
+
+/// Repo root: the current directory if it holds `rust/src` (the CI /
+/// developer invocation), else the compile-time manifest's parent (so
+/// `cargo run --bin sparq_lint` works from any subdirectory).
+fn find_root() -> anyhow::Result<PathBuf> {
+    let cwd = std::env::current_dir()?;
+    if cwd.join("rust/src").is_dir() {
+        return Ok(cwd);
+    }
+    let baked = Path::new(env!("CARGO_MANIFEST_DIR")).join("..");
+    if baked.join("rust/src").is_dir() {
+        return Ok(baked);
+    }
+    anyhow::bail!(
+        "cannot locate the repo root (no rust/src under {} or the build tree)",
+        cwd.display()
+    )
+}
+
+/// Rule summaries are indented multi-line string literals; collapse
+/// runs of whitespace for one-line terminal output.
+fn normalize_ws(s: &str) -> String {
+    s.split_whitespace().collect::<Vec<_>>().join(" ")
+}

@@ -52,7 +52,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -271,7 +271,9 @@ struct HandleGuard(Arc<Shared>);
 
 impl Drop for HandleGuard {
     fn drop(&mut self) {
-        self.0.q.lock().unwrap().open = false;
+        // Poison recovery: shutdown must proceed even if a submitter
+        // panicked while holding the queue lock.
+        self.0.q.lock().unwrap_or_else(PoisonError::into_inner).open = false;
         self.0.avail.notify_all();
     }
 }
@@ -286,7 +288,10 @@ struct WorkerGuard(Arc<Shared>);
 
 impl Drop for WorkerGuard {
     fn drop(&mut self) {
-        let mut q = self.0.q.lock().unwrap();
+        // This guard exists to run on worker *panic* — the lock may
+        // well be poisoned by the same panic; recover the guard, the
+        // queue state is still structurally valid.
+        let mut q = self.0.q.lock().unwrap_or_else(PoisonError::into_inner);
         q.dead = true;
         q.deque.clear();
         self.0.stats.queue_depth.store(0, Relaxed);
@@ -397,8 +402,9 @@ impl Batcher {
         let req = Request { image, enqueued: Instant::now(), reply: reply_tx };
         let policy = &self.shared.policy;
         let stats = &self.shared.stats;
+        let mut shed_victim = None;
         {
-            let mut q = self.shared.q.lock().unwrap();
+            let mut q = self.shared.q.lock().unwrap_or_else(PoisonError::into_inner);
             if q.dead {
                 anyhow::bail!("batcher worker has shut down");
             }
@@ -416,12 +422,7 @@ impl Batcher {
                     OverloadPolicy::ShedOldest => {
                         if let Some(oldest) = q.deque.pop_front() {
                             stats.shed.fetch_add(1, Relaxed);
-                            let _ = oldest.reply.send(Err(BatchError::Shed(format!(
-                                "batcher overloaded: request shed from the queue head after \
-                                 {:?} waiting (shed-oldest, depth limit {})",
-                                oldest.enqueued.elapsed(),
-                                policy.max_queue_depth
-                            ))));
+                            shed_victim = Some(oldest);
                         }
                     }
                 }
@@ -432,6 +433,17 @@ impl Batcher {
             stats.peak_queue_depth.fetch_max(depth, Relaxed);
         }
         self.shared.avail.notify_one();
+        // The shed caller is answered after the queue lock is released:
+        // waking another thread's channel receiver is not work to do
+        // under the hot submit lock.
+        if let Some(oldest) = shed_victim {
+            let _ = oldest.reply.send(Err(BatchError::Shed(format!(
+                "batcher overloaded: request shed from the queue head after \
+                 {:?} waiting (shed-oldest, depth limit {})",
+                oldest.enqueued.elapsed(),
+                policy.max_queue_depth
+            ))));
+        }
         Ok(PendingReply { rx: reply_rx, done: false })
     }
 
@@ -485,7 +497,10 @@ fn worker_loop(shared: Arc<Shared>, image_len: usize, classes: usize, mut execut
         // Block for the first request of a batch (or shutdown: queue
         // closed and fully drained).
         {
-            let mut q = shared.q.lock().unwrap();
+            // Poison recovery throughout the worker: a panicking
+            // submitter must degrade that one request, not wedge the
+            // whole shard's worker thread.
+            let mut q = shared.q.lock().unwrap_or_else(PoisonError::into_inner);
             loop {
                 if !q.deque.is_empty() {
                     break;
@@ -493,7 +508,7 @@ fn worker_loop(shared: Arc<Shared>, image_len: usize, classes: usize, mut execut
                 if !q.open {
                     return;
                 }
-                q = shared.avail.wait(q).unwrap();
+                q = shared.avail.wait(q).unwrap_or_else(PoisonError::into_inner);
             }
             drain_into(&mut q, &mut pending, policy.max_batch, &shared.stats);
         }
@@ -501,12 +516,13 @@ fn worker_loop(shared: Arc<Shared>, image_len: usize, classes: usize, mut execut
         while pending.len() < policy.max_batch {
             let elapsed = pending[0].enqueued.elapsed();
             let Some(budget) = policy.max_wait.checked_sub(elapsed) else { break };
-            let mut q = shared.q.lock().unwrap();
+            let mut q = shared.q.lock().unwrap_or_else(PoisonError::into_inner);
             if q.deque.is_empty() {
                 if !q.open {
                     break;
                 }
-                let (guard, timeout) = shared.avail.wait_timeout(q, budget).unwrap();
+                let (guard, timeout) =
+                    shared.avail.wait_timeout(q, budget).unwrap_or_else(PoisonError::into_inner);
                 q = guard;
                 if q.deque.is_empty() && timeout.timed_out() {
                     break;

@@ -27,13 +27,15 @@ impl EvalReport {
 
 fn top1(logits: &[f32], classes: usize) -> Vec<usize> {
     logits
-        .chunks_exact(classes)
+        .chunks_exact(classes.max(1))
         .map(|row| {
+            // total_cmp gives NaN a defined order, so a NaN logit (a
+            // broken executor, not this crate's math) yields a wrong
+            // class for that row instead of a panic mid-eval.
             row.iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .map(|(i, _)| i)
-                .unwrap()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map_or(0, |(i, _)| i)
         })
         .collect()
 }

@@ -319,7 +319,13 @@ impl Inflight {
             if slot.outcome.is_some() {
                 continue;
             }
-            let pending = slot.pending.as_mut().expect("unresolved slot keeps its reply");
+            let Some(pending) = slot.pending.as_mut() else {
+                // An unresolved slot with no reply handle has lost its
+                // worker; resolve it as dropped so the connection gets
+                // a 500 instead of the event loop aborting.
+                slot.outcome = Some(Err(BatchError::Dropped));
+                continue;
+            };
             match pending.try_wait() {
                 Some(outcome) => {
                     slot.outcome = Some(outcome);
@@ -337,7 +343,9 @@ impl Inflight {
     fn response(self) -> (u16, JsonValue) {
         let mut rows: Vec<JsonValue> = Vec::with_capacity(self.slots.len());
         for slot in self.slots {
-            match slot.outcome.expect("response built before resolution") {
+            // A slot that somehow reaches response-building unresolved
+            // is answered as a dropped request, not a panic.
+            match slot.outcome.unwrap_or(Err(BatchError::Dropped)) {
                 Ok(reply) => rows.push(reply_json(&reply)),
                 Err(e) => {
                     let status = match &e {
@@ -349,12 +357,16 @@ impl Inflight {
             }
         }
         if self.single {
-            let JsonValue::Object(mut obj) = rows.remove(0) else {
-                unreachable!("reply_json builds objects");
-            };
-            obj.insert("model".to_string(), JsonValue::from(self.model));
-            obj.insert("variant".to_string(), JsonValue::from(self.variant));
-            (200, JsonValue::Object(obj))
+            if let Some(JsonValue::Object(mut obj)) = rows.into_iter().next() {
+                obj.insert("model".to_string(), JsonValue::from(self.model));
+                obj.insert("variant".to_string(), JsonValue::from(self.variant));
+                return (200, JsonValue::Object(obj));
+            }
+            // reply_json always builds one object row per slot, so an
+            // empty or non-object row means the inflight was built
+            // empty — degrade to a 500 for this connection only.
+            let status = 500;
+            (status, error_body(status, &BatchError::Dropped.to_string()))
         } else {
             (
                 200,
@@ -876,9 +888,9 @@ impl EventLoop {
             if conn.dead {
                 continue;
             }
-            if let Some(inflight) = conn.inflight.as_mut() {
-                if inflight.poll() {
-                    let inflight = conn.inflight.take().expect("checked above");
+            let resolved = conn.inflight.as_mut().is_some_and(Inflight::poll);
+            if resolved {
+                if let Some(inflight) = conn.inflight.take() {
                     let (status, body) = inflight.response();
                     let keep = conn.keep_alive;
                     conn.queue_response(status, &body, keep);

@@ -83,6 +83,17 @@ pub mod http;
 pub mod router;
 pub mod server;
 
+/// Lock a mutex, recovering the guard from a poisoned state instead of
+/// propagating the panic into the caller (which on the serving path
+/// would cascade one worker's panic into every thread touching the
+/// shared state). Poisoning only means another thread panicked while
+/// holding the guard; the values stored under the coordinator's locks
+/// (queue deques, histogram buckets, stats counters) are valid after
+/// any partial update, so serving degrades instead of aborting.
+pub(crate) fn lock_recover<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 pub use batcher::{
     BatchError, BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, OverloadPolicy, PendingReply,
     Reply,

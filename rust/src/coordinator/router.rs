@@ -609,7 +609,7 @@ impl InferenceRouter {
         let reply = shard.batcher.infer(image)?;
         // Successful requests only: overload rejections return in
         // microseconds and would drag the latency histogram down.
-        shard.e2e.lock().unwrap().record(t0.elapsed());
+        super::lock_recover(&shard.e2e).record(t0.elapsed());
         Ok(reply)
     }
 
@@ -627,7 +627,7 @@ impl InferenceRouter {
                 let snap = s.stats.snapshot();
                 vtotal.merge(&snap);
                 total.merge(&snap);
-                let e2e = s.e2e.lock().unwrap();
+                let e2e = super::lock_recover(&s.e2e);
                 let sm = ShardMetrics {
                     shard: shard_idx,
                     completed: e2e.count(),

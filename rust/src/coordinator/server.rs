@@ -67,7 +67,7 @@ impl InferenceServer {
     ) -> Result<Self> {
         let exe = rt.load(&model.hlo_path(ArtifactKind::Sparq))?;
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
-        let stats = metrics.lock().unwrap().batcher.clone();
+        let stats = super::lock_recover(&metrics).batcher.clone();
         let [h, w, c] = image_dims;
         let image_len = h * w * c;
         let hw_batch = policy.max_batch;
@@ -140,7 +140,7 @@ impl InferenceServer {
         let classes = engine.graph().num_classes;
         let image_dims = engine.graph().input_hwc;
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
-        let stats = metrics.lock().unwrap().batcher.clone();
+        let stats = super::lock_recover(&metrics).batcher.clone();
         let mut scratch = Scratch::default();
         let execute = move |buf: &[f32], bsz: usize| -> Result<Vec<f32>> {
             engine.forward_scratch(buf, bsz, &mut scratch)
@@ -153,7 +153,9 @@ impl InferenceServer {
     pub fn infer(&self, image: Vec<f32>) -> Result<Reply> {
         let t0 = std::time::Instant::now();
         let reply = self.batcher.infer(image)?;
-        let mut m = self.metrics.lock().unwrap();
+        // Recover from metrics-lock poisoning: losing one histogram
+        // update is better than failing an inference that succeeded.
+        let mut m = super::lock_recover(&self.metrics);
         m.e2e.record(t0.elapsed());
         m.queue.record(reply.queue_time);
         Ok(reply)

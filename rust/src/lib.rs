@@ -17,6 +17,7 @@
 //! See DESIGN.md for the system inventory and the per-table experiment
 //! index, and EXPERIMENTS.md for measured results.
 
+pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

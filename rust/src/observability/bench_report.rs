@@ -362,7 +362,7 @@ pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
         f();
         samples_us.push(t0.elapsed().as_secs_f64() * 1e6);
     }
-    samples_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples_us.sort_by(f64::total_cmp);
     let rank = |q: f64| {
         let idx = ((iters as f64 * q).ceil() as usize).clamp(1, iters) - 1;
         samples_us[idx]

@@ -12,6 +12,7 @@ use super::config::{Mode, SparqConfig};
 /// Index of the most significant set bit (0 for x in {0, 1}).
 #[inline]
 pub fn msb_index(x: u8) -> u8 {
+    // sparq-lint: allow(narrowing-cast): result is a bit index in 0..=7
     (7u32.saturating_sub(u32::from(x).leading_zeros() - 24)) as u8
 }
 
@@ -31,6 +32,7 @@ pub fn trim_window(x: u8, width: u8, mode: Mode, round: bool) -> u8 {
         xi >> s
     };
     let q = q.min((1 << width) - 1); // saturate on round-up overflow
+    // sparq-lint: allow(narrowing-cast): the window [s+width-1 : s] sits inside 8 bits, so q << s <= 255
     (q << s) as u8
 }
 
@@ -60,11 +62,17 @@ pub fn shift_for(x: u8, width: u8, mode: Mode) -> u8 {
 /// Integer-exact mirror of `ref.uniform_requant`.
 #[inline]
 pub fn uniform_requant(x: u8, width: u8) -> u8 {
+    if width == 0 {
+        // a 0-bit grid holds only zero; without this, qmax == 0 below
+        // divides by zero.
+        return 0;
+    }
     if width >= 8 {
         return x;
     }
     let qmax = (1u32 << width) - 1;
     let q = (u32::from(x) * qmax + 127) / 255;
+    // sparq-lint: allow(narrowing-cast): q <= qmax so the reconstruction is <= 255 + qmax/2 rounded down onto the 8-bit grid
     ((q * 255 + qmax / 2) / qmax) as u8
 }
 
@@ -86,12 +94,18 @@ pub fn trim_one(x: u8, cfg: SparqConfig) -> u8 {
 /// `cfg.weight_rescale()`.
 #[inline]
 pub fn requant_weight(w: i8, w_bits: u8) -> i8 {
+    if w_bits == 0 {
+        // 0-bit weights are all zero; without this, `w_bits - 1` below
+        // underflows u8.
+        return 0;
+    }
     if w_bits >= 8 {
         return w;
     }
     let qmax = (1i32 << (w_bits - 1)) - 1;
     let a = i32::from(w).abs();
     let q = (a * qmax + 63) / 127;
+    // sparq-lint: allow(narrowing-cast): |q| <= qmax < 128 after the grid projection
     (q * i32::from(w).signum()) as i8
 }
 

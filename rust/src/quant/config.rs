@@ -32,6 +32,16 @@ impl Mode {
             _ => None,
         }
     }
+
+    /// Wire value (inverse of [`Mode::from_i32`], kept cast-free).
+    pub fn as_i32(self) -> i32 {
+        match self {
+            Self::Full => 0,
+            Self::Opt3 => 1,
+            Self::Opt2 => 2,
+            Self::Uniform => 3,
+        }
+    }
 }
 
 /// A full SPARQ configuration (see module docs for the wire format).
@@ -59,11 +69,11 @@ impl SparqConfig {
     /// Wire format for the lowered HLO / python kernels.
     pub fn to_vec(self) -> [i32; 5] {
         [
-            self.n_bits as i32,
-            self.mode as i32,
-            self.round as i32,
-            self.vsparq as i32,
-            self.w_bits as i32,
+            i32::from(self.n_bits),
+            self.mode.as_i32(),
+            i32::from(self.round),
+            i32::from(self.vsparq),
+            i32::from(self.w_bits),
         ]
     }
 

@@ -36,6 +36,7 @@ impl TrimLut {
             wide[x as usize] = trim_window(x, wide_width, Mode::Full, cfg.round);
         }
         for w in -128..=127i32 {
+            // sparq-lint: allow(narrowing-cast): max(-127) pins the loop value into i8 range
             weights[(w + 128) as usize] = requant_weight(w.max(-127) as i8, cfg.w_bits);
         }
         let paired = cfg.vsparq && cfg.n_bits < 8 && cfg.mode != Mode::Uniform;

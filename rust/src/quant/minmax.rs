@@ -20,6 +20,7 @@ impl ActScale {
     pub fn quantize(self, x: f32) -> u8 {
         // round-half-even, matching jnp.round in the lowered HLO exactly
         let q = (x / self.0).round_ties_even();
+        // sparq-lint: allow(narrowing-cast): clamp(0, 255) bounds the float and NaN casts to 0
         q.clamp(0.0, 255.0) as u8
     }
 
@@ -36,6 +37,7 @@ impl ActScale {
         for (o, &x) in out.iter_mut().zip(xs) {
             // x is post-ReLU (>= 0); the clamp guards padding values.
             // round-half-even to match jnp.round in the HLO bit-for-bit.
+            // sparq-lint: allow(narrowing-cast): clamp(0, 255) bounds the float and NaN casts to 0
             *o = (x * inv).round_ties_even().clamp(0.0, 255.0) as u8;
         }
     }
@@ -62,6 +64,7 @@ impl WeightScales {
         for r in 0..k {
             for c in 0..o {
                 let q = (w[r * o + c] / scales[c]).round().clamp(-127.0, 127.0);
+                // sparq-lint: allow(narrowing-cast): clamp(-127, 127) bounds the float and NaN casts to 0
                 wq[r * o + c] = q as i8;
             }
         }

@@ -29,6 +29,7 @@ pub fn trim_group(xs: &mut [u8], width: u8, mode: Mode, round: bool) {
     for x in xs.iter_mut() {
         let xi = u32::from(*x);
         let q = if round && s > 0 { (xi + (1 << (s - 1))) >> s } else { xi >> s };
+        // sparq-lint: allow(narrowing-cast): q <= qmax keeps the window [s+width-1 : s] inside 8 bits
         *x = (q.min(qmax) << s) as u8;
     }
 }

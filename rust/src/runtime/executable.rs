@@ -51,11 +51,15 @@ impl TensorArg {
 }
 
 fn bytemuck_cast_slice_f32(v: &[f32]) -> &[u8] {
-    // f32 -> u8 reinterpretation is always valid (alignment only shrinks).
+    // SAFETY: reinterpreting f32 -> u8 only shrinks alignment, every
+    // byte pattern is a valid u8, and the length covers exactly the
+    // bytes of `v`; the borrow ties the output lifetime to the input.
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
 fn bytemuck_cast_slice_i32(v: &[i32]) -> &[u8] {
+    // SAFETY: same argument as the f32 variant — alignment shrinks,
+    // u8 has no invalid bit patterns, length is size_of_val(v).
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
 }
 
@@ -110,10 +114,12 @@ pub struct Executable {
     exe: xla::PjRtLoadedExecutable,
 }
 
-// The xla crate wraps raw pointers without declaring Send/Sync; the PJRT
-// CPU client serializes execution internally and the wrapper holds no
-// host-side mutable state, so sharing across threads is sound here.
+// SAFETY: the xla crate wraps raw pointers without declaring Send; the
+// PJRT CPU client serializes execution internally and the wrapper holds
+// no host-side mutable state, so moving it across threads is sound.
 unsafe impl Send for Executable {}
+// SAFETY: `run` takes `&self` and all mutation happens behind PJRT's own
+// internal synchronization, so concurrent shared access is sound.
 unsafe impl Sync for Executable {}
 
 impl Executable {

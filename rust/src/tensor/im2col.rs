@@ -66,16 +66,26 @@ pub fn im2col_u8_into(
             for ox in 0..ow {
                 let row = ((ni * oh + oy) * ow + ox) * feat;
                 for ky in 0..k {
-                    let iy = (oy * stride + ky) as isize - pad_t as isize;
-                    if iy < 0 || iy >= h as isize {
+                    // cast-free bounds check: y < pad_t is the
+                    // "negative input row" case, y - pad_t the row.
+                    let y = oy * stride + ky;
+                    if y < pad_t {
+                        continue;
+                    }
+                    let iy = y - pad_t;
+                    if iy >= h {
                         continue;
                     }
                     for kx in 0..k {
-                        let ix = (ox * stride + kx) as isize - pad_l as isize;
-                        if ix < 0 || ix >= w as isize {
+                        let x = ox * stride + kx;
+                        if x < pad_l {
                             continue;
                         }
-                        let src = ((ni * h + iy as usize) * w + ix as usize) * c;
+                        let ix = x - pad_l;
+                        if ix >= w {
+                            continue;
+                        }
+                        let src = ((ni * h + iy) * w + ix) * c;
                         for ci in 0..c {
                             out[row + ci * k * k + ky * k + kx] = acts[src + ci];
                         }

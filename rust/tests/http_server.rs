@@ -674,6 +674,114 @@ fn models_endpoint_reports_resolved_policies() {
     server.shutdown();
 }
 
+/// Deterministic xorshift64* stream for the fuzz harness below — no
+/// external RNG crate, and failures reproduce from the fixed seed.
+struct XorShift(u64);
+
+impl XorShift {
+    fn next(&mut self) -> u64 {
+        self.0 ^= self.0 >> 12;
+        self.0 ^= self.0 << 25;
+        self.0 ^= self.0 >> 27;
+        self.0.wrapping_mul(0x2545_f491_4f6c_dd1d)
+    }
+
+    fn below(&mut self, n: usize) -> usize {
+        (self.next() % n as u64) as usize
+    }
+}
+
+/// One fuzz exchange: write the (possibly mangled) request bytes, then
+/// half-close and drain. The only acceptable outcomes are a well-formed
+/// HTTP/1.1 response or a connection close — never a hang, never a
+/// malformed byte stream (a worker panic surfaces as both).
+fn assert_well_formed_or_closed(addr: SocketAddr, req: &[u8], round: usize) {
+    let mut stream = TcpStream::connect(addr).expect("connect for fuzz round");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    stream.write_all(req).expect("write fuzz request");
+    stream.shutdown(std::net::Shutdown::Write).ok();
+    let mut resp = Vec::new();
+    let mut chunk = [0u8; 4096];
+    loop {
+        match stream.read(&mut chunk) {
+            Ok(0) => break,
+            Ok(n) => resp.extend_from_slice(&chunk[..n]),
+            // an abrupt reset is still "the server closed on us", not a hang
+            Err(e) if e.kind() == std::io::ErrorKind::ConnectionReset => break,
+            Err(e) => panic!("fuzz round {round}: server neither responded nor closed: {e}"),
+        }
+    }
+    if resp.is_empty() {
+        return; // clean close without a response is a valid rejection
+    }
+    let head = String::from_utf8_lossy(&resp);
+    assert!(
+        resp.len() >= 12 && head.starts_with("HTTP/1.1 "),
+        "fuzz round {round}: malformed response bytes: {head:?}"
+    );
+    let status: u16 = head[9..12]
+        .parse()
+        .unwrap_or_else(|_| panic!("fuzz round {round}: unparseable status in {head:?}"));
+    assert!(
+        (200..=599).contains(&status),
+        "fuzz round {round}: implausible status {status}"
+    );
+}
+
+/// Property satellite: byte-level mutations of a valid inference request
+/// (flip / truncate / insert) and truncated-JSON bodies must never kill
+/// the front door. Every exchange ends in a well-formed response or a
+/// close, and the same server keeps serving valid traffic afterwards.
+#[test]
+fn fuzzed_requests_never_kill_the_front_door() {
+    let (router, engine) = demo_router(2);
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let addr = server.addr();
+    let valid = {
+        let body = infer_body(&img(0));
+        format!(
+            "POST /v1/infer/synth HTTP/1.1\r\nHost: test\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+    };
+    let bytes = valid.as_bytes();
+    let mut rng = XorShift(0x5eed_cafe_f00d_0001);
+    for round in 0..120 {
+        let mut m = bytes.to_vec();
+        match round % 3 {
+            0 => {
+                // flip one byte to a guaranteed-different value
+                let i = rng.below(m.len());
+                m[i] ^= (rng.next() % 255 + 1) as u8;
+            }
+            1 => {
+                // truncate anywhere: mid-request-line, mid-header, mid-body
+                m.truncate(rng.below(m.len()));
+            }
+            _ => {
+                // insert one random byte anywhere
+                let i = rng.below(m.len() + 1);
+                m.insert(i, (rng.next() & 0xff) as u8);
+            }
+        }
+        assert_well_formed_or_closed(addr, &m, round);
+    }
+    // Truncated JSON with *consistent* framing: always a 400, and the
+    // keep-alive connection survives every one of them.
+    let mut c = Client::connect(addr);
+    let body = infer_body(&img(1));
+    for cut in [0usize, 1, 2, body.len() / 2, body.len() - 1] {
+        let (status, resp) = c.request("POST", "/v1/infer/synth", Some(&body[..cut]));
+        assert_eq!(status, 400, "body truncated at {cut} must be a 400: {resp}");
+    }
+    // the same server and the same connection still serve real traffic
+    let (status, resp) = c.request("POST", "/v1/infer/synth", Some(&body));
+    assert_eq!(status, 200, "connection died after truncated bodies: {resp}");
+    assert_eq!(logits_of(&resp, "logits"), engine.forward(&img(1), 1).unwrap());
+    server.shutdown();
+}
+
 #[test]
 fn poll_fallback_backend_serves_requests() {
     // Same front door forced onto the portable poll(2) backend — the

@@ -37,8 +37,11 @@ fn with_artifacts(name: &str, body: impl FnOnce() -> anyhow::Result<()>) {
 #[test]
 fn untyped_literal_roundtrip() {
     let data: Vec<f32> = (0..12).map(|i| i as f32 * 1.5).collect();
-    let bytes: &[u8] =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, 48) };
+    // SAFETY: `data` holds 12 f32s = 48 bytes; viewing them as u8 only
+    // shrinks alignment and `data` outlives the borrow.
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, 48)
+    };
     let lit = xla::Literal::create_from_shape_and_untyped_data(
         xla::ElementType::F32,
         &[3, 4],

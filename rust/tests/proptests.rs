@@ -737,6 +737,42 @@ fn prop_per_layer_lut_gemm_equals_uniform_when_configs_agree() {
 }
 
 #[test]
+fn zero_width_requant_is_total_and_collapses_to_zero() {
+    // Regression for the defect the narrowing-cast audit surfaced:
+    // `requant_weight(w, 0)` used to underflow `w_bits - 1` and
+    // `uniform_requant(x, 0)` divided by `qmax == 0`. Both must now be
+    // total over every width, with width 0 collapsing to the only value
+    // a 0-bit grid can hold.
+    use sparq::quant::bsparq::{requant_weight, uniform_requant};
+    for width in 0u8..=9 {
+        for x in 0..=255u8 {
+            let y = uniform_requant(x, width);
+            match width {
+                0 => assert_eq!(y, 0, "0-bit activation grid holds only zero (x={x})"),
+                w if w >= 8 => assert_eq!(y, x, "width {w} must pass through (x={x})"),
+                w => {
+                    // reconstruction error bounded by one grid spacing
+                    let qmax = (1i32 << w) - 1;
+                    let err = (i32::from(x) - i32::from(y)).abs();
+                    assert!(err <= 255 / qmax, "x={x} width={w}: err {err}");
+                }
+            }
+        }
+        for wv in i8::MIN..=i8::MAX {
+            let q = requant_weight(wv, width);
+            match width {
+                0 => assert_eq!(q, 0, "0-bit weight grid holds only zero (w={wv})"),
+                w if w >= 8 => assert_eq!(q, wv, "width {w} must pass through (w={wv})"),
+                w => {
+                    let qmax = (1i32 << (w - 1)) - 1;
+                    assert!(i32::from(q).abs() <= qmax, "w={wv} width={w}: |{q}| > {qmax}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_im2col_patch_values_come_from_input_or_padding() {
     use sparq::tensor::im2col_u8;
     props!(60, |rng| {
