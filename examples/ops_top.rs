@@ -194,6 +194,33 @@ fn sparkline(hist: Option<&JsonValue>) -> String {
         .collect()
 }
 
+/// The variant's version column: serving generation + lifecycle state,
+/// and — while a rollout is live — the canary's incoming generation,
+/// its share of traffic (1-in-N batches) and agreement progress, so a
+/// rollout is visible as it happens.
+fn version_label(v: &JsonValue) -> String {
+    let generation = num(v.get("generation"));
+    if generation <= 0.0 {
+        // executor-backed variants carry no version metadata
+        return String::new();
+    }
+    let state = v.get("state").and_then(JsonValue::as_str).unwrap_or("serving");
+    let mut label = format!("gen {generation:.0} {state}");
+    if let Some(c) = v.get("rollout").and_then(|r| r.get("canary")) {
+        if !matches!(c, JsonValue::Null) {
+            let share = num(c.get("share")).max(1.0);
+            label.push_str(&format!(
+                " ← gen {:.0} {:.1}% traffic ({:.0}/{:.0} agree)",
+                num(c.get("generation")),
+                100.0 / share,
+                num(c.get("agree")),
+                num(c.get("total")),
+            ));
+        }
+    }
+    label
+}
+
 fn share_bar(frac: f64, width: usize) -> String {
     let filled = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
     format!("{}{}", "#".repeat(filled), ".".repeat(width - filled))
@@ -253,10 +280,11 @@ fn render(
                 let vreqs = num(v.get("total").and_then(|t| t.get("requests")));
                 println!(
                     "  {vname:<10} [{}] {vreqs:>8.0} reqs  {:.0} replica(s)  \
-                     {:.2} bits/act",
+                     {:.2} bits/act  {}",
                     share_bar(vreqs / model_reqs, 20),
                     num(v.get("replicas")),
                     num(v.get("footprint_bits_per_act")),
+                    version_label(v),
                 );
             }
         }

@@ -4,6 +4,7 @@
 //! cargo run --release --example serve_bench [artifacts-dir] [clients] [requests-per-client]
 //! cargo run --release --example serve_bench -- --http [clients] [requests-per-client]
 //! cargo run --release --example serve_bench -- --http-smoke [--poll-backend]
+//! cargo run --release --example serve_bench -- --reload-smoke [--poll-backend]
 //! cargo run --release --example serve_bench -- --bench-json BENCH_sparq.json [--tiny]
 //! cargo run --release --example serve_bench -- --validate-report BENCH_sparq.json
 //! cargo run --release --example serve_bench -- --check-budgets \
@@ -22,8 +23,12 @@
 //! — through the HTTP/1.1 front door on an ephemeral loopback port and
 //! benchmarks it with keep-alive `std::net::TcpStream` clients;
 //! `--http-smoke` drives the same stack end-to-end and exits non-zero
-//! on any mismatch (the CI smoke job). `--poll-backend` forces
-//! minipoll's portable `poll(2)` event-loop backend for either.
+//! on any mismatch (the CI smoke job). `--reload-smoke` exercises the
+//! deployment lifecycle on that stack: a perturbed-weights canary that
+//! auto-promotes (served logits switch generations), then a provably
+//! disagreeing policy canary that auto-rolls-back — zero 5xx allowed.
+//! `--poll-backend` forces minipoll's portable `poll(2)` event-loop
+//! backend for any of them.
 //!
 //! `--bench-json <path>` runs the machine-readable perf suite — kernel
 //! (naive / blocked 1-thread / blocked parallel), engine forward,
@@ -53,7 +58,8 @@ use sparq::json_obj;
 use sparq::model::demo::synth_model;
 use sparq::model::{threadpool, Engine, EngineMode, Graph, ModelParams, QuantGemm, Scratch};
 use sparq::observability::{
-    check, time_iters, BenchReport, BenchSection, BudgetFile, QueueStats, Timing, SCHEMA_VERSION,
+    check, http_get_json, http_post_json, time_iters, BenchReport, BenchSection, BudgetFile,
+    QueueStats, Timing, SCHEMA_VERSION,
 };
 use sparq::quant::footprint::report_bits;
 use sparq::quant::{QuantPolicy, SparqConfig};
@@ -71,6 +77,7 @@ const EXIT_INVALID_REPORT: i32 = 3;
 struct Cli {
     http: bool,
     smoke: bool,
+    reload_smoke: bool,
     poll_backend: bool,
     tiny: bool,
     check_budgets: bool,
@@ -92,6 +99,7 @@ fn parse_cli() -> Result<Cli> {
     let mut cli = Cli {
         http: false,
         smoke: false,
+        reload_smoke: false,
         poll_backend: false,
         tiny: false,
         check_budgets: false,
@@ -106,6 +114,7 @@ fn parse_cli() -> Result<Cli> {
         match args[i].as_str() {
             "--http" => cli.http = true,
             "--http-smoke" => cli.smoke = true,
+            "--reload-smoke" => cli.reload_smoke = true,
             "--poll-backend" => cli.poll_backend = true,
             "--tiny" => cli.tiny = true,
             "--check-budgets" => cli.check_budgets = true,
@@ -145,6 +154,8 @@ fn run() -> i32 {
     }
     let res = if let Some(path) = &cli.bench_json {
         bench_json(path, cli.tiny, cli.poll_backend)
+    } else if cli.reload_smoke {
+        reload_smoke(cli.poll_backend)
     } else if cli.smoke {
         http_smoke(cli.poll_backend)
     } else if cli.http {
@@ -1009,6 +1020,210 @@ fn http_smoke(poll_backend: bool) -> Result<()> {
         },
         logits.len(),
         shards.len()
+    );
+    Ok(())
+}
+
+fn top1(logits: &[f32]) -> usize {
+    // Mirrors the eval machinery's argmax (total_cmp, last max wins).
+    logits.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).map_or(0, |(i, _)| i)
+}
+
+/// `--reload-smoke`: the deployment-lifecycle CI leg. Boots the same
+/// 3-variant demo stack as `--http-smoke`, then proves both canary
+/// verdicts over the front door with zero 5xx responses:
+///
+/// 1. **promote** — `POST /v1/models/synth/reload` with deterministically
+///    perturbed weights behind a 1-in-1 canary; drives traffic until the
+///    canary auto-promotes, then asserts the served logits switched
+///    generations (bit-different from generation 1 on every probe).
+/// 2. **rollback** — stages a policy candidate that provably flips top-1
+///    on a locally-verified probe image (restaging is deterministic, so
+///    `restage_policy` over the live params is an exact oracle), drives
+///    exactly that image, and asserts the canary auto-rolls-back with
+///    the promoted generation still serving.
+///
+/// Every HTTP status is checked (200 for infers and polls, 202 for the
+/// reload accepts), so any 5xx — or any torn/stale response — is a
+/// non-zero exit for CI.
+fn reload_smoke(poll_backend: bool) -> Result<()> {
+    let (server, router, _engine, image_len) = demo_http_stack(2, poll_backend)?;
+    let addr = server.addr().to_string();
+    let timeout = Duration::from_secs(10);
+    let deadline = Instant::now() + Duration::from_secs(60);
+    let mut client = MiniClient::connect(server.addr())?;
+
+    let probe = |i: usize| -> Vec<f32> {
+        (0..image_len)
+            .map(|j| {
+                let h = ((i * 131 + j) as u64).wrapping_mul(0x9e3779b97f4a7c15);
+                (h >> 40) as f32 / 16_777_216.0
+            })
+            .collect()
+    };
+    let infer = |client: &mut MiniClient, image: &[f32]| -> Result<Vec<f32>> {
+        let body = json_obj! {
+            "image" => image.iter().map(|&v| f64::from(v)).collect::<Vec<f64>>()
+        }
+        .to_string();
+        let (status, resp) = client.request(&infer_request("synth", &body))?;
+        anyhow::ensure!(status == 200, "infer failed: {status} {resp}");
+        logits_from(&resp)
+    };
+    let variant_json = |key: &str| -> Result<JsonValue> {
+        let v = http_get_json(&addr, "/v1/models", timeout)?;
+        Ok(v.get("models")
+            .and_then(|m| m.get("synth"))
+            .and_then(|s| s.get("variants"))
+            .and_then(|vs| vs.get("5opt_r"))
+            .and_then(|v| v.get(key))
+            .cloned()
+            .unwrap_or(JsonValue::Null))
+    };
+    let generation = |v: &JsonValue| v.as_usize().unwrap_or(0);
+
+    let probes: Vec<Vec<f32>> = (0..8).map(probe).collect();
+    let before: Vec<Vec<f32>> = probes
+        .iter()
+        .map(|im| infer(&mut client, im))
+        .collect::<Result<_>>()
+        .context("generation-1 probe traffic")?;
+
+    // --- Leg 1: perturbed-weights canary → auto-promote. ------------ //
+    let spec = json_obj! {
+        "source" => "perturb",
+        "seed" => 42usize,
+        "amplitude" => 3usize,
+        "canary_share" => 1usize,
+        "promote_threshold" => 0.0,
+        "min_requests" => 4usize,
+    };
+    let reply = http_post_json(&addr, "/v1/models/synth/reload", &spec, timeout)
+        .context("perturb reload not accepted")?;
+    anyhow::ensure!(
+        reply.get("status").and_then(JsonValue::as_str) == Some("accepted")
+            && reply.get("serving_generation").and_then(JsonValue::as_usize) == Some(1),
+        "unexpected reload reply: {}",
+        reply.to_string()
+    );
+    loop {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "canary never promoted: {}",
+            variant_json("rollout")?.to_string()
+        );
+        for im in &probes {
+            infer(&mut client, im)?;
+        }
+        if generation(&variant_json("generation")?) == 2
+            && variant_json("state")?.as_str() == Some("serving")
+        {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let after: Vec<Vec<f32>> = probes
+        .iter()
+        .map(|im| infer(&mut client, im))
+        .collect::<Result<_>>()
+        .context("generation-2 probe traffic")?;
+    anyhow::ensure!(
+        before.iter().zip(&after).all(|(b, a)| b != a),
+        "perturbed reload served logits identical to generation 1 — weights did not switch"
+    );
+    let rollout = variant_json("rollout")?;
+    let promote_agreement = rollout
+        .get("last_outcome")
+        .and_then(|o| o.get("agreement"))
+        .and_then(JsonValue::as_f64)
+        .context("promote outcome lacks measured agreement")?;
+
+    // --- Leg 2: provably disagreeing policy canary → auto-rollback. - //
+    let live = router
+        .variant_params("synth", "5opt_r")?
+        .context("5opt_r must be a versioned (params-built) variant")?;
+    let live_engine = Engine::from_params(live.clone());
+    let mut flip = None;
+    'search: for name in ["a8w8", "a4w8", "first8"] {
+        let policy = QuantPolicy::named(name).context("known policy preset")?;
+        let candidate = Engine::from_params(Arc::new(live.restage_policy(policy)?));
+        for i in 0..256 {
+            let im = probe(i);
+            if top1(&live_engine.forward(&im, 1)?) != top1(&candidate.forward(&im, 1)?) {
+                flip = Some((name, im));
+                break 'search;
+            }
+        }
+    }
+    let (candidate_policy, flip_image) =
+        flip.context("no probe image flips top-1 under any candidate policy")?;
+    let gen2_flip_logits = live_engine.forward(&flip_image, 1)?;
+    let spec = json_obj! {
+        "source" => "policy",
+        "policy" => QuantPolicy::named(candidate_policy).context("known policy preset")?.to_json(),
+        "canary_share" => 1usize,
+        "promote_threshold" => 1.0,
+        "min_requests" => 1usize,
+    };
+    let reply = http_post_json(&addr, "/v1/models/synth/reload", &spec, timeout)
+        .context("policy reload not accepted")?;
+    anyhow::ensure!(
+        reply.get("serving_generation").and_then(JsonValue::as_usize) == Some(2),
+        "rollback leg must start from generation 2: {}",
+        reply.to_string()
+    );
+    loop {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "canary never rolled back: {}",
+            variant_json("rollout")?.to_string()
+        );
+        infer(&mut client, &flip_image)?;
+        let rollout = variant_json("rollout")?;
+        let decided = rollout
+            .get("last_outcome")
+            .and_then(|o| o.get("generation"))
+            .and_then(JsonValue::as_usize)
+            == Some(3);
+        if decided && variant_json("state")?.as_str() == Some("serving") {
+            anyhow::ensure!(
+                rollout
+                    .get("last_outcome")
+                    .and_then(|o| o.get("promoted"))
+                    .and_then(JsonValue::as_bool)
+                    == Some(false),
+                "disagreeing canary was promoted: {}",
+                rollout.to_string()
+            );
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    anyhow::ensure!(
+        generation(&variant_json("generation")?) == 2,
+        "rollback must keep generation 2 serving"
+    );
+    // Post-rollback traffic serves generation-2 numerics again.
+    let settled = infer(&mut client, &flip_image)?;
+    anyhow::ensure!(
+        settled == gen2_flip_logits,
+        "post-rollback logits diverge from the promoted generation"
+    );
+
+    let served = variant_json("rollout")?
+        .get("served_rows_by_generation")
+        .map(JsonValue::to_string)
+        .unwrap_or_default();
+    println!(
+        "reload smoke OK ({}): perturb canary promoted gen 2 (agreement {promote_agreement:.2}), \
+         logits switched generations on all {} probes; `{candidate_policy}` canary rolled back \
+         (gen 2 still serving); zero 5xx; served rows {served}",
+        if poll_backend {
+            "poll backend"
+        } else {
+            "native backend"
+        },
+        probes.len()
     );
     Ok(())
 }

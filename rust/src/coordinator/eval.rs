@@ -25,7 +25,10 @@ impl EvalReport {
     }
 }
 
-fn top1(logits: &[f32], classes: usize) -> Vec<usize> {
+/// Per-row argmax — shared with the registry's canary shadow-compare
+/// ([`super::registry`]), so rollout agreement and eval accuracy are
+/// measured by the same machinery.
+pub(crate) fn top1(logits: &[f32], classes: usize) -> Vec<usize> {
     logits
         .chunks_exact(classes.max(1))
         .map(|row| {

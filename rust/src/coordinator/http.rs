@@ -22,7 +22,22 @@
 //! * `GET /v1/models` — the introspection surface: every model with
 //!   its input shape, shared `param_bytes`, and per-variant resolved
 //!   policy (full JSON encoding + display string + per-layer configs +
-//!   policy-weighted footprint bits per activation).
+//!   policy-weighted footprint bits per activation), plus the variant's
+//!   **version metadata**: serving `generation`, `weights_sha`,
+//!   lifecycle `state` (`serving` / `canary` / `draining`) and the full
+//!   rollout snapshot (canary progress, draining versions,
+//!   per-generation served counters, last outcome/error).
+//! * `POST /v1/models/{model}/reload` (or `{model}@{variant}`) — stage
+//!   and roll out a new generation for one variant. The body names a
+//!   `"source"` (`"policy"` with a policy JSON/preset, `"weights_npz"`
+//!   with a path, or `"perturb"` with `seed`/`amplitude` for rollout
+//!   drills) plus optional rollout knobs (`canary_share`,
+//!   `promote_threshold`, `min_requests`). Validation is synchronous
+//!   (unknown model/variant → 404 listing what exists, malformed body →
+//!   400, rollout already in flight → 409, executor-backed variant →
+//!   400); the expensive staging + rollout itself runs on a detached
+//!   thread and the route answers **202** immediately — poll
+//!   `GET /v1/models` to watch the canary promote or roll back.
 //! * `GET /v1/metrics` — per-variant, per-shard and aggregate
 //!   [`RouterMetrics`](super::router::ModelMetrics) for every model,
 //!   plus the router-wide aggregate, as JSON.
@@ -57,7 +72,9 @@ use crate::json::JsonValue;
 use crate::json_obj;
 
 use super::batcher::{BatchError, PendingReply, Reply};
-use super::router::InferenceRouter;
+use super::registry::{RolloutConfig, RolloutStatus};
+use super::router::{InferenceRouter, ReloadSource, ReloadSpec};
+use crate::quant::QuantPolicy;
 
 /// Front-door limits. Defaults are sized for the native demo models;
 /// raise `max_body_bytes` for large input tensors.
@@ -395,7 +412,9 @@ fn error_body(status: u16, msg: &str) -> JsonValue {
 fn status_text(status: u16) -> &'static str {
     match status {
         200 => "OK",
+        202 => "Accepted",
         400 => "Bad Request",
+        409 => "Conflict",
         404 => "Not Found",
         405 => "Method Not Allowed",
         413 => "Payload Too Large",
@@ -528,8 +547,9 @@ fn imm(status: u16, body: JsonValue) -> Routed {
     Routed::Immediate(status, body, None)
 }
 
-fn route(router: &InferenceRouter, cfg: &HttpConfig, req: &ParsedRequest) -> Routed {
+fn route(router: &Arc<InferenceRouter>, cfg: &HttpConfig, req: &ParsedRequest) -> Routed {
     const INFER_PREFIX: &str = "/v1/infer/";
+    const MODELS_PREFIX: &str = "/v1/models/";
     // Route on the path only — clients (and load-balancer probes)
     // append query strings that must not change resolution.
     let path = req.path.split_once('?').map_or(req.path.as_str(), |(p, _)| p);
@@ -539,6 +559,14 @@ fn route(router: &InferenceRouter, cfg: &HttpConfig, req: &ParsedRequest) -> Rou
         } else {
             // Known route, wrong method: 405 + Allow, not a 404.
             Routed::Immediate(405, error_body(405, "inference requires POST"), Some("POST"))
+        };
+    }
+    if let Some(target) = path.strip_prefix(MODELS_PREFIX).and_then(|r| r.strip_suffix("/reload"))
+    {
+        return if req.method == "POST" {
+            route_reload(router, target, &req.body)
+        } else {
+            Routed::Immediate(405, error_body(405, "reload requires POST"), Some("POST"))
         };
     }
     match (req.method.as_str(), path) {
@@ -552,6 +580,143 @@ fn route(router: &InferenceRouter, cfg: &HttpConfig, req: &ParsedRequest) -> Rou
         ),
         _ => imm(404, error_body(404, &format!("no route for `{}`", req.path))),
     }
+}
+
+/// `POST /v1/models/{model}/reload` (target may carry an `@{variant}`
+/// suffix; without one the default variant reloads). Everything cheap —
+/// target resolution, body decoding, reload-in-flight detection — is
+/// answered synchronously; the staging work (weight loading, LUT/table
+/// preparation) runs on a detached thread so the event loop never
+/// blocks, and the route answers 202. Rollout progress and any staging
+/// failure are visible in `GET /v1/models`.
+fn route_reload(router: &Arc<InferenceRouter>, target: &str, body: &[u8]) -> Routed {
+    let (model, variant) = match target.split_once('@') {
+        Some((m, v)) => (m, v.to_string()),
+        None => match router.default_variant(target) {
+            Ok(v) => (target, v.to_string()),
+            Err(_) => {
+                // Unknown model: 404 naming what does exist.
+                let known = router.model_names().join("`, `");
+                return imm(
+                    404,
+                    error_body(
+                        404,
+                        &format!("no model named `{target}` (available: `{known}`)"),
+                    ),
+                );
+            }
+        },
+    };
+    // An explicit `@variant` also needs the 404-with-listing treatment.
+    let version = match router.variant_version(model, &variant) {
+        Ok(v) => v,
+        Err(e) => return imm(404, error_body(404, &e.to_string())),
+    };
+    let Some(version) = version else {
+        return imm(
+            400,
+            error_body(
+                400,
+                &format!(
+                    "model `{model}` variant `{variant}` is executor-backed and cannot be \
+                     hot-reloaded"
+                ),
+            ),
+        );
+    };
+    let spec = match parse_reload_spec(body) {
+        Ok(s) => s,
+        Err(msg) => return imm(400, error_body(400, &msg)),
+    };
+    // Best-effort early conflict answer; the authoritative check is in
+    // `begin_rollout`, whose rejection lands in the variant's
+    // `last_error` for pollers.
+    if let Ok(Some(st)) = router.variant_rollout(model, &variant) {
+        if let Some(c) = &st.canary {
+            return imm(
+                409,
+                error_body(
+                    409,
+                    &format!("rollout of generation {} is already in progress", c.generation),
+                ),
+            );
+        }
+    }
+    let accepted = json_obj! {
+        "status" => "accepted",
+        "model" => model,
+        "variant" => variant.clone(),
+        "serving_generation" => version.generation as usize,
+        "canary_share" => spec.rollout.canary_share as usize,
+    };
+    let router = Arc::clone(router);
+    let model = model.to_string();
+    let spawned = std::thread::Builder::new().name("sparq-reload".into()).spawn(move || {
+        // Errors are recorded on the variant's tracker by
+        // `reload_variant` itself; nothing to do with them here.
+        let _ = router.reload_variant(&model, &variant, spec);
+    });
+    match spawned {
+        Ok(_) => Routed::Immediate(202, accepted, None),
+        Err(e) => imm(500, error_body(500, &format!("spawning reload thread: {e}"))),
+    }
+}
+
+/// Decode a reload request body into a [`ReloadSpec`].
+fn parse_reload_spec(body: &[u8]) -> std::result::Result<ReloadSpec, String> {
+    let Ok(text) = std::str::from_utf8(body) else {
+        return Err("body is not UTF-8".to_string());
+    };
+    let v = JsonValue::parse(text).map_err(|e| format!("invalid JSON body: {e}"))?;
+    let u64_field = |key: &str, default: u64| -> std::result::Result<u64, String> {
+        match v.get(key) {
+            None => Ok(default),
+            Some(x) => x
+                .as_usize()
+                .map(|n| n as u64)
+                .ok_or_else(|| format!("`{key}` must be a non-negative integer")),
+        }
+    };
+    let defaults = RolloutConfig::default();
+    let rollout = RolloutConfig {
+        canary_share: u64_field("canary_share", defaults.canary_share)?,
+        promote_threshold: match v.get("promote_threshold") {
+            None => defaults.promote_threshold,
+            Some(x) => x.as_f64().ok_or("`promote_threshold` must be a number")?,
+        },
+        min_requests: u64_field("min_requests", defaults.min_requests)?,
+    };
+    let source = match v.get("source").and_then(JsonValue::as_str) {
+        Some("policy") => {
+            let p = v.get("policy").ok_or("`policy` source requires a `policy` field")?;
+            let policy = QuantPolicy::from_json_value(p)
+                .map_err(|e| format!("invalid `policy`: {e:#}"))?;
+            ReloadSource::Policy(policy)
+        }
+        Some("weights_npz") => {
+            let path = v
+                .get("path")
+                .and_then(JsonValue::as_str)
+                .ok_or("`weights_npz` source requires a string `path`")?;
+            ReloadSource::WeightsNpz(std::path::PathBuf::from(path))
+        }
+        Some("perturb") => {
+            let amplitude = v
+                .get("amplitude")
+                .and_then(JsonValue::as_usize)
+                .ok_or("`perturb` source requires a non-negative integer `amplitude`")?;
+            let amplitude = i8::try_from(amplitude)
+                .map_err(|_| format!("`amplitude` {amplitude} exceeds {}", i8::MAX))?;
+            ReloadSource::Perturb { seed: u64_field("seed", 0)?, amplitude }
+        }
+        Some(other) => {
+            return Err(format!(
+                "unknown `source` `{other}` (expected `policy`, `weights_npz` or `perturb`)"
+            ));
+        }
+        None => return Err("body must name a `source` string".to_string()),
+    };
+    Ok(ReloadSpec { source, rollout })
 }
 
 /// `target` is `{model}` or `{model}@{variant}`; the body may also name
@@ -704,6 +869,66 @@ fn shard_json(s: &super::router::ShardMetrics) -> JsonValue {
     }
 }
 
+/// A variant's rollout snapshot as JSON — shared by `/v1/models`
+/// (discovery) and `/v1/metrics` (the per-generation counters the ops
+/// view reads).
+fn rollout_json(st: &RolloutStatus) -> JsonValue {
+    let served: Vec<JsonValue> = st
+        .served
+        .iter()
+        .map(|(generation, rows)| {
+            json_obj! {
+                "generation" => *generation as usize,
+                "rows" => *rows as usize,
+            }
+        })
+        .collect();
+    let draining: Vec<JsonValue> = st
+        .draining
+        .iter()
+        .map(|d| {
+            json_obj! { "generation" => d.generation as usize, "holders" => d.holders }
+        })
+        .collect();
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("state".to_string(), JsonValue::from(st.state()));
+    obj.insert(
+        "canary".to_string(),
+        st.canary.as_ref().map_or(JsonValue::Null, |c| {
+            json_obj! {
+                "generation" => c.generation as usize,
+                "weights_sha" => c.weights_sha.clone(),
+                "share" => c.share as usize,
+                "agree" => c.agree as usize,
+                "total" => c.total as usize,
+                "min_requests" => c.min_requests as usize,
+                "promote_threshold" => c.promote_threshold,
+            }
+        }),
+    );
+    obj.insert("draining".to_string(), JsonValue::from(draining));
+    obj.insert(
+        "drained".to_string(),
+        JsonValue::from(st.drained.iter().map(|&g| g as f64).collect::<Vec<f64>>()),
+    );
+    obj.insert("served_rows_by_generation".to_string(), JsonValue::from(served));
+    obj.insert(
+        "last_outcome".to_string(),
+        st.last_outcome.as_ref().map_or(JsonValue::Null, |o| {
+            json_obj! {
+                "generation" => o.generation as usize,
+                "promoted" => o.promoted,
+                "agreement" => o.agreement.map_or(JsonValue::Null, JsonValue::from),
+            }
+        }),
+    );
+    obj.insert(
+        "last_error".to_string(),
+        st.last_error.as_deref().map_or(JsonValue::Null, JsonValue::from),
+    );
+    JsonValue::Object(obj)
+}
+
 fn metrics_json(router: &InferenceRouter) -> JsonValue {
     let mut models = std::collections::BTreeMap::new();
     for name in router.model_names() {
@@ -718,6 +943,10 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
                     "replicas" => v.replicas,
                     "policy" => v.policy.clone(),
                     "footprint_bits_per_act" => v.footprint_bits,
+                    "generation" => v.generation as usize,
+                    "weights_sha" => v.weights_sha.clone(),
+                    "state" => v.state.clone(),
+                    "rollout" => v.rollout.as_ref().map_or(JsonValue::Null, rollout_json),
                     "shards" => v.shards.iter().map(shard_json).collect::<Vec<JsonValue>>(),
                     "total" => v.total.to_json(),
                 }
@@ -743,10 +972,13 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
 /// `GET /v1/models` — the policy introspection surface: every model
 /// with shape, shared parameter footprint, default variant, and each
 /// variant's resolved per-layer policy (wire-format JSON + display
-/// string + per-layer config list + footprint bits per activation).
-/// Built from the router's cheap accessors only — no stats snapshots,
-/// no latency-histogram locks, so polling this discovery endpoint
-/// never contends with the serving hot path.
+/// string + per-layer config list + footprint bits per activation)
+/// plus its version metadata (serving generation, weights hash,
+/// lifecycle state, rollout snapshot). Built from the router's cheap
+/// accessors only — no stats snapshots, no latency-histogram locks
+/// (the version slot/tracker mutexes are microsecond assignments), so
+/// polling this discovery endpoint never contends with the serving
+/// hot path.
 fn models_json(router: &InferenceRouter) -> JsonValue {
     let mut models = std::collections::BTreeMap::new();
     for name in router.model_names() {
@@ -756,8 +988,11 @@ fn models_json(router: &InferenceRouter) -> JsonValue {
         let mut variants = std::collections::BTreeMap::new();
         for (vname, replicas) in variant_replicas {
             total_replicas += replicas;
-            let base = match router.variant_params(name, vname) {
-                Ok(Some(params)) => {
+            // The serving ModelVersion pins generation + weights_sha +
+            // params to one consistent snapshot even mid-hot-swap.
+            let base = match router.variant_version(name, vname) {
+                Ok(Some(version)) => {
+                    let params = &version.params;
                     let layers: Vec<JsonValue> = params
                         .layer_cfgs()
                         .iter()
@@ -768,6 +1003,9 @@ fn models_json(router: &InferenceRouter) -> JsonValue {
                             }
                         })
                         .collect();
+                    let status = router.variant_rollout(name, vname).ok().flatten();
+                    let state = status.as_ref().map_or("serving", RolloutStatus::state);
+                    let rollout = status.as_ref().map_or(JsonValue::Null, rollout_json);
                     json_obj! {
                         "replicas" => replicas,
                         "policy" => params.policy().to_json(),
@@ -775,10 +1013,14 @@ fn models_json(router: &InferenceRouter) -> JsonValue {
                         "layers" => layers,
                         "distinct_configs" => params.distinct_configs(),
                         "footprint_bits_per_act" => params.footprint_bits(1),
+                        "generation" => version.generation as usize,
+                        "weights_sha" => version.weights_sha.clone(),
+                        "state" => state,
+                        "rollout" => rollout,
                     }
                 }
                 // Executor-backed variants (PJRT shards, test doubles)
-                // have no introspectable policy.
+                // have no introspectable policy or version.
                 _ => json_obj! { "replicas" => replicas, "policy" => JsonValue::Null },
             };
             variants.insert(vname.to_string(), base);

@@ -16,6 +16,8 @@
 //!   executes, and scatters results (vLLM-style, scaled down).
 //! * [`server`]    — single-model inference service facade + metrics.
 //! * [`router`]    — sharded multi-engine dispatch over the batcher.
+//! * [`registry`]  — versioned per-variant parameter slots: zero-
+//!   downtime hot-swap, canary rollout, drain accounting.
 //! * [`http`]      — HTTP/1.1 network front door over the router.
 //!
 //! # Serving architecture
@@ -75,11 +77,22 @@
 //!    message, malformed input to 400, execution failures to 500, and
 //!    a known route hit with the wrong method to 405 with an `Allow`
 //!    header.
+//!
+//! Orthogonal to the four layers, the **versioned registry**
+//! ([`registry`]) makes every params-built variant hot-swappable: its
+//! executors read a generation-numbered [`VersionSlot`] once per batch,
+//! so [`InferenceRouter::reload_variant`] (or
+//! `POST /v1/models/{name}/reload` on the front door) can stage new
+//! weights or a new policy off-thread, canary 1-in-N batches against
+//! the serving generation with measured top-1 agreement, and promote or
+//! roll back with zero dropped requests — in-flight batches drain on
+//! the old `Arc`. See README "Deployment lifecycle".
 
 pub mod batcher;
 pub mod calibrate;
 pub mod eval;
 pub mod http;
+pub mod registry;
 pub mod router;
 pub mod server;
 
@@ -103,7 +116,12 @@ pub use eval::{
     evaluate_native, evaluate_pjrt, evaluate_policy_native, evaluate_with_engine, EvalReport,
 };
 pub use http::{HttpConfig, HttpServer};
+pub use registry::{
+    ModelVersion, RolloutConfig, RolloutOutcome, RolloutStatus, VersionSlot, VersionTracker,
+    FIRST_GENERATION,
+};
 pub use router::{
-    InferenceRouter, ModelMetrics, RouterBuilder, ShardMetrics, VariantMetrics, DEFAULT_VARIANT,
+    InferenceRouter, ModelMetrics, ReloadSource, ReloadSpec, RouterBuilder, ShardMetrics,
+    VariantMetrics, DEFAULT_VARIANT,
 };
 pub use server::{InferenceServer, LatencyHist, ServerMetrics};

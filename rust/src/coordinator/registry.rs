@@ -1,0 +1,658 @@
+//! Versioned model registry — the zero-downtime hot-swap primitive.
+//!
+//! Each serving variant owns one [`VersionSlot`]: a generation-numbered
+//! [`ModelVersion`] behind a `Mutex<Arc<_>>`. Executors `load()` the
+//! slot once per batch (an `Arc` clone under a microsecond lock — the
+//! safe equivalent of an `ArcSwap`, with no `unsafe` for Miri to
+//! reason about), run the whole batch on that version, and drop the
+//! clone when the batch completes. A swap publishes the next version
+//! atomically: batches already in flight finish on the old `Arc`
+//! (drain-on-old-Arc), new batches pick up the new one, and no request
+//! is ever dropped or torn across versions.
+//!
+//! The companion [`VersionTracker`] runs the rollout protocol on top of
+//! the raw swap:
+//!
+//! * **staged load** — [`VersionTracker::begin_rollout`] validates the
+//!   incoming [`ModelParams`] against the live graph
+//!   ([`validate_staged`]) before anything is published;
+//! * **canary** — with `canary_share = N`, 1 in N batches routes to the
+//!   incoming generation while the serving generation shadow-computes
+//!   the same batch; per-row top-1 agreement accumulates until
+//!   `min_requests` rows have been compared, then the candidate
+//!   auto-promotes (agreement ≥ threshold) or auto-rolls-back;
+//! * **drain accounting** — superseded (and rolled-back) versions park
+//!   in a retired list until their `Arc::strong_count` falls to 1,
+//!   i.e. no executor or in-flight batch holds them; the sweep then
+//!   frees the prepared tables and records the generation as drained.
+//!
+//! Lock order: `VersionTracker` inner before `VersionSlot` (the tracker
+//! swaps the slot while holding its own lock; nothing takes them in the
+//! other order). Both locks guard single assignments/clones — no I/O,
+//! no waiting, no executor work ever runs under them.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelParams;
+
+use super::lock_recover;
+
+/// Generation number assigned to the parameters a variant was built
+/// with. Reloads count up from here, per variant.
+pub const FIRST_GENERATION: u64 = 1;
+
+/// How many drained generation numbers to keep for reporting.
+const DRAINED_KEEP: usize = 32;
+
+/// One immutable published version of a variant's parameters. The
+/// registry wrapper (rather than a bare `Arc<ModelParams>`) makes drain
+/// accounting exact: the only strong references to a `ModelVersion` are
+/// the slot, the tracker's retired list, and in-flight batches — so
+/// `Arc::strong_count == 1` on a retired version means every batch that
+/// ever saw it has completed.
+pub struct ModelVersion {
+    pub generation: u64,
+    /// Content hash of the weight store ([`crate::model::Weights::content_sha`]).
+    pub weights_sha: String,
+    pub params: Arc<ModelParams>,
+}
+
+impl ModelVersion {
+    fn build(generation: u64, params: Arc<ModelParams>) -> Arc<Self> {
+        let weights_sha = params.weights.content_sha();
+        Arc::new(Self { generation, weights_sha, params })
+    }
+}
+
+/// The swap cell: current version behind a mutex, cloned per batch.
+pub struct VersionSlot {
+    current: Mutex<Arc<ModelVersion>>,
+}
+
+impl VersionSlot {
+    /// Wrap build-time parameters as [`FIRST_GENERATION`].
+    pub fn new(params: Arc<ModelParams>) -> Self {
+        Self { current: Mutex::new(ModelVersion::build(FIRST_GENERATION, params)) }
+    }
+
+    /// The version new work should run on — an `Arc` clone; the caller
+    /// keeps the whole batch on this one version.
+    pub fn load(&self) -> Arc<ModelVersion> {
+        Arc::clone(&lock_recover(&self.current))
+    }
+
+    /// Publish `next`, returning the superseded version for the
+    /// caller's retired list.
+    fn swap(&self, next: Arc<ModelVersion>) -> Arc<ModelVersion> {
+        std::mem::replace(&mut *lock_recover(&self.current), next)
+    }
+}
+
+/// Rollout knobs for one reload.
+#[derive(Clone, Copy, Debug)]
+pub struct RolloutConfig {
+    /// Route 1 in `canary_share` batches to the incoming generation.
+    /// `0` disables the canary: the swap happens immediately.
+    pub canary_share: u64,
+    /// Promote when measured top-1 agreement ≥ this, else roll back.
+    pub promote_threshold: f64,
+    /// Rows to shadow-compare before the promote/rollback verdict.
+    pub min_requests: u64,
+}
+
+impl Default for RolloutConfig {
+    fn default() -> Self {
+        Self { canary_share: 8, promote_threshold: 0.99, min_requests: 256 }
+    }
+}
+
+/// Where a batch should execute, per [`VersionTracker::dispatch`].
+pub enum Dispatch {
+    /// Run on the serving generation.
+    Serving(Arc<ModelVersion>),
+    /// Canary batch: run on `incoming`, shadow-compare against
+    /// `serving`, report rows via [`VersionTracker::record_canary`].
+    Canary { incoming: Arc<ModelVersion>, serving: Arc<ModelVersion> },
+}
+
+/// Terminal record of one rollout.
+#[derive(Clone, Debug)]
+pub struct RolloutOutcome {
+    pub generation: u64,
+    pub promoted: bool,
+    /// Measured agreement (`None` for an immediate, uncanaried swap or
+    /// an executor-failure rollback).
+    pub agreement: Option<f64>,
+}
+
+/// Live canary state, as reported by [`VersionTracker::status`].
+#[derive(Clone, Debug)]
+pub struct CanaryStatus {
+    pub generation: u64,
+    pub weights_sha: String,
+    pub share: u64,
+    pub agree: u64,
+    pub total: u64,
+    pub min_requests: u64,
+    pub promote_threshold: f64,
+}
+
+/// A retired version still held by in-flight work.
+#[derive(Clone, Debug)]
+pub struct DrainingVersion {
+    pub generation: u64,
+    /// Strong holders beyond the registry's own reference.
+    pub holders: usize,
+}
+
+/// Snapshot of a variant's rollout state for `/v1/models` and
+/// `/v1/metrics`.
+#[derive(Clone, Debug)]
+pub struct RolloutStatus {
+    pub canary: Option<CanaryStatus>,
+    pub draining: Vec<DrainingVersion>,
+    /// Recently fully-drained generations (newest last, bounded).
+    pub drained: Vec<u64>,
+    /// Rows served per generation, over the variant's lifetime.
+    pub served: BTreeMap<u64, u64>,
+    pub last_outcome: Option<RolloutOutcome>,
+    pub last_error: Option<String>,
+}
+
+impl RolloutStatus {
+    /// The variant's lifecycle label: `canary` while a candidate takes
+    /// traffic, `draining` while a superseded version is still held by
+    /// in-flight work, `serving` otherwise.
+    pub fn state(&self) -> &'static str {
+        if self.canary.is_some() {
+            "canary"
+        } else if self.draining.is_empty() {
+            "serving"
+        } else {
+            "draining"
+        }
+    }
+}
+
+struct Canary {
+    incoming: Arc<ModelVersion>,
+    share: u64,
+    /// Batch counter for the 1-in-`share` routing pattern.
+    tick: u64,
+    agree: u64,
+    total: u64,
+    threshold: f64,
+    min_requests: u64,
+}
+
+struct TrackerInner {
+    next_generation: u64,
+    canary: Option<Canary>,
+    retired: Vec<Arc<ModelVersion>>,
+    drained: Vec<u64>,
+    served: BTreeMap<u64, u64>,
+    last_outcome: Option<RolloutOutcome>,
+    last_error: Option<String>,
+}
+
+/// Per-variant rollout state machine: allocates generations, routes
+/// canary traffic, applies the promote/rollback verdict, and accounts
+/// for draining versions. Shared by every replica executor of the
+/// variant.
+pub struct VersionTracker {
+    inner: Mutex<TrackerInner>,
+}
+
+impl Default for VersionTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VersionTracker {
+    pub fn new() -> Self {
+        Self {
+            inner: Mutex::new(TrackerInner {
+                next_generation: FIRST_GENERATION + 1,
+                canary: None,
+                retired: Vec::new(),
+                drained: Vec::new(),
+                served: BTreeMap::new(),
+                last_outcome: None,
+                last_error: None,
+            }),
+        }
+    }
+
+    /// Stage `params` as the next generation. Validates against the
+    /// live version first; with `canary_share == 0` the swap is
+    /// immediate, otherwise a canary is installed and the verdict comes
+    /// from measured agreement. Returns the incoming generation number.
+    /// At most one rollout per variant may be in flight.
+    pub fn begin_rollout(
+        &self,
+        slot: &VersionSlot,
+        params: Arc<ModelParams>,
+        cfg: RolloutConfig,
+    ) -> Result<u64> {
+        if !(0.0..=1.0).contains(&cfg.promote_threshold) {
+            bail!("promote_threshold {} not in [0, 1]", cfg.promote_threshold);
+        }
+        let mut inner = lock_recover(&self.inner);
+        if let Some(c) = &inner.canary {
+            bail!("rollout of generation {} already in progress", c.incoming.generation);
+        }
+        validate_staged(&slot.load().params, &params)?;
+        let generation = inner.next_generation;
+        inner.next_generation += 1;
+        let incoming = ModelVersion::build(generation, params);
+        if cfg.canary_share == 0 {
+            let old = slot.swap(incoming);
+            inner.retired.push(old);
+            inner.last_outcome =
+                Some(RolloutOutcome { generation, promoted: true, agreement: None });
+        } else {
+            inner.canary = Some(Canary {
+                incoming,
+                share: cfg.canary_share,
+                tick: 0,
+                agree: 0,
+                total: 0,
+                threshold: cfg.promote_threshold,
+                min_requests: cfg.min_requests.max(1),
+            });
+        }
+        inner.last_error = None;
+        Ok(generation)
+    }
+
+    /// Route one batch: every `share`-th batch goes to the canary (when
+    /// one is active), the rest to the serving generation.
+    pub fn dispatch(&self, slot: &VersionSlot) -> Dispatch {
+        let mut inner = lock_recover(&self.inner);
+        if let Some(c) = &mut inner.canary {
+            c.tick += 1;
+            if c.tick % c.share == 0 {
+                return Dispatch::Canary {
+                    incoming: Arc::clone(&c.incoming),
+                    serving: slot.load(),
+                };
+            }
+        }
+        drop(inner);
+        Dispatch::Serving(slot.load())
+    }
+
+    /// Record `agree` agreeing rows out of `total` shadow-compared rows
+    /// for canary `generation`. Once `min_requests` rows are in, the
+    /// verdict is applied: promote (swap + retire old) or roll back
+    /// (retire the candidate). Stale generations (a verdict already
+    /// landed on another replica) are ignored, so the call is
+    /// idempotent across concurrent executors.
+    pub fn record_canary(
+        &self,
+        slot: &VersionSlot,
+        generation: u64,
+        agree: u64,
+        total: u64,
+    ) -> Option<RolloutOutcome> {
+        let mut inner = lock_recover(&self.inner);
+        let c = match &mut inner.canary {
+            Some(c) if c.incoming.generation == generation => c,
+            _ => return None,
+        };
+        c.agree += agree;
+        c.total += total;
+        if c.total < c.min_requests {
+            return None;
+        }
+        let agreement = c.agree as f64 / c.total as f64;
+        let promoted = agreement >= c.threshold;
+        let incoming = Arc::clone(&c.incoming);
+        inner.canary = None;
+        if promoted {
+            let old = slot.swap(incoming);
+            inner.retired.push(old);
+        } else {
+            inner.retired.push(incoming);
+        }
+        let outcome = RolloutOutcome { generation, promoted, agreement: Some(agreement) };
+        inner.last_outcome = Some(outcome.clone());
+        Some(outcome)
+    }
+
+    /// Roll back canary `generation` because its executor failed (the
+    /// serving generation keeps answering). Returns false if that
+    /// canary is no longer active.
+    pub fn fail_canary(&self, generation: u64, err: &str) -> bool {
+        let mut inner = lock_recover(&self.inner);
+        let matches = matches!(&inner.canary, Some(c) if c.incoming.generation == generation);
+        if !matches {
+            return false;
+        }
+        if let Some(c) = inner.canary.take() {
+            inner.retired.push(c.incoming);
+        }
+        inner.last_outcome = Some(RolloutOutcome { generation, promoted: false, agreement: None });
+        inner.last_error = Some(format!("canary generation {generation} failed: {err}"));
+        true
+    }
+
+    /// Count `rows` answered by `generation` and sweep the retired list.
+    pub fn note_served(&self, generation: u64, rows: u64) {
+        let mut inner = lock_recover(&self.inner);
+        *inner.served.entry(generation).or_insert(0) += rows;
+        sweep(&mut inner);
+    }
+
+    /// Record a staging failure (reload thread) for `/v1/models`.
+    pub fn set_error(&self, msg: String) {
+        lock_recover(&self.inner).last_error = Some(msg);
+    }
+
+    /// Rollout snapshot for introspection endpoints. Sweeps first, so a
+    /// version with no remaining holders reports as drained, not
+    /// draining.
+    pub fn status(&self) -> RolloutStatus {
+        let mut inner = lock_recover(&self.inner);
+        sweep(&mut inner);
+        RolloutStatus {
+            canary: inner.canary.as_ref().map(|c| CanaryStatus {
+                generation: c.incoming.generation,
+                weights_sha: c.incoming.weights_sha.clone(),
+                share: c.share,
+                agree: c.agree,
+                total: c.total,
+                min_requests: c.min_requests,
+                promote_threshold: c.threshold,
+            }),
+            draining: inner
+                .retired
+                .iter()
+                .map(|v| DrainingVersion {
+                    generation: v.generation,
+                    holders: Arc::strong_count(v).saturating_sub(1),
+                })
+                .collect(),
+            drained: inner.drained.clone(),
+            served: inner.served.clone(),
+            last_outcome: inner.last_outcome.clone(),
+            last_error: inner.last_error.clone(),
+        }
+    }
+}
+
+/// Drop retired versions whose only remaining holder is the retired
+/// list itself. Nothing ever clones out of the list, so once the count
+/// reaches 1 it can only stay there — the check is race-free despite
+/// `strong_count` being advisory in general.
+fn sweep(inner: &mut TrackerInner) {
+    let mut i = 0;
+    while i < inner.retired.len() {
+        if Arc::strong_count(&inner.retired[i]) == 1 {
+            let v = inner.retired.swap_remove(i);
+            inner.drained.push(v.generation);
+            if inner.drained.len() > DRAINED_KEEP {
+                inner.drained.remove(0);
+            }
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Staged-reload validation: the incoming parameter block must drop
+/// into the live variant's request shapes — same input tensor, same
+/// class count, shape-identical weight store. Values (and policy) are
+/// free to differ.
+pub fn validate_staged(live: &ModelParams, incoming: &ModelParams) -> Result<()> {
+    if live.graph.input_hwc != incoming.graph.input_hwc {
+        bail!(
+            "input shape {:?} vs incoming {:?}",
+            live.graph.input_hwc,
+            incoming.graph.input_hwc
+        );
+    }
+    if live.graph.num_classes != incoming.graph.num_classes {
+        bail!(
+            "class count {} vs incoming {}",
+            live.graph.num_classes,
+            incoming.graph.num_classes
+        );
+    }
+    live.weights
+        .same_shapes(&incoming.weights)
+        .context("incoming weights incompatible with live graph")
+}
+
+/// Rows on which two logit matrices pick the same top-1 class — the
+/// canary's agreement measure (same machinery as the eval harness's
+/// accuracy loop).
+pub(crate) fn top1_agreement(a: &[f32], b: &[f32], classes: usize) -> u64 {
+    super::eval::top1(a, classes)
+        .into_iter()
+        .zip(super::eval::top1(b, classes))
+        .filter(|(x, y)| x == y)
+        .count() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::QuantConv;
+    use crate::model::{EngineMode, Graph, ModelParams, Node, Op, Weights};
+    use crate::quant::{QuantPolicy, SparqConfig};
+    use std::collections::HashMap;
+
+    /// Minimal 4x4x1 single-quant-conv model; `seed` shifts the weight
+    /// bytes so distinct seeds are distinct versions with equal shapes.
+    fn tiny_params(seed: i8) -> Arc<ModelParams> {
+        tiny_params_classes(seed, 2)
+    }
+
+    fn tiny_params_classes(seed: i8, classes: usize) -> Arc<ModelParams> {
+        let graph = Graph {
+            arch: "tiny".into(),
+            variant: "registry-test".into(),
+            num_classes: classes,
+            input_hwc: [4, 4, 1],
+            eval_batch: 4,
+            quant_convs: vec!["q1".into()],
+            nodes: vec![
+                Node { name: "img".into(), op: Op::Input, inputs: vec![] },
+                Node {
+                    name: "q1".into(),
+                    op: Op::Conv { k: 3, stride: 1, out_ch: 4, relu: true, quant: true },
+                    inputs: vec!["img".into()],
+                },
+                Node { name: "g".into(), op: Op::Gap, inputs: vec!["q1".into()] },
+                Node {
+                    name: "fc".into(),
+                    op: Op::Fc { out: classes },
+                    inputs: vec!["g".into()],
+                },
+            ],
+        };
+        let mut quant = HashMap::new();
+        quant.insert(
+            "q1".to_string(),
+            QuantConv {
+                wq: (0..9 * 4).map(|i| (i as i8).wrapping_mul(7).wrapping_add(seed)).collect(),
+                k: 9,
+                o: 4,
+                scale: vec![0.01; 4],
+                bias: vec![0.0; 4],
+            },
+        );
+        let weights = Weights {
+            quant,
+            float: HashMap::new(),
+            fc_w: (0..4 * classes).map(|i| i as f32 / 8.0).collect(),
+            fc_in: 4,
+            fc_out: classes,
+            fc_b: vec![0.0; classes],
+        };
+        Arc::new(
+            ModelParams::with_policy(
+                Arc::new(graph),
+                Arc::new(weights),
+                QuantPolicy::uniform(SparqConfig::A8W8),
+                &[0.02],
+                EngineMode::Dense,
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn slot_serves_first_generation_and_swap_publishes_atomically() {
+        let slot = VersionSlot::new(tiny_params(0));
+        let v1 = slot.load();
+        assert_eq!(v1.generation, FIRST_GENERATION);
+        assert_eq!(v1.weights_sha.len(), 16);
+
+        let tracker = VersionTracker::new();
+        let cfg = RolloutConfig { canary_share: 0, ..RolloutConfig::default() };
+        let gen2 = tracker.begin_rollout(&slot, tiny_params(1), cfg).unwrap();
+        assert_eq!(gen2, FIRST_GENERATION + 1);
+        let v2 = slot.load();
+        assert_eq!(v2.generation, gen2);
+        assert_ne!(v1.weights_sha, v2.weights_sha, "distinct seeds hash differently");
+        // the pre-swap handle still works and still names generation 1 —
+        // in-flight batches drain on the old Arc
+        assert_eq!(v1.generation, FIRST_GENERATION);
+    }
+
+    #[test]
+    fn retired_generation_drains_once_all_holders_drop() {
+        let slot = VersionSlot::new(tiny_params(0));
+        let tracker = VersionTracker::new();
+        let inflight = slot.load(); // simulated in-flight batch
+        let cfg = RolloutConfig { canary_share: 0, ..RolloutConfig::default() };
+        tracker.begin_rollout(&slot, tiny_params(1), cfg).unwrap();
+
+        let st = tracker.status();
+        assert_eq!(st.state(), "draining");
+        assert_eq!(st.draining.len(), 1);
+        assert_eq!(st.draining[0].generation, FIRST_GENERATION);
+        assert_eq!(st.draining[0].holders, 1, "only the simulated batch holds it");
+
+        drop(inflight);
+        let st = tracker.status();
+        assert_eq!(st.state(), "serving");
+        assert!(st.draining.is_empty(), "no holders left: fully drained");
+        assert_eq!(st.drained, vec![FIRST_GENERATION]);
+    }
+
+    #[test]
+    fn canary_routes_one_in_n_and_promotes_on_agreement() {
+        let slot = VersionSlot::new(tiny_params(0));
+        let tracker = VersionTracker::new();
+        let cfg =
+            RolloutConfig { canary_share: 3, promote_threshold: 0.9, min_requests: 6 };
+        let gen2 = tracker.begin_rollout(&slot, tiny_params(1), cfg).unwrap();
+        assert_eq!(tracker.status().state(), "canary");
+
+        let mut canary_batches = 0;
+        for i in 1..=9 {
+            match tracker.dispatch(&slot) {
+                Dispatch::Canary { incoming, serving } => {
+                    canary_batches += 1;
+                    assert_eq!(i % 3, 0, "canary fires on exactly every 3rd batch");
+                    assert_eq!(incoming.generation, gen2);
+                    assert_eq!(serving.generation, FIRST_GENERATION);
+                    tracker.note_served(incoming.generation, 2);
+                    tracker.record_canary(&slot, gen2, 2, 2);
+                }
+                Dispatch::Serving(v) => {
+                    assert_eq!(v.generation, FIRST_GENERATION);
+                    tracker.note_served(v.generation, 2);
+                }
+            }
+        }
+        assert_eq!(canary_batches, 3);
+        // 3 canary batches x 2 rows = 6 rows ≥ min_requests → verdict
+        let st = tracker.status();
+        let outcome = st.last_outcome.expect("verdict landed");
+        assert!(outcome.promoted);
+        assert_eq!(outcome.agreement, Some(1.0));
+        assert_eq!(slot.load().generation, gen2);
+        assert_eq!(st.served.get(&FIRST_GENERATION), Some(&12));
+        assert_eq!(st.served.get(&gen2), Some(&6));
+        // the superseded generation has no holders → already drained
+        assert_eq!(st.drained, vec![FIRST_GENERATION]);
+    }
+
+    #[test]
+    fn canary_rolls_back_below_threshold_and_candidate_drains() {
+        let slot = VersionSlot::new(tiny_params(0));
+        let tracker = VersionTracker::new();
+        let cfg =
+            RolloutConfig { canary_share: 1, promote_threshold: 0.9, min_requests: 4 };
+        let gen2 = tracker.begin_rollout(&slot, tiny_params(1), cfg).unwrap();
+        // every batch is a canary at share 1; report 50% agreement
+        let outcome = tracker.record_canary(&slot, gen2, 2, 4).expect("verdict");
+        assert!(!outcome.promoted);
+        assert_eq!(outcome.agreement, Some(0.5));
+        assert_eq!(slot.load().generation, FIRST_GENERATION, "serving version untouched");
+        let st = tracker.status();
+        assert_eq!(st.state(), "serving");
+        assert_eq!(st.drained, vec![gen2], "rejected candidate freed immediately");
+        // a late replica reporting the dead canary is a no-op
+        assert!(tracker.record_canary(&slot, gen2, 4, 4).is_none());
+    }
+
+    #[test]
+    fn overlapping_rollouts_are_rejected_but_sequential_ones_number_up() {
+        let slot = VersionSlot::new(tiny_params(0));
+        let tracker = VersionTracker::new();
+        let cfg = RolloutConfig { canary_share: 4, ..RolloutConfig::default() };
+        let gen2 = tracker.begin_rollout(&slot, tiny_params(1), cfg).unwrap();
+        let err = tracker
+            .begin_rollout(&slot, tiny_params(2), cfg)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already in progress"), "{err}");
+        // failure-rollback clears the canary; the next rollout proceeds
+        assert!(tracker.fail_canary(gen2, "executor died"));
+        assert!(!tracker.fail_canary(gen2, "stale"), "second report is a no-op");
+        let st = tracker.status();
+        assert!(st.last_error.as_deref().is_some_and(|e| e.contains("executor died")));
+        let gen3 = tracker
+            .begin_rollout(
+                &slot,
+                tiny_params(2),
+                RolloutConfig { canary_share: 0, ..cfg },
+            )
+            .unwrap();
+        assert_eq!(gen3, gen2 + 1);
+        assert_eq!(slot.load().generation, gen3);
+    }
+
+    #[test]
+    fn staging_validation_rejects_shape_changes() {
+        let slot = VersionSlot::new(tiny_params(0));
+        let tracker = VersionTracker::new();
+        let err = tracker
+            .begin_rollout(
+                &slot,
+                tiny_params_classes(1, 3),
+                RolloutConfig::default(),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("class count"), "{err}");
+        assert_eq!(slot.load().generation, FIRST_GENERATION);
+    }
+
+    #[test]
+    fn top1_agreement_counts_matching_rows() {
+        let a = [0.1f32, 0.9, 0.8, 0.2, 0.3, 0.7];
+        let b = [0.2f32, 0.8, 0.1, 0.9, 0.1, 0.6];
+        // rows: argmax a = [1, 0, 1], argmax b = [1, 1, 1]
+        assert_eq!(top1_agreement(&a, &b, 2), 2);
+    }
+}

@@ -52,18 +52,31 @@
 //! * **Metrics** — [`InferenceRouter::metrics`] reports per-shard
 //!   latency + batcher snapshots and the merged aggregate per model;
 //!   [`InferenceRouter::aggregate`] merges across every model.
+//! * **Versioning** — every params-built variant owns a
+//!   [`VersionSlot`] + [`VersionTracker`]
+//!   (see [`super::registry`]): executors re-read the slot once per
+//!   batch, so [`InferenceRouter::reload_variant`] can stage a new
+//!   generation ([`ReloadSource`]: explicit params, a new policy over
+//!   the live weights, a weights `.npz`, or a deterministic test
+//!   perturbation) and hot-swap or canary it with zero dropped
+//!   requests — in-flight batches drain on the old `Arc`.
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use crate::model::{Engine, ModelParams, Scratch};
+use crate::model::{Engine, ModelParams, Scratch, Weights};
+use crate::quant::QuantPolicy;
 
 use super::batcher::{
     BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, ExecuteFn, PendingReply, Reply,
+};
+use super::registry::{
+    self, Dispatch, ModelVersion, RolloutConfig, RolloutStatus, VersionSlot, VersionTracker,
 };
 use super::server::LatencyHist;
 
@@ -84,9 +97,14 @@ struct VariantShards {
     /// Tie-break cursor for load-aware dispatch; wraps on overflow
     /// (harmless modulo shards).
     cursor: AtomicUsize,
-    /// Introspection handle (None for executor-backed entries where the
-    /// router can't see parameters).
-    params: Option<Arc<ModelParams>>,
+    /// Versioned parameter slot — every replica executor reads it once
+    /// per batch, which is what makes the variant hot-swappable. `None`
+    /// for executor-backed entries where the router can't see
+    /// parameters (those can't be reloaded).
+    slot: Option<Arc<VersionSlot>>,
+    /// Rollout state machine (canary routing, drain accounting) shared
+    /// by the variant's replicas; paired with `slot`.
+    tracker: Option<Arc<VersionTracker>>,
 }
 
 impl VariantShards {
@@ -114,6 +132,12 @@ impl VariantShards {
             }
         }
         best
+    }
+
+    /// The currently serving parameter block (an `Arc` clone of the
+    /// live version's params; `None` for executor-backed variants).
+    fn current_params(&self) -> Option<Arc<ModelParams>> {
+        self.slot.as_ref().map(|s| Arc::clone(&s.load().params))
     }
 }
 
@@ -166,6 +190,18 @@ pub struct VariantMetrics {
     /// Policy-weighted storage bits per quantized activation (0 when
     /// not introspectable).
     pub footprint_bits: f64,
+    /// Serving generation number (0 for executor-backed variants the
+    /// registry doesn't version).
+    pub generation: u64,
+    /// Content hash of the serving weight store (empty when not
+    /// introspectable).
+    pub weights_sha: String,
+    /// Lifecycle label: `serving` / `canary` / `draining` (empty for
+    /// executor-backed variants).
+    pub state: String,
+    /// Full rollout snapshot: canary progress, per-generation served
+    /// counters, draining/drained versions, last outcome/error.
+    pub rollout: Option<RolloutStatus>,
     pub shards: Vec<ShardMetrics>,
     pub total: BatcherSnapshot,
 }
@@ -355,31 +391,47 @@ impl RouterBuilder {
                     );
                 }
             }
-            let (image_len, classes, params_opt, executors): (
+            type Versioned = Option<(Arc<VersionSlot>, Arc<VersionTracker>)>;
+            let (image_len, classes, versioned, executors): (
                 usize,
                 usize,
-                Option<Arc<ModelParams>>,
+                Versioned,
                 Vec<Box<ExecuteFn>>,
             ) = match entry.source {
                 EntrySource::Params { params, threads } => {
                     let [h, w, c] = params.graph.input_hwc;
                     let image_len = h * w * c;
                     let classes = params.graph.num_classes;
+                    // The variant's versioned slot: replicas re-read it
+                    // per batch (a cheap Arc clone + handle rebuild), so
+                    // a hot-swap takes effect on each replica's very
+                    // next batch while in-flight batches drain on the
+                    // old Arc.
+                    let slot = Arc::new(VersionSlot::new(params));
+                    let tracker = Arc::new(VersionTracker::new());
                     let executors = (0..entry.replicas)
                         .map(|_| {
-                            // A cheap handle per shard — Arc bumps, no
-                            // parameter copies — plus shard-private scratch.
-                            let mut engine = Engine::from_params(params.clone());
-                            if let Some(t) = threads {
-                                engine.set_threads(t);
-                            }
+                            let slot = Arc::clone(&slot);
+                            let tracker = Arc::clone(&tracker);
+                            // Shard-private scratch; the second one runs
+                            // the shadow side of canary batches.
                             let mut scratch = Scratch::default();
+                            let mut shadow = Scratch::default();
                             Box::new(move |buf: &[f32], bsz: usize| {
-                                engine.forward_scratch(buf, bsz, &mut scratch)
+                                versioned_execute(
+                                    &slot,
+                                    &tracker,
+                                    threads,
+                                    classes,
+                                    buf,
+                                    bsz,
+                                    &mut scratch,
+                                    &mut shadow,
+                                )
                             }) as Box<ExecuteFn>
                         })
                         .collect();
-                    (image_len, classes, Some(params), executors)
+                    (image_len, classes, Some((slot, tracker)), executors)
                 }
                 EntrySource::Executors { image_len, classes, executors } => {
                     (image_len, classes, None, executors)
@@ -394,11 +446,21 @@ impl RouterBuilder {
                     Shard { batcher, stats, e2e: Mutex::new(LatencyHist::default()) }
                 })
                 .collect();
-            let vs = VariantShards {
-                name: entry.variant.clone(),
-                shards,
-                cursor: AtomicUsize::new(0),
-                params: params_opt,
+            let vs = match versioned {
+                Some((slot, tracker)) => VariantShards {
+                    name: entry.variant.clone(),
+                    shards,
+                    cursor: AtomicUsize::new(0),
+                    slot: Some(slot),
+                    tracker: Some(tracker),
+                },
+                None => VariantShards {
+                    name: entry.variant.clone(),
+                    shards,
+                    cursor: AtomicUsize::new(0),
+                    slot: None,
+                    tracker: None,
+                },
             };
             match models.get_mut(&entry.name) {
                 Some(ms) => {
@@ -422,9 +484,12 @@ impl RouterBuilder {
                     // Variants exist to serve many operating points off
                     // ONE weight copy; silently accepting a second
                     // allocation would defeat the design, so reject it.
+                    // (Build-time only: a later weight hot-swap
+                    // necessarily gives the reloaded variant its own
+                    // allocation.)
                     if let (Some(prev), Some(newp)) = (
-                        ms.variants.iter().find_map(|v| v.params.as_ref()),
-                        vs.params.as_ref(),
+                        ms.variants.iter().find_map(VariantShards::current_params),
+                        vs.current_params(),
                     ) {
                         if !Arc::ptr_eq(&prev.graph, &newp.graph)
                             || !Arc::ptr_eq(&prev.weights, &newp.weights)
@@ -440,13 +505,13 @@ impl RouterBuilder {
                     }
                     if ms.param_bytes == 0 {
                         ms.param_bytes =
-                            vs.params.as_ref().map_or(0, |p| p.weights.param_bytes());
+                            vs.current_params().map_or(0, |p| p.weights.param_bytes());
                     }
                     ms.variants.push(vs);
                 }
                 None => {
                     let param_bytes =
-                        vs.params.as_ref().map_or(0, |p| p.weights.param_bytes());
+                        vs.current_params().map_or(0, |p| p.weights.param_bytes());
                     models.insert(
                         entry.name.clone(),
                         ModelShards { image_len, classes, param_bytes, variants: vec![vs] },
@@ -459,6 +524,117 @@ impl RouterBuilder {
         }
         Ok(InferenceRouter { models })
     }
+}
+
+/// One batch through a versioned variant. The slot is read once and
+/// the whole batch runs on that version's engine (a cheap
+/// `Engine::from_params` Arc bump per batch — no caching, so a stale
+/// engine can never outlive a swap), which is what guarantees no
+/// response is ever torn across generations. Canary batches run on the
+/// incoming generation with the serving generation shadow-computing the
+/// same rows for the agreement measure; if the candidate's executor
+/// fails, the canary auto-rolls-back and the serving generation's
+/// (already computed) logits answer the batch — callers never see the
+/// candidate's failure.
+#[allow(clippy::too_many_arguments)]
+fn versioned_execute(
+    slot: &VersionSlot,
+    tracker: &VersionTracker,
+    threads: Option<usize>,
+    classes: usize,
+    buf: &[f32],
+    bsz: usize,
+    scratch: &mut Scratch,
+    shadow: &mut Scratch,
+) -> Result<Vec<f32>> {
+    let engine_for = |v: &Arc<ModelVersion>| {
+        let mut e = Engine::from_params(Arc::clone(&v.params));
+        if let Some(t) = threads {
+            e.set_threads(t);
+        }
+        e
+    };
+    match tracker.dispatch(slot) {
+        Dispatch::Serving(v) => {
+            let out = engine_for(&v).forward_scratch(buf, bsz, scratch)?;
+            tracker.note_served(v.generation, bsz as u64);
+            Ok(out)
+        }
+        Dispatch::Canary { incoming, serving } => {
+            let reference = engine_for(&serving).forward_scratch(buf, bsz, scratch)?;
+            match engine_for(&incoming).forward_scratch(buf, bsz, shadow) {
+                Ok(out) => {
+                    let agree = registry::top1_agreement(&out, &reference, classes);
+                    tracker.note_served(incoming.generation, bsz as u64);
+                    tracker.record_canary(slot, incoming.generation, agree, bsz as u64);
+                    Ok(out)
+                }
+                Err(e) => {
+                    tracker.fail_canary(incoming.generation, &format!("{e:#}"));
+                    tracker.note_served(serving.generation, bsz as u64);
+                    Ok(reference)
+                }
+            }
+        }
+    }
+}
+
+/// Where a staged reload's parameters come from.
+pub enum ReloadSource {
+    /// Fully staged parameters (shape-validated against the live
+    /// version before publication).
+    Params(Arc<ModelParams>),
+    /// Re-prepare the live weights under a new [`QuantPolicy`] — a
+    /// quantization operating-point change with zero new weight bytes.
+    Policy(QuantPolicy),
+    /// Load a fresh weight store from a `_weights.npz` file.
+    WeightsNpz(PathBuf),
+    /// Deterministically perturb the live weights (rollout drill: no
+    /// artifact needed). Small amplitudes stay top-1-compatible with
+    /// the serving version, so a canary promotes; large amplitudes
+    /// corrupt predictions, so a canary rolls back.
+    Perturb { seed: u64, amplitude: i8 },
+}
+
+/// A reload request: the parameter source plus the rollout gate.
+pub struct ReloadSpec {
+    pub source: ReloadSource,
+    pub rollout: RolloutConfig,
+}
+
+fn splitmix(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Clone the live weight store and nudge ~1/8 of each quantized conv's
+/// weights by up to ±`amplitude`, deterministically from `seed`. The
+/// conv names are visited in sorted order so the result is independent
+/// of `HashMap` iteration order.
+fn perturb_weights(live: &Weights, seed: u64, amplitude: i8) -> Weights {
+    let mut out = live.clone();
+    let mut names: Vec<String> = out.quant.keys().cloned().collect();
+    names.sort();
+    let span = 2 * u64::from(amplitude.unsigned_abs()) + 1;
+    let mut ctr = seed;
+    for name in &names {
+        if let Some(q) = out.quant.get_mut(name) {
+            for w in &mut q.wq {
+                ctr = ctr.wrapping_add(1);
+                let r = splitmix(ctr);
+                if r % 8 == 0 {
+                    let delta = ((r >> 8) % span) as i64 - i64::from(amplitude.unsigned_abs());
+                    // delta ∈ [-amplitude, amplitude] fits i8 by
+                    // construction; saturate at the type bounds.
+                    let nudged = i64::from(*w) + delta;
+                    *w = nudged.clamp(i64::from(i8::MIN), i64::from(i8::MAX)) as i8;
+                }
+            }
+        }
+    }
+    out
 }
 
 /// Routes inference requests across named models and their replica
@@ -519,15 +695,102 @@ impl InferenceRouter {
         Ok(self.shards_of(model)?.default_variant().name.as_str())
     }
 
-    /// The shared parameter block behind a variant — `None` for
-    /// executor-backed entries the router cannot introspect. This is
-    /// the seam the HTTP `GET /v1/models` policy report reads through.
+    /// The **currently serving** parameter block behind a variant —
+    /// `None` for executor-backed entries the router cannot introspect.
+    /// This is the seam the HTTP `GET /v1/models` policy report reads
+    /// through; it returns an owned `Arc` clone because the underlying
+    /// slot can be hot-swapped at any moment.
     pub fn variant_params(
         &self,
         model: &str,
         variant: &str,
-    ) -> Result<Option<&Arc<ModelParams>>> {
-        Ok(self.variant_of(model, variant)?.params.as_ref())
+    ) -> Result<Option<Arc<ModelParams>>> {
+        Ok(self.variant_of(model, variant)?.current_params())
+    }
+
+    /// The currently serving [`ModelVersion`] (generation number,
+    /// weights hash, params) of a variant — `None` for executor-backed
+    /// entries.
+    pub fn variant_version(
+        &self,
+        model: &str,
+        variant: &str,
+    ) -> Result<Option<Arc<ModelVersion>>> {
+        Ok(self.variant_of(model, variant)?.slot.as_ref().map(|s| s.load()))
+    }
+
+    /// The variant's rollout snapshot (canary progress, per-generation
+    /// served counters, draining versions) — `None` for executor-backed
+    /// entries.
+    pub fn variant_rollout(&self, model: &str, variant: &str) -> Result<Option<RolloutStatus>> {
+        Ok(self.variant_of(model, variant)?.tracker.as_ref().map(|t| t.status()))
+    }
+
+    /// Stage and roll out new parameters for one variant — the
+    /// programmatic face of `POST /v1/models/{name}/reload`.
+    ///
+    /// Staging (loading/perturbing weights, re-preparing LUT and weight
+    /// tables) happens on the calling thread, **off** the serving path:
+    /// traffic keeps flowing on the live generation throughout. The
+    /// staged block is shape-validated against the live graph, then
+    /// either swapped in immediately (`canary_share == 0`) or installed
+    /// as a canary that auto-promotes/auto-rolls-back on measured
+    /// agreement. Returns the incoming generation number.
+    ///
+    /// Fails for executor-backed variants, on shape mismatch, or while
+    /// another rollout of the same variant is still in flight; staging
+    /// failures are also recorded on the variant for `/v1/models`.
+    pub fn reload_variant(&self, model: &str, variant: &str, spec: ReloadSpec) -> Result<u64> {
+        let vs = self.variant_of(model, variant)?;
+        let (slot, tracker) = match (&vs.slot, &vs.tracker) {
+            (Some(s), Some(t)) => (s, t),
+            _ => bail!(
+                "model `{model}` variant `{variant}` is executor-backed; hot reload \
+                 requires a params-built variant"
+            ),
+        };
+        let live = slot.load();
+        let staged = match Self::stage(&live, spec.source) {
+            Ok(p) => p,
+            Err(e) => {
+                tracker.set_error(format!("staging failed: {e:#}"));
+                return Err(e.context(format!(
+                    "staging reload for model `{model}` variant `{variant}`"
+                )));
+            }
+        };
+        match tracker.begin_rollout(slot, staged, spec.rollout) {
+            Ok(generation) => Ok(generation),
+            Err(e) => {
+                // Recorded on the variant so async callers (the HTTP
+                // reload route stages off-thread) can see why a reload
+                // never became a canary.
+                tracker.set_error(format!("rollout rejected: {e:#}"));
+                Err(e)
+            }
+        }
+    }
+
+    /// Build the staged parameter block for a reload (expensive: table
+    /// preparation), without touching any serving state.
+    fn stage(live: &ModelVersion, source: ReloadSource) -> Result<Arc<ModelParams>> {
+        match source {
+            ReloadSource::Params(p) => Ok(p),
+            ReloadSource::Policy(policy) => {
+                Ok(Arc::new(live.params.restage_policy(policy).context("restaging policy")?))
+            }
+            ReloadSource::WeightsNpz(path) => {
+                let w = Weights::load(&path)?;
+                Ok(Arc::new(live.params.restage_weights(Arc::new(w))?))
+            }
+            ReloadSource::Perturb { seed, amplitude } => {
+                if amplitude == 0 {
+                    bail!("perturb amplitude must be non-zero (a zero-delta reload is a no-op)");
+                }
+                let w = perturb_weights(&live.params.weights, seed, amplitude);
+                Ok(Arc::new(live.params.restage_weights(Arc::new(w))?))
+            }
+        }
     }
 
     fn shards_of(&self, model: &str) -> Result<&ModelShards> {
@@ -641,11 +904,21 @@ impl InferenceRouter {
                 vshards.push(sm.clone());
                 flat.push(sm);
             }
+            let version = vs.slot.as_ref().map(|s| s.load());
+            let rollout = vs.tracker.as_ref().map(|t| t.status());
             variants.push(VariantMetrics {
                 variant: vs.name.clone(),
                 replicas: vs.shards.len(),
-                policy: vs.params.as_ref().map_or_else(String::new, |p| p.policy().to_string()),
-                footprint_bits: vs.params.as_ref().map_or(0.0, |p| p.footprint_bits(1)),
+                policy: version
+                    .as_ref()
+                    .map_or_else(String::new, |v| v.params.policy().to_string()),
+                footprint_bits: version.as_ref().map_or(0.0, |v| v.params.footprint_bits(1)),
+                generation: version.as_ref().map_or(0, |v| v.generation),
+                weights_sha: version
+                    .as_ref()
+                    .map_or_else(String::new, |v| v.weights_sha.clone()),
+                state: rollout.as_ref().map_or_else(String::new, |r| r.state().to_string()),
+                rollout,
                 shards: vshards,
                 total: vtotal,
             });
@@ -762,9 +1035,12 @@ mod tests {
             .model("m", params.clone(), 3, quick_policy(2))
             .build()
             .unwrap();
-        // 3 replica engines = 3 Arc bumps over the builder-held copy —
-        // shared storage, not 3 deep clones (the acceptance criterion).
-        assert_eq!(Arc::strong_count(&params), before + 3);
+        // One registry copy total: the variant's `VersionSlot` holds the
+        // sole `Arc<ModelParams>` clone; replica executors capture the
+        // slot and re-borrow per batch — shared storage, not 3 deep
+        // clones (the acceptance criterion), and no per-replica holds
+        // that could outlive a hot-swap.
+        assert_eq!(Arc::strong_count(&params), before + 1);
         assert_eq!(router.replicas("m").unwrap(), 3);
         let m = router.metrics("m").unwrap();
         assert_eq!(m.param_bytes, params.weights.param_bytes());
@@ -777,7 +1053,8 @@ mod tests {
             assert_eq!(got.logits, want, "shard {shard} diverged from the shared model");
         }
         // Dropping the router closes every shard queue; the workers
-        // (which own the replica engines) exit asynchronously, so poll.
+        // (whose executors own the version slot) exit asynchronously, so
+        // poll. `before + 1` = the test-local `engine` above.
         drop(router);
         let deadline = Instant::now() + Duration::from_secs(10);
         while Arc::strong_count(&params) != before + 1 && Instant::now() < deadline {
@@ -849,9 +1126,12 @@ mod tests {
         assert!(err.contains("nope") && err.contains("a4w8"), "{err}");
         // introspection: the params behind each variant are reachable
         assert!(Arc::ptr_eq(
-            router.variant_params("m", "a8w8").unwrap().unwrap(),
+            &router.variant_params("m", "a8w8").unwrap().unwrap(),
             &pa
         ));
+        // registry metadata: both variants serve generation 1
+        assert_eq!(router.variant_version("m", "a8w8").unwrap().unwrap().generation, 1);
+        assert_eq!(router.variant_version("m", "a4w8").unwrap().unwrap().generation, 1);
         // metrics: per-variant blocks + the flattened per-model view
         let m = router.metrics("m").unwrap();
         assert_eq!(m.variants.len(), 2);
@@ -1181,5 +1461,334 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("max_queue_wait"), "{err}");
+    }
+
+    /// The tentpole acceptance bar: N client threads hammer `infer`
+    /// while the main thread performs 8 consecutive hot-swaps. Zero
+    /// requests may fail, every reply must be bit-identical to a
+    /// generation's reference output (nothing torn across a swap), the
+    /// final generation must serve after the storm, and — once traffic
+    /// stops — every superseded generation must fully drain (its
+    /// `Arc::strong_count` falls to the retired list's own reference
+    /// and the sweep records it).
+    #[test]
+    fn hot_swap_storm_never_tears_or_drops_a_response() {
+        use std::sync::atomic::AtomicBool;
+        const GENS: usize = 9; // build seed 0 + 8 reloads
+        const CLIENTS: usize = 3;
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model("m", tiny_params(0), 2, quick_policy(2))
+                .build()
+                .unwrap(),
+        );
+        // Per-generation reference logits for each client's image,
+        // computed on throwaway engines.
+        let expected: Vec<Vec<Vec<f32>>> = (0..GENS)
+            .map(|g| {
+                let engine = Engine::from_params(tiny_params(g as i8));
+                (0..CLIENTS).map(|t| engine.forward(&img(t), 1).unwrap()).collect()
+            })
+            .collect();
+        // Consecutive seeds must produce distinct logits, or "the swap
+        // published" below would be vacuous.
+        for g in 1..GENS {
+            assert_ne!(expected[g - 1], expected[g], "seeds {} and {g} collide", g - 1);
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let warmed = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|t| {
+                let router = Arc::clone(&router);
+                let stop = Arc::clone(&stop);
+                let warmed = Arc::clone(&warmed);
+                let mine: Vec<Vec<f32>> = expected.iter().map(|per| per[t].clone()).collect();
+                std::thread::spawn(move || -> usize {
+                    let mut served = 0usize;
+                    while !stop.load(Relaxed) {
+                        let reply = router
+                            .infer("m", img(t))
+                            .expect("a hot-swap must never fail a request");
+                        // Matching some generation's exact output proves
+                        // the batch ran wholly on one version.
+                        assert!(
+                            mine.iter().any(|e| reply.logits == *e),
+                            "client {t} got logits matching no generation (torn response)"
+                        );
+                        served += 1;
+                        if served == 1 {
+                            warmed.fetch_add(1, Relaxed);
+                        }
+                    }
+                    served
+                })
+            })
+            .collect();
+        // Every client completes >= 1 request on the build generation
+        // before the storm begins.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while warmed.load(Relaxed) < CLIENTS {
+            assert!(Instant::now() < deadline, "clients never got a first reply");
+            std::thread::yield_now();
+        }
+        // 8 consecutive immediate swaps under live traffic.
+        for g in 1..GENS {
+            let generation = router
+                .reload_variant(
+                    "m",
+                    DEFAULT_VARIANT,
+                    ReloadSpec {
+                        source: ReloadSource::Params(tiny_params(g as i8)),
+                        rollout: RolloutConfig { canary_share: 0, ..RolloutConfig::default() },
+                    },
+                )
+                .unwrap();
+            assert_eq!(generation, (g + 1) as u64, "generations number up consecutively");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        stop.store(true, Relaxed);
+        let total: usize = handles.into_iter().map(|h| h.join().expect("client panicked")).sum();
+        assert!(total >= CLIENTS, "clients served no traffic");
+        // The last swap published: post-storm traffic serves the final
+        // generation's exact logits.
+        let last = router.infer("m", img(0)).unwrap();
+        assert_eq!(last.logits, expected[GENS - 1][0], "final generation not serving");
+        let version = router.variant_version("m", DEFAULT_VARIANT).unwrap().unwrap();
+        assert_eq!(version.generation, GENS as u64);
+        // Drain: with traffic stopped, all 8 superseded generations
+        // reach strong_count == 1 and sweep into the drained list.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let st = router.variant_rollout("m", DEFAULT_VARIANT).unwrap().unwrap();
+            if st.draining.is_empty() {
+                assert_eq!(st.state(), "serving");
+                let mut drained = st.drained.clone();
+                drained.sort_unstable();
+                assert_eq!(drained, (1..GENS as u64).collect::<Vec<_>>());
+                let served: u64 = st.served.values().sum();
+                assert!(served >= total as u64, "served rows undercounted");
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "retired generations never drained: {:?}",
+                st.draining
+            );
+            std::thread::yield_now();
+        }
+    }
+
+    /// `tiny_params(0)` with fc weights+biases negated: identical
+    /// shapes, but the top-1 class flips on every input (2-class argmax
+    /// of negated logits), so a canary against it measures 0 agreement.
+    fn inverted_params() -> Arc<ModelParams> {
+        let (graph, weights) = tiny_graph_weights(0);
+        let mut w = (*weights).clone();
+        for v in &mut w.fc_w {
+            *v = -*v;
+        }
+        for v in &mut w.fc_b {
+            *v = -*v;
+        }
+        Arc::new(
+            ModelParams::new(
+                graph,
+                Arc::new(w),
+                SparqConfig::named("5opt_r").unwrap(),
+                &[0.02],
+                EngineMode::Dense,
+            )
+            .unwrap(),
+        )
+    }
+
+    /// Canary lifecycle through real traffic: a value-identical reload
+    /// measures perfect agreement and auto-promotes; a top-1-flipping
+    /// reload measures zero agreement and auto-rolls-back, leaving the
+    /// original generation serving.
+    #[test]
+    fn canary_promotes_on_agreement_and_rolls_back_on_divergence() {
+        let params = tiny_params(0);
+        let router = InferenceRouter::builder()
+            .model("m", params.clone(), 1, quick_policy(2))
+            .build()
+            .unwrap();
+        let engine = Engine::from_params(params);
+        let canary = RolloutConfig { canary_share: 1, promote_threshold: 0.5, min_requests: 2 };
+
+        // --- promote: same values, new generation → agreement 1.0
+        let gen2 = router
+            .reload_variant(
+                "m",
+                DEFAULT_VARIANT,
+                ReloadSpec { source: ReloadSource::Params(tiny_params(0)), rollout: canary },
+            )
+            .unwrap();
+        assert_eq!(gen2, 2);
+        let st = router.variant_rollout("m", DEFAULT_VARIANT).unwrap().unwrap();
+        assert_eq!(st.state(), "canary");
+        assert_eq!(st.canary.as_ref().map(|c| c.generation), Some(gen2));
+        // share 1 → every batch is a canary; 2 single-row batches reach
+        // min_requests and land the verdict synchronously.
+        for i in 0..2 {
+            let reply = router.infer("m", img(i)).unwrap();
+            assert_eq!(reply.logits, engine.forward(&img(i), 1).unwrap());
+        }
+        let st = router.variant_rollout("m", DEFAULT_VARIANT).unwrap().unwrap();
+        let outcome = st.last_outcome.clone().expect("verdict landed");
+        assert!(outcome.promoted, "identical values must promote: {outcome:?}");
+        assert_eq!(outcome.agreement, Some(1.0));
+        assert_eq!(
+            router.variant_version("m", DEFAULT_VARIANT).unwrap().unwrap().generation,
+            gen2
+        );
+
+        // --- rollback: flipped top-1 on every row → agreement 0.0
+        let gen3 = router
+            .reload_variant(
+                "m",
+                DEFAULT_VARIANT,
+                ReloadSpec { source: ReloadSource::Params(inverted_params()), rollout: canary },
+            )
+            .unwrap();
+        assert_eq!(gen3, 3);
+        // Canary batches serve the *incoming* generation's logits —
+        // real traffic, not a shadow mirror.
+        let inverted = Engine::from_params(inverted_params());
+        for i in 0..2 {
+            let reply = router.infer("m", img(i)).unwrap();
+            assert_eq!(reply.logits, inverted.forward(&img(i), 1).unwrap());
+        }
+        let st = router.variant_rollout("m", DEFAULT_VARIANT).unwrap().unwrap();
+        let outcome = st.last_outcome.clone().expect("verdict landed");
+        assert!(!outcome.promoted, "flipped logits must roll back: {outcome:?}");
+        assert_eq!(outcome.agreement, Some(0.0));
+        // The original (promoted) generation still serves, bit-exact.
+        assert_eq!(
+            router.variant_version("m", DEFAULT_VARIANT).unwrap().unwrap().generation,
+            gen2
+        );
+        let reply = router.infer("m", img(5)).unwrap();
+        assert_eq!(reply.logits, engine.forward(&img(5), 1).unwrap());
+        // per-generation served counters saw all three generations
+        let st = router.variant_rollout("m", DEFAULT_VARIANT).unwrap().unwrap();
+        assert!(st.served.contains_key(&gen2));
+        assert!(st.served.contains_key(&gen3));
+    }
+
+    /// Reload guardrails at the router level: executor-backed variants
+    /// refuse, shape changes refuse (and record the staging error),
+    /// unknown models/variants name what exists.
+    #[test]
+    fn reload_rejects_executor_backed_shape_changed_and_unknown_targets() {
+        let spec = || ReloadSpec {
+            source: ReloadSource::Params(tiny_params(1)),
+            rollout: RolloutConfig { canary_share: 0, ..RolloutConfig::default() },
+        };
+        let exec: Box<ExecuteFn> =
+            Box::new(|_buf: &[f32], bsz: usize| Ok(vec![0.0; 2 * bsz]));
+        let router = InferenceRouter::builder()
+            .model("m", tiny_params(0), 1, quick_policy(2))
+            .model_from_executors("raw", 16, 2, vec![exec], quick_policy(2))
+            .build()
+            .unwrap();
+        let err = router.reload_variant("raw", DEFAULT_VARIANT, spec()).unwrap_err().to_string();
+        assert!(err.contains("executor-backed"), "{err}");
+        let err = router.reload_variant("ghost", DEFAULT_VARIANT, spec()).unwrap_err().to_string();
+        assert!(err.contains("no model named"), "{err}");
+        let err = router.reload_variant("m", "ghost", spec()).unwrap_err().to_string();
+        assert!(err.contains("no variant"), "{err}");
+        // zero-amplitude perturb is a staging error and lands in status
+        let err = router
+            .reload_variant(
+                "m",
+                DEFAULT_VARIANT,
+                ReloadSpec {
+                    source: ReloadSource::Perturb { seed: 1, amplitude: 0 },
+                    rollout: RolloutConfig::default(),
+                },
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("amplitude"), "{err}");
+        let st = router.variant_rollout("m", DEFAULT_VARIANT).unwrap().unwrap();
+        assert!(st.last_error.as_deref().is_some_and(|e| e.contains("staging failed")), "{st:?}");
+        // executor-backed variants report no version/rollout, params ones do
+        assert!(router.variant_version("raw", DEFAULT_VARIANT).unwrap().is_none());
+        assert!(router.variant_rollout("raw", DEFAULT_VARIANT).unwrap().is_none());
+        assert_eq!(
+            router.variant_version("m", DEFAULT_VARIANT).unwrap().unwrap().generation,
+            FIRST_GENERATION
+        );
+    }
+
+    /// A small deterministic perturbation keeps every top-1 intact on
+    /// the tiny model (checked against a locally perturbed reference
+    /// engine first, so the test never depends on luck), and a
+    /// `Perturb` reload therefore canary-promotes with logits that
+    /// bit-differ from the old generation.
+    #[test]
+    fn perturb_reload_changes_logits_and_canaries_on_real_agreement() {
+        let params = tiny_params(0);
+        let router = InferenceRouter::builder()
+            .model("m", params.clone(), 1, quick_policy(2))
+            .build()
+            .unwrap();
+        let engine = Engine::from_params(params.clone());
+        // Reference: what the perturbed generation computes.
+        let perturbed = Arc::new(
+            ModelParams::new(
+                Arc::clone(&params.graph),
+                Arc::new(perturb_weights(&params.weights, 42, 3)),
+                SparqConfig::named("5opt_r").unwrap(),
+                &[0.02],
+                EngineMode::Dense,
+            )
+            .unwrap(),
+        );
+        let pengine = Engine::from_params(perturbed);
+        let probe: Vec<usize> = (0..8).collect();
+        let agreeing: Vec<usize> = probe
+            .iter()
+            .copied()
+            .filter(|&i| {
+                let a = engine.forward(&img(i), 1).unwrap();
+                let b = pengine.forward(&img(i), 1).unwrap();
+                assert_ne!(a, b, "amplitude-3 perturbation must change logits bit-wise");
+                registry::top1_agreement(&a, &b, 2) == 1
+            })
+            .collect();
+        assert!(
+            agreeing.len() >= 2,
+            "perturbation flipped top-1 on nearly every probe image — pick a new seed"
+        );
+        let gen2 = router
+            .reload_variant(
+                "m",
+                DEFAULT_VARIANT,
+                ReloadSpec {
+                    source: ReloadSource::Perturb { seed: 42, amplitude: 3 },
+                    rollout: RolloutConfig {
+                        canary_share: 1,
+                        promote_threshold: 1.0,
+                        min_requests: agreeing.len() as u64,
+                    },
+                },
+            )
+            .unwrap();
+        // Drive exactly the images the perturbed model agrees on →
+        // agreement 1.0 ≥ threshold → promote.
+        for &i in &agreeing {
+            let reply = router.infer("m", img(i)).unwrap();
+            assert_eq!(reply.logits, pengine.forward(&img(i), 1).unwrap());
+        }
+        let st = router.variant_rollout("m", DEFAULT_VARIANT).unwrap().unwrap();
+        let outcome = st.last_outcome.clone().expect("verdict landed");
+        assert!(outcome.promoted, "{outcome:?}");
+        let version = router.variant_version("m", DEFAULT_VARIANT).unwrap().unwrap();
+        assert_eq!(version.generation, gen2);
+        // same seed+amplitude → same weights → same content hash as the
+        // locally perturbed reference
+        assert_eq!(version.weights_sha, pengine.params().weights.content_sha());
     }
 }

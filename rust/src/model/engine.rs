@@ -286,6 +286,50 @@ impl ModelParams {
             shift_group,
         )
     }
+
+    /// The calibration activation scales these params were prepared
+    /// with, in `graph.quant_convs` order — what a staged reload reuses
+    /// when only weights or policy change.
+    pub fn act_scales(&self) -> Vec<f32> {
+        self.graph
+            .quant_convs
+            .iter()
+            .map(|n| self.scales.get(n).map_or(0.0, |s| s.0))
+            .collect()
+    }
+
+    /// Stage a fresh parameter block with a **new policy** over this
+    /// block's graph/weights/scales. The expensive prepared tables are
+    /// rebuilt off-thread by the caller (the registry's staged-load
+    /// path); the graph and weight allocations are shared untouched.
+    pub fn restage_policy(&self, policy: QuantPolicy) -> Result<Self> {
+        Self::with_policy(
+            Arc::clone(&self.graph),
+            Arc::clone(&self.weights),
+            policy,
+            &self.act_scales(),
+            self.mode,
+        )
+    }
+
+    /// Stage a fresh parameter block with **new weights** under this
+    /// block's graph/policy/scales — the weight-hot-swap path. The
+    /// incoming store is validated shape-for-shape against the live one
+    /// ([`Weights::same_shapes`]) before any table is prepared, so a
+    /// mis-shaped upload fails loudly at staging time instead of
+    /// corrupting the serving path.
+    pub fn restage_weights(&self, weights: Arc<Weights>) -> Result<Self> {
+        self.weights
+            .same_shapes(&weights)
+            .context("incoming weights incompatible with live graph")?;
+        Self::with_policy(
+            Arc::clone(&self.graph),
+            weights,
+            self.policy.clone(),
+            &self.act_scales(),
+            self.mode,
+        )
+    }
 }
 
 /// A ready-to-run model handle: shared [`ModelParams`] + a per-handle

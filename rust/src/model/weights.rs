@@ -142,4 +142,189 @@ impl Weights {
             + self.fc_w.len()
             + self.fc_b.len()
     }
+
+    /// Check that `incoming` is shape-compatible with this parameter
+    /// store: same conv name sets and per-conv dimensions, same fc
+    /// dimensions. This is the staged-reload validation — a hot-swapped
+    /// weight version must drop into the live graph's prepared-table
+    /// slots without re-deriving anything structural. Values are free
+    /// to differ; only shapes are compared.
+    pub fn same_shapes(&self, incoming: &Weights) -> Result<()> {
+        let names = |m: &HashMap<String, QuantConv>| {
+            let mut v: Vec<String> = m.keys().cloned().collect();
+            v.sort();
+            v
+        };
+        let fnames = |m: &HashMap<String, FloatConv>| {
+            let mut v: Vec<String> = m.keys().cloned().collect();
+            v.sort();
+            v
+        };
+        if names(&self.quant) != names(&incoming.quant) {
+            bail!(
+                "quant conv set mismatch: live [{}] vs incoming [{}]",
+                names(&self.quant).join(", "),
+                names(&incoming.quant).join(", ")
+            );
+        }
+        if fnames(&self.float) != fnames(&incoming.float) {
+            bail!(
+                "float conv set mismatch: live [{}] vs incoming [{}]",
+                fnames(&self.float).join(", "),
+                fnames(&incoming.float).join(", ")
+            );
+        }
+        for (name, q) in &self.quant {
+            let n = &incoming.quant[name];
+            if (q.k, q.o) != (n.k, n.o) {
+                bail!("{name}: shape (K={}, O={}) vs incoming (K={}, O={})", q.k, q.o, n.k, n.o);
+            }
+            if n.wq.len() != n.k * n.o || n.scale.len() != n.o || n.bias.len() != n.o {
+                bail!("{name}: incoming weight/scale/bias lengths inconsistent with (K, O)");
+            }
+        }
+        for (name, f) in &self.float {
+            let n = &incoming.float[name];
+            if (f.kh, f.kw, f.c_in, f.c_out) != (n.kh, n.kw, n.c_in, n.c_out) {
+                bail!(
+                    "{name}: shape {}x{}x{}x{} vs incoming {}x{}x{}x{}",
+                    f.kh,
+                    f.kw,
+                    f.c_in,
+                    f.c_out,
+                    n.kh,
+                    n.kw,
+                    n.c_in,
+                    n.c_out
+                );
+            }
+        }
+        if (self.fc_in, self.fc_out) != (incoming.fc_in, incoming.fc_out) {
+            bail!(
+                "fc: shape {}x{} vs incoming {}x{}",
+                self.fc_in,
+                self.fc_out,
+                incoming.fc_in,
+                incoming.fc_out
+            );
+        }
+        Ok(())
+    }
+
+    /// Deterministic 64-bit content hash (FNV-1a over shapes and raw
+    /// parameter bytes, conv names visited in sorted order), rendered as
+    /// 16 hex chars. This is the `weights_sha` the versioned model
+    /// registry surfaces in `/v1/models`: two `Weights` values hash
+    /// equal iff every tensor is bit-identical, independent of
+    /// `HashMap` iteration order or which allocation holds them.
+    pub fn content_sha(&self) -> String {
+        let mut h = Fnv1a::new();
+        let mut names: Vec<&String> = self.quant.keys().collect();
+        names.sort();
+        for name in names {
+            let q = &self.quant[name];
+            h.update(name.as_bytes());
+            h.update_usize(q.k);
+            h.update_usize(q.o);
+            h.update_i8(&q.wq);
+            h.update_f32(&q.scale);
+            h.update_f32(&q.bias);
+        }
+        let mut names: Vec<&String> = self.float.keys().collect();
+        names.sort();
+        for name in names {
+            let f = &self.float[name];
+            h.update(name.as_bytes());
+            h.update_usize(f.kh);
+            h.update_usize(f.kw);
+            h.update_usize(f.c_in);
+            h.update_usize(f.c_out);
+            h.update_f32(&f.w);
+            h.update_f32(&f.bias);
+        }
+        h.update_usize(self.fc_in);
+        h.update_usize(self.fc_out);
+        h.update_f32(&self.fc_w);
+        h.update_f32(&self.fc_b);
+        format!("{:016x}", h.finish())
+    }
+}
+
+/// Minimal FNV-1a (64-bit) — dependency-free and stable across
+/// platforms, which is all a change-detection fingerprint needs.
+struct Fnv1a(u64);
+
+impl Fnv1a {
+    fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= u64::from(b);
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn update_usize(&mut self, v: usize) {
+        self.update(&(v as u64).to_le_bytes());
+    }
+
+    fn update_i8(&mut self, vs: &[i8]) {
+        for &v in vs {
+            self.update(&[v as u8]);
+        }
+    }
+
+    fn update_f32(&mut self, vs: &[f32]) {
+        for &v in vs {
+            self.update(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::model::demo::synth_model;
+
+    #[test]
+    fn content_sha_is_deterministic_and_bit_sensitive() {
+        let (_, weights, _) = synth_model();
+        let (_, again, _) = synth_model();
+        assert_eq!(weights.content_sha(), again.content_sha());
+        assert_eq!(weights.content_sha().len(), 16);
+
+        let mut perturbed = weights.clone();
+        let q = perturbed.quant.get_mut("q2").expect("demo model has q2");
+        q.wq[0] = q.wq[0].wrapping_add(1);
+        assert_ne!(weights.content_sha(), perturbed.content_sha());
+    }
+
+    #[test]
+    fn same_shapes_accepts_value_changes_and_rejects_shape_changes() {
+        let (_, weights, _) = synth_model();
+        let mut perturbed = weights.clone();
+        for q in perturbed.quant.values_mut() {
+            for w in &mut q.wq {
+                *w = w.wrapping_add(3);
+            }
+        }
+        weights.same_shapes(&perturbed).expect("value-only change must pass");
+
+        let mut reshaped = weights.clone();
+        {
+            let q = reshaped.quant.get_mut("q2").expect("demo model has q2");
+            q.o += 1;
+        }
+        let err = weights.same_shapes(&reshaped).unwrap_err().to_string();
+        assert!(err.contains("q2"), "error names the offending conv: {err}");
+
+        let mut missing = weights.clone();
+        missing.quant.remove("q3");
+        assert!(weights.same_shapes(&missing).is_err());
+    }
 }

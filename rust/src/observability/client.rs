@@ -1,13 +1,15 @@
-//! Minimal blocking HTTP/1.1 GET client for JSON endpoints.
+//! Minimal blocking HTTP/1.1 GET/POST client for JSON endpoints.
 //!
 //! This is the collector side of the ops story: `examples/ops_top.rs`
-//! polls `GET /v1/metrics` over a real socket with this client, and
-//! the bench harness uses it to scrape the front door it just stood
-//! up. It deliberately speaks only the subset the in-repo
-//! [`crate::coordinator::http`] server emits — `Content-Length`-framed
-//! responses over a fresh connection — so it stays a page of code with
-//! zero dependencies, but it is a real network client: everything goes
-//! through the OS socket layer, not an in-process shortcut.
+//! polls `GET /v1/metrics` over a real socket with this client, the
+//! bench harness uses it to scrape the front door it just stood up,
+//! and the POST side drives `POST /v1/models/{name}/reload` from
+//! tooling and the CI rollout smoke. It deliberately speaks only the
+//! subset the in-repo [`crate::coordinator::http`] server emits —
+//! `Content-Length`-framed responses over a fresh connection — so it
+//! stays a page of code with zero dependencies, but it is a real
+//! network client: everything goes through the OS socket layer, not an
+//! in-process shortcut.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -33,6 +35,39 @@ pub fn http_get_json(addr: &str, path: &str, timeout: Duration) -> Result<JsonVa
 
 /// `GET http://{addr}{path}` returning `(status, body)` uninterpreted.
 pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, String)> {
+    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
+    exchange(addr, req.as_bytes(), timeout)
+}
+
+/// `POST http://{addr}{path}` with a JSON `body`, expect a 2xx and
+/// parse the JSON reply. The seam tooling uses to drive
+/// `POST /v1/models/{name}/reload` and `POST /v1/infer/{model}`.
+pub fn http_post_json(
+    addr: &str,
+    path: &str,
+    body: &JsonValue,
+    timeout: Duration,
+) -> Result<JsonValue> {
+    let (status, reply) = http_post(addr, path, &body.to_string(), timeout)?;
+    if !(200..300).contains(&status) {
+        bail!("POST {path} on {addr}: HTTP {status} — {reply}");
+    }
+    JsonValue::parse(&reply).with_context(|| format!("POST {path} on {addr}: body is not JSON"))
+}
+
+/// `POST http://{addr}{path}` with `body` as `application/json`,
+/// returning `(status, body)` uninterpreted.
+pub fn http_post(addr: &str, path: &str, body: &str, timeout: Duration) -> Result<(u16, String)> {
+    let req = format!(
+        "POST {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    exchange(addr, req.as_bytes(), timeout)
+}
+
+/// One request/response over a fresh connection.
+fn exchange(addr: &str, request: &[u8], timeout: Duration) -> Result<(u16, String)> {
     use std::net::ToSocketAddrs;
     let sock = addr
         .to_socket_addrs()
@@ -43,8 +78,7 @@ pub fn http_get(addr: &str, path: &str, timeout: Duration) -> Result<(u16, Strin
         .with_context(|| format!("connecting to {addr}"))?;
     stream.set_read_timeout(Some(timeout))?;
     stream.set_write_timeout(Some(timeout))?;
-    let req = format!("GET {path} HTTP/1.1\r\nHost: {addr}\r\nConnection: close\r\n\r\n");
-    stream.write_all(req.as_bytes()).context("writing request")?;
+    stream.write_all(request).context("writing request")?;
 
     let mut raw = Vec::new();
     let mut chunk = [0u8; 8192];
@@ -127,6 +161,59 @@ mod tests {
         assert!(parse_response(b"HTTP/1.1 banana\r\n\r\n", "test").is_err());
     }
 
-    // The live-socket path is covered end-to-end in coordinator::http's
-    // tests and by `serve_bench --http-smoke` in CI.
+    /// POST framing over a real loopback socket: the one-shot server
+    /// thread captures the raw request, asserts the body arrived with
+    /// correct `Content-Length` framing, and answers 202.
+    #[test]
+    fn post_sends_framed_json_body_and_reads_reply() {
+        use crate::json_obj;
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || -> Vec<u8> {
+            let (mut stream, _) = listener.accept().unwrap();
+            let mut raw = Vec::new();
+            let mut chunk = [0u8; 4096];
+            // Read until the framed request is complete (headers + the
+            // declared body length).
+            loop {
+                let n = stream.read(&mut chunk).unwrap();
+                raw.extend_from_slice(&chunk[..n]);
+                let Some(head_end) =
+                    raw.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+                else {
+                    continue;
+                };
+                let head = std::str::from_utf8(&raw[..head_end]).unwrap();
+                let len: usize = head
+                    .lines()
+                    .filter_map(|l| l.split_once(':'))
+                    .find(|(k, _)| k.eq_ignore_ascii_case("content-length"))
+                    .and_then(|(_, v)| v.trim().parse().ok())
+                    .unwrap();
+                if raw.len() >= head_end + len {
+                    break;
+                }
+            }
+            stream
+                .write_all(
+                    b"HTTP/1.1 202 Accepted\r\nContent-Length: 21\r\n\r\n{\"status\":\"accepted\"}",
+                )
+                .unwrap();
+            raw
+        });
+        let body = json_obj! { "source" => "perturb", "amplitude" => 2usize };
+        let reply =
+            http_post_json(&addr, "/v1/models/m/reload", &body, Duration::from_secs(5)).unwrap();
+        assert_eq!(reply.get("status").and_then(JsonValue::as_str), Some("accepted"));
+        let raw = String::from_utf8(server.join().unwrap()).unwrap();
+        assert!(raw.starts_with("POST /v1/models/m/reload HTTP/1.1\r\n"), "{raw}");
+        assert!(raw.contains("Content-Type: application/json\r\n"), "{raw}");
+        let payload = body.to_string();
+        assert!(raw.contains(&format!("Content-Length: {}\r\n", payload.len())), "{raw}");
+        assert!(raw.ends_with(&payload), "{raw}");
+    }
+
+    // The live-front-door path (a reload POST answered by the real
+    // event loop) is covered in tests/http_server.rs and by
+    // `serve_bench --reload-smoke` in CI.
 }

@@ -13,8 +13,9 @@
 //! * [`budget`]       — falsifiable per-section budgets
 //!   (`BENCH_BASELINE.json`); `serve_bench --check-budgets` turns any
 //!   [`budget::Violation`] into a non-zero CI exit.
-//! * [`client`]       — the blocking HTTP JSON poller behind
-//!   `examples/ops_top.rs`'s live dashboard.
+//! * [`client`]       — the blocking HTTP JSON client behind
+//!   `examples/ops_top.rs`'s live dashboard (GET) and the rollout
+//!   tooling driving `POST /v1/models/{name}/reload`.
 //!
 //! See README's "Continuous perf harness" section for the operator
 //! workflow (recording baselines, overriding budgets per host).
@@ -28,5 +29,5 @@ pub use bench_report::{
     time_iters, BenchReport, BenchSection, HostFingerprint, QueueStats, Timing, SCHEMA_VERSION,
 };
 pub use budget::{check, BudgetFile, SectionBudget, Violation, BUDGET_VERSION};
-pub use client::{http_get, http_get_json};
+pub use client::{http_get, http_get_json, http_post, http_post_json};
 pub use histogram::{LatencyHist, HIST_BUCKETS};

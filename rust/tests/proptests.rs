@@ -620,6 +620,187 @@ fn prop_bounded_batcher_accounts_every_request_and_respects_depth() {
 }
 
 #[test]
+fn prop_router_accounts_exactly_under_concurrent_hot_swaps() {
+    // Versioned-registry satellite: concurrent `infer` traffic against
+    // a bounded queue while another thread hot-swaps the serving
+    // generation over and over. Three invariants, per random case:
+    //
+    //  1. exact accounting — every request is exactly one of executed /
+    //     shed / rejected, caller-side outcomes match the counters;
+    //  2. no torn reads — every Ok reply is bit-identical to SOME
+    //     generation's `Engine::forward` for that client's image;
+    //  3. drain — every retired generation reaches `strong_count == 1`
+    //     (observable as the registry's `drained` list, which `sweep`
+    //     only admits at exactly that count).
+    use sparq::coordinator::{
+        BatchPolicy, InferenceRouter, OverloadPolicy, ReloadSource, ReloadSpec, RolloutConfig,
+    };
+    use sparq::model::demo::synth_model;
+    use sparq::model::{Engine, EngineMode, ModelParams};
+    use sparq::quant::QuantPolicy;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    const POLICIES: [&str; 4] = ["a8w8", "a4w8", "a8w4", "first8"];
+    const SWAPS: u64 = 8;
+    let (graph, weights, scales) = synth_model();
+    let (graph, weights) = (Arc::new(graph), Arc::new(weights));
+    let params: Vec<Arc<ModelParams>> = POLICIES
+        .iter()
+        .map(|name| {
+            Arc::new(
+                ModelParams::with_policy(
+                    graph.clone(),
+                    weights.clone(),
+                    QuantPolicy::named(name).unwrap(),
+                    &scales,
+                    EngineMode::Dense,
+                )
+                .unwrap(),
+            )
+        })
+        .collect();
+    let engines: Vec<Engine> = params.iter().map(|p| Engine::from_params(p.clone())).collect();
+    let [h, w, c] = graph.input_hwc;
+    let image_of = |client: usize| -> Vec<f32> {
+        (0..h * w * c)
+            .map(|j| {
+                let hash = ((client * 7919 + j) as u64).wrapping_mul(0x9e3779b97f4a7c15);
+                (hash >> 40) as f32 / 16_777_216.0
+            })
+            .collect()
+    };
+    // Generation g serves POLICIES[(g - 1) % 4]: gen 1 is the build-time
+    // a8w8, each swap advances the cycle.
+    let policy_of_gen = |g: u64| ((g - 1) % POLICIES.len() as u64) as usize;
+
+    props!(3, |rng| {
+        let n_clients = 2 + rng.below(3) as usize;
+        let per = 16 + rng.below(17) as usize;
+        let policy = BatchPolicy {
+            max_batch: 1 + rng.below(4) as usize,
+            max_wait: Duration::from_micros(100),
+            max_queue_depth: 1 + rng.below(4) as usize,
+            overload: if rng.below(2) == 0 {
+                OverloadPolicy::RejectNewest
+            } else {
+                OverloadPolicy::ShedOldest
+            },
+            ..BatchPolicy::default()
+        };
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_variant_with_threads("synth", "live", params[0].clone(), 1, policy, 1)
+                .build()
+                .unwrap(),
+        );
+        let expected: Vec<Vec<Vec<f32>>> = (1..=SWAPS + 1)
+            .map(|g| {
+                (0..n_clients)
+                    .map(|cl| engines[policy_of_gen(g)].forward(&image_of(cl), 1).unwrap())
+                    .collect()
+            })
+            .collect();
+
+        let swapper = {
+            let router = router.clone();
+            let params = params.clone();
+            let pause = Duration::from_micros(100 + rng.below(400));
+            std::thread::spawn(move || {
+                for g in 2..=SWAPS + 1 {
+                    std::thread::sleep(pause);
+                    let spec = ReloadSpec {
+                        source: ReloadSource::Params(params[policy_of_gen(g)].clone()),
+                        rollout: RolloutConfig { canary_share: 0, ..RolloutConfig::default() },
+                    };
+                    let got = router.reload_variant("synth", "live", spec).unwrap();
+                    assert_eq!(got, g, "swap published out of order");
+                }
+            })
+        };
+        let clients: Vec<_> = (0..n_clients)
+            .map(|cl| {
+                let router = router.clone();
+                let image = image_of(cl);
+                let mine: Vec<Vec<f32>> =
+                    expected.iter().map(|per_gen| per_gen[cl].clone()).collect();
+                std::thread::spawn(move || {
+                    let (mut ok, mut overload) = (0u64, 0u64);
+                    for _ in 0..per {
+                        match router.infer("synth", image.clone()) {
+                            Ok(r) => {
+                                assert!(
+                                    mine.iter().any(|e| r.logits == *e),
+                                    "client {cl}: reply matches no generation (torn swap?)"
+                                );
+                                ok += 1;
+                            }
+                            Err(e) => {
+                                assert!(e.to_string().contains("overloaded"), "{e}");
+                                overload += 1;
+                            }
+                        }
+                    }
+                    (ok, overload)
+                })
+            })
+            .collect();
+        let (mut ok, mut overload) = (0u64, 0u64);
+        for cl in clients {
+            let (o, v) = cl.join().unwrap();
+            ok += o;
+            overload += v;
+        }
+        swapper.join().unwrap();
+
+        // 1. exact accounting, caller-side vs counters.
+        let m = router.metrics("synth").unwrap();
+        let total = (n_clients * per) as u64;
+        prop_assert!(m.total.requests == ok, "executed {} != ok replies {ok}", m.total.requests);
+        prop_assert!(
+            m.total.shed + m.total.rejected == overload,
+            "overload counters {} + {} != caller-side errors {overload}",
+            m.total.shed,
+            m.total.rejected
+        );
+        prop_assert!(
+            m.total.requests + m.total.shed + m.total.rejected == total,
+            "books don't balance for {total} requests"
+        );
+
+        // 3. drain: all retired generations reach strong_count == 1.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let drained_status = loop {
+            let st = router.variant_rollout("synth", "live").unwrap().unwrap();
+            if st.canary.is_none() && st.draining.is_empty() {
+                break st;
+            }
+            prop_assert!(
+                Instant::now() < deadline,
+                "generations never drained: {:?} still holding",
+                st.draining
+            );
+            std::thread::yield_now();
+        };
+        let mut drained = drained_status.drained.clone();
+        drained.sort_unstable();
+        let want: Vec<u64> = (1..=SWAPS).collect();
+        prop_assert!(
+            drained == want,
+            "drained generations {drained:?} != every retired generation {want:?}"
+        );
+        let gen = router.variant_version("synth", "live").unwrap().unwrap().generation;
+        prop_assert!(gen == SWAPS + 1, "serving generation {gen} after {SWAPS} swaps");
+        let served: u64 = drained_status.served.values().sum();
+        prop_assert!(
+            served == m.total.requests,
+            "per-generation served rows {served} != executed requests {}",
+            m.total.requests
+        );
+    });
+}
+
+#[test]
 fn prop_policy_json_roundtrip() {
     // to_json/from_json is the identity for arbitrary override stacks
     // (the wire encoding the HTTP introspection surface serves).
