@@ -15,9 +15,14 @@
 //! format, not an in-process shortcut.
 //!
 //! Each frame shows aggregate request rate (delta between polls),
-//! per-variant request shares, per-shard p50/p99 with a sparkline of
+//! per-variant request shares (with the sliding-window `recent p99`
+//! that drives the SLO ladder), per-shard p50/p99 with a sparkline of
 //! the bucketed latency histogram, and the queue-health counters
 //! (depth/peak/shed/expired/rejected) that make overload visible.
+//! When a model has an SLO degradation ladder installed, its active
+//! rung, time-in-degraded-mode, and transition counters get their own
+//! line, and the rung currently serving is marked `nominal` or
+//! `degraded` in the variant table.
 //!
 //! `--frames N` stops after N frames (default 5), `--once` is
 //! `--frames 1`, `--interval-ms M` sets the poll period, and `--plain`
@@ -221,6 +226,44 @@ fn version_label(v: &JsonValue) -> String {
     label
 }
 
+/// One line of ladder state for a model with an SLO policy installed:
+/// the active rung, which variant it serves, accumulated
+/// time-in-degraded-mode, and the down/up transition counters. `None`
+/// when no policy is installed (`"slo": null` in the metrics JSON).
+fn slo_label(m: &JsonValue) -> Option<String> {
+    let slo = m.get("slo")?;
+    if matches!(slo, JsonValue::Null) {
+        return None;
+    }
+    let rungs = slo.get("ladder").and_then(JsonValue::as_array).map_or(0, <[JsonValue]>::len);
+    let serving = slo.get("serving").and_then(JsonValue::as_str).unwrap_or("?");
+    let degraded = slo.get("degraded").and_then(JsonValue::as_bool) == Some(true);
+    Some(format!(
+        "  slo: rung {:.0}/{rungs} serving `{serving}` ({})  degraded {:.1} ms total  \
+         {:.0} down / {:.0} up",
+        num(slo.get("rung")) + 1.0,
+        if degraded { "degraded" } else { "nominal" },
+        num(slo.get("time_degraded_us")) / 1000.0,
+        num(slo.get("transitions_down")),
+        num(slo.get("transitions_up")),
+    ))
+}
+
+/// Per-variant ladder marker: the rung currently serving is tagged
+/// `nominal` (the default rung) or `degraded` (any cheaper rung);
+/// everything else — other rungs, models without a policy — is blank.
+fn slo_marker(slo: Option<&JsonValue>, vname: &str) -> &'static str {
+    let Some(slo) = slo else { return "" };
+    if slo.get("serving").and_then(JsonValue::as_str) != Some(vname) {
+        return "";
+    }
+    if slo.get("degraded").and_then(JsonValue::as_bool) == Some(true) {
+        " ← degraded"
+    } else {
+        " ← nominal"
+    }
+}
+
 fn share_bar(frac: f64, width: usize) -> String {
     let filled = ((frac.clamp(0.0, 1.0)) * width as f64).round() as usize;
     format!("{}{}", "#".repeat(filled), ".".repeat(width - filled))
@@ -274,17 +317,22 @@ fn render(
             num(total.and_then(|t| t.get("queue_depth"))),
             num(total.and_then(|t| t.get("peak_queue_depth"))),
         );
+        if let Some(label) = slo_label(m) {
+            println!("{label}");
+        }
         if let Some(variants) = m.get("variants").and_then(JsonValue::as_array) {
             for v in variants {
                 let vname = v.get("variant").and_then(JsonValue::as_str).unwrap_or("?");
                 let vreqs = num(v.get("total").and_then(|t| t.get("requests")));
                 println!(
                     "  {vname:<10} [{}] {vreqs:>8.0} reqs  {:.0} replica(s)  \
-                     {:.2} bits/act  {}",
+                     {:.2} bits/act  recent p99 {:>6.0} us  {}{}",
                     share_bar(vreqs / model_reqs, 20),
                     num(v.get("replicas")),
                     num(v.get("footprint_bits_per_act")),
+                    num(v.get("recent_p99_us")),
                     version_label(v),
+                    slo_marker(m.get("slo"), vname),
                 );
             }
         }

@@ -5,6 +5,7 @@
 //! cargo run --release --example serve_bench -- --http [clients] [requests-per-client]
 //! cargo run --release --example serve_bench -- --http-smoke [--poll-backend]
 //! cargo run --release --example serve_bench -- --reload-smoke [--poll-backend]
+//! cargo run --release --example serve_bench -- --degrade-smoke [--poll-backend]
 //! cargo run --release --example serve_bench -- --bench-json BENCH_sparq.json [--tiny]
 //! cargo run --release --example serve_bench -- --validate-report BENCH_sparq.json
 //! cargo run --release --example serve_bench -- --check-budgets \
@@ -27,8 +28,12 @@
 //! deployment lifecycle on that stack: a perturbed-weights canary that
 //! auto-promotes (served logits switch generations), then a provably
 //! disagreeing policy canary that auto-rolls-back — zero 5xx allowed.
-//! `--poll-backend` forces minipoll's portable `poll(2)` event-loop
-//! backend for any of them.
+//! `--degrade-smoke` exercises load-adaptive precision serving: a slow
+//! "full" rung over an instant "cheap" rung behind an SLO ladder,
+//! hammered past its queue-depth trigger — the overload must degrade
+//! to the cheap rung (zero non-2xx) and the default must resume once
+//! the load clears. `--poll-backend` forces minipoll's portable
+//! `poll(2)` event-loop backend for any of them.
 //!
 //! `--bench-json <path>` runs the machine-readable perf suite — kernel
 //! (naive / blocked 1-thread / blocked parallel), engine forward,
@@ -78,6 +83,7 @@ struct Cli {
     http: bool,
     smoke: bool,
     reload_smoke: bool,
+    degrade_smoke: bool,
     poll_backend: bool,
     tiny: bool,
     check_budgets: bool,
@@ -100,6 +106,7 @@ fn parse_cli() -> Result<Cli> {
         http: false,
         smoke: false,
         reload_smoke: false,
+        degrade_smoke: false,
         poll_backend: false,
         tiny: false,
         check_budgets: false,
@@ -115,6 +122,7 @@ fn parse_cli() -> Result<Cli> {
             "--http" => cli.http = true,
             "--http-smoke" => cli.smoke = true,
             "--reload-smoke" => cli.reload_smoke = true,
+            "--degrade-smoke" => cli.degrade_smoke = true,
             "--poll-backend" => cli.poll_backend = true,
             "--tiny" => cli.tiny = true,
             "--check-budgets" => cli.check_budgets = true,
@@ -156,6 +164,8 @@ fn run() -> i32 {
         bench_json(path, cli.tiny, cli.poll_backend)
     } else if cli.reload_smoke {
         reload_smoke(cli.poll_backend)
+    } else if cli.degrade_smoke {
+        degrade_smoke(cli.poll_backend)
     } else if cli.smoke {
         http_smoke(cli.poll_backend)
     } else if cli.http {
@@ -1224,6 +1234,143 @@ fn reload_smoke(poll_backend: bool) -> Result<()> {
             "native backend"
         },
         probes.len()
+    );
+    Ok(())
+}
+
+/// `--degrade-smoke`: the load-adaptive serving CI leg. Builds a
+/// dedicated two-rung executor-backed model — a deliberately slow
+/// "full" rung (~3 ms per request, one single-request shard) over an
+/// instant "cheap" rung — installs a queue-depth SLO ladder through
+/// `POST /v1/models/{model}/slo`, then hammers the front door with
+/// concurrent keep-alive clients. The overload must *degrade*, not
+/// shed: zero non-2xx across the whole run, at least one response
+/// echoing the cheap rung, `/v1/metrics` reporting nonzero
+/// time-in-degraded-mode and transition counters, and the default rung
+/// resuming once the load stops and the dwell window expires.
+fn degrade_smoke(poll_backend: bool) -> Result<()> {
+    use sparq::coordinator::batcher::ExecuteFn;
+    let slow: Box<ExecuteFn> = Box::new(|_buf: &[f32], bsz: usize| {
+        std::thread::sleep(Duration::from_millis(3));
+        Ok(vec![1.0; bsz])
+    });
+    let instant: Box<ExecuteFn> = Box::new(|_buf: &[f32], bsz: usize| Ok(vec![2.0; bsz]));
+    let policy = BatchPolicy {
+        max_batch: 1,
+        max_wait: Duration::from_micros(50),
+        ..BatchPolicy::default()
+    };
+    let router = Arc::new(
+        InferenceRouter::builder()
+            .model_variant_from_executors("ladder", "full", 1, 1, vec![slow], policy)
+            .model_variant_from_executors("ladder", "cheap", 1, 1, vec![instant], policy)
+            .build()?,
+    );
+    let config = HttpConfig { use_poll_fallback: poll_backend, ..HttpConfig::default() };
+    let server = HttpServer::bind("127.0.0.1:0", router, config)?;
+    let sock = server.addr();
+    let addr = sock.to_string();
+    let timeout = Duration::from_secs(10);
+    let body = r#"{"image": [0.5]}"#;
+
+    let spec = json_obj! {
+        "ladder" => vec![JsonValue::from("full"), JsonValue::from("cheap")],
+        "max_queue_depth" => 4usize,
+        "dwell_us" => 200_000usize,
+        "recover_margin" => 1.0,
+    };
+    let reply = http_post_json(&addr, "/v1/models/ladder/slo", &spec, timeout)
+        .context("SLO policy not accepted over the front door")?;
+    anyhow::ensure!(
+        reply.get("status").and_then(JsonValue::as_str) == Some("installed"),
+        "unexpected /slo reply: {}",
+        reply.to_string()
+    );
+
+    // Concurrent load: the slow rung backs up past the depth trigger
+    // within a few requests, so the bulk of the run must come back from
+    // the cheap rung — and every single response must be a 2xx.
+    let (clients, per) = (8usize, 30usize);
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            std::thread::spawn(move || -> Result<(usize, usize)> {
+                let mut client = MiniClient::connect(sock)?;
+                let (mut full, mut cheap) = (0usize, 0usize);
+                for _ in 0..per {
+                    let (status, resp) = client.request(&infer_request("ladder", body))?;
+                    anyhow::ensure!(
+                        status == 200,
+                        "overload must degrade, not shed: got {status} {resp}"
+                    );
+                    match JsonValue::parse(&resp)?.get("variant").and_then(JsonValue::as_str) {
+                        Some("full") => full += 1,
+                        Some("cheap") => cheap += 1,
+                        other => anyhow::bail!("unknown variant echo {other:?} in {resp}"),
+                    }
+                }
+                Ok((full, cheap))
+            })
+        })
+        .collect();
+    let (mut full, mut cheap) = (0usize, 0usize);
+    for h in handles {
+        let (f, c) = h.join().expect("load client panicked")?;
+        full += f;
+        cheap += c;
+    }
+    anyhow::ensure!(
+        cheap >= 1,
+        "overload never reached the cheap rung (full {full}, cheap {cheap})"
+    );
+    let slo_of = |v: &JsonValue| -> JsonValue {
+        v.get("models")
+            .and_then(|m| m.get("ladder"))
+            .and_then(|s| s.get("slo"))
+            .cloned()
+            .unwrap_or(JsonValue::Null)
+    };
+    let slo = slo_of(&http_get_json(&addr, "/v1/metrics", timeout)?);
+    anyhow::ensure!(
+        slo.get("transitions_down").and_then(JsonValue::as_usize).unwrap_or(0) >= 1
+            && slo.get("time_degraded_us").and_then(JsonValue::as_usize).unwrap_or(0) > 0,
+        "metrics never recorded a degraded period: {}",
+        slo.to_string()
+    );
+
+    // Load is gone: the cheap rung's queue is empty, so once dwell
+    // expires the ladder must step back to the default.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let mut client = MiniClient::connect(sock)?;
+    loop {
+        anyhow::ensure!(Instant::now() < deadline, "ladder never recovered to the full rung");
+        let (status, resp) = client.request(&infer_request("ladder", body))?;
+        anyhow::ensure!(status == 200, "recovery traffic failed: {status} {resp}");
+        if JsonValue::parse(&resp)?.get("variant").and_then(JsonValue::as_str) == Some("full") {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let slo = slo_of(&http_get_json(&addr, "/v1/metrics", timeout)?);
+    let time_degraded = slo.get("time_degraded_us").and_then(JsonValue::as_usize).unwrap_or(0);
+    let downs = slo.get("transitions_down").and_then(JsonValue::as_usize).unwrap_or(0);
+    let ups = slo.get("transitions_up").and_then(JsonValue::as_usize).unwrap_or(0);
+    anyhow::ensure!(
+        slo.get("rung").and_then(JsonValue::as_usize) == Some(0)
+            && slo.get("degraded").and_then(JsonValue::as_bool) == Some(false)
+            && ups >= 1,
+        "post-recovery SLO status is wrong: {}",
+        slo.to_string()
+    );
+    println!(
+        "degrade smoke OK ({}): {} requests, zero non-2xx, {cheap} served by the cheap rung \
+         ({full} by full); {time_degraded} us degraded, {downs} down / {ups} up transition(s); \
+         default rung resumed",
+        if poll_backend {
+            "poll backend"
+        } else {
+            "native backend"
+        },
+        clients * per
     );
     Ok(())
 }

@@ -57,6 +57,19 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::observability::{LatencyHist, WindowedHist};
+
+/// Span of the sliding-window latency view every batcher keeps
+/// alongside its cumulative counters ([`Batcher::recent_hist`]). One
+/// second is long enough to hold a stable p99 at serving rates and
+/// short enough that the SLO ladder (`coordinator::slo`) reacts to the
+/// current overload, not to history.
+pub const RECENT_WINDOW_US: u64 = 1_000_000;
+
+/// Ring granularity of the sliding window: samples expire in
+/// `RECENT_WINDOW_US / RECENT_SLICES` steps (100 ms).
+pub const RECENT_SLICES: usize = 10;
+
 /// What to do with a submit that would push the queue past
 /// [`BatchPolicy::max_queue_depth`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -263,6 +276,14 @@ struct Shared {
     avail: Condvar,
     stats: Arc<BatcherStats>,
     policy: BatchPolicy,
+    /// Sliding-window view of completed-request latency (queue + exec),
+    /// recorded by the worker after each successful batch. The SLO
+    /// dispatch seam reads its merged p99 as a pressure signal; the
+    /// cumulative per-shard histogram the router keeps is too stale for
+    /// control.
+    recent: Mutex<WindowedHist>,
+    /// Wall-clock origin for the window's microsecond time base.
+    epoch: Instant,
 }
 
 /// Closes the queue when the last `Batcher` handle drops, so the worker
@@ -379,6 +400,8 @@ impl Batcher {
             avail: Condvar::new(),
             stats,
             policy,
+            recent: Mutex::new(WindowedHist::new(RECENT_WINDOW_US, RECENT_SLICES)),
+            epoch: Instant::now(),
         });
         let worker_shared = shared.clone();
         std::thread::spawn(move || {
@@ -457,6 +480,20 @@ impl Batcher {
     /// Live stats handle (shared with the worker).
     pub fn stats(&self) -> Arc<BatcherStats> {
         self.shared.stats.clone()
+    }
+
+    /// Merged view of the sliding latency window right now: roughly the
+    /// last [`RECENT_WINDOW_US`] of completed-request latencies
+    /// (queue + exec). Reading advances the ring, so an idle shard's
+    /// window drains to empty — recent p99 recovers as pressure clears,
+    /// which is what makes it usable as an SLO control signal.
+    pub fn recent_hist(&self) -> LatencyHist {
+        let now_us = self.shared.epoch.elapsed().as_micros() as u64;
+        self.shared
+            .recent
+            .lock()
+            .unwrap_or_else(PoisonError::into_inner)
+            .merged_at(now_us)
     }
 }
 
@@ -588,6 +625,17 @@ fn worker_loop(shared: Arc<Shared>, image_len: usize, classes: usize, mut execut
         }
         match outcome {
             Ok(logits) => {
+                // Feed the sliding-window latency view in one scoped
+                // lock; the guard must be gone before the reply sends
+                // below (channel sends block).
+                {
+                    let now_us = shared.epoch.elapsed().as_micros() as u64;
+                    let mut recent =
+                        shared.recent.lock().unwrap_or_else(PoisonError::into_inner);
+                    for r in &batch {
+                        recent.record_at(now_us, r.enqueued.elapsed());
+                    }
+                }
                 for (i, r) in batch.into_iter().enumerate() {
                     let row = logits[i * classes..(i + 1) * classes].to_vec();
                     let _ = r.reply.send(Ok(Reply {
@@ -924,6 +972,25 @@ mod tests {
             "every request must be either executed or rejected: {s:?}"
         );
         assert_eq!(s.shed, 0);
+    }
+
+    #[test]
+    fn recent_hist_tracks_completed_requests() {
+        let (b, _stats) = spawn_echo(BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_micros(200),
+            ..BatchPolicy::default()
+        });
+        assert_eq!(b.recent_hist().count(), 0, "idle batcher has an empty window");
+        for i in 0..3 {
+            b.infer(vec![i as f32; 4]).unwrap();
+        }
+        let h = b.recent_hist();
+        assert_eq!(h.count(), 3, "every completed request lands in the window");
+        // e2e latency includes the deliberate batch-fill wait, so the
+        // recorded values are nonzero µs.
+        assert!(h.max_us() > 0);
+        assert!(h.quantile_us(0.99) >= h.quantile_us(0.5));
     }
 
     /// Poll a pending reply until it resolves, failing after a deadline

@@ -18,7 +18,10 @@
 //!   variant that served the request. A **policy variant** is selected
 //!   with a path suffix (`POST /v1/infer/{model}@{variant}`) or a
 //!   `"variant"` field in the JSON body; without either the model's
-//!   default variant serves.
+//!   default variant serves — unless an SLO degradation ladder
+//!   (`POST /v1/models/{model}/slo`) has degraded the model under
+//!   load, in which case the ladder's current rung serves and the
+//!   response's `"variant"` echo names it.
 //! * `GET /v1/models` — the introspection surface: every model with
 //!   its input shape, shared `param_bytes`, and per-variant resolved
 //!   policy (full JSON encoding + display string + per-layer configs +
@@ -38,9 +41,17 @@
 //!   400); the expensive staging + rollout itself runs on a detached
 //!   thread and the route answers **202** immediately — poll
 //!   `GET /v1/models` to watch the canary promote or roll back.
+//! * `POST /v1/models/{model}/slo` — install (body =
+//!   [`SloPolicy`](super::slo::SloPolicy) JSON) or clear (empty body /
+//!   `null` / `{"clear": true}`) the model's SLO degradation ladder.
+//!   Installation is synchronous: **200** on success, 400 for policy
+//!   or registry validation failures, 404 for unknown models.
 //! * `GET /v1/metrics` — per-variant, per-shard and aggregate
 //!   [`RouterMetrics`](super::router::ModelMetrics) for every model,
-//!   plus the router-wide aggregate, as JSON.
+//!   plus the router-wide aggregate, as JSON — including each model's
+//!   `"slo"` ladder position (rung, serving variant,
+//!   `time_degraded_us`, transition counters) and each variant's
+//!   sliding-window `"recent_p99_us"`.
 //! * `GET /healthz` — liveness plus the served model names.
 //!
 //! # Error mapping
@@ -74,6 +85,7 @@ use crate::json_obj;
 use super::batcher::{BatchError, PendingReply, Reply};
 use super::registry::{RolloutConfig, RolloutStatus};
 use super::router::{InferenceRouter, ReloadSource, ReloadSpec};
+use super::slo::SloPolicy;
 use crate::quant::QuantPolicy;
 
 /// Front-door limits. Defaults are sized for the native demo models;
@@ -569,6 +581,13 @@ fn route(router: &Arc<InferenceRouter>, cfg: &HttpConfig, req: &ParsedRequest) -
             Routed::Immediate(405, error_body(405, "reload requires POST"), Some("POST"))
         };
     }
+    if let Some(target) = path.strip_prefix(MODELS_PREFIX).and_then(|r| r.strip_suffix("/slo")) {
+        return if req.method == "POST" {
+            route_slo(router, target, &req.body)
+        } else {
+            Routed::Immediate(405, error_body(405, "SLO policy updates require POST"), Some("POST"))
+        };
+    }
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => imm(200, health_json(router)),
         ("GET", "/v1/metrics") => imm(200, metrics_json(router)),
@@ -719,6 +738,79 @@ fn parse_reload_spec(body: &[u8]) -> std::result::Result<ReloadSpec, String> {
     Ok(ReloadSpec { source, rollout })
 }
 
+/// `POST /v1/models/{model}/slo` — install or clear the model's SLO
+/// degradation ladder. The body is exactly the
+/// [`SloPolicy`] wire encoding (`{ladder, max_queue_depth, max_p99_us,
+/// dwell_us, recover_margin}`); an empty body, a JSON `null`, or
+/// `{"clear": true}` removes any installed policy. Unlike reload
+/// there is no staging work, so installation is synchronous: 200 on
+/// success, 400 for anything the policy or registry validation
+/// rejects (bad JSON, unknown rung, rung 0 not the default,
+/// footprint_bits increasing along the ladder), 404 for unknown
+/// models. Ladders are per-model, so a `{model}@{variant}` target is
+/// a 400, not a different resource.
+fn route_slo(router: &InferenceRouter, target: &str, body: &[u8]) -> Routed {
+    if target.contains('@') {
+        return imm(
+            400,
+            error_body(
+                400,
+                &format!("SLO policies are per-model; `{target}` must not name a variant"),
+            ),
+        );
+    }
+    if router.default_variant(target).is_err() {
+        let known = router.model_names().join("`, `");
+        return imm(
+            404,
+            error_body(404, &format!("no model named `{target}` (available: `{known}`)")),
+        );
+    }
+    let Ok(text) = std::str::from_utf8(body) else {
+        return imm(400, error_body(400, "body is not UTF-8"));
+    };
+    let trimmed = text.trim();
+    let cleared = || {
+        json_obj! {
+            "status" => "cleared",
+            "model" => target,
+        }
+    };
+    if trimmed.is_empty() || trimmed == "null" {
+        return match router.set_slo_policy(target, None) {
+            Ok(()) => imm(200, cleared()),
+            Err(e) => imm(404, error_body(404, &e.to_string())),
+        };
+    }
+    let parsed = match JsonValue::parse(trimmed) {
+        Ok(v) => v,
+        Err(e) => return imm(400, error_body(400, &format!("invalid JSON body: {e}"))),
+    };
+    if parsed.get("clear").and_then(JsonValue::as_bool) == Some(true) {
+        return match router.set_slo_policy(target, None) {
+            Ok(()) => imm(200, cleared()),
+            Err(e) => imm(404, error_body(404, &e.to_string())),
+        };
+    }
+    let policy = match SloPolicy::from_json_value(&parsed) {
+        Ok(p) => p,
+        Err(e) => return imm(400, error_body(400, &format!("invalid SLO policy: {e:#}"))),
+    };
+    let ladder: Vec<JsonValue> =
+        policy.ladder().iter().map(|r| JsonValue::from(r.as_str())).collect();
+    match router.set_slo_policy(target, Some(policy)) {
+        Ok(()) => imm(
+            200,
+            json_obj! {
+                "status" => "installed",
+                "model" => target,
+                "ladder" => ladder,
+            },
+        ),
+        Err(e) => imm(400, error_body(400, &format!("{e:#}"))),
+    }
+}
+
 /// `target` is `{model}` or `{model}@{variant}`; the body may also name
 /// a `"variant"`. Path and body selections must agree if both present.
 fn route_infer(router: &InferenceRouter, cfg: &HttpConfig, target: &str, body: &[u8]) -> Routed {
@@ -772,7 +864,13 @@ fn route_infer(router: &InferenceRouter, cfg: &HttpConfig, target: &str, body: &
             }
             v.to_string()
         }
-        None => router.default_variant(model).unwrap_or("default").to_string(),
+        // Unaddressed requests resolve through the SLO dispatch seam:
+        // with no ladder installed this is the default variant; with
+        // one, the rung the ladder picks for this request. Resolving
+        // once here and then pinning every row to `served` keeps a
+        // micro-batch on one variant and lets the response echo what
+        // actually served it.
+        None => router.serving_variant(model).unwrap_or("default").to_string(),
     };
     let (images, single) = match extract_images(&parsed, image_len, cfg) {
         Ok(x) => x,
@@ -947,6 +1045,7 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
                     "weights_sha" => v.weights_sha.clone(),
                     "state" => v.state.clone(),
                     "rollout" => v.rollout.as_ref().map_or(JsonValue::Null, rollout_json),
+                    "recent_p99_us" => v.recent_p99_us as usize,
                     "shards" => v.shards.iter().map(shard_json).collect::<Vec<JsonValue>>(),
                     "total" => v.total.to_json(),
                 }
@@ -957,6 +1056,10 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
             json_obj! {
                 "replicas" => m.replicas,
                 "param_bytes" => m.param_bytes,
+                // Ladder position when an SLO policy is installed:
+                // current rung, serving variant, time-in-degraded-mode,
+                // transition counters (null otherwise).
+                "slo" => m.slo.as_ref().map_or(JsonValue::Null, super::slo::SloStatus::to_json),
                 "variants" => variants,
                 "shards" => shards,
                 "total" => m.total.to_json(),

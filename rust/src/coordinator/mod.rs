@@ -18,6 +18,9 @@
 //! * [`router`]    — sharded multi-engine dispatch over the batcher.
 //! * [`registry`]  — versioned per-variant parameter slots: zero-
 //!   downtime hot-swap, canary rollout, drain accounting.
+//! * [`slo`]       — SLO degradation ladders: validated per-model
+//!   [`SloPolicy`] + the pure-compute [`LadderState`] machine behind
+//!   load-adaptive precision serving.
 //! * [`http`]      — HTTP/1.1 network front door over the router.
 //!
 //! # Serving architecture
@@ -87,6 +90,19 @@
 //! the serving generation with measured top-1 agreement, and promote or
 //! roll back with zero dropped requests — in-flight batches drain on
 //! the old `Arc`. See README "Deployment lifecycle".
+//!
+//! Also orthogonal: **load-adaptive precision serving** ([`slo`]). A
+//! model may carry an [`SloPolicy`] degradation ladder — installed via
+//! [`InferenceRouter::set_slo_policy`] or `POST /v1/models/{name}/slo`
+//! — naming ever-cheaper variants in `footprint_bits` order. When the
+//! serving variant's live pressure (queue depth summed across its
+//! shards, sliding-window p99 from the batcher's recent view) crosses
+//! the policy's thresholds, unaddressed requests route to the next
+//! rung down — degrading quality instead of shedding traffic — and
+//! walk back as pressure clears; hysteresis and a minimum dwell keep a
+//! noisy signal from flapping the ladder. Pinned (`infer_on`) and
+//! variant-addressed traffic bypasses the ladder. See README
+//! "Load-adaptive serving".
 
 pub mod batcher;
 pub mod calibrate;
@@ -95,6 +111,7 @@ pub mod http;
 pub mod registry;
 pub mod router;
 pub mod server;
+pub mod slo;
 
 /// Lock a mutex, recovering the guard from a poisoned state instead of
 /// propagating the panic into the caller (which on the serving path
@@ -125,3 +142,4 @@ pub use router::{
     VariantMetrics, DEFAULT_VARIANT,
 };
 pub use server::{InferenceServer, LatencyHist, ServerMetrics};
+pub use slo::{LadderState, PressureSample, SloPolicy, SloStatus};

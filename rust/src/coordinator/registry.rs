@@ -30,6 +30,16 @@
 //! swaps the slot while holding its own lock; nothing takes them in the
 //! other order). Both locks guard single assignments/clones — no I/O,
 //! no waiting, no executor work ever runs under them.
+//!
+//! **Composition with SLO degradation** ([`super::slo`]): the ladder
+//! re-routes *which variant* a request reaches, while the registry
+//! versions *what parameters* each variant executes — the two are
+//! orthogonal by construction. Traffic degraded onto a cheaper rung
+//! flows through that variant's own slot and tracker, so a canary in
+//! flight on the cheap variant keeps measuring agreement (now over
+//! more rows), a hot-swap of the degraded-to variant still drains on
+//! the old `Arc`, and stepping the ladder back up needs no registry
+//! coordination at all.
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};

@@ -42,6 +42,13 @@
 //!   slow executor stops receiving new work.
 //!   [`InferenceRouter::infer_on`] pins a shard (tests, session
 //!   affinity).
+//! * **SLO degradation** — unaddressed dispatch flows through one seam
+//!   that, when [`InferenceRouter::set_slo_policy`] has installed a
+//!   [`SloPolicy`](super::slo::SloPolicy) ladder, routes new requests
+//!   to a cheaper variant while the serving rung is over its pressure
+//!   thresholds and walks back as pressure clears — degrade quality
+//!   instead of shedding traffic (see [`super::slo`]). With no policy
+//!   installed the seam is the plain default-variant lookup.
 //! * **Isolation** — each shard has its own queue, worker and executor:
 //!   a failing replica errors its *own* callers with the real message
 //!   while sibling shards keep serving.
@@ -63,7 +70,7 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -79,6 +86,7 @@ use super::registry::{
     self, Dispatch, ModelVersion, RolloutConfig, RolloutStatus, VersionSlot, VersionTracker,
 };
 use super::server::LatencyHist;
+use super::slo::{LadderState, PressureSample, SloPolicy, SloStatus};
 
 /// One replica: a batcher worker plus its metrics.
 struct Shard {
@@ -141,6 +149,33 @@ impl VariantShards {
     }
 }
 
+/// Ladder machinery for one model — present on every model, inert (and
+/// free) until [`InferenceRouter::set_slo_policy`] installs a policy.
+struct SloCell {
+    /// Fast-path flag: `false` means default dispatch takes exactly the
+    /// pre-SLO route (one relaxed load added, no lock, no sampling) —
+    /// the acceptance bar is *byte-for-byte unchanged* behavior when no
+    /// policy is configured.
+    active: AtomicBool,
+    inner: Mutex<Option<SloRuntime>>,
+}
+
+impl Default for SloCell {
+    fn default() -> Self {
+        Self { active: AtomicBool::new(false), inner: Mutex::new(None) }
+    }
+}
+
+/// An installed policy plus its live decision state. The state machine
+/// is pure compute over µs stamps ([`LadderState`]); the router owns
+/// the wall clock via `epoch` so `coordinator/slo.rs` stays
+/// Miri-interpretable.
+struct SloRuntime {
+    policy: SloPolicy,
+    state: LadderState,
+    epoch: Instant,
+}
+
 /// All variants serving one named model.
 struct ModelShards {
     image_len: usize,
@@ -151,6 +186,8 @@ struct ModelShards {
     param_bytes: usize,
     /// Registration order; index 0 is the default variant.
     variants: Vec<VariantShards>,
+    /// Degradation-ladder state (inert unless a policy is installed).
+    slo: SloCell,
 }
 
 impl ModelShards {
@@ -160,6 +197,52 @@ impl ModelShards {
 
     fn default_variant(&self) -> &VariantShards {
         &self.variants[0]
+    }
+
+    /// The dispatch seam every non-pinned, non-variant-addressed
+    /// request flows through. With no SLO policy installed this *is*
+    /// the old `default_variant()` lookup; with one installed, each
+    /// call samples the serving rung's live pressure, advances the
+    /// ladder state machine one decision, and returns the rung's
+    /// variant. Pinned (`infer_on`) and explicitly-addressed
+    /// (`infer_variant`) traffic bypasses the ladder by design.
+    fn serving(&self) -> &VariantShards {
+        if !self.slo.active.load(Relaxed) {
+            return self.default_variant();
+        }
+        let rung_name = {
+            let mut guard = super::lock_recover(&self.slo.inner);
+            match guard.as_mut() {
+                None => return self.default_variant(),
+                Some(rt) => {
+                    let now_us = rt.epoch.elapsed().as_micros() as u64;
+                    let ladder = rt.policy.ladder();
+                    let current = &ladder[rt.state.rung().min(ladder.len() - 1)];
+                    let sample = self.pressure_of(current);
+                    let rung = rt.state.step(&rt.policy, now_us, sample);
+                    rt.policy.ladder()[rung].clone()
+                }
+            }
+        };
+        // Install-time validation pinned every rung to a registered
+        // variant; the fallback is pure defensiveness.
+        self.variant(&rung_name).unwrap_or_else(|| self.default_variant())
+    }
+
+    /// Live pressure on one variant: `queue_depth` summed across its
+    /// shards plus the p99 of the merged sliding-window latency view
+    /// (the cumulative per-shard histograms are too stale for control).
+    fn pressure_of(&self, variant: &str) -> PressureSample {
+        let Some(vs) = self.variant(variant) else {
+            return PressureSample::default();
+        };
+        let mut queue_depth = 0u64;
+        let mut recent = LatencyHist::default();
+        for s in &vs.shards {
+            queue_depth += s.stats.queue_depth.load(Relaxed);
+            recent.merge(&s.batcher.recent_hist());
+        }
+        PressureSample { queue_depth, p99_us: recent.quantile_us(0.99) }
     }
 }
 
@@ -202,6 +285,11 @@ pub struct VariantMetrics {
     /// Full rollout snapshot: canary progress, per-generation served
     /// counters, draining/drained versions, last outcome/error.
     pub rollout: Option<RolloutStatus>,
+    /// p99 of the variant's sliding-window latency view, merged across
+    /// its shards — the *recent* pressure signal the SLO ladder reads
+    /// (0 when the window holds no samples), as opposed to the
+    /// since-boot quantiles in `shards[].hist`.
+    pub recent_p99_us: u64,
     pub shards: Vec<ShardMetrics>,
     pub total: BatcherSnapshot,
 }
@@ -217,6 +305,10 @@ pub struct ModelMetrics {
     pub replicas: usize,
     /// Parameter bytes held once and shared by all variants+replicas.
     pub param_bytes: usize,
+    /// Degradation-ladder position: current rung, serving variant,
+    /// time-in-degraded-mode, transition counters. `None` when no SLO
+    /// policy is installed.
+    pub slo: Option<SloStatus>,
     pub variants: Vec<VariantMetrics>,
     pub shards: Vec<ShardMetrics>,
     pub total: BatcherSnapshot,
@@ -332,8 +424,33 @@ impl RouterBuilder {
     /// that need a deliberately failing replica. Registers the
     /// [`DEFAULT_VARIANT`].
     pub fn model_from_executors(
+        self,
+        name: &str,
+        image_len: usize,
+        classes: usize,
+        executors: Vec<Box<ExecuteFn>>,
+        policy: BatchPolicy,
+    ) -> Self {
+        self.model_variant_from_executors(
+            name,
+            DEFAULT_VARIANT,
+            image_len,
+            classes,
+            executors,
+            policy,
+        )
+    }
+
+    /// Executor-backed **variant** registration: a named operating
+    /// point served by caller-supplied executors, composable with the
+    /// model's other variants. This is how tests and the degrade-smoke
+    /// rig build a multi-variant model whose rungs have controlled
+    /// speed (a deliberately parked "full" variant over an instant
+    /// cheap one) without engine parameters.
+    pub fn model_variant_from_executors(
         mut self,
         name: &str,
+        variant: &str,
         image_len: usize,
         classes: usize,
         executors: Vec<Box<ExecuteFn>>,
@@ -342,7 +459,7 @@ impl RouterBuilder {
         let replicas = executors.len();
         self.entries.push(Entry {
             name: name.to_string(),
-            variant: DEFAULT_VARIANT.to_string(),
+            variant: variant.to_string(),
             replicas,
             policy,
             source: EntrySource::Executors { image_len, classes, executors },
@@ -514,7 +631,13 @@ impl RouterBuilder {
                         vs.current_params().map_or(0, |p| p.weights.param_bytes());
                     models.insert(
                         entry.name.clone(),
-                        ModelShards { image_len, classes, param_bytes, variants: vec![vs] },
+                        ModelShards {
+                            image_len,
+                            classes,
+                            param_bytes,
+                            variants: vec![vs],
+                            slo: SloCell::default(),
+                        },
                     );
                 }
             }
@@ -695,6 +818,109 @@ impl InferenceRouter {
         Ok(self.shards_of(model)?.default_variant().name.as_str())
     }
 
+    /// The variant a plain [`InferenceRouter::infer`]/`submit` would
+    /// serve **right now**: the default variant, unless a degradation
+    /// ladder is installed — in which case this samples pressure and
+    /// advances the ladder exactly like a dispatch would (the HTTP
+    /// front door resolves each unaddressed request through this, then
+    /// pins the returned variant so the response can echo what actually
+    /// served it).
+    pub fn serving_variant(&self, model: &str) -> Result<&str> {
+        Ok(self.shards_of(model)?.serving().name.as_str())
+    }
+
+    /// Install (`Some`) or clear (`None`) the model's SLO degradation
+    /// ladder — the programmatic face of `POST /v1/models/{name}/slo`.
+    ///
+    /// Install-time validation on top of [`SloPolicy`]'s own: every
+    /// rung must be a registered variant of the model, rung 0 must be
+    /// its default variant, and `footprint_bits` must not increase
+    /// along the ladder (cheaper operating points only — checked across
+    /// params-built rungs; executor-backed rungs have no introspectable
+    /// footprint and are skipped). Installing resets the ladder to rung
+    /// 0 with fresh transition counters; the first breach after install
+    /// is exempt from dwell, so a policy installed mid-overload acts
+    /// immediately.
+    pub fn set_slo_policy(&self, model: &str, policy: Option<SloPolicy>) -> Result<()> {
+        let ms = self.shards_of(model)?;
+        let Some(policy) = policy else {
+            ms.slo.active.store(false, Relaxed);
+            *super::lock_recover(&ms.slo.inner) = None;
+            return Ok(());
+        };
+        for rung in policy.ladder() {
+            if ms.variant(rung).is_none() {
+                bail!(
+                    "SLO ladder rung `{rung}` is not a variant of model `{model}` \
+                     (available: {:?})",
+                    ms.variants.iter().map(|v| v.name.as_str()).collect::<Vec<_>>()
+                );
+            }
+        }
+        let default = ms.default_variant().name.as_str();
+        if policy.ladder()[0] != default {
+            bail!(
+                "SLO ladder rung 0 must be the model's default variant `{default}`, \
+                 got `{}`",
+                policy.ladder()[0]
+            );
+        }
+        // Ladder ordering: descending the ladder must never *increase*
+        // the activation footprint — degrading to a more expensive
+        // operating point would amplify the overload it reacts to.
+        let mut prev: Option<(&str, f64)> = None;
+        for rung in policy.ladder() {
+            let bits = ms
+                .variant(rung)
+                .and_then(VariantShards::current_params)
+                .map(|p| p.footprint_bits(1));
+            if let Some(bits) = bits {
+                if let Some((prev_rung, prev_bits)) = prev {
+                    if bits > prev_bits + 1e-9 {
+                        bail!(
+                            "SLO ladder must be ordered by non-increasing footprint_bits: \
+                             rung `{rung}` ({bits:.3} bits) follows `{prev_rung}` \
+                             ({prev_bits:.3} bits)"
+                        );
+                    }
+                }
+                prev = Some((rung.as_str(), bits));
+            }
+        }
+        *super::lock_recover(&ms.slo.inner) =
+            Some(SloRuntime { policy, state: LadderState::new(), epoch: Instant::now() });
+        ms.slo.active.store(true, Relaxed);
+        Ok(())
+    }
+
+    /// Snapshot of the model's ladder position (`None` when no SLO
+    /// policy is installed). Advances the degraded-time clock to now
+    /// without making a routing decision.
+    pub fn slo_status(&self, model: &str) -> Result<Option<SloStatus>> {
+        Ok(Self::slo_snapshot(self.shards_of(model)?))
+    }
+
+    fn slo_snapshot(ms: &ModelShards) -> Option<SloStatus> {
+        if !ms.slo.active.load(Relaxed) {
+            return None;
+        }
+        let mut guard = super::lock_recover(&ms.slo.inner);
+        guard.as_mut().map(|rt| {
+            rt.state.touch(rt.epoch.elapsed().as_micros() as u64);
+            let ladder = rt.policy.ladder();
+            let rung = rt.state.rung().min(ladder.len() - 1);
+            SloStatus {
+                ladder: ladder.to_vec(),
+                rung,
+                serving: ladder[rung].clone(),
+                degraded: rt.state.degraded(),
+                time_degraded_us: rt.state.time_degraded_us(),
+                transitions_down: rt.state.steps_down(),
+                transitions_up: rt.state.steps_up(),
+            }
+        })
+    }
+
     /// The **currently serving** parameter block behind a variant —
     /// `None` for executor-backed entries the router cannot introspect.
     /// This is the seam the HTTP `GET /v1/models` policy report reads
@@ -809,12 +1035,15 @@ impl InferenceRouter {
         })
     }
 
-    /// Dispatch by model name to its **default variant**, load-aware
-    /// across that variant's shards (shallowest live queue wins; ties
-    /// rotate round-robin). Blocks until the reply; executor failures
-    /// and overload errors carry the shard's real message.
+    /// Dispatch by model name, load-aware across the serving variant's
+    /// shards (shallowest live queue wins; ties rotate round-robin).
+    /// The serving variant is the default — unless an SLO policy
+    /// ([`InferenceRouter::set_slo_policy`]) has degraded the model to
+    /// a cheaper ladder rung under pressure. Blocks until the reply;
+    /// executor failures and overload errors carry the shard's real
+    /// message.
     pub fn infer(&self, model: &str, image: Vec<f32>) -> Result<Reply> {
-        let vs = self.shards_of(model)?.default_variant();
+        let vs = self.shards_of(model)?.serving();
         Self::shard_infer(&vs.shards[vs.pick()], image)
     }
 
@@ -833,7 +1062,7 @@ impl InferenceRouter {
     /// thread. The per-shard latency histograms only track the blocking
     /// path; submit traffic still lands in every batcher counter.
     pub fn submit(&self, model: &str, image: Vec<f32>) -> Result<PendingReply> {
-        let vs = self.shards_of(model)?.default_variant();
+        let vs = self.shards_of(model)?.serving();
         vs.shards[vs.pick()].batcher.submit(image)
     }
 
@@ -906,6 +1135,10 @@ impl InferenceRouter {
             }
             let version = vs.slot.as_ref().map(|s| s.load());
             let rollout = vs.tracker.as_ref().map(|t| t.status());
+            let mut recent = LatencyHist::default();
+            for s in &vs.shards {
+                recent.merge(&s.batcher.recent_hist());
+            }
             variants.push(VariantMetrics {
                 variant: vs.name.clone(),
                 replicas: vs.shards.len(),
@@ -919,6 +1152,7 @@ impl InferenceRouter {
                     .map_or_else(String::new, |v| v.weights_sha.clone()),
                 state: rollout.as_ref().map_or_else(String::new, |r| r.state().to_string()),
                 rollout,
+                recent_p99_us: recent.quantile_us(0.99),
                 shards: vshards,
                 total: vtotal,
             });
@@ -927,6 +1161,7 @@ impl InferenceRouter {
             model: model.to_string(),
             replicas: shard_idx,
             param_bytes: ms.param_bytes,
+            slo: Self::slo_snapshot(ms),
             variants,
             shards: flat,
             total,
@@ -1790,5 +2025,180 @@ mod tests {
         // same seed+amplitude → same weights → same content hash as the
         // locally perturbed reference
         assert_eq!(version.weights_sha, pengine.params().weights.content_sha());
+    }
+
+    /// Satellite regression: unknown-variant errors on BOTH dispatch
+    /// entry points (`infer_variant` and `submit_variant`) name the
+    /// real variants, exactly like the HTTP 404 body does — and the
+    /// executor-backed variant builder composes into one model.
+    #[test]
+    fn unknown_variant_errors_list_the_known_variants() {
+        let echo = || -> Box<ExecuteFn> { Box::new(|buf: &[f32], bsz: usize| Ok(buf[..bsz].to_vec())) };
+        let router = InferenceRouter::builder()
+            .model_variant_from_executors("m", "full", 1, 1, vec![echo()], quick_policy(1))
+            .model_variant_from_executors("m", "cheap", 1, 1, vec![echo()], quick_policy(1))
+            .build()
+            .unwrap();
+        assert_eq!(router.variant_names("m").unwrap(), vec!["full", "cheap"]);
+        let err = router.infer_variant("m", "nope", vec![0.0]).unwrap_err().to_string();
+        assert!(
+            err.contains("nope") && err.contains("full") && err.contains("cheap"),
+            "infer_variant error must list known variants: {err}"
+        );
+        let err = router.submit_variant("m", "nope", vec![0.0]).unwrap_err().to_string();
+        assert!(
+            err.contains("nope") && err.contains("full") && err.contains("cheap"),
+            "submit_variant error must list known variants: {err}"
+        );
+        // unknown model on the submit path lists the registered models
+        let err = router.submit_variant("ghost", "full", vec![0.0]).unwrap_err().to_string();
+        assert!(err.contains("ghost") && err.contains("\"m\""), "{err}");
+    }
+
+    /// SLO install validation happens against the live registry: rungs
+    /// must exist (error lists the real variants), rung 0 must be the
+    /// default, the ladder must not increase footprint_bits, and
+    /// clearing restores plain default dispatch.
+    #[test]
+    fn slo_policy_install_validates_against_the_registry() {
+        use crate::quant::QuantPolicy;
+        let (graph, weights) = tiny_graph_weights(0);
+        let mk = |policy: &str| {
+            Arc::new(
+                ModelParams::with_policy(
+                    graph.clone(),
+                    weights.clone(),
+                    QuantPolicy::named(policy).unwrap(),
+                    &[0.02],
+                    EngineMode::Dense,
+                )
+                .unwrap(),
+            )
+        };
+        // a4w8 registered FIRST → it is the default (and the cheaper
+        // operating point), so an a4w8→a8w8 ladder is footprint-increasing.
+        let router = InferenceRouter::builder()
+            .model_variant("m", "a4w8", mk("a4w8"), 1, quick_policy(2))
+            .model_variant("m", "a8w8", mk("a8w8"), 1, quick_policy(2))
+            .build()
+            .unwrap();
+        let pol = |ladder: &[&str]| {
+            SloPolicy::new(ladder.iter().map(|s| s.to_string()).collect(), 4, 0, 0, 0.5)
+                .unwrap()
+        };
+        let err =
+            router.set_slo_policy("m", Some(pol(&["a4w8", "ghost"]))).unwrap_err().to_string();
+        assert!(err.contains("ghost") && err.contains("a8w8"), "{err}");
+        let err =
+            router.set_slo_policy("m", Some(pol(&["a8w8", "a4w8"]))).unwrap_err().to_string();
+        assert!(err.contains("rung 0") && err.contains("a4w8"), "{err}");
+        let err =
+            router.set_slo_policy("m", Some(pol(&["a4w8", "a8w8"]))).unwrap_err().to_string();
+        assert!(err.contains("footprint_bits"), "{err}");
+        assert!(router.set_slo_policy("ghost", None).is_err());
+        // No policy survived any failed install: status is None and
+        // dispatch is the plain default path.
+        assert!(router.slo_status("m").unwrap().is_none());
+        assert_eq!(router.serving_variant("m").unwrap(), "a4w8");
+        assert!(router.metrics("m").unwrap().slo.is_none());
+    }
+
+    /// The tentpole behavior at router level: a parked default variant
+    /// crosses its queue-depth SLO, unaddressed dispatch degrades to
+    /// the cheaper rung (first transition dwell-exempt), degraded time
+    /// and transition counters accumulate, and once the backlog drains
+    /// and dwell expires the default rung resumes serving.
+    #[test]
+    fn ladder_degrades_under_pressure_and_recovers_after_dwell() {
+        use std::sync::mpsc::channel;
+        let (gate_tx, gate_rx) = channel::<()>();
+        let (entered_tx, entered_rx) = channel::<()>();
+        // "full" parks inside execute() until the gate DROPS (recv then
+        // errors → instant forever after); "cheap" answers immediately.
+        // Distinct constant logits tell us who served each request.
+        let full: Box<ExecuteFn> = Box::new(move |_buf: &[f32], bsz: usize| {
+            entered_tx.send(()).ok();
+            gate_rx.recv().ok();
+            Ok(vec![1.0; bsz])
+        });
+        let cheap: Box<ExecuteFn> = Box::new(|_buf: &[f32], bsz: usize| Ok(vec![2.0; bsz]));
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_variant_from_executors("m", "full", 1, 1, vec![full], quick_policy(1))
+                .model_variant_from_executors("m", "cheap", 1, 1, vec![cheap], quick_policy(1))
+                .build()
+                .unwrap(),
+        );
+        // Back up the full variant: one in-flight request parks its only
+        // worker, two pinned queued requests raise its depth gauge to 2.
+        let r0 = router.clone();
+        let inflight = std::thread::spawn(move || r0.infer_on("m", 0, vec![0.0]).unwrap());
+        entered_rx.recv().unwrap();
+        let queued: Vec<_> = (0..2)
+            .map(|_| {
+                let r = router.clone();
+                std::thread::spawn(move || r.infer_on("m", 0, vec![0.0]).unwrap())
+            })
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while router.metrics("m").unwrap().shards[0].batcher.queue_depth < 2 {
+            assert!(Instant::now() < deadline, "queued requests never raised the gauge");
+            std::thread::yield_now();
+        }
+        // Install the ladder mid-overload: depth trigger 1 (breached at
+        // 2), p99 disabled, dwell 30ms, margin 1.0 (recover as soon as
+        // the serving rung's depth is back at/below 1).
+        let policy = SloPolicy::new(
+            vec!["full".into(), "cheap".into()],
+            1,
+            0,
+            30_000,
+            1.0,
+        )
+        .unwrap();
+        router.set_slo_policy("m", Some(policy)).unwrap();
+        // The first unaddressed request samples the breach and — first
+        // transition being dwell-exempt — serves the cheap rung at once.
+        for i in 0..3 {
+            let reply = router.infer("m", vec![i as f32]).unwrap();
+            assert_eq!(reply.logits, vec![2.0], "request {i} not served by the cheap rung");
+        }
+        assert_eq!(router.serving_variant("m").unwrap(), "cheap");
+        let st = router.slo_status("m").unwrap().unwrap();
+        assert!(st.degraded && st.rung == 1 && st.serving == "cheap", "{st:?}");
+        assert_eq!(st.transitions_down, 1);
+        std::thread::sleep(Duration::from_millis(2));
+        let m = router.metrics("m").unwrap();
+        let st = m.slo.unwrap();
+        assert!(st.time_degraded_us > 0, "degraded clock never advanced: {st:?}");
+        // Clear the overload: dropping the gate unparks the worker and
+        // makes "full" instant; the pinned backlog drains.
+        drop(gate_tx);
+        assert_eq!(inflight.join().unwrap().logits, vec![1.0]);
+        for q in queued {
+            assert_eq!(q.join().unwrap().logits, vec![1.0]);
+        }
+        assert_eq!(router.metrics("m").unwrap().shards[0].batcher.queue_depth, 0);
+        // Once dwell expires, a calm sample steps the ladder back up and
+        // that same request is served by the default rung again.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let reply = router.infer("m", vec![9.0]).unwrap();
+            if reply.logits == vec![1.0] {
+                break;
+            }
+            assert!(Instant::now() < deadline, "ladder never recovered to the default rung");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(router.serving_variant("m").unwrap(), "full");
+        let st = router.slo_status("m").unwrap().unwrap();
+        assert!(!st.degraded && st.rung == 0 && st.serving == "full", "{st:?}");
+        assert!(st.transitions_up >= 1 && st.transitions_down >= 1, "{st:?}");
+        assert!(st.time_degraded_us > 0);
+        // Clearing the policy restores plain default dispatch and a
+        // None status.
+        router.set_slo_policy("m", None).unwrap();
+        assert!(router.slo_status("m").unwrap().is_none());
+        assert_eq!(router.serving_variant("m").unwrap(), "full");
     }
 }

@@ -1,0 +1,505 @@
+//! SLO-driven degradation ladder — the policy layer behind
+//! load-adaptive precision serving.
+//!
+//! SPARQ variants of one model share a single weights allocation and
+//! differ only in bits-per-activation, with the accuracy cost of each
+//! step down quantified (PAPER.md Table 2). That gives this stack a
+//! knob no ordinary inference server has: under overload it can
+//! *degrade quality instead of shedding traffic*. An [`SloPolicy`]
+//! makes the knob first-class:
+//!
+//! * a per-model **ladder** of variant names, rung 0 the default
+//!   (full-quality) variant, each later rung a cheaper operating point
+//!   — the router validates at install time that every rung exists and
+//!   that `footprint_bits` never increases along the ladder;
+//! * **trigger thresholds** on the serving rung's live pressure: total
+//!   queue depth across its shards, and windowed p99 latency (the
+//!   sliding [`WindowedHist`] view — the cumulative histogram is too
+//!   stale for control);
+//! * **hysteresis** (a `recover_margin` band: recovery requires
+//!   pressure to fall *below* `margin × threshold`, not merely below
+//!   the threshold) plus a **minimum dwell** between transitions, so a
+//!   noisy signal can't flap the ladder.
+//!
+//! The decision state machine ([`LadderState`]) is pure compute over
+//! explicit microsecond timestamps — no internal clock, no locks, no
+//! I/O — so the hysteresis unit tests below run under the Miri CI leg
+//! byte-for-byte as they run natively. The router owns the wall clock
+//! (an `Instant` epoch per installed policy) and the pressure sampling;
+//! see `InferenceRouter::set_slo_policy` and the dispatch seam in
+//! `coordinator/router.rs`.
+//!
+//! Like [`QuantPolicy`](crate::quant::QuantPolicy), an `SloPolicy` is
+//! validated on construction and JSON-round-trippable ([`to_json`] /
+//! [`from_json`]) — `POST /v1/models/{name}/slo` carries exactly this
+//! encoding.
+//!
+//! [`to_json`]: SloPolicy::to_json
+//! [`from_json`]: SloPolicy::from_json
+//! [`WindowedHist`]: crate::observability::WindowedHist
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::JsonValue;
+use crate::json_obj;
+
+/// A validated per-model degradation ladder plus its trigger and
+/// recovery parameters. Construct with [`SloPolicy::new`] or parse the
+/// wire encoding with [`SloPolicy::from_json`]; both validate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloPolicy {
+    ladder: Vec<String>,
+    max_queue_depth: u64,
+    max_p99_us: u64,
+    dwell_us: u64,
+    recover_margin: f64,
+}
+
+/// One pressure observation for the serving rung: live queue depth
+/// summed across its shards, and the merged sliding-window p99.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PressureSample {
+    pub queue_depth: u64,
+    pub p99_us: u64,
+}
+
+impl SloPolicy {
+    /// Build a validated policy.
+    ///
+    /// * `ladder` — ≥ 2 distinct, non-empty variant names (no `@`);
+    ///   rung 0 must be the model's default variant (the router checks
+    ///   that, plus footprint ordering, against its registry at install
+    ///   time — name-level validation happens here).
+    /// * `max_queue_depth` / `max_p99_us` — trigger thresholds; `0`
+    ///   disables that trigger, but at least one must be enabled.
+    /// * `dwell_us` — minimum time between ladder transitions (the
+    ///   very first transition after install is exempt, so a policy
+    ///   installed *during* an overload acts immediately).
+    /// * `recover_margin` — hysteresis band in `(0, 1]`: stepping back
+    ///   up requires every enabled pressure signal at or below
+    ///   `margin × threshold`.
+    pub fn new(
+        ladder: Vec<String>,
+        max_queue_depth: u64,
+        max_p99_us: u64,
+        dwell_us: u64,
+        recover_margin: f64,
+    ) -> Result<Self> {
+        if ladder.len() < 2 {
+            bail!(
+                "SLO ladder needs at least 2 rungs (default + one cheaper variant), got {:?}",
+                ladder
+            );
+        }
+        for (i, rung) in ladder.iter().enumerate() {
+            if rung.is_empty() || rung.contains('@') {
+                bail!("SLO ladder rung {i} is not a valid variant name: `{rung}`");
+            }
+            if ladder[..i].contains(rung) {
+                bail!("SLO ladder repeats variant `{rung}` (rung {i})");
+            }
+        }
+        if max_queue_depth == 0 && max_p99_us == 0 {
+            bail!("SLO policy disables both triggers (max_queue_depth and max_p99_us are 0)");
+        }
+        if !(recover_margin > 0.0 && recover_margin <= 1.0) {
+            bail!("recover_margin must be in (0, 1], got {recover_margin}");
+        }
+        Ok(Self { ladder, max_queue_depth, max_p99_us, dwell_us, recover_margin })
+    }
+
+    /// The ladder, rung 0 first (the default variant).
+    pub fn ladder(&self) -> &[String] {
+        &self.ladder
+    }
+
+    pub fn max_queue_depth(&self) -> u64 {
+        self.max_queue_depth
+    }
+
+    pub fn max_p99_us(&self) -> u64 {
+        self.max_p99_us
+    }
+
+    pub fn dwell_us(&self) -> u64 {
+        self.dwell_us
+    }
+
+    pub fn recover_margin(&self) -> f64 {
+        self.recover_margin
+    }
+
+    /// Does this sample breach an enabled trigger threshold?
+    pub fn breaches(&self, s: &PressureSample) -> bool {
+        (self.max_queue_depth > 0 && s.queue_depth > self.max_queue_depth)
+            || (self.max_p99_us > 0 && s.p99_us > self.max_p99_us)
+    }
+
+    /// Is this sample inside the recovery band — every enabled signal
+    /// at or below `recover_margin × threshold`? Between [`breaches`]
+    /// and `clears` lies the hysteresis band where the rung holds.
+    ///
+    /// [`breaches`]: SloPolicy::breaches
+    pub fn clears(&self, s: &PressureSample) -> bool {
+        let depth_ok = self.max_queue_depth == 0
+            || (s.queue_depth as f64) <= self.recover_margin * self.max_queue_depth as f64;
+        let p99_ok = self.max_p99_us == 0
+            || (s.p99_us as f64) <= self.recover_margin * self.max_p99_us as f64;
+        depth_ok && p99_ok
+    }
+
+    /// The wire encoding: `{ladder, max_queue_depth, max_p99_us,
+    /// dwell_us, recover_margin}`.
+    pub fn to_json(&self) -> JsonValue {
+        let ladder: Vec<JsonValue> =
+            self.ladder.iter().map(|r| JsonValue::from(r.as_str())).collect();
+        json_obj! {
+            "ladder" => ladder,
+            "max_queue_depth" => self.max_queue_depth as usize,
+            "max_p99_us" => self.max_p99_us as usize,
+            "dwell_us" => self.dwell_us as usize,
+            "recover_margin" => self.recover_margin,
+        }
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Parse and validate the wire encoding.
+    pub fn from_json(text: &str) -> Result<Self> {
+        Self::from_json_value(&JsonValue::parse(text)?)
+    }
+
+    pub fn from_json_value(v: &JsonValue) -> Result<Self> {
+        let ladder_json = v
+            .get("ladder")
+            .and_then(JsonValue::as_array)
+            .context("SLO policy missing `ladder` array")?;
+        let mut ladder = Vec::with_capacity(ladder_json.len());
+        for (i, rung) in ladder_json.iter().enumerate() {
+            let name = rung
+                .as_str()
+                .with_context(|| format!("SLO ladder rung {i} must be a variant name string"))?;
+            ladder.push(name.to_string());
+        }
+        let u64_field = |key: &str| -> Result<u64> {
+            match v.get(key) {
+                None => Ok(0),
+                Some(x) => {
+                    let f = x
+                        .as_f64()
+                        .with_context(|| format!("SLO field `{key}` must be a number"))?;
+                    if !(f >= 0.0 && f.fract() == 0.0) {
+                        bail!("SLO field `{key}` must be a non-negative integer, got {f}");
+                    }
+                    Ok(f as u64)
+                }
+            }
+        };
+        let max_queue_depth = u64_field("max_queue_depth")?;
+        let max_p99_us = u64_field("max_p99_us")?;
+        let dwell_us = u64_field("dwell_us")?;
+        let recover_margin = match v.get("recover_margin") {
+            None => 0.5,
+            Some(x) => x.as_f64().context("SLO field `recover_margin` must be a number")?,
+        };
+        Self::new(ladder, max_queue_depth, max_p99_us, dwell_us, recover_margin)
+    }
+}
+
+/// The per-model decision state machine: current rung, transition
+/// bookkeeping, and time-in-degraded-mode accounting. Pure compute over
+/// caller-supplied microsecond timestamps (monotone-clamped), so it is
+/// deterministic in tests and Miri-interpretable.
+#[derive(Clone, Debug, Default)]
+pub struct LadderState {
+    rung: usize,
+    /// Timestamp of the last rung change; dwell gates on this.
+    last_change_us: u64,
+    /// Last timestamp observed, for degraded-time accumulation.
+    last_seen_us: u64,
+    /// True once any transition has happened — the first transition
+    /// after install is exempt from dwell (see [`SloPolicy::new`]).
+    transitioned: bool,
+    time_degraded_us: u64,
+    steps_down: u64,
+    steps_up: u64,
+}
+
+impl LadderState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The current ladder rung (0 = default variant).
+    pub fn rung(&self) -> usize {
+        self.rung
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.rung > 0
+    }
+
+    /// Transitions toward cheaper rungs / back toward the default.
+    pub fn steps_down(&self) -> u64 {
+        self.steps_down
+    }
+
+    pub fn steps_up(&self) -> u64 {
+        self.steps_up
+    }
+
+    /// Cumulative µs spent off the default rung, as of the last
+    /// [`touch`]/[`step`].
+    ///
+    /// [`touch`]: LadderState::touch
+    /// [`step`]: LadderState::step
+    pub fn time_degraded_us(&self) -> u64 {
+        self.time_degraded_us
+    }
+
+    /// Advance the degraded-time clock to `now_us` without making a
+    /// decision (metrics reads). Time running backwards is clamped.
+    pub fn touch(&mut self, now_us: u64) {
+        let now = now_us.max(self.last_seen_us);
+        if self.rung > 0 {
+            self.time_degraded_us += now - self.last_seen_us;
+        }
+        self.last_seen_us = now;
+    }
+
+    /// One control decision at `now_us` against `sample`; returns the
+    /// rung to serve. Breaching samples step one rung down the ladder
+    /// (cheaper), samples inside the recovery band step one rung back
+    /// up, anything in the hysteresis band between holds — and no
+    /// transition happens within `dwell_us` of the previous one (the
+    /// first after install excepted).
+    pub fn step(&mut self, policy: &SloPolicy, now_us: u64, sample: PressureSample) -> usize {
+        self.touch(now_us);
+        let now = self.last_seen_us;
+        // Defensive clamp: a swapped-in shorter ladder must never index
+        // out of range (set_slo_policy resets state, so this is belt
+        // and braces).
+        self.rung = self.rung.min(policy.ladder().len() - 1);
+        let dwell_over =
+            !self.transitioned || now.saturating_sub(self.last_change_us) >= policy.dwell_us();
+        if !dwell_over {
+            return self.rung;
+        }
+        if policy.breaches(&sample) && self.rung + 1 < policy.ladder().len() {
+            self.rung += 1;
+            self.steps_down += 1;
+            self.last_change_us = now;
+            self.transitioned = true;
+        } else if policy.clears(&sample) && self.rung > 0 {
+            self.rung -= 1;
+            self.steps_up += 1;
+            self.last_change_us = now;
+            self.transitioned = true;
+        }
+        self.rung
+    }
+}
+
+/// Plain-value snapshot of a model's ladder position for metrics and
+/// the ops view; serialized under the `"slo"` key on `/v1/metrics`.
+#[derive(Clone, Debug)]
+pub struct SloStatus {
+    pub ladder: Vec<String>,
+    /// Current rung index into `ladder`.
+    pub rung: usize,
+    /// The variant name the ladder currently routes default traffic to.
+    pub serving: String,
+    pub degraded: bool,
+    pub time_degraded_us: u64,
+    pub transitions_down: u64,
+    pub transitions_up: u64,
+}
+
+impl SloStatus {
+    pub fn to_json(&self) -> JsonValue {
+        let ladder: Vec<JsonValue> =
+            self.ladder.iter().map(|r| JsonValue::from(r.as_str())).collect();
+        json_obj! {
+            "ladder" => ladder,
+            "rung" => self.rung,
+            "serving" => self.serving.clone(),
+            "degraded" => self.degraded,
+            "time_degraded_us" => self.time_degraded_us as usize,
+            "transitions_down" => self.transitions_down as usize,
+            "transitions_up" => self.transitions_up as usize,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder3() -> SloPolicy {
+        // depth trigger 4, p99 trigger 1000 µs, dwell 100 µs, margin 0.5
+        SloPolicy::new(
+            vec!["full".into(), "mid".into(), "cheap".into()],
+            4,
+            1_000,
+            100,
+            0.5,
+        )
+        .unwrap()
+    }
+
+    fn calm() -> PressureSample {
+        PressureSample { queue_depth: 0, p99_us: 10 }
+    }
+
+    fn overload() -> PressureSample {
+        PressureSample { queue_depth: 50, p99_us: 20_000 }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_policy() {
+        let p = ladder3();
+        let back = SloPolicy::from_json(&p.to_json_string()).unwrap();
+        assert_eq!(back, p, "{}", p.to_json_string());
+        // defaults: omitted thresholds are disabled-0, margin 0.5
+        let short = r#"{"ladder": ["a", "b"], "max_queue_depth": 3}"#;
+        let p = SloPolicy::from_json(short).unwrap();
+        assert_eq!(p.max_p99_us(), 0);
+        assert_eq!(p.recover_margin(), 0.5);
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        for (body, why) in [
+            ("{}", "missing ladder"),
+            (r#"{"ladder": ["only"], "max_queue_depth": 1}"#, "single rung"),
+            (r#"{"ladder": ["a", "a"], "max_queue_depth": 1}"#, "duplicate rung"),
+            (r#"{"ladder": ["a", ""], "max_queue_depth": 1}"#, "empty rung"),
+            (r#"{"ladder": ["a", "b@c"], "max_queue_depth": 1}"#, "@ in rung"),
+            (r#"{"ladder": ["a", 3], "max_queue_depth": 1}"#, "non-string rung"),
+            (r#"{"ladder": ["a", "b"]}"#, "no trigger enabled"),
+            (
+                r#"{"ladder": ["a", "b"], "max_queue_depth": 1, "recover_margin": 0.0}"#,
+                "margin 0",
+            ),
+            (
+                r#"{"ladder": ["a", "b"], "max_queue_depth": 1, "recover_margin": 1.5}"#,
+                "margin > 1",
+            ),
+            (
+                r#"{"ladder": ["a", "b"], "max_queue_depth": -2}"#,
+                "negative threshold",
+            ),
+        ] {
+            assert!(SloPolicy::from_json(body).is_err(), "{why} must not parse: {body}");
+        }
+    }
+
+    #[test]
+    fn breach_and_clear_triggers_respect_disabled_thresholds() {
+        // p99-only policy: queue depth can be anything.
+        let p = SloPolicy::new(vec!["a".into(), "b".into()], 0, 1_000, 0, 0.5).unwrap();
+        assert!(!p.breaches(&PressureSample { queue_depth: 10_000, p99_us: 500 }));
+        assert!(p.breaches(&PressureSample { queue_depth: 0, p99_us: 1_001 }));
+        assert!(p.clears(&PressureSample { queue_depth: 10_000, p99_us: 500 }));
+        assert!(!p.clears(&PressureSample { queue_depth: 0, p99_us: 501 }));
+    }
+
+    #[test]
+    fn first_breach_after_install_degrades_immediately() {
+        let p = ladder3();
+        let mut s = LadderState::new();
+        // t=0 is well inside the dwell window, but the first transition
+        // is exempt: a policy installed mid-overload acts now.
+        assert_eq!(s.step(&p, 0, overload()), 1);
+        assert_eq!(s.steps_down(), 1);
+        assert!(s.degraded());
+    }
+
+    #[test]
+    fn hysteresis_band_holds_the_rung_both_ways() {
+        let p = ladder3();
+        let mut s = LadderState::new();
+        assert_eq!(s.step(&p, 0, overload()), 1);
+        // depth 3 is under the trigger (4) but above margin*trigger (2):
+        // neither a breach nor a clear — the rung holds, dwell elapsed
+        // or not.
+        let band = PressureSample { queue_depth: 3, p99_us: 10 };
+        assert!(!p.breaches(&band) && !p.clears(&band));
+        for t in [50u64, 150, 1_000, 10_000] {
+            assert_eq!(s.step(&p, t, band), 1, "t={t}");
+        }
+        assert_eq!((s.steps_down(), s.steps_up()), (1, 0));
+    }
+
+    #[test]
+    fn recovery_requires_clear_sample_and_dwell() {
+        let p = ladder3(); // dwell 100 µs
+        let mut s = LadderState::new();
+        assert_eq!(s.step(&p, 0, overload()), 1);
+        // Clear sample but inside dwell: hold.
+        assert_eq!(s.step(&p, 50, calm()), 1);
+        // Dwell expired: step back up.
+        assert_eq!(s.step(&p, 120, calm()), 0);
+        assert_eq!((s.steps_down(), s.steps_up()), (1, 1));
+        assert!(!s.degraded());
+        // Degraded time covers exactly the stretch spent off rung 0.
+        assert_eq!(s.time_degraded_us(), 120);
+    }
+
+    #[test]
+    fn dwell_bounds_flapping_under_an_alternating_signal() {
+        let p = ladder3(); // dwell 100 µs
+        let mut s = LadderState::new();
+        // A pathological signal alternating breach/clear every µs for
+        // 1000 µs: without dwell this flaps 1000 times; with dwell 100
+        // the transition count is bounded by elapsed/dwell + the exempt
+        // first step.
+        for t in 0..1_000u64 {
+            let sample = if t % 2 == 0 { overload() } else { calm() };
+            s.step(&p, t, sample);
+        }
+        let transitions = s.steps_down() + s.steps_up();
+        assert!(
+            transitions <= 1_000 / p.dwell_us() + 1,
+            "dwell failed to bound flapping: {transitions} transitions"
+        );
+        assert!(transitions >= 2, "some transitions must still happen");
+    }
+
+    #[test]
+    fn sustained_overload_descends_one_rung_per_dwell_to_the_bottom() {
+        let p = ladder3();
+        let mut s = LadderState::new();
+        assert_eq!(s.step(&p, 0, overload()), 1);
+        assert_eq!(s.step(&p, 50, overload()), 1, "second step gated by dwell");
+        assert_eq!(s.step(&p, 110, overload()), 2);
+        // Bottom rung: stays put under further overload.
+        assert_eq!(s.step(&p, 400, overload()), 2);
+        assert_eq!(s.steps_down(), 2);
+        // Sustained calm walks it all the way back.
+        assert_eq!(s.step(&p, 520, calm()), 1);
+        assert_eq!(s.step(&p, 640, calm()), 0);
+        assert_eq!(s.steps_up(), 2);
+    }
+
+    #[test]
+    fn degraded_time_accumulates_only_off_the_default_rung() {
+        let p = ladder3();
+        let mut s = LadderState::new();
+        // 500 µs healthy: no degraded time.
+        assert_eq!(s.step(&p, 500, calm()), 0);
+        assert_eq!(s.time_degraded_us(), 0);
+        s.step(&p, 600, overload()); // degrade at 600
+        s.touch(900);
+        assert_eq!(s.time_degraded_us(), 300);
+        s.step(&p, 1_000, calm()); // recover at 1000
+        assert_eq!(s.time_degraded_us(), 400);
+        s.touch(5_000); // healthy again: clock stops
+        assert_eq!(s.time_degraded_us(), 400);
+        // Non-monotonic time is clamped, never underflows.
+        s.touch(100);
+        assert_eq!(s.time_degraded_us(), 400);
+    }
+}

@@ -19,6 +19,15 @@
 //! (e.g. a kernel section has no queue, an HTTP section no GMAC/s).
 //! Budgets treat 0-valued baseline metrics as unconstrained for the
 //! same reason.
+//!
+//! The quantiles recorded here (`p50_us`/`p99_us`) are **whole-run**
+//! statistics: each section's latencies over its full measurement
+//! window, the right shape for regression trajectories. They are
+//! deliberately *not* the control-plane signal — the SLO degradation
+//! ladder ([`crate::coordinator::slo`]) steers on the batcher's
+//! sliding-window view ([`crate::observability::WindowedHist`],
+//! surfaced as `recent_p99_us` on `/v1/metrics`), because a
+//! since-start quantile is far too stale to react to a load spike.
 
 use std::path::Path;
 use std::time::Instant;

@@ -116,6 +116,100 @@ impl LatencyHist {
     }
 }
 
+/// Sliding-window latency view: a ring of bucketed sub-windows
+/// ("slices") over [`LatencyHist`], rotated on a microsecond time base
+/// and merged on read.
+///
+/// The cumulative [`LatencyHist`] answers "what has this shard done
+/// since boot" — useful for reports, useless for control: an hour of
+/// healthy traffic drowns the last 200 ms of overload. `WindowedHist`
+/// keeps the most recent `window` of samples by spreading them over
+/// `slices` sub-histograms; recording and reading both advance the
+/// ring, dropping whole slices as they age out, so a quantile read
+/// reflects roughly the last `window` (expiry is slice-granular: a
+/// sample lives between `window - window/slices` and `window`).
+///
+/// The core API is pure compute over explicit microsecond timestamps
+/// (`record_at` / `merged_at`) — no internal clock — so the SLO
+/// hysteresis logic built on it stays deterministic in tests and runs
+/// under the Miri CI leg. Callers that live on a wall clock (the
+/// batcher worker) convert via an `Instant` epoch they own.
+#[derive(Debug, Clone)]
+pub struct WindowedHist {
+    slices: Vec<LatencyHist>,
+    /// Width of one sub-window in µs (>= 1).
+    slice_us: u64,
+    /// Ring index of the slice receiving samples "now".
+    head: usize,
+    /// Slice number (`now_us / slice_us`) the head corresponds to.
+    head_epoch: u64,
+}
+
+impl WindowedHist {
+    /// A window of `window_us` split into `slices` sub-histograms.
+    /// Both must be nonzero; slice width is rounded up so `slices`
+    /// sub-windows always cover at least `window_us`.
+    pub fn new(window_us: u64, slices: usize) -> Self {
+        assert!(slices >= 1, "WindowedHist needs at least one slice");
+        assert!(window_us >= 1, "WindowedHist needs a nonzero window");
+        Self {
+            slices: vec![LatencyHist::default(); slices],
+            slice_us: (window_us / slices as u64).max(1),
+            head: 0,
+            head_epoch: 0,
+        }
+    }
+
+    /// The span a merged read covers, in µs (slice width × slice count).
+    pub fn window_us(&self) -> u64 {
+        self.slice_us * self.slices.len() as u64
+    }
+
+    /// Rotate the ring forward to the slice containing `now_us`,
+    /// clearing every slice that ages out on the way. Time running
+    /// backwards (callers with non-monotonic sampling) is clamped: the
+    /// ring never rewinds, late samples land in the current head.
+    fn advance_to(&mut self, now_us: u64) {
+        let epoch = now_us / self.slice_us;
+        if epoch <= self.head_epoch {
+            return;
+        }
+        let steps = epoch - self.head_epoch;
+        let n = self.slices.len() as u64;
+        if steps >= n {
+            // Gap longer than the whole window: nothing survives.
+            for s in &mut self.slices {
+                *s = LatencyHist::default();
+            }
+        } else {
+            for _ in 0..steps {
+                self.head = (self.head + 1) % self.slices.len();
+                self.slices[self.head] = LatencyHist::default();
+            }
+        }
+        self.head_epoch = epoch;
+    }
+
+    /// Record a sample observed at `now_us` (µs since the caller's
+    /// epoch).
+    pub fn record_at(&mut self, now_us: u64, d: Duration) {
+        self.advance_to(now_us);
+        self.slices[self.head].record(d);
+    }
+
+    /// Merge the live slices into one histogram covering roughly the
+    /// last `window_us()` before `now_us`. Advances the ring first, so
+    /// an idle period expires stale samples even with no new records.
+    pub fn merged_at(&mut self, now_us: u64) -> LatencyHist {
+        self.advance_to(now_us);
+        let mut out = LatencyHist::default();
+        for s in &self.slices {
+            out.merge(s);
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,5 +330,104 @@ mod tests {
             let le = b.get("le_us").and_then(|c| c.as_usize()).unwrap();
             assert!(le.is_power_of_two(), "{le}");
         }
+    }
+
+    // ------------------------------------------------------------ //
+    // WindowedHist: sliding-window boundaries (pure compute, runs   //
+    // under the Miri CI leg)                                        //
+    // ------------------------------------------------------------ //
+
+    #[test]
+    fn window_within_one_window_matches_cumulative() {
+        let mut w = WindowedHist::new(1_000, 4); // 4 slices x 250 µs
+        let mut reference = LatencyHist::default();
+        for (t, us) in [(0u64, 10u64), (100, 20), (300, 30), (700, 40)] {
+            w.record_at(t, Duration::from_micros(us));
+            reference.record(Duration::from_micros(us));
+        }
+        assert_eq!(w.merged_at(999), reference, "inside the window nothing expires");
+        assert_eq!(w.window_us(), 1_000);
+    }
+
+    #[test]
+    fn samples_expire_slice_by_slice_at_exact_boundaries() {
+        let mut w = WindowedHist::new(1_000, 4); // slice width 250 µs
+        w.record_at(0, Duration::from_micros(10)); // slice epoch 0
+        w.record_at(250, Duration::from_micros(20)); // slice epoch 1
+        // At t=999 (epoch 3) both slices are still inside the 4-slice ring.
+        assert_eq!(w.merged_at(999).count(), 2);
+        // At t=1000 (epoch 4) slice 0 ages out — exactly one boundary step.
+        assert_eq!(w.merged_at(1_000).count(), 1);
+        assert_eq!(w.merged_at(1_000).max_us(), 20);
+        // At t=1250 (epoch 5) slice 1 follows.
+        assert_eq!(w.merged_at(1_250).count(), 0);
+    }
+
+    #[test]
+    fn boundary_sample_lands_in_the_new_slice_not_the_old() {
+        let mut w = WindowedHist::new(1_000, 4);
+        w.record_at(249, Duration::from_micros(10)); // last µs of slice 0
+        w.record_at(250, Duration::from_micros(20)); // first µs of slice 1
+        // When slice 0 expires (epoch 4), only the 250 µs sample survives.
+        let m = w.merged_at(1_000);
+        assert_eq!((m.count(), m.max_us()), (1, 20));
+    }
+
+    #[test]
+    fn gap_longer_than_the_window_clears_everything() {
+        let mut w = WindowedHist::new(1_000, 4);
+        for t in [0u64, 300, 600, 900] {
+            w.record_at(t, Duration::from_micros(50));
+        }
+        assert_eq!(w.merged_at(900).count(), 4);
+        // An idle stretch of 10 windows expires everything, even with
+        // no intervening records (merged_at itself advances the ring).
+        assert_eq!(w.merged_at(11_000).count(), 0);
+        // …and the ring keeps working afterwards.
+        w.record_at(11_100, Duration::from_micros(5));
+        assert_eq!(w.merged_at(11_100).count(), 1);
+    }
+
+    #[test]
+    fn time_running_backwards_is_clamped_not_a_rewind() {
+        let mut w = WindowedHist::new(1_000, 4);
+        w.record_at(600, Duration::from_micros(10));
+        // A non-monotonic caller: the late sample lands in the current
+        // head slice instead of resurrecting an expired one.
+        w.record_at(100, Duration::from_micros(20));
+        let m = w.merged_at(600);
+        assert_eq!(m.count(), 2);
+        // Both expire together with the head slice.
+        assert_eq!(w.merged_at(600 + 1_000).count(), 0);
+    }
+
+    #[test]
+    fn window_quantiles_track_recent_load_not_history() {
+        let mut w = WindowedHist::new(1_000, 4);
+        // An old burst of slow samples…
+        for i in 0..100u64 {
+            w.record_at(i, Duration::from_micros(100_000));
+        }
+        assert!(w.merged_at(100).quantile_us(0.99) >= 100_000);
+        // …followed by a window of fast traffic: the windowed p99
+        // recovers once the slow slice ages out, which is exactly what
+        // the cumulative histogram cannot do.
+        for t in (1_100..2_100u64).step_by(50) {
+            w.record_at(t, Duration::from_micros(50));
+        }
+        assert!(w.merged_at(2_100).quantile_us(0.99) <= 64);
+    }
+
+    #[test]
+    fn degenerate_windows_are_still_valid() {
+        // One slice: a plain histogram that clears on every boundary.
+        let mut w = WindowedHist::new(100, 1);
+        w.record_at(0, Duration::from_micros(7));
+        assert_eq!(w.merged_at(99).count(), 1);
+        assert_eq!(w.merged_at(100).count(), 0);
+        // Window narrower than the slice count: slice width clamps to
+        // 1 µs and the effective window is `slices` µs.
+        let w2 = WindowedHist::new(2, 8);
+        assert_eq!(w2.window_us(), 8);
     }
 }

@@ -6,7 +6,9 @@
 //!
 //! * [`histogram`]    — the fixed-bucket [`LatencyHist`] every layer of
 //!   the serving stack records into, now also serialized (bucketed)
-//!   over `GET /v1/metrics`.
+//!   over `GET /v1/metrics`, plus the sliding-window [`WindowedHist`]
+//!   the SLO degradation ladder reads recent p99 from
+//!   (`coordinator::slo`).
 //! * [`bench_report`] — the versioned `BENCH_*.json` schema
 //!   ([`BenchReport`]) emitted by `benches/hotpath.rs` and
 //!   `serve_bench --bench-json`, with strict parse-side validation.
@@ -30,4 +32,4 @@ pub use bench_report::{
 };
 pub use budget::{check, BudgetFile, SectionBudget, Violation, BUDGET_VERSION};
 pub use client::{http_get, http_get_json, http_post, http_post_json};
-pub use histogram::{LatencyHist, HIST_BUCKETS};
+pub use histogram::{LatencyHist, WindowedHist, HIST_BUCKETS};

@@ -30,6 +30,15 @@
 //! ([`SparqConfig::PRESETS`]): every config preset name is also a
 //! uniform policy name, and a few policy-level presets (`"first8"`,
 //! `"last8"`, `"edge8"`) encode the keep-the-edges-at-8-bit folklore.
+//!
+//! The policy-weighted storage cost,
+//! [`footprint_bits`](crate::model::ModelParams::footprint_bits), is
+//! what orders serving variants from expensive to cheap: the SLO
+//! degradation ladder ([`crate::coordinator::slo`]) validates at
+//! install time that its rungs never *increase* footprint bits, so
+//! under overload the router always degrades toward a cheaper
+//! operating point of this policy space (e.g. `a8w8` → `a4w8` →
+//! `edge8`), never sideways or up.
 
 use std::fmt;
 

@@ -1017,6 +1017,228 @@ fn fuzzed_requests_never_kill_the_front_door() {
     server.shutdown();
 }
 
+/// `POST /v1/models/{model}/slo` edges at socket level: wrong method
+/// is 405 + `Allow: POST`, unknown models 404 naming what exists, a
+/// variant-addressed target and invalid policies are 400s, a valid
+/// ladder installs with 200 and shows up in `/v1/metrics`, and an
+/// empty body clears it — all over one keep-alive connection.
+#[test]
+fn slo_route_validates_installs_and_clears_policies() {
+    let (router, _a8, _a4, _weights) = variant_router();
+    let server = HttpServer::bind("127.0.0.1:0", router, HttpConfig::default()).unwrap();
+    let mut client = Client::connect(server.addr());
+
+    for method in ["GET", "PUT", "DELETE"] {
+        let (status, head, body) = client.request_full(method, "/v1/models/synth/slo", None);
+        assert_eq!(status, 405, "{method}: {body}");
+        assert!(head.contains("Allow: POST"), "{method}: missing Allow header in {head}");
+    }
+
+    let good = r#"{"ladder": ["a8w8", "a4w8"], "max_queue_depth": 64, "dwell_us": 100000}"#;
+    let (status, body) = client.request("POST", "/v1/models/resnet50/slo", Some(good));
+    assert_eq!(status, 404, "{body}");
+    assert!(body.contains("resnet50") && body.contains("synth"), "{body}");
+
+    // Ladders are per-model; addressing a variant is a 400, not a route.
+    let (status, body) = client.request("POST", "/v1/models/synth@a8w8/slo", Some(good));
+    assert_eq!(status, 400, "{body}");
+    assert!(body.contains("per-model"), "{body}");
+
+    // Invalid policies: bad JSON, one rung, unknown rung, rung 0 not
+    // the default, footprint increasing along the ladder.
+    for bad in [
+        "{not json",
+        r#"{"ladder": ["a8w8"], "max_queue_depth": 1}"#,
+        r#"{"ladder": ["a8w8", "int3"], "max_queue_depth": 1}"#,
+        r#"{"ladder": ["a4w8", "a8w8"], "max_queue_depth": 1}"#,
+    ] {
+        let (status, body) = client.request("POST", "/v1/models/synth/slo", Some(bad));
+        assert_eq!(status, 400, "body {bad:?}: {body}");
+    }
+
+    // A valid ladder installs synchronously and reports over metrics.
+    let (status, body) = client.request("POST", "/v1/models/synth/slo", Some(good));
+    assert_eq!(status, 200, "{body}");
+    let parsed = JsonValue::parse(&body).unwrap();
+    assert_eq!(parsed.get("status").and_then(|s| s.as_str()), Some("installed"));
+    let (status, body) = client.request("GET", "/v1/metrics", None);
+    assert_eq!(status, 200);
+    let v = JsonValue::parse(&body).unwrap();
+    let slo = v
+        .get("models")
+        .and_then(|m| m.get("synth"))
+        .and_then(|s| s.get("slo"))
+        .unwrap_or_else(|| panic!("no models.synth.slo in {body}"));
+    assert_eq!(slo.get("rung").and_then(|r| r.as_usize()), Some(0));
+    assert_eq!(slo.get("serving").and_then(|s| s.as_str()), Some("a8w8"));
+    assert_eq!(slo.get("degraded").and_then(JsonValue::as_bool), Some(false));
+    // every variant row carries the sliding-window p99 field
+    let variants = v
+        .get("models")
+        .and_then(|m| m.get("synth"))
+        .and_then(|s| s.get("variants"))
+        .and_then(JsonValue::as_array)
+        .expect("metrics variants");
+    for var in variants {
+        assert!(var.get("recent_p99_us").is_some(), "recent_p99_us missing: {body}");
+    }
+
+    // An empty body clears; metrics goes back to `"slo": null`.
+    let (status, body) = client.request("POST", "/v1/models/synth/slo", Some(""));
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("cleared"), "{body}");
+    let (status, body) = client.request("GET", "/v1/metrics", None);
+    assert_eq!(status, 200);
+    let v = JsonValue::parse(&body).unwrap();
+    let slo = v.get("models").and_then(|m| m.get("synth")).and_then(|s| s.get("slo"));
+    assert_eq!(slo, Some(&JsonValue::Null), "{body}");
+
+    // the connection survived every error path
+    let (status, _body) = client.request("GET", "/healthz", None);
+    assert_eq!(status, 200);
+    server.shutdown();
+}
+
+/// The tentpole acceptance bar over real sockets: a model whose
+/// default variant is parked past its queue-depth SLO serves new
+/// unaddressed requests from the cheaper ladder rung (echoed in the
+/// response `"variant"`) with ZERO non-2xx responses, `/v1/metrics`
+/// reports nonzero time-in-degraded-mode and transition counts, and
+/// after the backlog clears and dwell expires the default variant
+/// resumes serving.
+#[test]
+fn overloaded_model_degrades_to_cheaper_rung_then_recovers() {
+    // "full" parks inside execute() until the gate channel DROPS (recv
+    // then errors → instant forever after); "cheap" is always instant.
+    // Constant distinct logits identify which variant served each row.
+    let (gate_tx, gate_rx) = channel::<()>();
+    let (entered_tx, entered_rx) = channel::<()>();
+    let full: Box<ExecuteFn> = Box::new(move |_buf: &[f32], bsz: usize| {
+        entered_tx.send(()).ok();
+        gate_rx.recv().ok();
+        Ok(vec![1.0; bsz])
+    });
+    let cheap: Box<ExecuteFn> = Box::new(|_buf: &[f32], bsz: usize| Ok(vec![2.0; bsz]));
+    let policy = BatchPolicy {
+        max_batch: 1,
+        max_wait: Duration::from_micros(50),
+        ..BatchPolicy::default()
+    };
+    let router = Arc::new(
+        InferenceRouter::builder()
+            .model_variant_from_executors("echo", "full", 1, 1, vec![full], policy)
+            .model_variant_from_executors("echo", "cheap", 1, 1, vec![cheap], policy)
+            .build()
+            .unwrap(),
+    );
+    let server = HttpServer::bind("127.0.0.1:0", router.clone(), HttpConfig::default()).unwrap();
+    let addr = server.addr();
+
+    // Back up the full variant: one request parks its only worker, two
+    // more raise its live queue-depth gauge to 2.
+    let mut parked = Client::connect(addr);
+    parked.send("POST", "/v1/infer/echo@full", Some(r#"{"image": [1.5]}"#));
+    entered_rx.recv_timeout(Duration::from_secs(30)).expect("request never reached the shard");
+    let mut queued: Vec<Client> = (0..2)
+        .map(|_| {
+            let mut c = Client::connect(addr);
+            c.send("POST", "/v1/infer/echo@full", Some(r#"{"image": [2.5]}"#));
+            c
+        })
+        .collect();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while router.metrics("echo").unwrap().total.queue_depth < 2 {
+        assert!(Instant::now() < deadline, "queued requests never raised the depth gauge");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // Install the ladder mid-overload over the wire: depth trigger 1
+    // (breached at 2). Dwell is 500ms so the degraded-phase assertions
+    // below cannot race a premature step back up to the still-parked
+    // default; recovery happens as soon as dwell expires with the
+    // cheap rung's depth <= 1.
+    let mut client = Client::connect(addr);
+    let slo = r#"{"ladder": ["full", "cheap"], "max_queue_depth": 1,
+                  "dwell_us": 500000, "recover_margin": 1.0}"#;
+    let (status, body) = client.request("POST", "/v1/models/echo/slo", Some(slo));
+    assert_eq!(status, 200, "{body}");
+
+    // Unaddressed traffic degrades to the cheap rung: every response a
+    // 200 (degrade, not shed) echoing `"variant": "cheap"`.
+    for i in 0..4 {
+        let (status, body) =
+            client.request("POST", "/v1/infer/echo", Some(r#"{"image": [3.5]}"#));
+        assert_eq!(status, 200, "request {i} under overload must still be a 200: {body}");
+        let parsed = JsonValue::parse(&body).unwrap();
+        assert_eq!(
+            parsed.get("variant").and_then(|v| v.as_str()),
+            Some("cheap"),
+            "request {i} not served by the cheap rung: {body}"
+        );
+        assert_eq!(logits_of(&body, "logits"), vec![2.0]);
+    }
+    std::thread::sleep(Duration::from_millis(2));
+    let (status, body) = client.request("GET", "/v1/metrics", None);
+    assert_eq!(status, 200);
+    let v = JsonValue::parse(&body).unwrap();
+    let slo_view = v
+        .get("models")
+        .and_then(|m| m.get("echo"))
+        .and_then(|s| s.get("slo"))
+        .unwrap_or_else(|| panic!("no models.echo.slo in {body}"));
+    assert_eq!(slo_view.get("rung").and_then(|r| r.as_usize()), Some(1));
+    assert_eq!(slo_view.get("serving").and_then(|s| s.as_str()), Some("cheap"));
+    assert_eq!(slo_view.get("degraded").and_then(JsonValue::as_bool), Some(true));
+    assert_eq!(slo_view.get("transitions_down").and_then(|t| t.as_usize()), Some(1));
+    assert!(
+        slo_view.get("time_degraded_us").and_then(|t| t.as_usize()).unwrap() > 0,
+        "time-in-degraded-mode must be nonzero: {body}"
+    );
+
+    // Clear the overload: dropping the gate unparks the worker (recv
+    // errors from here on, so "full" is instant) and the backlog
+    // drains — the parked requests complete as normal 200s.
+    drop(gate_tx);
+    let (status, body) = parked.read_response();
+    assert_eq!(status, 200, "{body}");
+    assert_eq!(logits_of(&body, "logits"), vec![1.0]);
+    for c in &mut queued {
+        let (status, body) = c.read_response();
+        assert_eq!(status, 200, "{body}");
+        assert_eq!(logits_of(&body, "logits"), vec![1.0]);
+    }
+
+    // Once dwell expires, unaddressed traffic resumes on the default
+    // rung — still with zero non-2xx along the way.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (status, body) =
+            client.request("POST", "/v1/infer/echo", Some(r#"{"image": [4.5]}"#));
+        assert_eq!(status, 200, "recovery traffic must stay 2xx: {body}");
+        let parsed = JsonValue::parse(&body).unwrap();
+        if parsed.get("variant").and_then(|v| v.as_str()) == Some("full") {
+            assert_eq!(logits_of(&body, "logits"), vec![1.0]);
+            break;
+        }
+        assert!(Instant::now() < deadline, "ladder never recovered to the default rung");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let (status, body) = client.request("GET", "/v1/metrics", None);
+    assert_eq!(status, 200);
+    let v = JsonValue::parse(&body).unwrap();
+    let slo_view = v
+        .get("models")
+        .and_then(|m| m.get("echo"))
+        .and_then(|s| s.get("slo"))
+        .unwrap_or_else(|| panic!("no models.echo.slo in {body}"));
+    assert_eq!(slo_view.get("rung").and_then(|r| r.as_usize()), Some(0));
+    assert_eq!(slo_view.get("degraded").and_then(JsonValue::as_bool), Some(false));
+    assert!(slo_view.get("transitions_up").and_then(|t| t.as_usize()).unwrap() >= 1);
+    assert!(slo_view.get("transitions_down").and_then(|t| t.as_usize()).unwrap() >= 1);
+    assert!(slo_view.get("time_degraded_us").and_then(|t| t.as_usize()).unwrap() > 0);
+    server.shutdown();
+}
+
 #[test]
 fn poll_fallback_backend_serves_requests() {
     // Same front door forced onto the portable poll(2) backend — the
