@@ -249,6 +249,47 @@ fn slo_label(m: &JsonValue) -> Option<String> {
     ))
 }
 
+/// Per-variant auto-search marker: `⌕ ` on variants whose serving
+/// version came from policy auto-search (provenance origin `search`),
+/// so searched operating points stand out from hand-written ones.
+fn search_marker(v: &JsonValue) -> &'static str {
+    let origin = v.get("provenance").and_then(|p| p.get("origin")).and_then(JsonValue::as_str);
+    if origin == Some("search") {
+        "⌕ "
+    } else {
+        ""
+    }
+}
+
+/// One line of auto-search state for a model that has launched one:
+/// the current phase and eval progress, plus the chosen policy once
+/// the run is terminal. `None` until the first autosearch POST.
+fn autosearch_label(m: &JsonValue) -> Option<String> {
+    let a = m.get("autosearch")?;
+    if matches!(a, JsonValue::Null) {
+        return None;
+    }
+    let phase = a.get("phase").and_then(JsonValue::as_str).unwrap_or("?");
+    let mut label = format!(
+        "  autosearch: {phase} ({:.0}/{:.0} evals)",
+        num(a.get("evals_done")),
+        num(a.get("evals_planned")),
+    );
+    if let Some(out) = a.get("outcome") {
+        if let Some(display) = out.get("display").and_then(JsonValue::as_str) {
+            label.push_str(&format!(
+                " → {display} {:.2} bits/act, agreement {:.4}",
+                num(out.get("footprint_bits")),
+                num(out.get("agreement")),
+            ));
+        }
+        if let Some(err) = out.get("error").and_then(JsonValue::as_str) {
+            label.push_str(&format!(" — {err}"));
+        }
+    }
+    Some(label)
+}
+
 /// Per-variant ladder marker: the rung currently serving is tagged
 /// `nominal` (the default rung) or `degraded` (any cheaper rung);
 /// everything else — other rungs, models without a policy — is blank.
@@ -320,13 +361,17 @@ fn render(
         if let Some(label) = slo_label(m) {
             println!("{label}");
         }
+        if let Some(label) = autosearch_label(m) {
+            println!("{label}");
+        }
         if let Some(variants) = m.get("variants").and_then(JsonValue::as_array) {
             for v in variants {
                 let vname = v.get("variant").and_then(JsonValue::as_str).unwrap_or("?");
                 let vreqs = num(v.get("total").and_then(|t| t.get("requests")));
                 println!(
-                    "  {vname:<10} [{}] {vreqs:>8.0} reqs  {:.0} replica(s)  \
+                    "  {}{vname:<10} [{}] {vreqs:>8.0} reqs  {:.0} replica(s)  \
                      {:.2} bits/act  recent p99 {:>6.0} us  {}{}",
+                    search_marker(v),
                     share_bar(vreqs / model_reqs, 20),
                     num(v.get("replicas")),
                     num(v.get("footprint_bits_per_act")),

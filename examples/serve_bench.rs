@@ -6,6 +6,7 @@
 //! cargo run --release --example serve_bench -- --http-smoke [--poll-backend]
 //! cargo run --release --example serve_bench -- --reload-smoke [--poll-backend]
 //! cargo run --release --example serve_bench -- --degrade-smoke [--poll-backend]
+//! cargo run --release --example serve_bench -- --autosearch-smoke [--poll-backend]
 //! cargo run --release --example serve_bench -- --bench-json BENCH_sparq.json [--tiny]
 //! cargo run --release --example serve_bench -- --validate-report BENCH_sparq.json
 //! cargo run --release --example serve_bench -- --check-budgets \
@@ -32,8 +33,15 @@
 //! "full" rung over an instant "cheap" rung behind an SLO ladder,
 //! hammered past its queue-depth trigger — the overload must degrade
 //! to the cheap rung (zero non-2xx) and the default must resume once
-//! the load clears. `--poll-backend` forces minipoll's portable
-//! `poll(2)` event-loop backend for any of them.
+//! the load clears. `--autosearch-smoke` exercises calibration-driven
+//! policy auto-search (`sparq::search`): a tiny ranked sweep on the
+//! 3-conv demo model whose emitted policy must validate, hold its
+//! agreement floor under independent re-measurement, and strictly beat
+//! uniform A4W4; then the same search dispatched asynchronously through
+//! `POST /v1/models/{name}/autosearch` with `install: true`, asserting
+//! progress on `/v1/metrics` and search provenance on the installed
+//! variant. `--poll-backend` forces minipoll's portable `poll(2)`
+//! event-loop backend for any of them.
 //!
 //! `--bench-json <path>` runs the machine-readable perf suite — kernel
 //! (naive / blocked 1-thread / blocked parallel), engine forward,
@@ -55,20 +63,22 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context as _, Result};
 use sparq::coordinator::{
-    calibrate, BatchPolicy, HttpConfig, HttpServer, InferenceRouter, InferenceServer, LatencyHist,
+    calibrate, evaluate_policy_vs_reference, BatchPolicy, HttpConfig, HttpServer, InferenceRouter,
+    InferenceServer, LatencyHist, ReferenceTop1,
 };
 use sparq::data::Dataset;
 use sparq::json::JsonValue;
 use sparq::json_obj;
-use sparq::model::demo::synth_model;
+use sparq::model::demo::{synth_dataset, synth_model};
 use sparq::model::{threadpool, Engine, EngineMode, Graph, ModelParams, QuantGemm, Scratch};
 use sparq::observability::{
     check, http_get_json, http_post_json, time_iters, BenchReport, BenchSection, BudgetFile,
     QueueStats, Timing, SCHEMA_VERSION,
 };
-use sparq::quant::footprint::report_bits;
+use sparq::quant::footprint::{policy_bits_per_activation, report_bits};
 use sparq::quant::{QuantPolicy, SparqConfig};
 use sparq::runtime::{Manifest, PjrtRuntime};
+use sparq::search::{run as search_run, SearchConfig, AGREE_EPS};
 
 /// Everything worked.
 const EXIT_OK: i32 = 0;
@@ -84,6 +94,7 @@ struct Cli {
     smoke: bool,
     reload_smoke: bool,
     degrade_smoke: bool,
+    autosearch_smoke: bool,
     poll_backend: bool,
     tiny: bool,
     check_budgets: bool,
@@ -107,6 +118,7 @@ fn parse_cli() -> Result<Cli> {
         smoke: false,
         reload_smoke: false,
         degrade_smoke: false,
+        autosearch_smoke: false,
         poll_backend: false,
         tiny: false,
         check_budgets: false,
@@ -123,6 +135,7 @@ fn parse_cli() -> Result<Cli> {
             "--http-smoke" => cli.smoke = true,
             "--reload-smoke" => cli.reload_smoke = true,
             "--degrade-smoke" => cli.degrade_smoke = true,
+            "--autosearch-smoke" => cli.autosearch_smoke = true,
             "--poll-backend" => cli.poll_backend = true,
             "--tiny" => cli.tiny = true,
             "--check-budgets" => cli.check_budgets = true,
@@ -166,6 +179,8 @@ fn run() -> i32 {
         reload_smoke(cli.poll_backend)
     } else if cli.degrade_smoke {
         degrade_smoke(cli.poll_backend)
+    } else if cli.autosearch_smoke {
+        autosearch_smoke(cli.poll_backend)
     } else if cli.smoke {
         http_smoke(cli.poll_backend)
     } else if cli.http {
@@ -402,6 +417,36 @@ fn bench_json(path: &Path, tiny: bool, poll_backend: bool) -> Result<()> {
             p99_us: t.p99_us,
             bits_per_act: pbits,
             ..BenchSection::new(name)
+        });
+    }
+
+    // --- search section: calibration-driven auto-search on the demo
+    // model, budget-bounded so the section tracks sweep throughput
+    // (calibration rows evaluated per second across all evals), not
+    // full-search wall time. bits_per_act is the chosen policy's
+    // footprint — a quality trajectory next to the speed one. ---
+    {
+        let sgraph = Arc::new(graph.clone());
+        let swts = Arc::new(wts.clone());
+        let srows = if tiny { 32 } else { 128 };
+        let ds = synth_dataset(&sgraph, &swts, &scales, srows);
+        let scfg = SearchConfig {
+            eval_budget: if tiny { 4 } else { 12 },
+            ladder: None,
+            ..SearchConfig::default()
+        };
+        let outcome = search_run(&sgraph, &swts, &ds, &scales, &scfg)?;
+        let evals = outcome.report.evals.total();
+        let secs = outcome.report.seconds;
+        let img_s = if secs > 0.0 { (evals * srows) as f64 / secs } else { 0.0 };
+        println!(
+            "  {:<18} {img_s:>9.1} rows/s   {evals} eval(s) -> {} @ {:.2} bits/act",
+            "search_sweep", outcome.policy, outcome.footprint_bits
+        );
+        report.push(BenchSection {
+            img_per_s: img_s,
+            bits_per_act: outcome.footprint_bits,
+            ..BenchSection::new("search_sweep")
         });
     }
 
@@ -1371,6 +1416,202 @@ fn degrade_smoke(poll_backend: bool) -> Result<()> {
             "native backend"
         },
         clients * per
+    );
+    Ok(())
+}
+
+/// `--autosearch-smoke`: the policy auto-search CI leg, two halves.
+///
+/// **Library half** — a ranked `sparq::search::run` on the 3-conv demo
+/// model with the agreement floor set to uniform A4W4's own measured
+/// agreement. The emitted policy must (a) validate (`layer_plan` over
+/// the live graph), (b) hold the floor when re-measured through the
+/// independent `coordinator::eval` path, and (c) strictly beat uniform
+/// A4W4: lower footprint at no-worse agreement, or higher agreement at
+/// no-worse footprint.
+///
+/// **HTTP half** — the same subsystem dispatched asynchronously through
+/// `POST /v1/models/synth/autosearch` with `install: true` on the live
+/// demo stack: the accept is a 202, progress and the terminal outcome
+/// surface on `/v1/metrics`, and the installed default variant's
+/// `/v1/models` entry must carry `"provenance": {"origin": "search"}`
+/// with the report sha the search announced — while the front door
+/// keeps serving 200s.
+fn autosearch_smoke(poll_backend: bool) -> Result<()> {
+    let (graph, weights, scales) = synth_model();
+    let graph = Arc::new(graph);
+    let weights = Arc::new(weights);
+    let ds = synth_dataset(&graph, &weights, &scales, 512);
+
+    // Floor + comparison point: uniform A4W4, measured against the same
+    // A8W8 reference predictions the search itself uses.
+    let a8 = Engine::with_policy(
+        &graph,
+        &weights,
+        QuantPolicy::uniform(SparqConfig::A8W8),
+        &scales,
+        EngineMode::Dense,
+    )?;
+    let reference = ReferenceTop1::from_engine(&a8, &ds, graph.eval_batch, ds.n)?;
+    let run_vs_ref = |policy: QuantPolicy| -> Result<f64> {
+        Ok(evaluate_policy_vs_reference(
+            &graph,
+            &weights,
+            &ds,
+            graph.eval_batch,
+            &scales,
+            policy,
+            EngineMode::Dense,
+            &reference,
+        )?
+        .accuracy())
+    };
+    let a4w4 = QuantPolicy::named("a4w4").expect("a4w4 is a registry preset");
+    let a4_agreement = run_vs_ref(a4w4.clone())?;
+    let vols = graph.quant_act_volumes()?;
+    let fp_of = |p: &QuantPolicy| -> Result<f64> {
+        Ok(policy_bits_per_activation(&p.layer_plan(&graph)?, &vols, 1))
+    };
+    let a4_fp = fp_of(&a4w4)?;
+
+    let cfg = SearchConfig { agreement_floor: a4_agreement, ..SearchConfig::default() };
+    let out = search_run(&graph, &weights, &ds, &scales, &cfg)?;
+
+    // (a) the emitted policy validates against the live graph.
+    let plan = out.policy.layer_plan(&graph)?;
+    anyhow::ensure!(
+        plan.len() == graph.quant_convs.len(),
+        "plan covers {} of {} quantized convs",
+        plan.len(),
+        graph.quant_convs.len()
+    );
+
+    // (b) the floor holds under an independent re-measurement.
+    let re = run_vs_ref(out.policy.clone())?;
+    anyhow::ensure!(
+        re >= cfg.agreement_floor - AGREE_EPS,
+        "re-measured agreement {re:.4} fell below the floor {:.4}",
+        cfg.agreement_floor
+    );
+
+    // (c) strictly beats uniform A4W4 on one axis at no loss on the
+    // other: cheaper at no-worse agreement, or better-agreeing at
+    // no-worse footprint.
+    let searched_fp = fp_of(&out.policy)?;
+    anyhow::ensure!(
+        (searched_fp - out.footprint_bits).abs() < 1e-9,
+        "report footprint {:.4} disagrees with recomputed {searched_fp:.4}",
+        out.footprint_bits
+    );
+    let beats = (searched_fp < a4_fp - 1e-9 && re >= a4_agreement - AGREE_EPS)
+        || (searched_fp <= a4_fp + 1e-9 && re > a4_agreement + AGREE_EPS);
+    anyhow::ensure!(
+        beats,
+        "searched {} ({searched_fp:.3} bits/act, agreement {re:.4}) does not strictly beat \
+         uniform A4W4 ({a4_fp:.3} bits/act, agreement {a4_agreement:.4})",
+        out.policy
+    );
+
+    // --- HTTP half: async dispatch, metrics progress, provenance. ---
+    let (server, _router, _engine, image_len) = demo_http_stack(2, poll_backend)?;
+    let sock = server.addr();
+    let addr = sock.to_string();
+    let timeout = Duration::from_secs(10);
+    let spec = json_obj! {
+        "floor" => cfg.agreement_floor,
+        "rows" => 64usize,
+        "install" => true,
+    };
+    let accepted = http_post_json(&addr, "/v1/models/synth/autosearch", &spec, timeout)
+        .context("autosearch not accepted over the front door")?;
+    anyhow::ensure!(
+        accepted.get("status").and_then(JsonValue::as_str) == Some("accepted")
+            && accepted.get("install").and_then(JsonValue::as_bool) == Some(true),
+        "unexpected /autosearch reply: {}",
+        accepted.to_string()
+    );
+    let variant = accepted
+        .get("variant")
+        .and_then(JsonValue::as_str)
+        .context("accept reply names no variant")?
+        .to_string();
+
+    // Poll /v1/metrics until the progress cell reaches a terminal
+    // phase; the terminal snapshot carries the outcome (report sha).
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let snapshot = loop {
+        anyhow::ensure!(Instant::now() < deadline, "autosearch never reached a terminal phase");
+        let metrics = http_get_json(&addr, "/v1/metrics", timeout)?;
+        let cell = metrics
+            .get("models")
+            .and_then(|m| m.get("synth"))
+            .and_then(|m| m.get("autosearch"))
+            .cloned()
+            .unwrap_or(JsonValue::Null);
+        match cell.get("phase").and_then(JsonValue::as_str) {
+            Some("done") => break cell,
+            Some("failed") => anyhow::bail!("autosearch failed: {}", cell.to_string()),
+            _ => std::thread::sleep(Duration::from_millis(50)),
+        }
+    };
+    let announced_sha = snapshot
+        .get("outcome")
+        .and_then(|o| o.get("report_sha"))
+        .and_then(JsonValue::as_str)
+        .context("terminal autosearch snapshot carries no outcome.report_sha")?
+        .to_string();
+
+    // The worker installs after publishing Done, so poll briefly for
+    // the provenance-tagged version to land on /v1/models.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    let provenance = loop {
+        anyhow::ensure!(Instant::now() < deadline, "searched policy was never installed");
+        let models = http_get_json(&addr, "/v1/models", timeout)?;
+        let p = models
+            .get("models")
+            .and_then(|m| m.get("synth"))
+            .and_then(|m| m.get("variants"))
+            .and_then(|v| v.get(&variant))
+            .and_then(|v| v.get("provenance"))
+            .cloned()
+            .unwrap_or(JsonValue::Null);
+        if p.get("origin").and_then(JsonValue::as_str) == Some("search") {
+            break p;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    };
+    anyhow::ensure!(
+        provenance.get("report_sha").and_then(JsonValue::as_str) == Some(announced_sha.as_str()),
+        "installed provenance {} does not carry the announced report sha {announced_sha}",
+        provenance.to_string()
+    );
+    let installed_agreement = provenance
+        .get("agreement")
+        .and_then(JsonValue::as_f64)
+        .context("search provenance carries no measured agreement")?;
+    anyhow::ensure!(
+        installed_agreement >= cfg.agreement_floor - AGREE_EPS,
+        "installed agreement {installed_agreement:.4} below the requested floor"
+    );
+
+    // The front door still serves the searched generation.
+    let body = json_obj! {
+        "image" => http_image(image_len).iter().map(|&v| f64::from(v)).collect::<Vec<f64>>()
+    }
+    .to_string();
+    let (status, resp) = MiniClient::connect(sock)?.request(&infer_request("synth", &body))?;
+    anyhow::ensure!(status == 200, "post-install infer failed: {status} {resp}");
+
+    println!(
+        "autosearch smoke OK ({}): {} @ {searched_fp:.2} bits/act, agreement {re:.4} \
+         (uniform A4W4: {a4_fp:.2} bits/act @ {a4_agreement:.4}); HTTP search installed \
+         `{variant}` with provenance sha {announced_sha}",
+        if poll_backend {
+            "poll backend"
+        } else {
+            "native backend"
+        },
+        out.policy
     );
     Ok(())
 }

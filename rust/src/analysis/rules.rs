@@ -38,8 +38,9 @@ pub const RULES: &[RuleInfo] = &[
     RuleInfo {
         name: "no-panic-path",
         summary: "no .unwrap()/.expect()/panic!-family/unchecked access in non-test \
-                  code under coordinator/, observability/, crates/minipoll (a request \
-                  maps to a typed error or an HTTP status, never a worker abort)",
+                  code under coordinator/, observability/, search/, crates/minipoll \
+                  (a request maps to a typed error or an HTTP status, never a worker \
+                  abort)",
     },
     RuleInfo {
         name: "safety-comment",
@@ -71,8 +72,12 @@ pub const RULES: &[RuleInfo] = &[
 
 /// Paths (repo-root-relative, `/`-separated) where `no-panic-path`
 /// applies: the request-serving layers where a panic aborts a worker.
-const PANIC_SCOPE: &[&str] =
-    &["rust/src/coordinator/", "rust/src/observability/", "rust/crates/minipoll/"];
+const PANIC_SCOPE: &[&str] = &[
+    "rust/src/coordinator/",
+    "rust/src/observability/",
+    "rust/src/search/",
+    "rust/crates/minipoll/",
+];
 
 /// Paths where `narrowing-cast` applies: the numeric hot paths whose
 /// correctness the paper's bit-exactness claims rest on.

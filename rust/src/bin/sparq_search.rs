@@ -1,0 +1,220 @@
+//! `sparq_search` — calibration-driven policy auto-search CLI (see
+//! README "Policy auto-search" and `sparq::search`).
+//!
+//! ```text
+//! sparq_search --demo [--rows N] [flags]
+//! sparq_search --meta graph.json --weights w.npz --dataset d.npz \
+//!              --scales 0.02,0.01,... [flags]
+//!
+//! flags:
+//!   --floor F        agreement floor vs the A8W8 reference (default 0.99)
+//!   --budget N       sweep eval budget, 0 = unlimited (default 0)
+//!   --exhaustive     full grid in graph order instead of ACIQ-ranked
+//!   --no-ladder      skip SLO ladder generation
+//!   --stc            measure under the STC engine mode
+//!   --threads N      worker replicas per eval (default: all cores)
+//!   --rows N         calibration rows (demo set size; cap otherwise)
+//!   --out PATH       write the full SearchReport JSON
+//!   --policy-out PATH  write the chosen policy's wire JSON
+//! ```
+//!
+//! Exit codes: 0 success, 1 search failed, 2 bad usage/unreadable
+//! input.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use sparq::data::Dataset;
+use sparq::model::demo::{synth_dataset, synth_model};
+use sparq::model::{EngineMode, Graph, Weights};
+use sparq::search::{run, SearchConfig};
+
+struct Cli {
+    demo: bool,
+    meta: Option<PathBuf>,
+    weights: Option<PathBuf>,
+    dataset: Option<PathBuf>,
+    scales: Option<Vec<f32>>,
+    rows: Option<usize>,
+    out: Option<PathBuf>,
+    policy_out: Option<PathBuf>,
+    cfg: SearchConfig,
+}
+
+fn main() -> ExitCode {
+    let cli = match parse_args() {
+        Ok(Some(cli)) => cli,
+        Ok(None) => return ExitCode::SUCCESS, // --help
+        Err(err) => {
+            eprintln!("sparq_search: {err:#}");
+            return ExitCode::from(2);
+        }
+    };
+    match real_main(&cli) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(err) => {
+            eprintln!("sparq_search: {err:#}");
+            ExitCode::from(1)
+        }
+    }
+}
+
+fn usage() {
+    println!(
+        "usage: sparq_search --demo [--rows N] [flags]\n\
+         \x20      sparq_search --meta graph.json --weights w.npz --dataset d.npz \
+         --scales s1,s2,... [flags]\n\
+         flags: --floor F  --budget N  --exhaustive  --no-ladder  --stc  \
+         --threads N  --rows N  --out PATH  --policy-out PATH"
+    );
+}
+
+fn parse_args() -> Result<Option<Cli>> {
+    let mut cli = Cli {
+        demo: false,
+        meta: None,
+        weights: None,
+        dataset: None,
+        scales: None,
+        rows: None,
+        out: None,
+        policy_out: None,
+        cfg: SearchConfig::default(),
+    };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    let mut value = |i: &mut usize, flag: &str| -> Result<String> {
+        *i += 1;
+        args.get(*i).cloned().with_context(|| format!("{flag} needs a value"))
+    };
+    while i < args.len() {
+        match args[i].as_str() {
+            "--help" | "-h" => {
+                usage();
+                return Ok(None);
+            }
+            "--demo" => cli.demo = true,
+            "--exhaustive" => cli.cfg.ranked = false,
+            "--no-ladder" => cli.cfg.ladder = None,
+            "--stc" => cli.cfg.mode = EngineMode::Stc,
+            "--meta" => cli.meta = Some(PathBuf::from(value(&mut i, "--meta")?)),
+            "--weights" => cli.weights = Some(PathBuf::from(value(&mut i, "--weights")?)),
+            "--dataset" => cli.dataset = Some(PathBuf::from(value(&mut i, "--dataset")?)),
+            "--out" => cli.out = Some(PathBuf::from(value(&mut i, "--out")?)),
+            "--policy-out" => cli.policy_out = Some(PathBuf::from(value(&mut i, "--policy-out")?)),
+            "--scales" => {
+                let csv = value(&mut i, "--scales")?;
+                let parsed: Result<Vec<f32>, _> =
+                    csv.split(',').map(|s| s.trim().parse::<f32>()).collect();
+                cli.scales = Some(parsed.with_context(|| format!("parsing --scales `{csv}`"))?);
+            }
+            "--floor" => {
+                cli.cfg.agreement_floor =
+                    value(&mut i, "--floor")?.parse().context("parsing --floor")?;
+            }
+            "--budget" => {
+                cli.cfg.eval_budget =
+                    value(&mut i, "--budget")?.parse().context("parsing --budget")?;
+            }
+            "--threads" => {
+                cli.cfg.threads =
+                    value(&mut i, "--threads")?.parse().context("parsing --threads")?;
+            }
+            "--rows" => {
+                cli.rows = Some(value(&mut i, "--rows")?.parse().context("parsing --rows")?);
+            }
+            other => bail!("unknown argument `{other}`; see --help"),
+        }
+        i += 1;
+    }
+    if !cli.demo && (cli.meta.is_none() || cli.weights.is_none() || cli.dataset.is_none()) {
+        bail!("either --demo or all of --meta/--weights/--dataset are required; see --help");
+    }
+    Ok(Some(cli))
+}
+
+fn real_main(cli: &Cli) -> Result<()> {
+    let (graph, weights, scales, ds) = if cli.demo {
+        let (graph, weights, scales) = synth_model();
+        let rows = cli.rows.unwrap_or(256);
+        let ds = synth_dataset(&graph, &weights, &scales, rows);
+        (Arc::new(graph), Arc::new(weights), scales, ds)
+    } else {
+        // Checked in parse_args; unreachable-by-construction fallbacks
+        // keep this path panic-free anyway.
+        let (Some(meta), Some(wpath), Some(dpath)) = (&cli.meta, &cli.weights, &cli.dataset)
+        else {
+            bail!("--meta/--weights/--dataset are required without --demo");
+        };
+        let graph = Graph::load(meta)?;
+        let weights = Weights::load(wpath)?;
+        let ds = Dataset::load(dpath)?;
+        let scales = cli
+            .scales
+            .clone()
+            .with_context(|| format!("--scales required: {} activation scale(s), one per \
+                 quantized conv", graph.quant_convs.len()))?;
+        (Arc::new(graph), Arc::new(weights), scales, ds)
+    };
+    let mut cfg = cli.cfg.clone();
+    if !cli.demo {
+        cfg.rows = cli.rows.unwrap_or(0);
+    }
+
+    let outcome = run(&graph, &weights, &ds, &scales, &cfg)?;
+    let rep = &outcome.report;
+    println!(
+        "model {} — {} quantized conv(s), {} calibration rows, {} search ({} candidates)",
+        rep.model,
+        rep.layers.len(),
+        rep.rows,
+        rep.mode,
+        rep.candidates.len(),
+    );
+    println!(
+        "chosen [{}]: {}  {:.3} bits/act (A8W8: {:.3}), agreement {:.4} >= floor {:.4}",
+        rep.chosen.source,
+        outcome.policy,
+        outcome.footprint_bits,
+        outcome.baseline_footprint_bits,
+        outcome.agreement,
+        rep.agreement_floor,
+    );
+    println!(
+        "evals: {} reference + {} sweep + {} verify = {} total{} ({:.2}s)",
+        rep.evals.reference,
+        rep.evals.sweep,
+        rep.evals.verify,
+        rep.evals.total(),
+        if rep.budget_exhausted { " (budget exhausted)" } else { "" },
+        rep.seconds,
+    );
+    match &outcome.ladder {
+        Some(ladder) => {
+            println!("ladder ({} rungs):", ladder.rungs.len());
+            for rung in &ladder.rungs {
+                println!(
+                    "  {}: {}  {:.3} bits/act, agreement {:.4}",
+                    rung.name, rung.policy, rung.footprint_bits, rung.agreement
+                );
+            }
+        }
+        None => println!("ladder: not generated"),
+    }
+    println!("report sha {}", outcome.report_sha);
+
+    if let Some(path) = &cli.out {
+        std::fs::write(path, outcome.report.to_json_string())
+            .with_context(|| format!("writing report to {}", path.display()))?;
+        println!("report written to {}", path.display());
+    }
+    if let Some(path) = &cli.policy_out {
+        std::fs::write(path, outcome.policy.to_json().to_string())
+            .with_context(|| format!("writing policy to {}", path.display()))?;
+        println!("policy written to {}", path.display());
+    }
+    Ok(())
+}

@@ -25,6 +25,64 @@ impl EvalReport {
     }
 }
 
+/// Precomputed reference predictions — the "compute the reference
+/// logits once" seam for per-candidate sweeps.
+///
+/// A sensitivity sweep evaluates dozens of candidate policies against
+/// the same A8W8 reference; re-running the reference engine per
+/// candidate would dominate the sweep cost. Build this once with
+/// [`ReferenceTop1::from_engine`] (or wrap predictions you already
+/// have via [`ReferenceTop1::from_preds`]) and hand it to
+/// [`evaluate_policy_vs_reference`] / [`evaluate_engine_vs_reference`];
+/// `correct` then counts agreement with the stored predictions instead
+/// of dataset labels.
+#[derive(Clone, Debug)]
+pub struct ReferenceTop1 {
+    preds: Vec<usize>,
+}
+
+impl ReferenceTop1 {
+    /// Run `engine` over the first `limit` dataset rows and record its
+    /// top-1 predictions.
+    pub fn from_engine(engine: &Engine, ds: &Dataset, batch: usize, limit: usize) -> Result<Self> {
+        let classes = engine.graph().num_classes;
+        let n = ds.n.min(limit);
+        let mut preds = Vec::with_capacity(n);
+        let mut buf = Vec::new();
+        let mut scratch = crate::model::Scratch::default();
+        let mut start = 0usize;
+        while start < n {
+            let take = batch.min(n - start);
+            ds.batch_f32_into(start, take, &mut buf);
+            let logits = engine.forward_scratch(&buf, take, &mut scratch)?;
+            preds.extend(top1(&logits, classes));
+            start += take;
+        }
+        Ok(Self { preds })
+    }
+
+    /// Wrap predictions computed elsewhere (e.g. a traced calibration
+    /// pass that produced per-layer statistics and logits in one go).
+    pub fn from_preds(preds: Vec<usize>) -> Self {
+        Self { preds }
+    }
+
+    /// Number of rows covered; vs-reference evals score exactly this
+    /// many rows.
+    pub fn len(&self) -> usize {
+        self.preds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.preds.is_empty()
+    }
+
+    /// The stored per-row predictions.
+    pub fn preds(&self) -> &[usize] {
+        &self.preds
+    }
+}
+
 /// Per-row argmax — shared with the registry's canary shadow-compare
 /// ([`super::registry`]), so rollout agreement and eval accuracy are
 /// measured by the same machinery.
@@ -141,6 +199,36 @@ pub fn evaluate_policy_native(
     evaluate_with_engine(&engine, ds, batch, limit)
 }
 
+/// Evaluate a per-layer [`QuantPolicy`] against precomputed reference
+/// predictions instead of dataset labels — the sweep-facing twin of
+/// [`evaluate_policy_native`]. `correct / total` is then top-1
+/// *agreement* with the reference over the rows it covers.
+#[allow(clippy::too_many_arguments)]
+pub fn evaluate_policy_vs_reference(
+    graph: &Graph,
+    weights: &Weights,
+    ds: &Dataset,
+    batch: usize,
+    scales: &[f32],
+    policy: QuantPolicy,
+    mode: EngineMode,
+    reference: &ReferenceTop1,
+) -> Result<EvalReport> {
+    let engine = Engine::with_policy(graph, weights, policy, scales, mode)?;
+    evaluate_engine_vs_reference(&engine, ds, batch, reference)
+}
+
+/// Evaluate an existing engine handle against precomputed reference
+/// predictions; covers `reference.len()` rows.
+pub fn evaluate_engine_vs_reference(
+    engine: &Engine,
+    ds: &Dataset,
+    batch: usize,
+    reference: &ReferenceTop1,
+) -> Result<EvalReport> {
+    eval_engine_loop(engine, ds, batch, reference.len(), Some(reference.preds()))
+}
+
 /// Evaluate an existing engine handle — the parameter-sharing path:
 /// the engine may be a cheap replica over shared [`crate::model::ModelParams`],
 /// so nothing is cloned or re-prepared here.
@@ -150,8 +238,25 @@ pub fn evaluate_with_engine(
     batch: usize,
     limit: usize,
 ) -> Result<EvalReport> {
+    eval_engine_loop(engine, ds, batch, limit, None)
+}
+
+/// Shared eval loop: score each row's top-1 either against the dataset
+/// label (`reference = None`) or a precomputed reference prediction.
+/// Callers guarantee `reference.len() >= ds.n.min(limit)` (both public
+/// entry points derive `limit` from the reference itself).
+fn eval_engine_loop(
+    engine: &Engine,
+    ds: &Dataset,
+    batch: usize,
+    limit: usize,
+    reference: Option<&[usize]>,
+) -> Result<EvalReport> {
     let graph = engine.graph();
-    let n = ds.n.min(limit);
+    let mut n = ds.n.min(limit);
+    if let Some(r) = reference {
+        n = n.min(r.len());
+    }
     let t0 = Instant::now();
     let mut correct = 0usize;
     let mut buf = Vec::new();
@@ -164,7 +269,11 @@ pub fn evaluate_with_engine(
         ds.batch_f32_into(start, take, &mut buf);
         let logits = engine.forward_scratch(&buf, take, &mut scratch)?;
         for (i, pred) in top1(&logits, graph.num_classes).into_iter().enumerate() {
-            if pred == ds.label(start + i) {
+            let want = match reference {
+                Some(r) => r[start + i],
+                None => ds.label(start + i),
+            };
+            if pred == want {
                 correct += 1;
             }
         }
@@ -206,19 +315,37 @@ mod tests {
 
     /// The PTQ-literature ordering the policy API exists for: keeping
     /// the sensitive first/last quantized layers at 8 bits must beat
-    /// uniform 4-bit on the demo model. Labels come from the A8W8
-    /// reference itself ([`crate::model::demo::synth_dataset`]), so the
-    /// 8-bit policy scores 100% by construction, edge8's perturbation
-    /// sources (only the middle layer) are a strict subset of uniform
-    /// 4-bit's (every layer), and the run is fully deterministic.
+    /// uniform 4-bit on the demo model. The A8W8 reference predictions
+    /// are computed **once** ([`ReferenceTop1`]) and every candidate is
+    /// scored against them — the same seam the sensitivity sweep uses —
+    /// so the 8-bit policy scores 100% by construction, edge8's
+    /// perturbation sources (only the middle layer) are a strict subset
+    /// of uniform 4-bit's (every layer), and the run is deterministic.
     #[test]
     fn edge_8bit_policy_beats_uniform_4bit_on_the_demo_model() {
         use crate::model::demo::{synth_dataset, synth_model};
         use crate::quant::LayerSelector;
         let (graph, weights, scales) = synth_model();
         let ds = synth_dataset(&graph, &weights, &scales, 512);
+        let reference = {
+            let a8 = Engine::with_policy(
+                &graph,
+                &weights,
+                QuantPolicy::named("a8w8").unwrap(),
+                &scales,
+                EngineMode::Dense,
+            )
+            .unwrap();
+            let r = ReferenceTop1::from_engine(&a8, &ds, 32, ds.n).unwrap();
+            // synth_dataset labels *are* the A8W8 predictions, so the
+            // reference must reproduce them exactly.
+            let on_labels = evaluate_engine_vs_reference(&a8, &ds, 32, &r).unwrap();
+            assert_eq!(on_labels.correct, ds.n, "A8W8 must agree with itself exactly");
+            assert_eq!(r.len(), ds.n);
+            r
+        };
         let run = |policy: QuantPolicy| {
-            evaluate_policy_native(
+            evaluate_policy_vs_reference(
                 &graph,
                 &weights,
                 &ds,
@@ -226,12 +353,10 @@ mod tests {
                 &scales,
                 policy,
                 EngineMode::Dense,
-                ds.n,
+                &reference,
             )
             .unwrap()
         };
-        let a8 = run(QuantPolicy::named("a8w8").unwrap());
-        assert_eq!(a8.correct, ds.n, "A8W8 must match its own labels exactly");
         // Uniform 4-bit (activations AND weights) vs the same base with
         // the first/last quantized convs kept at 8 bits.
         let a4w4 = SparqConfig::named("a4w4").unwrap();

@@ -46,6 +46,19 @@
 //!   `null` / `{"clear": true}`) the model's SLO degradation ladder.
 //!   Installation is synchronous: **200** on success, 400 for policy
 //!   or registry validation failures, 404 for unknown models.
+//! * `POST /v1/models/{model}/autosearch` — launch a
+//!   calibration-driven policy auto-search ([`crate::search`]) against
+//!   the model's default variant. Optional body knobs: `floor`
+//!   (agreement floor, default 0.99), `budget` (sweep eval budget,
+//!   0 = unlimited), `ranked` (ACIQ-ordered visit, default true),
+//!   `rows` (calibration rows, default 256) and `install` (default
+//!   false; when true the winning policy is staged as a new generation
+//!   through the reload path, its version tagged with `"search"`
+//!   provenance). Answers **202**; the search runs on a detached
+//!   thread and its phase/eval progress plus terminal outcome appear
+//!   under the model's `"autosearch"` key on `GET /v1/metrics`.
+//!   Calibration images are synthesized against the live weights — a
+//!   stand-in until a real calibration set is wired to the server.
 //! * `GET /v1/metrics` — per-variant, per-shard and aggregate
 //!   [`RouterMetrics`](super::router::ModelMetrics) for every model,
 //!   plus the router-wide aggregate, as JSON — including each model's
@@ -83,7 +96,7 @@ use crate::json::JsonValue;
 use crate::json_obj;
 
 use super::batcher::{BatchError, PendingReply, Reply};
-use super::registry::{RolloutConfig, RolloutStatus};
+use super::registry::{RolloutConfig, RolloutStatus, VersionProvenance};
 use super::router::{InferenceRouter, ReloadSource, ReloadSpec};
 use super::slo::SloPolicy;
 use crate::quant::QuantPolicy;
@@ -588,6 +601,15 @@ fn route(router: &Arc<InferenceRouter>, cfg: &HttpConfig, req: &ParsedRequest) -
             Routed::Immediate(405, error_body(405, "SLO policy updates require POST"), Some("POST"))
         };
     }
+    if let Some(target) =
+        path.strip_prefix(MODELS_PREFIX).and_then(|r| r.strip_suffix("/autosearch"))
+    {
+        return if req.method == "POST" {
+            route_autosearch(router, target, &req.body)
+        } else {
+            Routed::Immediate(405, error_body(405, "auto-search requires POST"), Some("POST"))
+        };
+    }
     match (req.method.as_str(), path) {
         ("GET", "/healthz") => imm(200, health_json(router)),
         ("GET", "/v1/metrics") => imm(200, metrics_json(router)),
@@ -735,7 +757,165 @@ fn parse_reload_spec(body: &[u8]) -> std::result::Result<ReloadSpec, String> {
         }
         None => return Err("body must name a `source` string".to_string()),
     };
-    Ok(ReloadSpec { source, rollout })
+    Ok(ReloadSpec { source, rollout, provenance: None })
+}
+
+/// `POST /v1/models/{model}/autosearch` — launch a policy auto-search
+/// ([`crate::search`]) for the model's default variant on a detached
+/// thread, answering 202. Per-model like `/slo` (a `@variant` target is
+/// a 400): the search measures operating points for the model, not for
+/// one rung of it. Progress and the terminal outcome surface under the
+/// model's `"autosearch"` key on `GET /v1/metrics`; with
+/// `"install": true` the winning policy additionally stages as a new
+/// generation of the default variant, its version tagged with
+/// [`VersionProvenance`] `origin: "search"`.
+fn route_autosearch(router: &Arc<InferenceRouter>, target: &str, body: &[u8]) -> Routed {
+    if target.contains('@') {
+        return imm(
+            400,
+            error_body(
+                400,
+                &format!("auto-search is per-model; `{target}` must not name a variant"),
+            ),
+        );
+    }
+    let variant = match router.default_variant(target) {
+        Ok(v) => v.to_string(),
+        Err(_) => {
+            let known = router.model_names().join("`, `");
+            return imm(
+                404,
+                error_body(404, &format!("no model named `{target}` (available: `{known}`)")),
+            );
+        }
+    };
+    // The search needs the live graph/weights/scales, so an
+    // executor-backed default variant cannot be searched.
+    let version = match router.variant_version(target, &variant) {
+        Ok(Some(v)) => v,
+        Ok(None) => {
+            return imm(
+                400,
+                error_body(
+                    400,
+                    &format!(
+                        "model `{target}` default variant `{variant}` is executor-backed; \
+                         auto-search requires a params-built variant"
+                    ),
+                ),
+            );
+        }
+        Err(e) => return imm(404, error_body(404, &e.to_string())),
+    };
+    let (cfg, rows, install) = match parse_autosearch_spec(body) {
+        Ok(t) => t,
+        Err(msg) => return imm(400, error_body(400, &msg)),
+    };
+    let progress = match router.begin_autosearch(target) {
+        Ok(p) => p,
+        Err(e) => return imm(409, error_body(409, &e.to_string())),
+    };
+    let accepted = json_obj! {
+        "status" => "accepted",
+        "model" => target,
+        "variant" => variant.clone(),
+        "agreement_floor" => cfg.agreement_floor,
+        "eval_budget" => cfg.eval_budget,
+        "rows" => rows,
+        "install" => install,
+    };
+    let router = Arc::clone(router);
+    let model = target.to_string();
+    let worker_progress = Arc::clone(&progress);
+    let spawned = std::thread::Builder::new().name("sparq-autosearch".into()).spawn(move || {
+        // Terminal state (Done/Failed + outcome) lands in the progress
+        // cell; an install failure is additionally recorded on the
+        // variant's tracker by `reload_variant` itself.
+        let params = Arc::clone(&version.params);
+        let scales = params.act_scales();
+        let ds = crate::model::demo::synth_dataset(&params.graph, &params.weights, &scales, rows);
+        let cfg = crate::search::SearchConfig { mode: params.mode(), ..cfg };
+        let outcome = crate::search::run_with_progress(
+            &params.graph,
+            &params.weights,
+            &ds,
+            &scales,
+            &cfg,
+            Some(&worker_progress),
+        );
+        if let (Ok(out), true) = (outcome, install) {
+            let _ = router.reload_variant(
+                &model,
+                &variant,
+                ReloadSpec {
+                    source: ReloadSource::Policy(out.policy),
+                    // The search already measured agreement against the
+                    // A8W8 reference; an immediate swap keeps install
+                    // deterministic (operators wanting a live canary
+                    // can reload the reported policy themselves).
+                    rollout: RolloutConfig { canary_share: 0, ..RolloutConfig::default() },
+                    provenance: Some(VersionProvenance {
+                        origin: "search".to_string(),
+                        agreement: Some(out.agreement),
+                        report_sha: out.report_sha,
+                    }),
+                },
+            );
+        }
+    });
+    match spawned {
+        Ok(_) => Routed::Immediate(202, accepted, None),
+        Err(e) => {
+            // Release the claim: a cell stuck Idle would block every
+            // future search of this model.
+            progress.finish(
+                crate::search::SearchPhase::Failed,
+                json_obj! { "error" => format!("spawning auto-search thread: {e}") },
+            );
+            imm(500, error_body(500, &format!("spawning auto-search thread: {e}")))
+        }
+    }
+}
+
+/// Decode an autosearch request body: search knobs plus the row count
+/// for the synthesized calibration set and the `install` flag. An empty
+/// body runs an all-defaults search.
+fn parse_autosearch_spec(
+    body: &[u8],
+) -> std::result::Result<(crate::search::SearchConfig, usize, bool), String> {
+    let mut cfg = crate::search::SearchConfig::default();
+    let mut rows = 256usize;
+    let mut install = false;
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    if !text.trim().is_empty() {
+        let v = JsonValue::parse(text).map_err(|e| format!("invalid JSON body: {e}"))?;
+        if let Some(x) = v.get("floor") {
+            cfg.agreement_floor =
+                x.as_f64().ok_or_else(|| "`floor` must be a number".to_string())?;
+        }
+        if let Some(x) = v.get("budget") {
+            cfg.eval_budget =
+                x.as_usize().ok_or_else(|| "`budget` must be a non-negative integer".to_string())?;
+        }
+        if let Some(x) = v.get("ranked") {
+            cfg.ranked = x.as_bool().ok_or_else(|| "`ranked` must be a boolean".to_string())?;
+        }
+        if let Some(x) = v.get("rows") {
+            rows = x.as_usize().ok_or_else(|| "`rows` must be a positive integer".to_string())?;
+        }
+        if let Some(x) = v.get("install") {
+            install = x.as_bool().ok_or_else(|| "`install` must be a boolean".to_string())?;
+        }
+    }
+    if !(0.0 < cfg.agreement_floor && cfg.agreement_floor <= 1.0) {
+        return Err(format!("`floor` {} not in (0, 1]", cfg.agreement_floor));
+    }
+    // Bound the synthesized calibration set: each row costs a forward
+    // pass per measured policy.
+    if rows == 0 || rows > 65_536 {
+        return Err(format!("`rows` {rows} not in [1, 65536]"));
+    }
+    Ok((cfg, rows, install))
 }
 
 /// `POST /v1/models/{model}/slo` — install or clear the model's SLO
@@ -1044,6 +1224,10 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
                     "generation" => v.generation as usize,
                     "weights_sha" => v.weights_sha.clone(),
                     "state" => v.state.clone(),
+                    "provenance" => v
+                        .provenance
+                        .as_ref()
+                        .map_or(JsonValue::Null, VersionProvenance::to_json),
                     "rollout" => v.rollout.as_ref().map_or(JsonValue::Null, rollout_json),
                     "recent_p99_us" => v.recent_p99_us as usize,
                     "shards" => v.shards.iter().map(shard_json).collect::<Vec<JsonValue>>(),
@@ -1060,6 +1244,14 @@ fn metrics_json(router: &InferenceRouter) -> JsonValue {
                 // current rung, serving variant, time-in-degraded-mode,
                 // transition counters (null otherwise).
                 "slo" => m.slo.as_ref().map_or(JsonValue::Null, super::slo::SloStatus::to_json),
+                // Latest auto-search launched against this model:
+                // phase, eval progress, terminal outcome (null until
+                // the first POST /v1/models/{name}/autosearch).
+                "autosearch" => router
+                    .autosearch_progress(name)
+                    .ok()
+                    .flatten()
+                    .unwrap_or(JsonValue::Null),
                 "variants" => variants,
                 "shards" => shards,
                 "total" => m.total.to_json(),
@@ -1119,6 +1311,15 @@ fn models_json(router: &InferenceRouter) -> JsonValue {
                         "generation" => version.generation as usize,
                         "weights_sha" => version.weights_sha.clone(),
                         "state" => state,
+                        // Who chose this operating point: null for
+                        // hand-written/build-time parameters; for
+                        // searched variants, the origin, the agreement
+                        // measured at search time, and the report hash
+                        // tying the version to its SearchReport.
+                        "provenance" => version
+                            .provenance
+                            .as_ref()
+                            .map_or(JsonValue::Null, VersionProvenance::to_json),
                         "rollout" => rollout,
                     }
                 }

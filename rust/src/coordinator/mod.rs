@@ -130,7 +130,8 @@ pub use batcher::{
 };
 pub use calibrate::{calibrate, scales_for_policy};
 pub use eval::{
-    evaluate_native, evaluate_pjrt, evaluate_policy_native, evaluate_with_engine, EvalReport,
+    evaluate_engine_vs_reference, evaluate_native, evaluate_pjrt, evaluate_policy_native,
+    evaluate_policy_vs_reference, evaluate_with_engine, EvalReport, ReferenceTop1,
 };
 pub use http::{HttpConfig, HttpServer};
 pub use registry::{

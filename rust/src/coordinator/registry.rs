@@ -46,6 +46,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use crate::json::JsonValue;
+use crate::json_obj;
 use crate::model::ModelParams;
 
 use super::lock_recover;
@@ -56,6 +58,36 @@ pub const FIRST_GENERATION: u64 = 1;
 
 /// How many drained generation numbers to keep for reporting.
 const DRAINED_KEEP: usize = 32;
+
+/// Where a version's parameters came from — hand-written config vs
+/// policy auto-search ([`crate::search`]). Carried on the
+/// [`ModelVersion`] so `/v1/models` can answer "who chose this
+/// operating point, and what did it measure at the time?".
+#[derive(Clone, Debug, PartialEq)]
+pub struct VersionProvenance {
+    /// `"search"` for auto-searched policies; free-form otherwise
+    /// (e.g. `"reload"` for operator-driven swaps).
+    pub origin: String,
+    /// Top-1 agreement vs the A8W8 reference measured when the policy
+    /// was chosen (`None` when the origin didn't measure one).
+    pub agreement: Option<f64>,
+    /// Content hash of the [`crate::search::SearchReport`] that
+    /// produced the policy (empty when not search-generated).
+    pub report_sha: String,
+}
+
+impl VersionProvenance {
+    pub fn to_json(&self) -> JsonValue {
+        json_obj! {
+            "origin" => self.origin.clone(),
+            "agreement" => match self.agreement {
+                Some(a) => JsonValue::Number(a),
+                None => JsonValue::Null,
+            },
+            "report_sha" => self.report_sha.clone(),
+        }
+    }
+}
 
 /// One immutable published version of a variant's parameters. The
 /// registry wrapper (rather than a bare `Arc<ModelParams>`) makes drain
@@ -68,12 +100,19 @@ pub struct ModelVersion {
     /// Content hash of the weight store ([`crate::model::Weights::content_sha`]).
     pub weights_sha: String,
     pub params: Arc<ModelParams>,
+    /// How this version's parameters were chosen (`None` for
+    /// build-time parameters and untagged reloads).
+    pub provenance: Option<VersionProvenance>,
 }
 
 impl ModelVersion {
-    fn build(generation: u64, params: Arc<ModelParams>) -> Arc<Self> {
+    fn build(
+        generation: u64,
+        params: Arc<ModelParams>,
+        provenance: Option<VersionProvenance>,
+    ) -> Arc<Self> {
         let weights_sha = params.weights.content_sha();
-        Arc::new(Self { generation, weights_sha, params })
+        Arc::new(Self { generation, weights_sha, params, provenance })
     }
 }
 
@@ -85,7 +124,7 @@ pub struct VersionSlot {
 impl VersionSlot {
     /// Wrap build-time parameters as [`FIRST_GENERATION`].
     pub fn new(params: Arc<ModelParams>) -> Self {
-        Self { current: Mutex::new(ModelVersion::build(FIRST_GENERATION, params)) }
+        Self { current: Mutex::new(ModelVersion::build(FIRST_GENERATION, params, None)) }
     }
 
     /// The version new work should run on — an `Arc` clone; the caller
@@ -248,6 +287,19 @@ impl VersionTracker {
         params: Arc<ModelParams>,
         cfg: RolloutConfig,
     ) -> Result<u64> {
+        self.begin_rollout_tagged(slot, params, cfg, None)
+    }
+
+    /// [`Self::begin_rollout`] with a provenance tag attached to the
+    /// incoming version — the install path for search-generated
+    /// policies, which carry their measured agreement and report hash.
+    pub fn begin_rollout_tagged(
+        &self,
+        slot: &VersionSlot,
+        params: Arc<ModelParams>,
+        cfg: RolloutConfig,
+        provenance: Option<VersionProvenance>,
+    ) -> Result<u64> {
         if !(0.0..=1.0).contains(&cfg.promote_threshold) {
             bail!("promote_threshold {} not in [0, 1]", cfg.promote_threshold);
         }
@@ -258,7 +310,7 @@ impl VersionTracker {
         validate_staged(&slot.load().params, &params)?;
         let generation = inner.next_generation;
         inner.next_generation += 1;
-        let incoming = ModelVersion::build(generation, params);
+        let incoming = ModelVersion::build(generation, params, provenance);
         if cfg.canary_share == 0 {
             let old = slot.swap(incoming);
             inner.retired.push(old);
@@ -656,6 +708,31 @@ mod tests {
             .to_string();
         assert!(err.contains("class count"), "{err}");
         assert_eq!(slot.load().generation, FIRST_GENERATION);
+    }
+
+    #[test]
+    fn provenance_rides_the_rollout_and_serializes() {
+        let slot = VersionSlot::new(tiny_params(0));
+        assert!(slot.load().provenance.is_none(), "build-time version is untagged");
+        let tracker = VersionTracker::new();
+        let tag = VersionProvenance {
+            origin: "search".into(),
+            agreement: Some(0.993),
+            report_sha: "cbf29ce484222325".into(),
+        };
+        let cfg = RolloutConfig { canary_share: 0, ..RolloutConfig::default() };
+        tracker
+            .begin_rollout_tagged(&slot, tiny_params(1), cfg, Some(tag.clone()))
+            .unwrap();
+        let v = slot.load();
+        assert_eq!(v.provenance, Some(tag.clone()));
+        let j = tag.to_json();
+        assert_eq!(j.get("origin").and_then(JsonValue::as_str), Some("search"));
+        assert_eq!(j.get("agreement").and_then(JsonValue::as_f64), Some(0.993));
+        // untagged rollouts keep the None path
+        let gen3 = tracker.begin_rollout(&slot, tiny_params(2), cfg).unwrap();
+        assert_eq!(slot.load().generation, gen3);
+        assert!(slot.load().provenance.is_none());
     }
 
     #[test]

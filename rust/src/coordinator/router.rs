@@ -76,14 +76,17 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::json::JsonValue;
 use crate::model::{Engine, ModelParams, Scratch, Weights};
 use crate::quant::QuantPolicy;
+use crate::search::{SearchPhase, SearchProgress};
 
 use super::batcher::{
     BatchPolicy, Batcher, BatcherSnapshot, BatcherStats, ExecuteFn, PendingReply, Reply,
 };
 use super::registry::{
-    self, Dispatch, ModelVersion, RolloutConfig, RolloutStatus, VersionSlot, VersionTracker,
+    self, Dispatch, ModelVersion, RolloutConfig, RolloutStatus, VersionProvenance, VersionSlot,
+    VersionTracker,
 };
 use super::server::LatencyHist;
 use super::slo::{LadderState, PressureSample, SloPolicy, SloStatus};
@@ -188,6 +191,11 @@ struct ModelShards {
     variants: Vec<VariantShards>,
     /// Degradation-ladder state (inert unless a policy is installed).
     slo: SloCell,
+    /// Latest policy auto-search launched against this model (`None`
+    /// until the first `POST /v1/models/{name}/autosearch`). The cell
+    /// keeps the last run's progress/outcome visible on `/v1/metrics`
+    /// and serializes runs: a new search is rejected while one is live.
+    autosearch: Mutex<Option<Arc<SearchProgress>>>,
 }
 
 impl ModelShards {
@@ -282,6 +290,11 @@ pub struct VariantMetrics {
     /// Lifecycle label: `serving` / `canary` / `draining` (empty for
     /// executor-backed variants).
     pub state: String,
+    /// How the serving version's parameters were chosen (`None` for
+    /// build-time parameters, untagged reloads and executor-backed
+    /// variants) — lets dashboards mark search-generated operating
+    /// points.
+    pub provenance: Option<VersionProvenance>,
     /// Full rollout snapshot: canary progress, per-generation served
     /// counters, draining/drained versions, last outcome/error.
     pub rollout: Option<RolloutStatus>,
@@ -637,6 +650,7 @@ impl RouterBuilder {
                             param_bytes,
                             variants: vec![vs],
                             slo: SloCell::default(),
+                            autosearch: Mutex::new(None),
                         },
                     );
                 }
@@ -723,6 +737,12 @@ pub enum ReloadSource {
 pub struct ReloadSpec {
     pub source: ReloadSource,
     pub rollout: RolloutConfig,
+    /// Optional provenance tag carried onto the incoming
+    /// [`ModelVersion`] — the auto-search install path stamps
+    /// `origin: "search"` plus its measured agreement and report hash
+    /// here so `/v1/models` can tell searched variants from
+    /// hand-written ones.
+    pub provenance: Option<VersionProvenance>,
 }
 
 fn splitmix(x: u64) -> u64 {
@@ -952,6 +972,42 @@ impl InferenceRouter {
         Ok(self.variant_of(model, variant)?.tracker.as_ref().map(|t| t.status()))
     }
 
+    /// Claim the model's auto-search cell for a new run — the
+    /// programmatic face of `POST /v1/models/{name}/autosearch`. At
+    /// most one search per model may be live: a second claim while the
+    /// previous run is still in a non-terminal phase is rejected. The
+    /// returned handle is shared with the search thread (which drives
+    /// it through [`SearchPhase`](crate::search::SearchPhase)s) and
+    /// with `/v1/metrics` (which snapshots it).
+    pub fn begin_autosearch(&self, model: &str) -> Result<Arc<SearchProgress>> {
+        let ms = self.shards_of(model)?;
+        let mut cell = super::lock_recover(&ms.autosearch);
+        if let Some(prev) = cell.as_ref() {
+            // `Idle` means claimed-but-not-started (the HTTP route
+            // claims before spawning the search thread) — both block a
+            // second claim. A spawn failure marks the cell `Failed`,
+            // so a wedged claim cannot outlive its request.
+            if prev.running() || prev.phase() == SearchPhase::Idle {
+                bail!(
+                    "auto-search already in progress for model `{model}` \
+                     (phase {})",
+                    prev.phase().as_str()
+                );
+            }
+        }
+        let progress = Arc::new(SearchProgress::new());
+        *cell = Some(Arc::clone(&progress));
+        Ok(progress)
+    }
+
+    /// Snapshot of the model's latest auto-search — phase, eval
+    /// progress and (once terminal) the outcome — or `None` if no
+    /// search was ever launched. Surfaces on `/v1/metrics`.
+    pub fn autosearch_progress(&self, model: &str) -> Result<Option<JsonValue>> {
+        let ms = self.shards_of(model)?;
+        Ok(super::lock_recover(&ms.autosearch).as_ref().map(|p| p.snapshot()))
+    }
+
     /// Stage and roll out new parameters for one variant — the
     /// programmatic face of `POST /v1/models/{name}/reload`.
     ///
@@ -985,7 +1041,7 @@ impl InferenceRouter {
                 )));
             }
         };
-        match tracker.begin_rollout(slot, staged, spec.rollout) {
+        match tracker.begin_rollout_tagged(slot, staged, spec.rollout, spec.provenance) {
             Ok(generation) => Ok(generation),
             Err(e) => {
                 // Recorded on the variant so async callers (the HTTP
@@ -1151,6 +1207,7 @@ impl InferenceRouter {
                     .as_ref()
                     .map_or_else(String::new, |v| v.weights_sha.clone()),
                 state: rollout.as_ref().map_or_else(String::new, |r| r.state().to_string()),
+                provenance: version.as_ref().and_then(|v| v.provenance.clone()),
                 rollout,
                 recent_p99_us: recent.quantile_us(0.99),
                 shards: vshards,
@@ -1260,6 +1317,27 @@ mod tests {
             max_wait: Duration::from_micros(200),
             ..BatchPolicy::default()
         }
+    }
+
+    #[test]
+    fn autosearch_cell_serializes_claims_and_snapshots_progress() {
+        let router = InferenceRouter::builder()
+            .model("m", tiny_params(0), 1, quick_policy(2))
+            .build()
+            .unwrap();
+        assert!(router.begin_autosearch("ghost").is_err());
+        assert!(router.autosearch_progress("m").unwrap().is_none(), "no search launched yet");
+        let p = router.begin_autosearch("m").unwrap();
+        // claimed-but-idle and live phases both block a second claim
+        assert!(router.begin_autosearch("m").is_err());
+        p.set_phase(SearchPhase::Sweep);
+        let err = router.begin_autosearch("m").unwrap_err().to_string();
+        assert!(err.contains("phase sweep"), "{err}");
+        p.finish(SearchPhase::Done, crate::json_obj! { "ok" => true });
+        let snap = router.autosearch_progress("m").unwrap().unwrap();
+        assert_eq!(snap.get("phase").and_then(JsonValue::as_str), Some("done"));
+        // a terminal cell frees the claim for the next run
+        assert!(router.begin_autosearch("m").is_ok());
     }
 
     #[test]
@@ -1775,6 +1853,7 @@ mod tests {
                     ReloadSpec {
                         source: ReloadSource::Params(tiny_params(g as i8)),
                         rollout: RolloutConfig { canary_share: 0, ..RolloutConfig::default() },
+                        provenance: None,
                     },
                 )
                 .unwrap();
@@ -1856,7 +1935,11 @@ mod tests {
             .reload_variant(
                 "m",
                 DEFAULT_VARIANT,
-                ReloadSpec { source: ReloadSource::Params(tiny_params(0)), rollout: canary },
+                ReloadSpec {
+                    source: ReloadSource::Params(tiny_params(0)),
+                    rollout: canary,
+                    provenance: None,
+                },
             )
             .unwrap();
         assert_eq!(gen2, 2);
@@ -1883,7 +1966,11 @@ mod tests {
             .reload_variant(
                 "m",
                 DEFAULT_VARIANT,
-                ReloadSpec { source: ReloadSource::Params(inverted_params()), rollout: canary },
+                ReloadSpec {
+                    source: ReloadSource::Params(inverted_params()),
+                    rollout: canary,
+                    provenance: None,
+                },
             )
             .unwrap();
         assert_eq!(gen3, 3);
@@ -1919,6 +2006,7 @@ mod tests {
         let spec = || ReloadSpec {
             source: ReloadSource::Params(tiny_params(1)),
             rollout: RolloutConfig { canary_share: 0, ..RolloutConfig::default() },
+            provenance: None,
         };
         let exec: Box<ExecuteFn> =
             Box::new(|_buf: &[f32], bsz: usize| Ok(vec![0.0; 2 * bsz]));
@@ -1941,6 +2029,7 @@ mod tests {
                 ReloadSpec {
                     source: ReloadSource::Perturb { seed: 1, amplitude: 0 },
                     rollout: RolloutConfig::default(),
+                    provenance: None,
                 },
             )
             .unwrap_err()
@@ -2008,6 +2097,7 @@ mod tests {
                         promote_threshold: 1.0,
                         min_requests: agreeing.len() as u64,
                     },
+                    provenance: None,
                 },
             )
             .unwrap();

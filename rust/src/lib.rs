@@ -11,8 +11,9 @@
 //!   area-level hardware models ([`hw`]), a PJRT runtime ([`runtime`]),
 //!   the calibration/eval/serving coordinator ([`coordinator`]), a native
 //!   integer inference engine ([`model`]), the perf-harness /
-//!   observability subsystem ([`observability`]) and the paper's
-//!   experiment reproductions ([`experiments`]).
+//!   observability subsystem ([`observability`]), calibration-driven
+//!   policy auto-search ([`search`]) and the paper's experiment
+//!   reproductions ([`experiments`]).
 //!
 //! See DESIGN.md for the system inventory and the per-table experiment
 //! index, and EXPERIMENTS.md for measured results.
@@ -28,4 +29,5 @@ pub mod npz;
 pub mod observability;
 pub mod quant;
 pub mod runtime;
+pub mod search;
 pub mod tensor;

@@ -1,0 +1,217 @@
+//! Greedy policy composition from measured sensitivity curves.
+//!
+//! The sweep measures layers one at a time; composing every layer's
+//! cheapest passing config into one policy can still miss the floor
+//! because per-layer degradations compound. The composer starts from
+//! the optimistic all-cheapest composition and walks back: measure the
+//! composed policy, and while it misses the floor, revert the override
+//! whose single-layer curve showed the worst agreement (the layer most
+//! likely to be responsible) to A8W8 and re-measure. Every measured
+//! composition is recorded so the caller can pick a global
+//! minimum-footprint winner across the whole pool, not just the last
+//! point this walk stopped at.
+
+use anyhow::{ensure, Result};
+
+use crate::quant::{LayerSelector, QuantPolicy, SparqConfig};
+
+use super::sweep::{Candidate, LayerCurve, AGREE_EPS};
+
+/// Per-layer pick: for each layer the index (into `candidates`) of the
+/// cheapest candidate whose measured single-layer agreement meets the
+/// floor, or `None` to keep the layer at A8W8. Candidates are sorted by
+/// ascending cost, so the first passing point IS the cheapest.
+pub fn pick_from_curves(
+    curves: &[LayerCurve],
+    candidates: &[Candidate],
+    floor: f64,
+) -> Vec<Option<usize>> {
+    curves
+        .iter()
+        .map(|curve| {
+            candidates.iter().enumerate().position(|(ci, _)| {
+                matches!(curve.points.get(ci), Some(&Some(a)) if a >= floor - AGREE_EPS)
+            })
+        })
+        .collect()
+}
+
+/// Build the policy "A8W8 everywhere except the chosen overrides".
+pub fn policy_for(
+    layers: &[String],
+    candidates: &[Candidate],
+    chosen: &[Option<usize>],
+) -> Result<QuantPolicy> {
+    ensure!(chosen.len() == layers.len(), "chosen/layer length mismatch");
+    let mut b = QuantPolicy::builder(SparqConfig::A8W8);
+    for (layer, pick) in layers.iter().zip(chosen) {
+        if let Some(ci) = pick {
+            b = b.set(LayerSelector::Name(layer.clone()), candidates[*ci].cfg);
+        }
+    }
+    b.build()
+}
+
+/// One measured composition along the greedy walk.
+#[derive(Clone, Debug)]
+pub struct MeasuredComposition {
+    pub chosen: Vec<Option<usize>>,
+    pub policy: QuantPolicy,
+    pub agreement: f64,
+}
+
+/// Result of [`compose`]: the final floor-meeting composition plus
+/// every intermediate measurement (all are valid candidates for the
+/// caller's global minimum-footprint selection).
+#[derive(Clone, Debug)]
+pub struct Composition {
+    pub chosen: Vec<Option<usize>>,
+    pub policy: QuantPolicy,
+    pub agreement: f64,
+    pub measured: Vec<MeasuredComposition>,
+    /// Full-policy verification evals this walk spent.
+    pub verify_evals: usize,
+}
+
+/// Greedy compose-and-backtrack. `measure` evaluates a full policy's
+/// agreement against the shared reference and is charged one eval.
+pub fn compose<F>(
+    layers: &[String],
+    candidates: &[Candidate],
+    curves: &[LayerCurve],
+    floor: f64,
+    mut measure: F,
+) -> Result<Composition>
+where
+    F: FnMut(&QuantPolicy) -> Result<f64>,
+{
+    let mut chosen = pick_from_curves(curves, candidates, floor);
+    let mut measured = Vec::new();
+    let mut verify_evals = 0usize;
+    loop {
+        let policy = policy_for(layers, candidates, &chosen)?;
+        let agreement = measure(&policy)?;
+        verify_evals += 1;
+        measured.push(MeasuredComposition {
+            chosen: chosen.clone(),
+            policy: policy.clone(),
+            agreement,
+        });
+        if agreement >= floor - AGREE_EPS {
+            return Ok(Composition { chosen, policy, agreement, measured, verify_evals });
+        }
+        // Revert the override whose own single-layer curve was worst —
+        // compounding error is most plausibly dominated by it. Tie
+        // break: lowest layer index, for determinism.
+        let worst = chosen
+            .iter()
+            .enumerate()
+            .filter_map(|(li, pick)| {
+                pick.map(|ci| {
+                    let a = curves[li].points.get(ci).copied().flatten().unwrap_or(0.0);
+                    (li, a)
+                })
+            })
+            .min_by(|(la, aa), (lb, ab)| aa.total_cmp(ab).then(la.cmp(lb)));
+        match worst {
+            Some((li, _)) => chosen[li] = None,
+            // Nothing left to revert: the all-A8W8 policy measured
+            // below the floor, which (for floor <= 1.0 against an
+            // A8W8 reference) means the measurement itself is broken.
+            None => anyhow::bail!(
+                "greedy search exhausted reverts: A8W8 measured {:.4} below floor {:.4}",
+                measured.last().map(|m| m.agreement).unwrap_or(f64::NAN),
+                floor
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::sweep::candidate_grid;
+
+    fn curves_for(points: Vec<Vec<Option<f64>>>) -> Vec<LayerCurve> {
+        points
+            .into_iter()
+            .enumerate()
+            .map(|(i, points)| LayerCurve { layer: format!("l{i}"), points })
+            .collect()
+    }
+
+    #[test]
+    fn picks_cheapest_passing_candidate_per_layer() {
+        let candidates = candidate_grid();
+        let k = candidates.len();
+        let mut c0 = vec![None; k];
+        c0[0] = Some(0.5); // cheapest fails
+        c0[2] = Some(0.95); // first passing
+        c0[3] = Some(0.99); // later passing ignored
+        let mut c1 = vec![None; k]; // nothing measured -> keep A8W8
+        c1[0] = Some(0.1);
+        let picks = pick_from_curves(&curves_for(vec![c0, c1]), &candidates, 0.9);
+        assert_eq!(picks, vec![Some(2), None]);
+    }
+
+    #[test]
+    fn policy_for_names_overrides_and_defaults_to_a8w8() {
+        let candidates = candidate_grid();
+        let layers = vec!["q1".to_string(), "q2".to_string()];
+        let pol = policy_for(&layers, &candidates, &[Some(0), None]).unwrap();
+        let display = pol.to_string();
+        assert!(display.starts_with("A8W8["), "{display}");
+        assert!(display.contains("q1="), "{display}");
+        assert!(!display.contains("q2="), "{display}");
+    }
+
+    #[test]
+    fn compose_accepts_first_passing_measurement() {
+        let candidates = candidate_grid();
+        let k = candidates.len();
+        let layers = vec!["q1".to_string()];
+        let mut c0 = vec![None; k];
+        c0[0] = Some(1.0);
+        let out = compose(&layers, &candidates, &curves_for(vec![c0]), 0.9, |_| Ok(0.95))
+            .unwrap();
+        assert_eq!(out.verify_evals, 1);
+        assert_eq!(out.chosen, vec![Some(0)]);
+        assert!((out.agreement - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compose_reverts_worst_curve_layer_until_floor_met() {
+        let candidates = candidate_grid();
+        let k = candidates.len();
+        let layers: Vec<String> = (0..3).map(|i| format!("q{i}")).collect();
+        // all three layers picked candidate 0; q1's own curve was worst
+        let mk = |a: f64| {
+            let mut v = vec![None; k];
+            v[0] = Some(a);
+            v
+        };
+        let curves = curves_for(vec![mk(0.99), mk(0.91), mk(0.97)]);
+        // composition fails until q1 (worst) then q2 (next worst) revert
+        let mut calls = 0usize;
+        let out = compose(&layers, &candidates, &curves, 0.9, |pol| {
+            calls += 1;
+            let overrides = pol.to_string().matches('=').count();
+            Ok(if overrides <= 1 { 0.95 } else { 0.5 })
+        })
+        .unwrap();
+        assert_eq!(calls, 3);
+        assert_eq!(out.verify_evals, 3);
+        assert_eq!(out.chosen, vec![Some(0), None, None]);
+        assert_eq!(out.measured.len(), 3);
+        assert!(out.measured[0].agreement < 0.9 && out.measured[2].agreement >= 0.9);
+    }
+
+    #[test]
+    fn compose_errors_instead_of_spinning_when_measurement_is_broken() {
+        let candidates = candidate_grid();
+        let layers = vec!["q".to_string()];
+        let curves = curves_for(vec![vec![None; candidates.len()]]);
+        let err = compose(&layers, &candidates, &curves, 0.9, |_| Ok(0.0));
+        assert!(err.is_err());
+    }
+}

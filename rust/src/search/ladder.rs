@@ -1,0 +1,245 @@
+//! Auto-generated SLO degradation ladders from measured policies.
+//!
+//! Every policy the search measured (baseline, single-layer sweep
+//! points, greedy compositions) is a candidate rung. The generator
+//! keeps the Pareto frontier — descending footprint, with agreement
+//! strictly improving as footprint grows — samples it down to a bounded
+//! rung count, and emits a [`SloPolicy`] naming the rungs in the
+//! footprint order [`crate::coordinator::router::InferenceRouter::
+//! set_slo_policy`] validates (rung 0 = most expensive = serving
+//! default). Per-rung agreement costs come from the search's own
+//! measurements, never guesses.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::SloPolicy;
+use crate::json::JsonValue;
+use crate::json_obj;
+use crate::quant::QuantPolicy;
+
+/// One measured (policy, footprint, agreement) point in the search
+/// pool.
+#[derive(Clone, Debug)]
+pub struct MeasuredPolicy {
+    pub policy: QuantPolicy,
+    pub footprint_bits: f64,
+    /// Top-1 agreement vs the A8W8 reference, measured at search time.
+    pub agreement: f64,
+    /// Where the point came from: `"baseline"`, `"sweep"` or
+    /// `"composed"`.
+    pub source: &'static str,
+}
+
+/// Indices of the Pareto frontier of `pool`, ordered by **descending**
+/// footprint (the `SloPolicy` rung order). A point survives iff no
+/// other point has footprint ≤ its and agreement > its — i.e. walking
+/// down the ladder, every rung strictly trades agreement for footprint.
+pub fn pareto_frontier(pool: &[MeasuredPolicy]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..pool.len()).collect();
+    // ascending footprint; at equal footprint keep the best agreement
+    // first so the duplicate-footprint losers fail the strict filter
+    idx.sort_by(|&a, &b| {
+        pool[a]
+            .footprint_bits
+            .total_cmp(&pool[b].footprint_bits)
+            .then(pool[b].agreement.total_cmp(&pool[a].agreement))
+            .then(a.cmp(&b))
+    });
+    let mut frontier: Vec<usize> = Vec::new();
+    let mut best_agreement = f64::NEG_INFINITY;
+    for i in idx {
+        if pool[i].agreement > best_agreement {
+            best_agreement = pool[i].agreement;
+            frontier.push(i);
+        }
+    }
+    frontier.reverse(); // descending footprint = ladder rung order
+    frontier
+}
+
+/// Knobs for ladder emission. Trigger semantics are [`SloPolicy`]'s;
+/// the defaults give a queue-depth-driven ladder with a 250 ms dwell.
+#[derive(Clone, Copy, Debug)]
+pub struct LadderKnobs {
+    /// Maximum rungs to emit (frontier is subsampled down to this).
+    pub max_rungs: usize,
+    pub max_queue_depth: u64,
+    pub max_p99_us: u64,
+    pub dwell_us: u64,
+    pub recover_margin: f64,
+}
+
+impl Default for LadderKnobs {
+    fn default() -> Self {
+        Self {
+            max_rungs: 4,
+            max_queue_depth: 8,
+            max_p99_us: 0,
+            dwell_us: 250_000,
+            recover_margin: 0.5,
+        }
+    }
+}
+
+/// One emitted rung: a registerable variant name plus its measured
+/// operating point.
+#[derive(Clone, Debug)]
+pub struct LadderRung {
+    /// Variant name the rung will be registered under (`rung0` = most
+    /// expensive / highest agreement).
+    pub name: String,
+    pub policy: QuantPolicy,
+    pub footprint_bits: f64,
+    pub agreement: f64,
+}
+
+/// A generated ladder: the rung policies (to be registered as variants
+/// under their `name`s) and the [`SloPolicy`] that drives them.
+#[derive(Clone, Debug)]
+pub struct AutoLadder {
+    pub rungs: Vec<LadderRung>,
+    pub slo: SloPolicy,
+}
+
+impl AutoLadder {
+    pub fn to_json(&self) -> JsonValue {
+        let rungs: Vec<JsonValue> = self
+            .rungs
+            .iter()
+            .map(|r| {
+                json_obj! {
+                    "name" => r.name.clone(),
+                    "footprint_bits" => r.footprint_bits,
+                    "agreement" => r.agreement,
+                    "policy" => r.policy.to_json(),
+                    "display" => r.policy.to_string(),
+                }
+            })
+            .collect();
+        json_obj! {
+            "rungs" => JsonValue::Array(rungs),
+            "slo" => self.slo.to_json(),
+        }
+    }
+}
+
+/// Evenly sample `k` of `n` indices, always keeping both endpoints.
+fn sample_indices(n: usize, k: usize) -> Vec<usize> {
+    if n <= k {
+        return (0..n).collect();
+    }
+    (0..k).map(|i| i * (n - 1) / (k - 1)).collect()
+}
+
+/// Build a ladder from the measured pool. Returns `Ok(None)` when the
+/// frontier has fewer than two distinct rungs (a ladder needs somewhere
+/// to degrade *to*); errors only on nonsensical knobs.
+pub fn build_ladder(pool: &[MeasuredPolicy], knobs: &LadderKnobs) -> Result<Option<AutoLadder>> {
+    if knobs.max_rungs < 2 {
+        bail!("ladder needs max_rungs >= 2, got {}", knobs.max_rungs);
+    }
+    let frontier = pareto_frontier(pool);
+    if frontier.len() < 2 {
+        return Ok(None);
+    }
+    let picks = sample_indices(frontier.len(), knobs.max_rungs);
+    let rungs: Vec<LadderRung> = picks
+        .iter()
+        .enumerate()
+        .map(|(r, &fi)| {
+            let p = &pool[frontier[fi]];
+            LadderRung {
+                name: format!("rung{r}"),
+                policy: p.policy.clone(),
+                footprint_bits: p.footprint_bits,
+                agreement: p.agreement,
+            }
+        })
+        .collect();
+    let slo = SloPolicy::new(
+        rungs.iter().map(|r| r.name.clone()).collect(),
+        knobs.max_queue_depth,
+        knobs.max_p99_us,
+        knobs.dwell_us,
+        knobs.recover_margin,
+    )?;
+    Ok(Some(AutoLadder { rungs, slo }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::SparqConfig;
+
+    fn point(footprint: f64, agreement: f64, source: &'static str) -> MeasuredPolicy {
+        MeasuredPolicy {
+            policy: QuantPolicy::uniform(SparqConfig::A8W8),
+            footprint_bits: footprint,
+            agreement,
+            source,
+        }
+    }
+
+    #[test]
+    fn frontier_is_descending_footprint_strictly_increasing_agreement() {
+        let pool = vec![
+            point(8.0, 1.0, "baseline"),
+            point(6.0, 0.97, "sweep"),
+            point(6.5, 0.90, "sweep"),    // dominated by 6.0/0.97
+            point(4.0, 0.95, "composed"), // dominates 6.5/0.90 too
+            point(4.0, 0.80, "sweep"),    // duplicate footprint, worse
+            point(3.0, 0.70, "sweep"),
+        ];
+        let f = pareto_frontier(&pool);
+        assert_eq!(f, vec![0, 1, 3, 5]);
+        for w in f.windows(2) {
+            assert!(pool[w[0]].footprint_bits > pool[w[1]].footprint_bits);
+            assert!(pool[w[0]].agreement > pool[w[1]].agreement);
+        }
+    }
+
+    #[test]
+    fn degenerate_pool_yields_no_ladder() {
+        let knobs = LadderKnobs::default();
+        assert!(build_ladder(&[], &knobs).unwrap().is_none());
+        assert!(build_ladder(&[point(8.0, 1.0, "baseline")], &knobs).unwrap().is_none());
+        // two points where one dominates -> single-rung frontier
+        let pool = vec![point(8.0, 1.0, "baseline"), point(9.0, 0.9, "sweep")];
+        assert!(build_ladder(&pool, &knobs).unwrap().is_none());
+    }
+
+    #[test]
+    fn ladder_subsamples_to_max_rungs_keeping_endpoints() {
+        let pool: Vec<MeasuredPolicy> = (0..7)
+            .map(|i| point(8.0 - i as f64, 1.0 - 0.05 * i as f64, "sweep"))
+            .collect();
+        let knobs = LadderKnobs { max_rungs: 3, ..LadderKnobs::default() };
+        let ladder = build_ladder(&pool, &knobs).unwrap().unwrap();
+        assert_eq!(ladder.rungs.len(), 3);
+        assert_eq!(ladder.rungs[0].footprint_bits, 8.0);
+        assert_eq!(ladder.rungs[2].footprint_bits, 2.0);
+        assert_eq!(ladder.slo.ladder(), &["rung0", "rung1", "rung2"]);
+        // rung names match the SloPolicy and footprints descend
+        for w in ladder.rungs.windows(2) {
+            assert!(w[0].footprint_bits > w[1].footprint_bits);
+        }
+    }
+
+    #[test]
+    fn bad_knobs_are_rejected() {
+        let pool = vec![point(8.0, 1.0, "baseline"), point(4.0, 0.9, "sweep")];
+        let knobs = LadderKnobs { max_rungs: 1, ..LadderKnobs::default() };
+        assert!(build_ladder(&pool, &knobs).is_err());
+    }
+
+    #[test]
+    fn ladder_json_carries_measured_costs() {
+        let pool = vec![point(8.0, 1.0, "baseline"), point(4.0, 0.9, "composed")];
+        let ladder = build_ladder(&pool, &LadderKnobs::default()).unwrap().unwrap();
+        let j = ladder.to_json();
+        let rungs = j.get("rungs").and_then(JsonValue::as_array).unwrap();
+        assert_eq!(rungs.len(), 2);
+        assert_eq!(rungs[1].get("agreement").and_then(JsonValue::as_f64), Some(0.9));
+        assert!(j.get("slo").is_some());
+    }
+}

@@ -1,0 +1,736 @@
+//! Calibration-driven policy auto-search (ROADMAP "Policy auto-search").
+//!
+//! Turns a calibration set into deployable artifacts in four stages:
+//!
+//! 1. **Reference pass** — ONE traced A8W8 run over the calibration
+//!    rows yields both the reference top-1 predictions (reused by every
+//!    subsequent eval via
+//!    [`crate::coordinator::ReferenceTop1`]) and per-layer activation
+//!    histograms ([`prior::HistSink`]).
+//! 2. **ACIQ prior** ([`prior`]) — closed-form clipped-quantizer MSE
+//!    ranks layers cheap-to-degrade-first, so the measured sweep
+//!    spends its eval budget where low-bit configs are most likely to
+//!    stick.
+//! 3. **Sensitivity sweep + greedy composer** ([`sweep`], [`greedy`]) —
+//!    one-layer-dropped agreement curves over the Table 2/4 candidate
+//!    grid, then a compose-and-backtrack walk to a full policy. The
+//!    chosen policy is the minimum-`footprint_bits` point among
+//!    *everything measured* that meets the agreement floor.
+//! 4. **Auto-ladder** ([`ladder`]) — the measured pool's Pareto
+//!    frontier becomes a ready-to-install
+//!    [`SloPolicy`](crate::coordinator::SloPolicy) with measured
+//!    per-rung agreement costs.
+//!
+//! Evals are replica-parallel: each measured policy prepares its tables
+//! once ([`ModelParams::with_policy`]), then worker threads run cheap
+//! [`Engine::from_params`] replicas over disjoint row chunks on the
+//! model threadpool. Candidate control flow stays serial, so eval
+//! counts (the [`report::SearchReport`] budget accounting) are
+//! deterministic.
+//!
+//! Exposed three ways: this library API, the `sparq_search` CLI, and
+//! `POST /v1/models/{name}/autosearch` on the serving front door
+//! (async 202; progress from [`progress::SearchProgress`] on
+//! `/v1/metrics`). This module runs inside the serving process — no
+//! panic paths (enforced by `sparq_lint`).
+
+pub mod greedy;
+pub mod ladder;
+pub mod prior;
+pub mod progress;
+pub mod report;
+pub mod sweep;
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::coordinator::eval::top1;
+use crate::coordinator::ReferenceTop1;
+use crate::data::Dataset;
+use crate::model::{threadpool, Engine, EngineMode, Graph, ModelParams, Scratch, Weights};
+use crate::quant::footprint::policy_bits_per_activation;
+use crate::quant::{LayerSelector, QuantPolicy, SparqConfig};
+
+pub use ladder::{build_ladder, AutoLadder, LadderKnobs, LadderRung, MeasuredPolicy};
+pub use progress::{SearchPhase, SearchProgress};
+pub use report::{ChosenPolicy, EvalCounts, SearchReport};
+pub use sweep::{candidate_grid, Candidate, LayerCurve, AGREE_EPS};
+
+/// Bit-width the ACIQ prior is probed at (the paper's headline 4-bit
+/// operating point).
+pub const PRIOR_PROBE_BITS: u8 = 4;
+
+/// `shift_group` used for footprint reporting — matches
+/// [`crate::quant::footprint::report_bits`].
+const REPORT_SHIFT_GROUP: u32 = 1;
+
+/// Search knobs. `Default` is a ranked, unbudgeted search over the
+/// whole dataset at a 0.99 agreement floor, emitting a ladder.
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Required top-1 agreement vs the A8W8 reference, in `(0, 1]`.
+    pub agreement_floor: f64,
+    /// Sweep eval budget, 0 = unlimited. Bounds the *sweep* only; the
+    /// baseline + greedy verification evals (a handful) always run, so
+    /// a budget-exhausted search still returns a floor-meeting policy
+    /// (unswept layers just stay at A8W8).
+    pub eval_budget: usize,
+    /// true = ACIQ-ranked visit order with per-layer early accept;
+    /// false = exhaustive grid in graph order.
+    pub ranked: bool,
+    /// Calibration rows to use (0 = all of the dataset).
+    pub rows: usize,
+    /// Eval batch (0 = the graph's lowered `eval_batch`).
+    pub batch: usize,
+    /// Worker replicas per eval (0 = [`threadpool::max_threads`]).
+    pub threads: usize,
+    pub mode: EngineMode,
+    /// Ladder emission knobs; `None` skips ladder generation.
+    pub ladder: Option<LadderKnobs>,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        Self {
+            agreement_floor: 0.99,
+            eval_budget: 0,
+            ranked: true,
+            rows: 0,
+            batch: 0,
+            threads: 0,
+            mode: EngineMode::Dense,
+            ladder: Some(LadderKnobs::default()),
+        }
+    }
+}
+
+/// What a search run hands back: the deployable artifacts plus the
+/// full provenance report.
+#[derive(Clone, Debug)]
+pub struct SearchOutcome {
+    /// Minimum-footprint measured policy meeting the floor.
+    pub policy: QuantPolicy,
+    /// Its measured agreement vs the A8W8 reference.
+    pub agreement: f64,
+    pub footprint_bits: f64,
+    /// The A8W8 baseline footprint, for headline compression ratios.
+    pub baseline_footprint_bits: f64,
+    /// Generated degradation ladder (when the measured pool had ≥ 2
+    /// Pareto-frontier points and `cfg.ladder` was set).
+    pub ladder: Option<AutoLadder>,
+    pub report: SearchReport,
+    /// FNV hash of the serialized report — the provenance
+    /// `report_sha`.
+    pub report_sha: String,
+}
+
+/// Run the full search. See the module docs for the pipeline.
+pub fn run(
+    graph: &Arc<Graph>,
+    weights: &Arc<Weights>,
+    ds: &Dataset,
+    scales: &[f32],
+    cfg: &SearchConfig,
+) -> Result<SearchOutcome> {
+    run_with_progress(graph, weights, ds, scales, cfg, None)
+}
+
+/// [`run`], publishing phase/eval progress and the terminal outcome to
+/// a shared [`SearchProgress`] cell (the `/v1/metrics` view of an
+/// async search).
+pub fn run_with_progress(
+    graph: &Arc<Graph>,
+    weights: &Arc<Weights>,
+    ds: &Dataset,
+    scales: &[f32],
+    cfg: &SearchConfig,
+    progress: Option<&SearchProgress>,
+) -> Result<SearchOutcome> {
+    match run_inner(graph, weights, ds, scales, cfg, progress) {
+        Ok(out) => {
+            if let Some(p) = progress {
+                p.finish(
+                    SearchPhase::Done,
+                    crate::json_obj! {
+                        "footprint_bits" => out.footprint_bits,
+                        "agreement" => out.agreement,
+                        "display" => out.policy.to_string(),
+                        "report_sha" => out.report_sha.clone(),
+                    },
+                );
+            }
+            Ok(out)
+        }
+        Err(e) => {
+            if let Some(p) = progress {
+                p.finish(SearchPhase::Failed, crate::json_obj! { "error" => e.to_string() });
+            }
+            Err(e)
+        }
+    }
+}
+
+/// The single-layer-dropped policy the sweep measures: `layer` at the
+/// candidate config, everything else A8W8.
+fn single_override(layers: &[String], li: usize, cand: &Candidate) -> Result<QuantPolicy> {
+    QuantPolicy::builder(SparqConfig::A8W8)
+        .set(LayerSelector::Name(layers[li].clone()), cand.cfg)
+        .build()
+}
+
+/// Measure one policy's top-1 agreement vs the shared reference,
+/// replica-parallel over disjoint row chunks: tables are prepared once,
+/// each worker runs a cheap single-threaded [`Engine::from_params`]
+/// replica. Integer agreement counts make the result independent of
+/// the worker count.
+#[allow(clippy::too_many_arguments)]
+fn measure_policy(
+    graph: &Arc<Graph>,
+    weights: &Arc<Weights>,
+    ds: &Dataset,
+    scales: &[f32],
+    policy: &QuantPolicy,
+    mode: EngineMode,
+    rows: usize,
+    batch: usize,
+    threads: usize,
+    reference: &[usize],
+) -> Result<f64> {
+    let params = Arc::new(ModelParams::with_policy(
+        Arc::clone(graph),
+        Arc::clone(weights),
+        policy.clone(),
+        scales,
+        mode,
+    )?);
+    let classes = graph.num_classes;
+    let workers = threads.clamp(1, rows);
+    let chunk = rows.div_ceil(workers);
+    let mut cells: Vec<Result<usize>> = (0..workers).map(|_| Ok(0)).collect();
+    threadpool::par_units(&mut cells, 1, workers, |wi, cell| {
+        cell[0] = (|| -> Result<usize> {
+            let begin = wi * chunk;
+            let end = rows.min(begin + chunk);
+            let mut engine = Engine::from_params(Arc::clone(&params));
+            engine.set_threads(1);
+            let mut scratch = Scratch::default();
+            let mut buf = Vec::new();
+            let mut agree = 0usize;
+            let mut start = begin;
+            while start < end {
+                let take = batch.min(end - start);
+                ds.batch_f32_into(start, take, &mut buf);
+                let logits = engine.forward_scratch(&buf, take, &mut scratch)?;
+                for (i, pred) in top1(&logits, classes).into_iter().take(take).enumerate() {
+                    if pred == reference[start + i] {
+                        agree += 1;
+                    }
+                }
+                start += take;
+            }
+            Ok(agree)
+        })();
+    });
+    let mut agree = 0usize;
+    for cell in cells {
+        agree += cell?;
+    }
+    Ok(agree as f64 / rows as f64)
+}
+
+fn run_inner(
+    graph: &Arc<Graph>,
+    weights: &Arc<Weights>,
+    ds: &Dataset,
+    scales: &[f32],
+    cfg: &SearchConfig,
+    progress: Option<&SearchProgress>,
+) -> Result<SearchOutcome> {
+    let t0 = Instant::now();
+    ensure!(
+        cfg.agreement_floor > 0.0 && cfg.agreement_floor <= 1.0,
+        "agreement floor must be in (0, 1], got {}",
+        cfg.agreement_floor
+    );
+    let layers = &graph.quant_convs;
+    ensure!(!layers.is_empty(), "model has no quantized convs to search over");
+    ensure!(
+        scales.len() == layers.len(),
+        "got {} activation scales for {} quantized convs",
+        scales.len(),
+        layers.len()
+    );
+    ensure!(ds.n > 0, "calibration dataset is empty");
+    let rows = if cfg.rows == 0 { ds.n } else { cfg.rows.min(ds.n) };
+    let batch = if cfg.batch == 0 { graph.eval_batch.max(1) } else { cfg.batch };
+    let threads = if cfg.threads == 0 { threadpool::max_threads() } else { cfg.threads };
+    let candidates = candidate_grid();
+
+    // Stage 1: ONE traced A8W8 pass -> reference predictions + per-
+    // layer activation histograms. Every later eval reuses these
+    // predictions; the reference engine is never run again.
+    if let Some(p) = progress {
+        p.set_phase(SearchPhase::Reference);
+        p.set_planned(layers.len() * candidates.len());
+    }
+    let a8w8 = QuantPolicy::uniform(SparqConfig::A8W8);
+    let ref_params = Arc::new(ModelParams::with_policy(
+        Arc::clone(graph),
+        Arc::clone(weights),
+        a8w8.clone(),
+        scales,
+        cfg.mode,
+    )?);
+    let ref_engine = Engine::from_params(ref_params);
+    let mut sink = prior::HistSink::new(layers);
+    let mut preds = Vec::with_capacity(rows);
+    {
+        let mut scratch = Scratch::default();
+        let mut buf = Vec::new();
+        let mut start = 0usize;
+        while start < rows {
+            let take = batch.min(rows - start);
+            ds.batch_f32_into(start, take, &mut buf);
+            let logits = ref_engine.forward_traced_scratch(&buf, take, &mut scratch, &mut sink)?;
+            preds.extend(top1(&logits, graph.num_classes).into_iter().take(take));
+            start += take;
+        }
+    }
+    let reference = ReferenceTop1::from_preds(preds);
+
+    // Stage 2: ACIQ prior -> visit order.
+    let stats = sink.stats(scales);
+    let rel_mse = prior::relative_mse(&stats, PRIOR_PROBE_BITS);
+    let visit_order: Vec<usize> =
+        if cfg.ranked { prior::rank_layers(&rel_mse) } else { (0..layers.len()).collect() };
+
+    let mut measure = |policy: &QuantPolicy| -> Result<f64> {
+        let a = measure_policy(
+            graph,
+            weights,
+            ds,
+            scales,
+            policy,
+            cfg.mode,
+            rows,
+            batch,
+            threads,
+            reference.preds(),
+        )?;
+        if let Some(p) = progress {
+            p.add_evals(1);
+        }
+        Ok(a)
+    };
+
+    // Stage 3a: one-layer-dropped sensitivity sweep.
+    if let Some(p) = progress {
+        p.set_phase(SearchPhase::Sweep);
+    }
+    let swept = sweep::run_sweep(
+        layers,
+        &visit_order,
+        &candidates,
+        cfg.agreement_floor,
+        cfg.eval_budget,
+        cfg.ranked,
+        |li, cand| {
+            let pol = single_override(layers, li, cand)?;
+            measure(&pol)
+        },
+    )?;
+
+    // Stage 3b: baseline self-check + greedy composition.
+    if let Some(p) = progress {
+        p.set_phase(SearchPhase::Compose);
+    }
+    let baseline_agreement = measure(&a8w8)?;
+    if baseline_agreement < cfg.agreement_floor - AGREE_EPS {
+        bail!(
+            "A8W8 measured {baseline_agreement:.4} against its own reference \
+             (floor {:.4}) — the eval path is broken",
+            cfg.agreement_floor
+        );
+    }
+    let composed =
+        greedy::compose(layers, &candidates, &swept.curves, cfg.agreement_floor, &mut measure)?;
+
+    // Everything measured is a candidate operating point.
+    let vols = graph.quant_act_volumes()?;
+    let fp = |policy: &QuantPolicy| -> Result<f64> {
+        let plan = policy.layer_plan(graph)?;
+        Ok(policy_bits_per_activation(&plan, &vols, REPORT_SHIFT_GROUP))
+    };
+    let mut pool: Vec<MeasuredPolicy> = Vec::new();
+    pool.push(MeasuredPolicy {
+        footprint_bits: fp(&a8w8)?,
+        policy: a8w8,
+        agreement: baseline_agreement,
+        source: "baseline",
+    });
+    for (li, curve) in swept.curves.iter().enumerate() {
+        for (ci, point) in curve.points.iter().enumerate() {
+            if let Some(a) = point {
+                let pol = single_override(layers, li, &candidates[ci])?;
+                pool.push(MeasuredPolicy {
+                    footprint_bits: fp(&pol)?,
+                    policy: pol,
+                    agreement: *a,
+                    source: "sweep",
+                });
+            }
+        }
+    }
+    for m in &composed.measured {
+        pool.push(MeasuredPolicy {
+            footprint_bits: fp(&m.policy)?,
+            policy: m.policy.clone(),
+            agreement: m.agreement,
+            source: "composed",
+        });
+    }
+
+    // Chosen = global minimum footprint over the floor-meeting pool
+    // (tie: higher agreement, then first measured). The baseline
+    // always qualifies, so `best` is always Some.
+    let mut best: Option<usize> = None;
+    for (i, p) in pool.iter().enumerate() {
+        if p.agreement < cfg.agreement_floor - AGREE_EPS {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some(b) => {
+                p.footprint_bits < pool[b].footprint_bits - 1e-12
+                    || (p.footprint_bits <= pool[b].footprint_bits + 1e-12
+                        && p.agreement > pool[b].agreement + AGREE_EPS)
+            }
+        };
+        if better {
+            best = Some(i);
+        }
+    }
+    let Some(best) = best else {
+        bail!("no measured policy met the agreement floor {:.4}", cfg.agreement_floor);
+    };
+
+    // Stage 4: ladder over the pool's Pareto frontier.
+    let ladder = match &cfg.ladder {
+        Some(knobs) => {
+            if let Some(p) = progress {
+                p.set_phase(SearchPhase::Ladder);
+            }
+            build_ladder(&pool, knobs)?
+        }
+        None => None,
+    };
+
+    let chosen = &pool[best];
+    let report = SearchReport {
+        model: graph.arch.clone(),
+        mode: if cfg.ranked { "ranked" } else { "exhaustive" },
+        agreement_floor: cfg.agreement_floor,
+        eval_budget: cfg.eval_budget,
+        rows,
+        batch,
+        candidates: candidates.iter().map(|c| c.name).collect(),
+        layers: layers.clone(),
+        prior: stats,
+        prior_relative_mse: rel_mse,
+        visit_order: swept.visit_order.clone(),
+        curves: swept.curves.clone(),
+        evals: EvalCounts {
+            reference: 1,
+            sweep: swept.evals,
+            verify: 1 + composed.verify_evals,
+        },
+        budget_exhausted: swept.budget_exhausted,
+        chosen: ChosenPolicy {
+            policy: chosen.policy.clone(),
+            footprint_bits: chosen.footprint_bits,
+            agreement: chosen.agreement,
+            source: chosen.source,
+        },
+        ladder: ladder.clone(),
+        seconds: t0.elapsed().as_secs_f64(),
+    };
+    let report_sha = report.sha();
+    Ok(SearchOutcome {
+        policy: chosen.policy.clone(),
+        agreement: chosen.agreement,
+        footprint_bits: chosen.footprint_bits,
+        baseline_footprint_bits: pool[0].footprint_bits,
+        ladder,
+        report,
+        report_sha,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::ExecuteFn;
+    use crate::coordinator::eval::evaluate_policy_vs_reference;
+    use crate::coordinator::{BatchPolicy, InferenceRouter};
+    use crate::model::demo::{synth_dataset, synth_model};
+    use std::time::Duration;
+
+    fn quick_policy(max_batch: usize) -> BatchPolicy {
+        BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(200),
+            ..BatchPolicy::default()
+        }
+    }
+
+    /// The issue's end-to-end acceptance path on the demo model:
+    /// with the measured `edge8` agreement as the floor, the search
+    /// must emit a policy at most as expensive as `edge8` that still
+    /// meets the floor when re-measured independently; the ranked
+    /// search must spend strictly fewer sweep evals than the
+    /// exhaustive grid; and the generated ladder must install cleanly
+    /// on a live router serving engine-backed rung variants.
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn search_meets_the_edge8_floor_with_fewer_evals_and_a_ladder() {
+        let (graph, weights, scales) = synth_model();
+        let graph = Arc::new(graph);
+        let weights = Arc::new(weights);
+        let ds = synth_dataset(&graph, &weights, &scales, 256);
+
+        // Measure the hand-written edge8 preset against the A8W8
+        // reference: that's the floor the search must match at no
+        // greater footprint.
+        let a8 = Engine::with_policy(
+            &graph,
+            &weights,
+            QuantPolicy::uniform(SparqConfig::A8W8),
+            &scales,
+            EngineMode::Dense,
+        )
+        .unwrap();
+        let reference = ReferenceTop1::from_engine(&a8, &ds, graph.eval_batch, ds.n).unwrap();
+        let edge8 = QuantPolicy::named("edge8").unwrap();
+        let run_vs_ref = |policy: QuantPolicy| {
+            evaluate_policy_vs_reference(
+                &graph,
+                &weights,
+                &ds,
+                graph.eval_batch,
+                &scales,
+                policy,
+                EngineMode::Dense,
+                &reference,
+            )
+            .unwrap()
+        };
+        let floor = run_vs_ref(edge8.clone()).accuracy();
+        let vols = graph.quant_act_volumes().unwrap();
+        let edge8_fp = policy_bits_per_activation(
+            &edge8.layer_plan(&graph).unwrap(),
+            &vols,
+            REPORT_SHIFT_GROUP,
+        );
+
+        let cfg = SearchConfig { agreement_floor: floor, ..SearchConfig::default() };
+        let ranked = run(&graph, &weights, &ds, &scales, &cfg).unwrap();
+
+        // Footprint no worse than the hand-written policy; agreement
+        // holds up under an independent re-measurement.
+        assert!(
+            ranked.footprint_bits <= edge8_fp + 1e-9,
+            "searched footprint {} must not exceed edge8's {edge8_fp}",
+            ranked.footprint_bits
+        );
+        let re = run_vs_ref(ranked.policy.clone());
+        assert!(
+            re.accuracy() >= floor - AGREE_EPS,
+            "re-measured agreement {} fell below the floor {floor}",
+            re.accuracy()
+        );
+        assert!(ranked.policy.layer_plan(&graph).is_ok());
+        assert!((ranked.baseline_footprint_bits - 8.0).abs() < 1e-9);
+
+        // Report bookkeeping: one reference pass, deterministic eval
+        // counters, chosen provenance consistent with the outcome.
+        let rep = &ranked.report;
+        assert_eq!(rep.mode, "ranked");
+        assert_eq!(rep.evals.reference, 1);
+        assert!(!rep.budget_exhausted);
+        assert_eq!(rep.chosen.footprint_bits, ranked.footprint_bits);
+        assert_eq!(ranked.report_sha.len(), 16);
+
+        // Same floor, exhaustive grid: must sweep every (layer,
+        // candidate) cell, and the ranked search must have spent
+        // strictly fewer sweep evals under the same (unlimited)
+        // budget.
+        let ex_cfg = SearchConfig { ranked: false, ..cfg.clone() };
+        let exhaustive = run(&graph, &weights, &ds, &scales, &ex_cfg).unwrap();
+        assert_eq!(
+            exhaustive.report.evals.sweep,
+            graph.quant_convs.len() * candidate_grid().len()
+        );
+        assert!(
+            ranked.report.evals.sweep < exhaustive.report.evals.sweep,
+            "ranked sweep ({}) must beat exhaustive ({})",
+            ranked.report.evals.sweep,
+            exhaustive.report.evals.sweep
+        );
+        assert!(exhaustive.footprint_bits <= edge8_fp + 1e-9);
+
+        // The generated ladder installs on a live router whose rungs
+        // are real engine-backed variants built from the rung
+        // policies (rung 0 = the most expensive = serving default).
+        let ladder =
+            ranked.ladder.as_ref().expect("demo-model search must yield >= 2 frontier points");
+        assert!(ladder.rungs.len() >= 2);
+        let mut b = InferenceRouter::builder();
+        for rung in &ladder.rungs {
+            let params = Arc::new(
+                ModelParams::with_policy(
+                    Arc::clone(&graph),
+                    Arc::clone(&weights),
+                    rung.policy.clone(),
+                    &scales,
+                    EngineMode::Dense,
+                )
+                .unwrap(),
+            );
+            b = b.model_variant("m", &rung.name, params, 1, quick_policy(2));
+        }
+        let router = b.build().unwrap();
+        router.set_slo_policy("m", Some(ladder.slo.clone())).unwrap();
+        assert_eq!(router.serving_variant("m").unwrap(), ladder.rungs[0].name);
+        assert!(router.slo_status("m").unwrap().is_some());
+        router.set_slo_policy("m", None).unwrap();
+    }
+
+    /// The auto-generated [`SloPolicy`] drives the existing ladder
+    /// harness end to end: installed mid-overload on a live router it
+    /// degrades to the cheap rung, accumulates degraded time, and
+    /// recovers to the default rung after the backlog drains and dwell
+    /// expires. (Executor-backed rungs give the harness controlled
+    /// speed; the rung names come from the generator.)
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn generated_ladder_degrades_and_recovers_on_a_live_router() {
+        use std::sync::mpsc::channel;
+        let pool = vec![
+            MeasuredPolicy {
+                policy: QuantPolicy::named("a8w8").unwrap(),
+                footprint_bits: 8.0,
+                agreement: 1.0,
+                source: "baseline",
+            },
+            MeasuredPolicy {
+                policy: QuantPolicy::named("a4w8").unwrap(),
+                footprint_bits: 4.0,
+                agreement: 0.95,
+                source: "composed",
+            },
+        ];
+        let knobs = LadderKnobs {
+            max_rungs: 2,
+            max_queue_depth: 1,
+            max_p99_us: 0,
+            dwell_us: 30_000,
+            recover_margin: 1.0,
+        };
+        let ladder = build_ladder(&pool, &knobs).unwrap().unwrap();
+        assert_eq!(ladder.slo.ladder(), &["rung0", "rung1"]);
+
+        let (gate_tx, gate_rx) = channel::<()>();
+        let (entered_tx, entered_rx) = channel::<()>();
+        // rung0 parks inside execute() until the gate drops; rung1
+        // answers immediately. Distinct constant logits tell us who
+        // served each request.
+        let full: Box<ExecuteFn> = Box::new(move |_buf: &[f32], bsz: usize| {
+            entered_tx.send(()).ok();
+            gate_rx.recv().ok();
+            Ok(vec![1.0; bsz])
+        });
+        let cheap: Box<ExecuteFn> = Box::new(|_buf: &[f32], bsz: usize| Ok(vec![2.0; bsz]));
+        let router = Arc::new(
+            InferenceRouter::builder()
+                .model_variant_from_executors("m", "rung0", 1, 1, vec![full], quick_policy(1))
+                .model_variant_from_executors("m", "rung1", 1, 1, vec![cheap], quick_policy(1))
+                .build()
+                .unwrap(),
+        );
+        // Back up rung0: one in-flight request parks its only worker,
+        // two pinned queued requests raise its depth gauge past the
+        // generated trigger (max_queue_depth 1).
+        let r0 = router.clone();
+        let inflight = std::thread::spawn(move || r0.infer_on("m", 0, vec![0.0]).unwrap());
+        entered_rx.recv().unwrap();
+        let queued: Vec<_> = (0..2)
+            .map(|_| {
+                let r = router.clone();
+                std::thread::spawn(move || r.infer_on("m", 0, vec![0.0]).unwrap())
+            })
+            .collect();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while router.metrics("m").unwrap().shards[0].batcher.queue_depth < 2 {
+            assert!(Instant::now() < deadline, "queued requests never raised the gauge");
+            std::thread::yield_now();
+        }
+        router.set_slo_policy("m", Some(ladder.slo.clone())).unwrap();
+        // First unaddressed request samples the breach (first
+        // transition is dwell-exempt) and serves the cheap rung.
+        for i in 0..3 {
+            let reply = router.infer("m", vec![i as f32]).unwrap();
+            assert_eq!(reply.logits, vec![2.0], "request {i} not served by the cheap rung");
+        }
+        assert_eq!(router.serving_variant("m").unwrap(), "rung1");
+        let st = router.slo_status("m").unwrap().unwrap();
+        assert!(st.degraded && st.rung == 1 && st.serving == "rung1", "{st:?}");
+        // Drain the backlog and let dwell expire: the ladder steps
+        // back to the generated default rung.
+        drop(gate_tx);
+        assert_eq!(inflight.join().unwrap().logits, vec![1.0]);
+        for q in queued {
+            assert_eq!(q.join().unwrap().logits, vec![1.0]);
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let reply = router.infer("m", vec![9.0]).unwrap();
+            if reply.logits == vec![1.0] {
+                break;
+            }
+            assert!(Instant::now() < deadline, "ladder never recovered to the default rung");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(router.serving_variant("m").unwrap(), "rung0");
+        let st = router.slo_status("m").unwrap().unwrap();
+        assert!(!st.degraded && st.rung == 0, "{st:?}");
+        assert!(st.transitions_down >= 1 && st.transitions_up >= 1, "{st:?}");
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)]
+    fn nonsensical_floors_and_budget_exhaustion_behave() {
+        let (graph, weights, scales) = synth_model();
+        let graph = Arc::new(graph);
+        let weights = Arc::new(weights);
+        let ds = synth_dataset(&graph, &weights, &scales, 8);
+        for floor in [0.0, -0.5, 1.5] {
+            let cfg = SearchConfig { agreement_floor: floor, ..SearchConfig::default() };
+            assert!(run(&graph, &weights, &ds, &scales, &cfg).is_err(), "floor {floor}");
+        }
+        // A 2-eval budget exhausts mid-sweep but still returns a
+        // floor-meeting policy (unswept layers stay at A8W8).
+        let cfg = SearchConfig {
+            agreement_floor: 1.0,
+            eval_budget: 2,
+            ladder: None,
+            ..SearchConfig::default()
+        };
+        let out = run(&graph, &weights, &ds, &scales, &cfg).unwrap();
+        assert!(out.report.budget_exhausted);
+        assert_eq!(out.report.evals.sweep, 2);
+        assert!(out.agreement >= 1.0 - AGREE_EPS);
+        assert!(out.ladder.is_none());
+    }
+}

@@ -1,0 +1,181 @@
+//! ACIQ prior pass: per-layer activation statistics from ONE traced
+//! A8W8 reference run, turned into a predicted-degradation ranking.
+//!
+//! The reference pass the sweep needs anyway
+//! ([`crate::coordinator::eval::ReferenceTop1`]) is run with a
+//! [`HistSink`] attached, so one forward sweep over the calibration
+//! rows yields both the reference predictions *and* a 256-bin histogram
+//! of every layer's uniform-quantized activations. From the histogram
+//! we estimate the Laplace scale `b` (mean absolute value — for
+//! post-ReLU tensors simply the mean, exactly like the calibration
+//! HLO) and the observed maximum, then score each layer with ACIQ's
+//! closed-form clipped-quantizer MSE
+//! ([`crate::quant::baselines::aciq::laplace_clip_mse`]) at a 4-bit
+//! probe. Layers with LOW predicted relative MSE are cheap to degrade;
+//! the ranked search visits them first so its eval budget is spent
+//! where low-bit configs are most likely to stick.
+
+use std::collections::HashMap;
+
+use crate::model::TraceSink;
+use crate::quant::baselines::aciq;
+
+/// Per-layer activation statistics reduced from a [`HistSink`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayerStats {
+    /// Mean absolute activation (== mean for post-ReLU tensors) — the
+    /// ACIQ Laplace `b` estimate.
+    pub mean_abs: f32,
+    /// Observed maximum (top non-empty histogram bin, de-quantized).
+    pub max: f32,
+    /// Mean squared activation — normalizes the MSE prediction so the
+    /// ranking compares noise-to-signal, not absolute noise.
+    pub mean_sq: f32,
+    /// Number of recorded activation samples.
+    pub samples: u64,
+}
+
+/// [`TraceSink`] accumulating one 256-bin histogram of the uniform-
+/// quantized (untrimmed) im2col activations per quantized conv.
+pub struct HistSink {
+    index: HashMap<String, usize>,
+    hists: Vec<[u64; 256]>,
+}
+
+impl HistSink {
+    /// One histogram per layer, `layers` order (`graph.quant_convs`).
+    pub fn new(layers: &[String]) -> Self {
+        Self {
+            index: layers.iter().enumerate().map(|(i, n)| (n.clone(), i)).collect(),
+            hists: vec![[0u64; 256]; layers.len()],
+        }
+    }
+
+    /// Reduce the histograms to per-layer statistics. `scales` is the
+    /// activation-scale vector (`graph.quant_convs` order): bin `q`
+    /// de-quantizes to `q * scale`.
+    pub fn stats(&self, scales: &[f32]) -> Vec<LayerStats> {
+        self.hists
+            .iter()
+            .zip(scales.iter().chain(std::iter::repeat(&0.0)))
+            .map(|(hist, &scale)| {
+                let mut samples = 0u64;
+                let mut sum = 0f64;
+                let mut sum_sq = 0f64;
+                let mut max_q = 0usize;
+                for (q, &count) in hist.iter().enumerate() {
+                    if count == 0 {
+                        continue;
+                    }
+                    samples += count;
+                    let v = q as f64 * f64::from(scale);
+                    sum += v * count as f64;
+                    sum_sq += v * v * count as f64;
+                    max_q = q;
+                }
+                let n = samples.max(1) as f64;
+                LayerStats {
+                    mean_abs: (sum / n) as f32,
+                    max: max_q as f32 * scale,
+                    mean_sq: (sum_sq / n) as f32,
+                    samples,
+                }
+            })
+            .collect()
+    }
+}
+
+impl TraceSink for HistSink {
+    fn record(&mut self, layer: &str, acts_q: &[u8]) {
+        if let Some(&i) = self.index.get(layer) {
+            let hist = &mut self.hists[i];
+            for &q in acts_q {
+                hist[usize::from(q)] += 1;
+            }
+        }
+    }
+}
+
+/// Predicted *relative* clipping MSE per layer at `probe_bits`:
+/// `laplace_clip_mse(alpha*, b, bits) / E[x^2]`. The normalization
+/// makes the prediction scale-free (absolute ACIQ MSE grows with `b^2`,
+/// which would just rank layers by activation magnitude); differences
+/// between layers then come from how hard the observed maximum caps
+/// the optimal clip.
+pub fn relative_mse(stats: &[LayerStats], probe_bits: u8) -> Vec<f32> {
+    stats
+        .iter()
+        .map(|st| {
+            let b = st.mean_abs.max(f32::MIN_POSITIVE);
+            let alpha = (aciq::alpha_over_b(probe_bits) * b).min(st.max.max(f32::MIN_POSITIVE));
+            aciq::laplace_clip_mse(alpha, b, probe_bits) / st.mean_sq.max(f32::MIN_POSITIVE)
+        })
+        .collect()
+}
+
+/// Visit order for the ranked sweep: ascending predicted relative MSE
+/// (cheapest-to-degrade layers first), layer index as the deterministic
+/// tie-break.
+pub fn rank_layers(relative_mse: &[f32]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..relative_mse.len()).collect();
+    order.sort_by(|&a, &b| relative_mse[a].total_cmp(&relative_mse[b]).then(a.cmp(&b)));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_sink_accumulates_only_known_layers() {
+        let layers = vec!["q1".to_string(), "q2".to_string()];
+        let mut sink = HistSink::new(&layers);
+        sink.record("q1", &[0, 0, 255]);
+        sink.record("q2", &[10, 10]);
+        sink.record("ghost", &[7; 100]);
+        let stats = sink.stats(&[1.0, 0.5]);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].samples, 3);
+        assert_eq!(stats[1].samples, 2);
+        // q1: mean of {0, 0, 255} at scale 1.0
+        assert!((stats[0].mean_abs - 85.0).abs() < 1e-3);
+        assert_eq!(stats[0].max, 255.0);
+        // q2: all mass at bin 10, scale 0.5 -> value 5.0
+        assert!((stats[1].mean_abs - 5.0).abs() < 1e-6);
+        assert!((stats[1].mean_sq - 25.0).abs() < 1e-4);
+        assert_eq!(stats[1].max, 5.0);
+    }
+
+    #[test]
+    fn empty_histogram_yields_zero_stats_not_nan() {
+        let sink = HistSink::new(&["q".to_string()]);
+        let st = sink.stats(&[0.02])[0];
+        assert_eq!(st.samples, 0);
+        assert_eq!(st.mean_abs, 0.0);
+        assert_eq!(st.max, 0.0);
+        let mse = relative_mse(&[st], 4);
+        assert!(mse[0].is_finite());
+    }
+
+    /// A heavy-tailed layer (max >> mean, so the clip caps far below
+    /// the tail) must rank as MORE expensive to degrade than a compact
+    /// one when the compact layer's range is fully covered.
+    #[test]
+    fn ranking_is_ascending_and_deterministic() {
+        let mse = vec![0.3f32, 0.1, 0.3, 0.05];
+        assert_eq!(rank_layers(&mse), vec![3, 1, 0, 2]);
+    }
+
+    #[test]
+    fn relative_mse_is_scale_free_until_the_cap_bites() {
+        // Same shape at 10x the scale: identical relative MSE.
+        let a = LayerStats { mean_abs: 1.0, max: 20.0, mean_sq: 2.0, samples: 100 };
+        let b = LayerStats { mean_abs: 10.0, max: 200.0, mean_sq: 200.0, samples: 100 };
+        let mse = relative_mse(&[a, b], 4);
+        assert!((mse[0] - mse[1]).abs() / mse[0] < 1e-4, "{mse:?}");
+        // Capping the max below alpha* changes the prediction.
+        let capped = LayerStats { mean_abs: 1.0, max: 1.5, mean_sq: 2.0, samples: 100 };
+        let mse2 = relative_mse(&[a, capped], 4);
+        assert!(mse2[0] != mse2[1]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Lock-light progress cell for async (HTTP-staged) searches.
+//!
+//! `POST /v1/models/{name}/autosearch` answers 202 and runs the search
+//! on a detached thread; `/v1/metrics` polls this cell for phase and
+//! eval counts without blocking the search. Counters are relaxed
+//! atomics — the metrics view is a monitoring snapshot, not a
+//! synchronization point — and only the terminal outcome goes through a
+//! mutex (via [`crate::coordinator::lock_recover`], so a panicking
+//! search thread degrades the cell instead of poisoning the metrics
+//! path).
+
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::coordinator::lock_recover;
+use crate::json::JsonValue;
+use crate::json_obj;
+
+/// Search lifecycle phase, encoded as a `u8` for the atomic cell.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SearchPhase {
+    Idle,
+    Reference,
+    Sweep,
+    Compose,
+    Ladder,
+    Done,
+    Failed,
+}
+
+impl SearchPhase {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SearchPhase::Idle => "idle",
+            SearchPhase::Reference => "reference",
+            SearchPhase::Sweep => "sweep",
+            SearchPhase::Compose => "compose",
+            SearchPhase::Ladder => "ladder",
+            SearchPhase::Done => "done",
+            SearchPhase::Failed => "failed",
+        }
+    }
+
+    fn from_u8(v: u8) -> Self {
+        match v {
+            1 => SearchPhase::Reference,
+            2 => SearchPhase::Sweep,
+            3 => SearchPhase::Compose,
+            4 => SearchPhase::Ladder,
+            5 => SearchPhase::Done,
+            6 => SearchPhase::Failed,
+            _ => SearchPhase::Idle,
+        }
+    }
+}
+
+/// Shared progress cell: the search thread writes, metrics readers
+/// snapshot.
+#[derive(Default)]
+pub struct SearchProgress {
+    phase: AtomicU8,
+    evals_done: AtomicUsize,
+    evals_planned: AtomicUsize,
+    outcome: Mutex<Option<JsonValue>>,
+}
+
+impl SearchProgress {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set_phase(&self, phase: SearchPhase) {
+        self.phase.store(phase as u8, Ordering::Relaxed);
+    }
+
+    pub fn phase(&self) -> SearchPhase {
+        SearchPhase::from_u8(self.phase.load(Ordering::Relaxed))
+    }
+
+    /// True while a search owns this cell (not yet done or failed).
+    pub fn running(&self) -> bool {
+        !matches!(self.phase(), SearchPhase::Idle | SearchPhase::Done | SearchPhase::Failed)
+    }
+
+    pub fn add_evals(&self, n: usize) {
+        self.evals_done.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn set_planned(&self, n: usize) {
+        self.evals_planned.store(n, Ordering::Relaxed);
+    }
+
+    /// Record the terminal outcome (chosen-policy summary on success,
+    /// an `{"error": ...}` object on failure) and flip the phase.
+    pub fn finish(&self, phase: SearchPhase, outcome: JsonValue) {
+        *lock_recover(&self.outcome) = Some(outcome);
+        self.set_phase(phase);
+    }
+
+    /// Monitoring snapshot for `/v1/metrics`.
+    pub fn snapshot(&self) -> JsonValue {
+        let mut obj = json_obj! {
+            "phase" => self.phase().as_str(),
+            "evals_done" => self.evals_done.load(Ordering::Relaxed),
+            "evals_planned" => self.evals_planned.load(Ordering::Relaxed),
+        };
+        if let Some(out) = lock_recover(&self.outcome).clone() {
+            if let JsonValue::Object(ref mut m) = obj {
+                m.insert("outcome".to_string(), out);
+            }
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_roundtrips_through_the_atomic() {
+        let p = SearchProgress::new();
+        assert_eq!(p.phase(), SearchPhase::Idle);
+        assert!(!p.running());
+        for ph in [
+            SearchPhase::Reference,
+            SearchPhase::Sweep,
+            SearchPhase::Compose,
+            SearchPhase::Ladder,
+        ] {
+            p.set_phase(ph);
+            assert_eq!(p.phase(), ph);
+            assert!(p.running());
+        }
+        p.set_phase(SearchPhase::Done);
+        assert!(!p.running());
+    }
+
+    #[test]
+    fn snapshot_reports_counters_and_terminal_outcome() {
+        let p = SearchProgress::new();
+        p.set_planned(40);
+        p.add_evals(3);
+        p.add_evals(2);
+        let s = p.snapshot();
+        assert_eq!(s.get("phase").and_then(JsonValue::as_str), Some("idle"));
+        assert_eq!(s.get("evals_done").and_then(JsonValue::as_f64), Some(5.0));
+        assert_eq!(s.get("evals_planned").and_then(JsonValue::as_f64), Some(40.0));
+        assert!(s.get("outcome").is_none());
+        p.finish(SearchPhase::Done, json_obj! { "ok" => true });
+        let s = p.snapshot();
+        assert_eq!(s.get("phase").and_then(JsonValue::as_str), Some("done"));
+        assert_eq!(
+            s.get("outcome").and_then(|o| o.get("ok")).and_then(JsonValue::as_bool),
+            Some(true)
+        );
+    }
+}

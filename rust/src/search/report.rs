@@ -1,0 +1,261 @@
+//! JSON-serializable provenance record for one search run.
+//!
+//! The report is the audit trail behind a searched policy: what was
+//! swept, in what order, what each eval measured, how many evals were
+//! paid, and which measured point was chosen. Its FNV content hash is
+//! the `report_sha` threaded into variant provenance, so a serving
+//! variant can always be traced back to the exact search that produced
+//! it.
+
+use crate::json::JsonValue;
+use crate::json_obj;
+use crate::quant::QuantPolicy;
+
+use super::ladder::AutoLadder;
+use super::prior::LayerStats;
+use super::sweep::LayerCurve;
+
+/// Wire-format version tag.
+pub const REPORT_VERSION: &str = "sparq-search/1";
+
+/// Eval accounting. The acceptance property "ranked spends strictly
+/// fewer evals than exhaustive" is asserted directly on these counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalCounts {
+    /// Reference passes (always 1 — computed once, reused throughout).
+    pub reference: usize,
+    /// Single-layer sweep evals.
+    pub sweep: usize,
+    /// Full-policy verification evals (baseline + greedy walk).
+    pub verify: usize,
+}
+
+impl EvalCounts {
+    pub fn total(&self) -> usize {
+        self.reference + self.sweep + self.verify
+    }
+}
+
+/// The chosen operating point and where it came from.
+#[derive(Clone, Debug)]
+pub struct ChosenPolicy {
+    pub policy: QuantPolicy,
+    pub footprint_bits: f64,
+    pub agreement: f64,
+    /// `"baseline"`, `"sweep"` or `"composed"`.
+    pub source: &'static str,
+}
+
+/// Full search provenance, one per [`super::run`] call.
+#[derive(Clone, Debug)]
+pub struct SearchReport {
+    /// `graph.arch` of the searched model.
+    pub model: String,
+    /// `"ranked"` (ACIQ-ordered, early-accept) or `"exhaustive"`.
+    pub mode: &'static str,
+    pub agreement_floor: f64,
+    /// Sweep eval budget (0 = unlimited).
+    pub eval_budget: usize,
+    /// Calibration rows and eval batch actually used.
+    pub rows: usize,
+    pub batch: usize,
+    /// Candidate preset names, sweep order (ascending footprint).
+    pub candidates: Vec<&'static str>,
+    /// Quantized-conv names, graph order.
+    pub layers: Vec<String>,
+    /// ACIQ prior per layer (graph order).
+    pub prior: Vec<LayerStats>,
+    pub prior_relative_mse: Vec<f32>,
+    /// Layer visit order (indices into `layers`).
+    pub visit_order: Vec<usize>,
+    /// Measured sensitivity curves (graph order; `None` = not paid
+    /// for).
+    pub curves: Vec<LayerCurve>,
+    pub evals: EvalCounts,
+    pub budget_exhausted: bool,
+    pub chosen: ChosenPolicy,
+    /// Generated ladder, when the measured pool had ≥ 2 frontier
+    /// points.
+    pub ladder: Option<AutoLadder>,
+    /// Wall-clock seconds the search took.
+    pub seconds: f64,
+}
+
+impl SearchReport {
+    pub fn to_json(&self) -> JsonValue {
+        let curves: Vec<JsonValue> = self
+            .curves
+            .iter()
+            .map(|c| {
+                let points: Vec<JsonValue> = c
+                    .points
+                    .iter()
+                    .map(|p| match p {
+                        Some(a) => JsonValue::Number(*a),
+                        None => JsonValue::Null,
+                    })
+                    .collect();
+                json_obj! {
+                    "layer" => c.layer.clone(),
+                    "agreement" => JsonValue::Array(points),
+                }
+            })
+            .collect();
+        let prior: Vec<JsonValue> = self
+            .layers
+            .iter()
+            .zip(self.prior.iter().zip(&self.prior_relative_mse))
+            .map(|(layer, (st, &mse))| {
+                json_obj! {
+                    "layer" => layer.clone(),
+                    "mean_abs" => f64::from(st.mean_abs),
+                    "max" => f64::from(st.max),
+                    "relative_mse" => f64::from(mse),
+                }
+            })
+            .collect();
+        let mut obj = json_obj! {
+            "version" => REPORT_VERSION,
+            "model" => self.model.clone(),
+            "mode" => self.mode,
+            "agreement_floor" => self.agreement_floor,
+            "eval_budget" => self.eval_budget,
+            "rows" => self.rows,
+            "batch" => self.batch,
+            "candidates" => self.candidates.iter().map(|n| (*n).to_string()).collect::<Vec<String>>(),
+            "layers" => self.layers.clone(),
+            "prior" => JsonValue::Array(prior),
+            "visit_order" => self.visit_order.iter().map(|&i| self.layers[i].clone()).collect::<Vec<String>>(),
+            "curves" => JsonValue::Array(curves),
+            "evals" => json_obj! {
+                "reference" => self.evals.reference,
+                "sweep" => self.evals.sweep,
+                "verify" => self.evals.verify,
+                "total" => self.evals.total(),
+            },
+            "budget_exhausted" => self.budget_exhausted,
+            "chosen" => json_obj! {
+                "source" => self.chosen.source,
+                "footprint_bits" => self.chosen.footprint_bits,
+                "agreement" => self.chosen.agreement,
+                "display" => self.chosen.policy.to_string(),
+                "policy" => self.chosen.policy.to_json(),
+            },
+            "seconds" => self.seconds,
+        };
+        if let Some(ladder) = &self.ladder {
+            if let JsonValue::Object(ref mut m) = obj {
+                m.insert("ladder".to_string(), ladder.to_json());
+            }
+        }
+        obj
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// FNV-1a content hash of the serialized report (the provenance
+    /// `report_sha`). Deterministic: JSON object keys serialize in
+    /// stable (sorted) order.
+    pub fn sha(&self) -> String {
+        fnv1a_hex(self.to_json_string().as_bytes())
+    }
+}
+
+/// 64-bit FNV-1a, hex-formatted — same construction as
+/// `Weights::content_sha` (whose hasher is private to that module).
+pub(crate) fn fnv1a_hex(bytes: &[u8]) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::SparqConfig;
+    use crate::search::sweep::candidate_grid;
+
+    fn tiny_report() -> SearchReport {
+        let candidates = candidate_grid();
+        let layers = vec!["q1".to_string(), "q2".to_string()];
+        let curves: Vec<LayerCurve> = layers
+            .iter()
+            .map(|l| LayerCurve {
+                layer: l.clone(),
+                points: vec![None; candidates.len()],
+            })
+            .collect();
+        SearchReport {
+            model: "bench".to_string(),
+            mode: "ranked",
+            agreement_floor: 0.98,
+            eval_budget: 0,
+            rows: 64,
+            batch: 32,
+            candidates: candidates.iter().map(|c| c.name).collect(),
+            layers,
+            prior: vec![LayerStats::default(); 2],
+            prior_relative_mse: vec![0.1, 0.2],
+            visit_order: vec![1, 0],
+            curves,
+            evals: EvalCounts { reference: 1, sweep: 7, verify: 2 },
+            budget_exhausted: false,
+            chosen: ChosenPolicy {
+                policy: QuantPolicy::uniform(SparqConfig::A8W8),
+                footprint_bits: 8.0,
+                agreement: 1.0,
+                source: "baseline",
+            },
+            ladder: None,
+            seconds: 0.25,
+        }
+    }
+
+    #[test]
+    fn report_serializes_with_stable_sha() {
+        let report = tiny_report();
+        let j = report.to_json();
+        assert_eq!(j.get("version").and_then(JsonValue::as_str), Some(REPORT_VERSION));
+        assert_eq!(
+            j.get("visit_order").and_then(JsonValue::as_array).map(<[JsonValue]>::len),
+            Some(2)
+        );
+        assert_eq!(
+            j.get("evals").and_then(|e| e.get("total")).and_then(JsonValue::as_f64),
+            Some(10.0)
+        );
+        let sha1 = report.sha();
+        let sha2 = report.sha();
+        assert_eq!(sha1, sha2);
+        assert_eq!(sha1.len(), 16);
+        // sha actually depends on content
+        let mut other = report.clone();
+        other.agreement_floor = 0.5;
+        assert_ne!(other.sha(), sha1);
+    }
+
+    #[test]
+    fn report_roundtrips_through_the_json_parser() {
+        let report = tiny_report();
+        let s = report.to_json_string();
+        let parsed = JsonValue::parse(&s).unwrap();
+        assert_eq!(parsed.get("model").and_then(JsonValue::as_str), Some("bench"));
+        let chosen = parsed.get("chosen").unwrap();
+        assert_eq!(chosen.get("display").and_then(JsonValue::as_str), Some("A8W8"));
+        // the embedded policy is itself loadable
+        let pol = QuantPolicy::from_json_value(chosen.get("policy").unwrap()).unwrap();
+        assert_eq!(pol, QuantPolicy::uniform(SparqConfig::A8W8));
+    }
+
+    #[test]
+    fn fnv_matches_known_vector() {
+        // FNV-1a 64 of empty input is the offset basis.
+        assert_eq!(fnv1a_hex(b""), "cbf29ce484222325");
+        assert_eq!(fnv1a_hex(b"a"), "af63dc4c8601ec8c");
+    }
+}

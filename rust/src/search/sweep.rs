@@ -1,0 +1,241 @@
+//! One-layer-dropped sensitivity sweep over the paper's candidate
+//! grids.
+//!
+//! For each quantized conv, drop that ONE layer to a candidate config
+//! while holding every other layer at A8W8, and measure top-1 agreement
+//! against the precomputed A8W8 reference. The sweep logic here is
+//! generic over the eval function, so the budget / early-accept /
+//! visit-order semantics are unit-testable (and Miri-checkable) with a
+//! synthetic agreement table — the engine-driving eval closure lives in
+//! [`super::run`].
+
+use anyhow::{bail, Result};
+
+use crate::quant::footprint::report_bits;
+use crate::quant::SparqConfig;
+
+/// Agreement comparisons use a tiny epsilon so a candidate measured at
+/// *exactly* the floor (the common case when the floor itself is a
+/// measured policy) is accepted rather than lost to float noise.
+pub const AGREE_EPS: f64 = 1e-9;
+
+/// One per-layer candidate configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Candidate {
+    /// Registry preset name ([`SparqConfig::PRESETS`]).
+    pub name: &'static str,
+    pub cfg: SparqConfig,
+    /// Single-layer activation footprint
+    /// ([`report_bits`]) — the ascending sweep order
+    /// and the greedy "cheapest first" metric.
+    pub bits: f64,
+}
+
+/// The per-layer candidate set: the Table 2 and Table 4 SPARQ grids
+/// plus the uniform-precision baselines (`a2w8`/`a3w8`/`a4w8`/`a4w4`),
+/// deduplicated and sorted by ascending cost (activation footprint,
+/// then weight bits, then name). A8W8 is excluded — it is the always-
+/// available fallback every unswept layer keeps, not a candidate.
+pub fn candidate_grid() -> Vec<Candidate> {
+    let uniform = ["a4w4", "a4w8", "a3w8", "a2w8"]
+        .iter()
+        .filter_map(|n| SparqConfig::named(n).map(|cfg| (*n, cfg)));
+    let mut out: Vec<Candidate> = Vec::new();
+    for (name, cfg) in
+        uniform.chain(SparqConfig::table2_grid()).chain(SparqConfig::table4_grid())
+    {
+        if cfg == SparqConfig::A8W8 || out.iter().any(|c| c.cfg == cfg) {
+            continue;
+        }
+        out.push(Candidate { name, cfg, bits: report_bits(cfg) });
+    }
+    out.sort_by(|a, b| {
+        a.bits
+            .total_cmp(&b.bits)
+            .then(a.cfg.w_bits.cmp(&b.cfg.w_bits))
+            .then(a.name.cmp(b.name))
+    });
+    out
+}
+
+/// One layer's measured sensitivity curve: agreement per candidate
+/// ([`candidate_grid`] order), `None` where the sweep never paid for an
+/// eval (budget exhausted, or ranked early-accept already found this
+/// layer's cheapest passing config).
+#[derive(Clone, Debug)]
+pub struct LayerCurve {
+    /// Quantized-conv name (`graph.quant_convs` order).
+    pub layer: String,
+    pub points: Vec<Option<f64>>,
+}
+
+/// Everything the sweep measured, plus its eval accounting.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    /// `graph.quant_convs` order (NOT visit order).
+    pub curves: Vec<LayerCurve>,
+    /// The order layers were actually visited in.
+    pub visit_order: Vec<usize>,
+    /// Measured sweep evals actually spent.
+    pub evals: usize,
+    /// True when the eval budget ended the sweep early.
+    pub budget_exhausted: bool,
+}
+
+/// Run the sweep. `eval(layer_index, candidate)` measures the agreement
+/// of "that one layer at `candidate`, everything else A8W8" and is
+/// charged one eval.
+///
+/// * `budget` caps the number of evals (0 = unlimited).
+/// * `early_accept` (the ACIQ-ranked mode) stops a layer at its first
+///   floor-meeting candidate: candidates arrive in ascending cost
+///   order, so the first passing one IS the layer's cheapest — anything
+///   costlier can only tie or lose on footprint, and anything cheaper
+///   already failed. This is why ranked search spends strictly fewer
+///   evals than the exhaustive grid whenever any layer accepts before
+///   the end of its candidate list.
+pub fn run_sweep<F>(
+    layers: &[String],
+    visit_order: &[usize],
+    candidates: &[Candidate],
+    floor: f64,
+    budget: usize,
+    early_accept: bool,
+    mut eval: F,
+) -> Result<SweepOutcome>
+where
+    F: FnMut(usize, &Candidate) -> Result<f64>,
+{
+    let mut curves: Vec<LayerCurve> = layers
+        .iter()
+        .map(|l| LayerCurve { layer: l.clone(), points: vec![None; candidates.len()] })
+        .collect();
+    let mut evals = 0usize;
+    let mut budget_exhausted = false;
+    'layers: for &li in visit_order {
+        if li >= layers.len() {
+            bail!("sweep visit order indexes layer {li}, but there are {}", layers.len());
+        }
+        for (ci, cand) in candidates.iter().enumerate() {
+            if budget != 0 && evals >= budget {
+                budget_exhausted = true;
+                break 'layers;
+            }
+            let agreement = eval(li, cand)?;
+            evals += 1;
+            curves[li].points[ci] = Some(agreement);
+            if early_accept && agreement >= floor - AGREE_EPS {
+                break;
+            }
+        }
+    }
+    Ok(SweepOutcome { curves, visit_order: visit_order.to_vec(), evals, budget_exhausted })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layers(n: usize) -> Vec<String> {
+        (0..n).map(|i| format!("l{i}")).collect()
+    }
+
+    #[test]
+    fn grid_is_deduplicated_ascending_and_excludes_a8w8() {
+        let grid = candidate_grid();
+        assert!(grid.len() >= 13, "expected the full table2+table4+uniform set");
+        for w in grid.windows(2) {
+            assert!(w[0].bits <= w[1].bits + 1e-12, "grid not ascending: {w:?}");
+        }
+        for (i, a) in grid.iter().enumerate() {
+            assert_ne!(a.cfg, SparqConfig::A8W8);
+            for b in &grid[i + 1..] {
+                assert_ne!(a.cfg, b.cfg, "duplicate config {} / {}", a.name, b.name);
+            }
+        }
+        // the uniform baselines the greedy guarantee leans on are present
+        for name in ["a4w8", "a4w4", "a3w8", "a2w8"] {
+            assert!(grid.iter().any(|c| c.name == name), "{name} missing from grid");
+        }
+    }
+
+    /// The acceptance-criteria property in miniature: with the same
+    /// synthetic agreement table and the same (unlimited) budget, the
+    /// early-accept sweep spends strictly fewer evals than the
+    /// exhaustive grid whenever any layer has a passing candidate
+    /// before the end of its list.
+    #[test]
+    fn early_accept_spends_strictly_fewer_evals_than_exhaustive() {
+        let candidates = candidate_grid();
+        let n_layers = 3;
+        let ls = layers(n_layers);
+        let order: Vec<usize> = (0..n_layers).collect();
+        // layer 0 passes at its very first candidate, layer 1 midway,
+        // layer 2 never.
+        let table = move |li: usize, ci: usize| -> f64 {
+            match li {
+                0 => 1.0,
+                1 if ci >= 2 => 1.0,
+                _ => 0.0,
+            }
+        };
+        let mut seen_ci = vec![0usize; n_layers];
+        let mut next_ci = seen_ci.clone();
+        let ranked = run_sweep(&ls, &order, &candidates, 0.9, 0, true, |li, _| {
+            let ci = next_ci[li];
+            next_ci[li] += 1;
+            Ok(table(li, ci))
+        })
+        .unwrap();
+        let exhaustive = run_sweep(&ls, &order, &candidates, 0.9, 0, false, |li, _| {
+            let ci = seen_ci[li];
+            seen_ci[li] += 1;
+            Ok(table(li, ci))
+        })
+        .unwrap();
+        assert_eq!(exhaustive.evals, n_layers * candidates.len());
+        assert_eq!(ranked.evals, 1 + 3 + candidates.len());
+        assert!(ranked.evals < exhaustive.evals);
+        assert!(!ranked.budget_exhausted && !exhaustive.budget_exhausted);
+        // unevaluated points stay None; evaluated ones are recorded
+        assert_eq!(ranked.curves[0].points[0], Some(1.0));
+        assert_eq!(ranked.curves[0].points[1], None);
+        assert_eq!(ranked.curves[1].points[2], Some(1.0));
+    }
+
+    #[test]
+    fn budget_caps_the_sweep_and_is_reported() {
+        let candidates = candidate_grid();
+        let ls = layers(4);
+        let order: Vec<usize> = (0..4).collect();
+        let out =
+            run_sweep(&ls, &order, &candidates, 2.0, 5, false, |_, _| Ok(0.5)).unwrap();
+        assert_eq!(out.evals, 5);
+        assert!(out.budget_exhausted);
+        let measured: usize = out
+            .curves
+            .iter()
+            .flat_map(|c| c.points.iter())
+            .filter(|p| p.is_some())
+            .count();
+        assert_eq!(measured, 5);
+    }
+
+    #[test]
+    fn floor_equality_is_accepted_within_epsilon() {
+        let candidates = candidate_grid();
+        let ls = layers(1);
+        let floor = 0.7431;
+        let out = run_sweep(&ls, &[0], &candidates, floor, 0, true, |_, _| Ok(floor))
+            .unwrap();
+        // exact-equality candidate accepted immediately
+        assert_eq!(out.evals, 1);
+    }
+
+    #[test]
+    fn bad_visit_order_is_an_error_not_a_panic() {
+        let candidates = candidate_grid();
+        let ls = layers(2);
+        assert!(run_sweep(&ls, &[7], &candidates, 0.9, 0, true, |_, _| Ok(1.0)).is_err());
+    }
+}

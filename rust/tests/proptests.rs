@@ -712,6 +712,7 @@ fn prop_router_accounts_exactly_under_concurrent_hot_swaps() {
                     let spec = ReloadSpec {
                         source: ReloadSource::Params(params[policy_of_gen(g)].clone()),
                         rollout: RolloutConfig { canary_share: 0, ..RolloutConfig::default() },
+                        provenance: None,
                     };
                     let got = router.reload_variant("synth", "live", spec).unwrap();
                     assert_eq!(got, g, "swap published out of order");
